@@ -1,0 +1,63 @@
+//! Quickstart: simulate all four scheduling schemes on the paper's VGG-19
+//! workload (16 GPUs, 40 Gbps) and print the comparison table plus a
+//! steady-state Gantt chart of DeFT's schedule.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::{gantt_steady, Table};
+
+fn main() {
+    let workload = workload_by_name("vgg19");
+    let env = ClusterEnv::paper_testbed();
+    println!(
+        "workload = {} ({} params, CR = {:.2} at 16 GPUs / 40 Gbps)\n",
+        workload.name,
+        workload.total_params(),
+        workload.coverage_rate_ref()
+    );
+
+    let mut table = Table::new(&[
+        "scheme",
+        "iter time",
+        "bubble %",
+        "throughput (samples/s)",
+        "updates/iter",
+        "speedup vs ddp",
+    ]);
+    let mut ddp = None;
+    let mut deft_result = None;
+    let mut schemes = Scheme::ALL.to_vec();
+    schemes.push(Scheme::DeftNoMultilink);
+    for scheme in schemes {
+        let r = run_pipeline(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 50);
+        let t = r.sim.steady_iter_time;
+        if scheme == Scheme::PytorchDdp {
+            ddp = Some(t);
+        }
+        table.row(&[
+            scheme.name().into(),
+            format!("{t}"),
+            format!("{:.1}", r.sim.bubble_ratio() * 100.0),
+            format!("{:.0}", r.sim.throughput(workload.batch_size, env.workers)),
+            format!("{:.2}", r.schedule.update_frequency()),
+            ddp.map(|d| format!("{:.2}x", d.ratio(t))).unwrap_or("-".into()),
+        ]);
+        if scheme == Scheme::Deft {
+            deft_result = Some(r);
+        }
+    }
+    println!("{}", table.render());
+
+    let deft = deft_result.expect("deft ran");
+    println!(
+        "DeFT steady-state cycle: {} iterations, {} updates, batch multipliers {:?}\n",
+        deft.schedule.cycle.len(),
+        deft.schedule.updates_per_cycle,
+        deft.schedule.batch_multipliers
+    );
+    println!("DeFT schedule (one steady-state window):");
+    println!("{}", gantt_steady(&deft.sim, deft.schedule.cycle.len(), 110));
+}

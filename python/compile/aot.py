@@ -1,0 +1,171 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts + manifest.
+
+HLO *text* is the interchange format — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts [--d-model 128 --n-layers 2
+        --vocab 512 --seq 128 --batch 8 --n-buckets 4 --workers 4]
+
+Emits into the output directory:
+    train_step.hlo.txt, apply_update.hlo.txt, grad_reduce.hlo.txt,
+    init_b{i}.bin (little-endian f32 initial bucket values),
+    manifest.toml (signatures; parsed by rust/src/runtime/manifest.rs).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(name: str, dtype: str, dims) -> str:
+    d = "x".join(str(x) for x in dims) if dims else "1"
+    return f"{name}:{dtype}:{d}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-buckets", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig(
+        vocab=args.vocab,
+        seq=args.seq,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        batch=args.batch,
+        n_buckets=args.n_buckets,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    sizes = M.bucket_sizes(cfg)
+    k = len(sizes)
+    total = sum(sizes)
+    print(f"model: d={cfg.d_model} L={cfg.n_layers} vocab={cfg.vocab} "
+          f"seq={cfg.seq} batch={cfg.batch} -> {total} params in {k} buckets {sizes}")
+
+    bspecs = [jax.ShapeDtypeStruct((s,), jnp.float32) for s in sizes]
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    manifest = ["[meta]"]
+    manifest.append('model = "small_transformer"')
+    for key, val in [
+        ("n_buckets", k),
+        ("vocab", cfg.vocab),
+        ("seq", cfg.seq),
+        ("batch", cfg.batch),
+        ("d_model", cfg.d_model),
+        ("n_layers", cfg.n_layers),
+        ("workers", args.workers),
+        ("total_params", total),
+    ]:
+        manifest.append(f"{key} = {val}")
+
+    # ---- initial parameters (binary f32 little-endian) ----
+    init = M.init_params(cfg, seed=args.seed)
+    init_files = []
+    for i, vec in enumerate(init):
+        import numpy as np
+
+        fname = f"init_b{i}.bin"
+        np.asarray(vec, dtype="<f4").tofile(os.path.join(args.out, fname))
+        init_files.append(fname)
+    manifest.append(f'init_files = "{";".join(init_files)}"')
+
+    # ---- train_step ----
+    train_step = M.make_train_step(cfg)
+    lowered = jax.jit(train_step).lower(*bspecs, tokens_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(args.out, "train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"train_step: {len(text)} chars of HLO")
+    ins = ";".join(
+        [spec_str(f"b{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+        + [spec_str("tokens", "i32", (cfg.batch, cfg.seq + 1))]
+    )
+    outs = ";".join(
+        [spec_str("loss", "f32", ())]
+        + [spec_str(f"g{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+    )
+    manifest += [
+        "[exe.train_step]",
+        'file = "train_step.hlo.txt"',
+        f'inputs = "{ins}"',
+        f'outputs = "{outs}"',
+    ]
+
+    # ---- apply_update ----
+    apply_update = M.make_apply_update(cfg)
+    lowered = jax.jit(apply_update).lower(*bspecs, *bspecs, *bspecs, scalar, scalar)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(args.out, "apply_update.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"apply_update: {len(text)} chars of HLO")
+    ins = ";".join(
+        [spec_str(f"b{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+        + [spec_str(f"g{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+        + [spec_str(f"m{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+        + [spec_str("lr", "f32", (1,)), spec_str("scale", "f32", (1,))]
+    )
+    outs = ";".join(
+        [spec_str(f"b{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+        + [spec_str(f"m{i}", "f32", (s,)) for i, s in enumerate(sizes)]
+    )
+    manifest += [
+        "[exe.apply_update]",
+        'file = "apply_update.hlo.txt"',
+        f'inputs = "{ins}"',
+        f'outputs = "{outs}"',
+    ]
+
+    # ---- grad_reduce ----
+    grad_reduce = M.make_grad_reduce(cfg, args.workers)
+    stacked = [jax.ShapeDtypeStruct((args.workers, s), jnp.float32) for s in sizes]
+    lowered = jax.jit(grad_reduce).lower(*stacked)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(args.out, "grad_reduce.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"grad_reduce: {len(text)} chars of HLO")
+    ins = ";".join(
+        spec_str(f"g{i}", "f32", (args.workers, s)) for i, s in enumerate(sizes)
+    )
+    outs = ";".join(spec_str(f"r{i}", "f32", (s,)) for i, s in enumerate(sizes))
+    manifest += [
+        "[exe.grad_reduce]",
+        'file = "grad_reduce.hlo.txt"',
+        f'inputs = "{ins}"',
+        f'outputs = "{outs}"',
+    ]
+
+    with open(os.path.join(args.out, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {k} buckets to {args.out}/manifest.toml")
+
+
+if __name__ == "__main__":
+    main()

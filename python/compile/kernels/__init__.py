@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .attention import attention
+from .bucket_reduce import bucket_reduce
+from .sgd_update import sgd_update
+
+__all__ = ["attention", "bucket_reduce", "sgd_update"]

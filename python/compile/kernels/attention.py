@@ -1,0 +1,113 @@
+"""Pallas causal attention kernel (L1 hot-spot).
+
+Flash-attention-style tiling rethought for TPU (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging K/V through
+shared memory, the grid is (batch*heads, q-blocks) and ``BlockSpec``s
+stage VMEM-resident tiles — a [BLK_Q, D] query tile and [S, D] key/value
+tiles per program — while an online-softmax ``fori_loop`` walks key blocks
+so the [S, S] score matrix is never materialised. MXU-friendly shapes:
+BLK_Q and BLK_K multiples of the 128-lane register tiling.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (numerically identical;
+real-TPU performance is estimated in DESIGN.md §Perf instead of measured).
+
+The kernel is wrapped in ``jax.custom_vjp``: forward runs the Pallas
+kernel, backward uses the exact pure-jnp attention gradient (the paper's
+contribution is the communication scheduler, not a bwd kernel; XLA fuses
+the reference backward well). Gradcheck lives in test_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# 128-wide tiles: MXU/VPU-aligned and few interpret-mode grid steps.
+BLK_Q = 128
+BLK_K = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q, blk_k, seq, causal):
+    """One (batch*head, q-block) program: online softmax over key blocks."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]  # [blk_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    q_pos = qi * blk_q + jnp.arange(blk_q)
+
+    def body(t, carry):
+        acc, row_max, row_sum = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0, :, :], t * blk_k, blk_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0, :, :], t * blk_k, blk_k, axis=0)
+        s = (q @ k_blk.T) * scale  # [blk_q, blk_k]
+        if causal:
+            k_pos = t * blk_k + jnp.arange(blk_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+        new_max = jnp.maximum(row_max, s.max(axis=-1))
+        # Guard fully-masked rows (new_max = -inf): exp(-inf - -inf) -> nan.
+        safe_max = jnp.where(jnp.isfinite(new_max), new_max, 0.0)
+        correction = jnp.exp(jnp.where(jnp.isfinite(row_max), row_max - safe_max, -jnp.inf))
+        p = jnp.exp(s - safe_max[:, None])
+        acc = acc * correction[:, None] + p @ v_blk
+        row_sum = row_sum * correction + p.sum(axis=-1)
+        return acc, new_max, row_sum
+
+    n_blocks = seq // blk_k
+    acc0 = jnp.zeros_like(q)
+    max0 = jnp.full((blk_q,), -jnp.inf, dtype=q.dtype)
+    sum0 = jnp.zeros((blk_q,), dtype=q.dtype)
+    acc, _, row_sum = jax.lax.fori_loop(0, n_blocks, body, (acc0, max0, sum0))
+    o_ref[0, :, :] = acc / jnp.maximum(row_sum, 1e-30)[:, None]
+
+
+def _attention_fwd_pallas(q, k, v, *, causal):
+    """[B, H, S, D] attention via the Pallas kernel."""
+    b, h, s, d = q.shape
+    blk_q = min(BLK_Q, s)
+    blk_k = min(BLK_K, s)
+    assert s % blk_q == 0 and s % blk_k == 0, f"seq {s} not divisible by blocks"
+    bh = b * h
+    qr = q.reshape(bh, s, d)
+    kr = k.reshape(bh, s, d)
+    vr = v.reshape(bh, s, d)
+    kernel = functools.partial(
+        _attn_kernel, blk_q=blk_q, blk_k=blk_k, seq=s, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal=True):
+    """Causal attention: Pallas forward, reference-exact backward."""
+    return _attention_fwd_pallas(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return _attention_fwd_pallas(q, k, v, causal=causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,49 @@
+"""Pallas gradient-bucket reduction kernel (the allreduce arithmetic).
+
+Reduces W workers' gradient slabs ``[W, N] -> [N]`` (mean). This is the
+compute half of the ring allreduce each bucket undergoes; the Rust
+coordinator calls the AOT-compiled ``grad_reduce`` executable on its hot
+path instead of looping in Rust.
+
+TPU adaptation: the kernel is bandwidth-bound, so there is no MXU use —
+the grid tiles the N axis into ``BLK``-sized chunks (multiples of the
+128-lane VPU tiling) and each program holds a [W, BLK] tile in VMEM,
+reducing over the (small) worker axis. Ragged tails are handled by the
+wrapper with zero-padding (mean is computed with the true W).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret-mode lowering pays ~10 ms per grid step on CPU (each step
+# becomes a dynamic-slice + body + dynamic-update-slice in a while
+# loop), so blocks are sized to make most buckets single-step. On a
+# real TPU this would be VMEM-bounded (~2 MiB tiles) instead — see
+# DESIGN.md section Perf.
+BLK = 1 << 20
+
+
+def _reduce_kernel(g_ref, o_ref, *, inv_w):
+    o_ref[...] = jnp.sum(g_ref[...], axis=0) * inv_w
+
+
+def bucket_reduce(grads):
+    """Mean over the leading worker axis: [W, N] -> [N] via Pallas."""
+    w, n = grads.shape
+    blk = min(BLK, n)
+    padded = ((n + blk - 1) // blk) * blk
+    if padded != n:
+        grads = jnp.pad(grads, ((0, 0), (0, padded - n)))
+    kernel = functools.partial(_reduce_kernel, inv_w=1.0 / w)
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // blk,),
+        in_specs=[pl.BlockSpec((w, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), grads.dtype),
+        interpret=True,
+    )(grads)
+    return out[:n]

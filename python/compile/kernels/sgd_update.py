@@ -1,0 +1,60 @@
+"""Pallas fused momentum-SGD bucket update kernel.
+
+PyTorch DDP launches separate kernels for the momentum update and the
+parameter step; this fuses both into one pass per bucket:
+
+    m' = beta * m + g * scale      (scale = 1/k for DeFT's k-way merges)
+    p' = p - lr * m'
+
+Scalars (lr, scale, beta) travel as [1]-shaped runtime inputs so the Rust
+coordinator can adjust them per update without recompiling; their
+BlockSpec maps every grid step to the same single-element block.
+
+Grid tiles the flat bucket into VPU-lane-aligned chunks held in VMEM —
+one read and one write per operand, the bandwidth roofline for this op.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Single-step blocks for CPU interpret mode (see bucket_reduce.py).
+BLK = 1 << 20
+
+
+def _update_kernel(p_ref, g_ref, m_ref, lr_ref, scale_ref, beta_ref, po_ref, mo_ref):
+    lr = lr_ref[0]
+    scale = scale_ref[0]
+    beta = beta_ref[0]
+    m_new = beta * m_ref[...] + g_ref[...] * scale
+    po_ref[...] = p_ref[...] - lr * m_new
+    mo_ref[...] = m_new
+
+
+def sgd_update(p, g, m, lr, scale, beta):
+    """Fused update over a flat [N] bucket; lr/scale/beta are [1] arrays.
+
+    Returns (new_params, new_momentum).
+    """
+    (n,) = p.shape
+    blk = min(BLK, n)
+    padded = ((n + blk - 1) // blk) * blk
+    if padded != n:
+        pad = ((0, padded - n),)
+        p = jnp.pad(p, pad)
+        g = jnp.pad(g, pad)
+        m = jnp.pad(m, pad)
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    chunk_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    p_new, m_new = pl.pallas_call(
+        _update_kernel,
+        grid=(padded // blk,),
+        in_specs=[chunk_spec, chunk_spec, chunk_spec, scalar_spec, scalar_spec, scalar_spec],
+        out_specs=[chunk_spec, chunk_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), p.dtype),
+            jax.ShapeDtypeStruct((padded,), m.dtype),
+        ],
+        interpret=True,
+    )(p, g, m, lr, scale, beta)
+    return p_new[:n], m_new[:n]

@@ -1,0 +1,246 @@
+"""L2 — the bucketed GPT-style transformer (build-time JAX).
+
+The model's parameters live as **flat f32 bucket vectors** — the exact
+abstraction the paper's scheduler works with. The Rust coordinator only
+ever sees ``b0..b{K-1}``; this module owns the mapping from buckets to
+weight tensors (``unflatten``) and builds the three AOT entry points:
+
+* ``train_step(b0..bK-1, tokens) -> (loss, g0..gK-1)`` — forward + backward
+  of one batch; attention runs the L1 Pallas kernel.
+* ``apply_update(b*, g*, m*, lr, scale) -> (b'*, m'*)`` — fused
+  momentum-SGD per bucket via the L1 Pallas update kernel (``scale``
+  implements DeFT's merged/accumulated updates).
+* ``grad_reduce(stacked g) -> mean g`` — per-bucket mean over workers via
+  the L1 Pallas reduction kernel (the allreduce arithmetic).
+
+Tokens come in as ``[batch, seq+1]``: positions 0..seq-1 are inputs,
+1..seq are next-token targets.
+"""
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, bucket_reduce, sgd_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    seq: int = 128
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    batch: int = 8
+    n_buckets: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Parameter tensors in forward order (the bucketing order)."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"h{i}.ln1_g", (cfg.d_model,)),
+            (f"h{i}.ln1_b", (cfg.d_model,)),
+            (f"h{i}.qkv_w", (cfg.d_model, 3 * cfg.d_model)),
+            (f"h{i}.qkv_b", (3 * cfg.d_model,)),
+            (f"h{i}.proj_w", (cfg.d_model, cfg.d_model)),
+            (f"h{i}.proj_b", (cfg.d_model,)),
+            (f"h{i}.ln2_g", (cfg.d_model,)),
+            (f"h{i}.ln2_b", (cfg.d_model,)),
+            (f"h{i}.fc_w", (cfg.d_model, cfg.d_ff)),
+            (f"h{i}.fc_b", (cfg.d_ff,)),
+            (f"h{i}.out_w", (cfg.d_ff, cfg.d_model)),
+            (f"h{i}.out_b", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def bucket_layout(cfg: ModelConfig) -> List[List[Tuple[str, Tuple[int, ...]]]]:
+    """Greedy contiguous grouping of parameter tensors into n_buckets.
+
+    Mirrors tensor fusion: contiguous forward-order spans with roughly
+    equal parameter mass (the DDP-style fusion the schedulers re-cut).
+    """
+    shapes = param_shapes(cfg)
+    sizes = [math.prod(s) for _, s in shapes]
+    total = sum(sizes)
+    target = total / cfg.n_buckets
+    buckets: List[List[Tuple[str, Tuple[int, ...]]]] = []
+    cur: List[Tuple[str, Tuple[int, ...]]] = []
+    acc = 0
+    remaining_buckets = cfg.n_buckets
+    for (name, shape), size in zip(shapes, sizes):
+        cur.append((name, shape))
+        acc += size
+        if acc >= target and len(buckets) < cfg.n_buckets - 1:
+            buckets.append(cur)
+            cur = []
+            acc = 0
+            remaining_buckets -= 1
+    if cur:
+        buckets.append(cur)
+    assert len(buckets) <= cfg.n_buckets
+    return buckets
+
+
+def bucket_sizes(cfg: ModelConfig) -> List[int]:
+    return [sum(math.prod(s) for _, s in bucket) for bucket in bucket_layout(cfg)]
+
+
+def unflatten(cfg: ModelConfig, buckets: List[jnp.ndarray]) -> dict:
+    """Flat bucket vectors -> parameter dict."""
+    layout = bucket_layout(cfg)
+    assert len(buckets) == len(layout)
+    params = {}
+    for vec, bucket in zip(buckets, layout):
+        off = 0
+        for name, shape in bucket:
+            size = 1
+            for d in shape:
+                size *= d
+            params[name] = vec[off : off + size].reshape(shape)
+            off += size
+        assert off == vec.shape[0], f"bucket size mismatch: {off} vs {vec.shape[0]}"
+    return params
+
+
+def flatten_grads(cfg: ModelConfig, grads: dict) -> List[jnp.ndarray]:
+    """Parameter-dict gradients -> flat bucket vectors."""
+    layout = bucket_layout(cfg)
+    out = []
+    for bucket in layout:
+        out.append(jnp.concatenate([grads[name].reshape(-1) for name, _ in bucket]))
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 7) -> List[jnp.ndarray]:
+    """Initial flat bucket vectors (scaled-normal init)."""
+    key = jax.random.PRNGKey(seed)
+    layout = bucket_layout(cfg)
+    buckets = []
+    for bucket in layout:
+        parts = []
+        for name, shape in bucket:
+            key, sub = jax.random.split(key)
+            size = 1
+            for d in shape:
+                size *= d
+            if name.endswith(("_b", "ln1_b", "ln2_b", "lnf_b", "qkv_b")):
+                parts.append(jnp.zeros((size,), jnp.float32))
+            elif "ln" in name and name.endswith("_g"):
+                parts.append(jnp.ones((size,), jnp.float32))
+            else:
+                fan_in = shape[0] if len(shape) > 1 else shape[0]
+                std = 0.02 if name in ("wte", "wpe") else 1.0 / jnp.sqrt(fan_in)
+                parts.append(std * jax.random.normal(sub, (size,), jnp.float32))
+        buckets.append(jnp.concatenate(parts))
+    return buckets
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(cfg: ModelConfig, params: dict, tokens_in: jnp.ndarray) -> jnp.ndarray:
+    """Logits [batch, seq, vocab] for input tokens [batch, seq]."""
+    b, s = tokens_in.shape
+    x = params["wte"][tokens_in] + params["wpe"][None, :s, :]
+    for i in range(cfg.n_layers):
+        h = _layernorm(x, params[f"h{i}.ln1_g"], params[f"h{i}.ln1_b"])
+        qkv = h @ params[f"h{i}.qkv_w"] + params[f"h{i}.qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+        attn = attention(heads(q), heads(k), heads(v), True)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + attn @ params[f"h{i}.proj_w"] + params[f"h{i}.proj_b"]
+
+        h = _layernorm(x, params[f"h{i}.ln2_g"], params[f"h{i}.ln2_b"])
+        h = jax.nn.gelu(h @ params[f"h{i}.fc_w"] + params[f"h{i}.fc_b"])
+        x = x + h @ params[f"h{i}.out_w"] + params[f"h{i}.out_b"]
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"]
+
+
+def loss_fn(cfg: ModelConfig, buckets: List[jnp.ndarray], tokens: jnp.ndarray):
+    """Mean next-token cross-entropy. tokens: [batch, seq+1] int32."""
+    params = unflatten(cfg, buckets)
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_train_step(cfg: ModelConfig):
+    """(b0..bK-1, tokens) -> (loss, g0..gK-1)."""
+
+    def train_step(*args):
+        buckets = list(args[:-1])
+        tokens = args[-1]
+
+        def f(bs):
+            return loss_fn(cfg, bs, tokens)
+
+        loss, grads = jax.value_and_grad(f)(buckets)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_apply_update(cfg: ModelConfig):
+    """(b*, g*, m*, lr, scale) -> (b'*, m'*) via the Pallas update kernel."""
+    k = len(bucket_sizes(cfg))
+    beta = jnp.asarray([0.9], jnp.float32)
+
+    def apply_update(*args):
+        buckets = args[:k]
+        grads = args[k : 2 * k]
+        momenta = args[2 * k : 3 * k]
+        lr = args[3 * k]
+        scale = args[3 * k + 1]
+        new_b = []
+        new_m = []
+        for p, g, m in zip(buckets, grads, momenta):
+            pn, mn = sgd_update(p, g, m, lr, scale, beta)
+            new_b.append(pn)
+            new_m.append(mn)
+        return (*new_b, *new_m)
+
+    return apply_update
+
+
+def make_grad_reduce(cfg: ModelConfig, workers: int):
+    """(stacked g0 [W,n0], ..., stacked gK-1) -> (mean g0, ...)."""
+    del cfg
+
+    def grad_reduce(*stacked):
+        return tuple(bucket_reduce(g) for g in stacked)
+
+    return grad_reduce

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is THE
+core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, bucket_reduce, sgd_update
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------- attention
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 64, 16), (2, 4, 128, 32), (1, 2, 64, 64)])
+def test_attention_matches_ref(b, h, s, d):
+    q, k, v = (rand(i, (b, h, s, d)) for i in range(3))
+    got = attention(q, k, v, True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_non_causal():
+    q, k, v = (rand(i + 10, (1, 2, 64, 16)) for i in range(3))
+    got = attention(q, k, v, False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.sampled_from([1, 2, 4]),
+    sblk=st.sampled_from([64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis_sweep(b, h, sblk, d, seed):
+    q, k, v = (rand(seed + i, (b, h, sblk, d)) for i in range(3))
+    got = attention(q, k, v, True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_gradients_match_ref():
+    # custom_vjp backward must equal grad of the reference.
+    q, k, v = (rand(i + 20, (1, 2, 64, 16)) for i in range(3))
+
+    def f_pallas(q, k, v):
+        return (attention(q, k, v, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    # Output at position t must not depend on tokens after t.
+    q, k, v = (rand(i + 30, (1, 1, 64, 16)) for i in range(3))
+    out1 = attention(q, k, v, True)
+    k2 = k.at[:, :, 40:, :].set(123.0)
+    v2 = v.at[:, :, 40:, :].set(-7.0)
+    out2 = attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :, :40], out2[:, :, :40], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, :, 40:], out2[:, :, 40:])
+
+
+# ------------------------------------------------------------- bucket reduce
+@settings(max_examples=12, deadline=None)
+@given(
+    w=st.integers(1, 8),
+    n=st.sampled_from([1, 7, 512, 1024, 1025, 5000]),
+    seed=st.integers(0, 2**16),
+)
+def test_bucket_reduce_hypothesis(w, n, seed):
+    g = rand(seed, (w, n))
+    got = bucket_reduce(g)
+    want = ref.bucket_reduce_ref(g)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_bucket_reduce_mean_of_constants():
+    g = jnp.stack([jnp.full((100,), 1.0), jnp.full((100,), 3.0)])
+    np.testing.assert_allclose(bucket_reduce(g), jnp.full((100,), 2.0))
+
+
+# ---------------------------------------------------------------- sgd update
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 1024, 1500, 4096]),
+    lr=st.floats(1e-4, 1.0),
+    scale=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_update_hypothesis(n, lr, scale, seed):
+    p = rand(seed, (n,))
+    g = rand(seed + 1, (n,))
+    m = rand(seed + 2, (n,))
+    lr_a = jnp.asarray([lr], jnp.float32)
+    sc_a = jnp.asarray([scale], jnp.float32)
+    beta = jnp.asarray([0.9], jnp.float32)
+    p2, m2 = sgd_update(p, g, m, lr_a, sc_a, beta)
+    pr, mr = ref.sgd_update_ref(p, g, m, lr_a[0], sc_a[0], beta[0])
+    np.testing.assert_allclose(p2, pr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(m2, mr, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_update_zero_lr_is_identity_on_params():
+    p = rand(1, (256,))
+    g = rand(2, (256,))
+    m = jnp.zeros((256,))
+    p2, m2 = sgd_update(
+        p, g, m,
+        jnp.asarray([0.0], jnp.float32),
+        jnp.asarray([1.0], jnp.float32),
+        jnp.asarray([0.9], jnp.float32),
+    )
+    np.testing.assert_allclose(p2, p, rtol=0, atol=0)
+    np.testing.assert_allclose(m2, g, rtol=1e-6, atol=1e-6)

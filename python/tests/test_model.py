@@ -1,0 +1,128 @@
+"""L2 model tests: bucket plumbing, shapes, loss behaviour, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.ModelConfig(vocab=64, seq=32, d_model=32, n_layers=2, n_heads=2, batch=2, n_buckets=3)
+
+
+def test_bucket_layout_covers_all_params():
+    layout = M.bucket_layout(CFG)
+    names = [n for bucket in layout for n, _ in bucket]
+    expected = [n for n, _ in M.param_shapes(CFG)]
+    assert names == expected, "buckets must cover all tensors in order"
+    assert 1 <= len(layout) <= CFG.n_buckets
+
+
+def test_unflatten_roundtrip():
+    sizes = M.bucket_sizes(CFG)
+    buckets = [jnp.arange(s, dtype=jnp.float32) for s in sizes]
+    params = M.unflatten(CFG, buckets)
+    grads = {k: v for k, v in params.items()}
+    back = M.flatten_grads(CFG, grads)
+    for a, b in zip(buckets, back):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_init_params_match_sizes():
+    sizes = M.bucket_sizes(CFG)
+    init = M.init_params(CFG)
+    assert [v.shape[0] for v in init] == sizes
+    # LayerNorm gains initialized to 1 => no all-zero buckets.
+    assert all(float(jnp.abs(v).max()) > 0 for v in init)
+
+
+def test_forward_shapes_and_loss_near_uniform_at_init():
+    init = M.init_params(CFG)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+    loss = M.loss_fn(CFG, init, tokens)
+    uniform = float(jnp.log(CFG.vocab))
+    assert 0.5 * uniform < float(loss) < 1.5 * uniform, f"init loss {loss} vs ln(V)={uniform}"
+
+
+def test_train_step_returns_grads_for_every_bucket():
+    step = M.make_train_step(CFG)
+    init = M.init_params(CFG)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+    out = jax.jit(step)(*init, tokens)
+    assert len(out) == 1 + len(init)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    for g, p in zip(grads, init):
+        assert g.shape == p.shape
+        assert float(jnp.abs(g).max()) > 0, "dead gradient bucket"
+
+
+def test_apply_update_moves_params_against_gradient():
+    step = M.make_train_step(CFG)
+    upd = M.make_apply_update(CFG)
+    init = M.init_params(CFG)
+    momenta = [jnp.zeros_like(p) for p in init]
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+    out = jax.jit(step)(*init, tokens)
+    loss0, grads = out[0], list(out[1:])
+    lr = jnp.asarray([0.5], jnp.float32)
+    scale = jnp.asarray([1.0], jnp.float32)
+    res = jax.jit(upd)(*init, *grads, *momenta, lr, scale)
+    k = len(init)
+    new_params, new_momenta = list(res[:k]), list(res[k:])
+    loss1 = M.loss_fn(CFG, new_params, tokens)
+    assert float(loss1) < float(loss0), f"update did not reduce loss: {loss0} -> {loss1}"
+    assert any(float(jnp.abs(m).max()) > 0 for m in new_momenta)
+
+
+def test_short_training_reduces_loss():
+    # 12 full-batch steps on a fixed batch must fit it substantially.
+    step = jax.jit(M.make_train_step(CFG))
+    upd = jax.jit(M.make_apply_update(CFG))
+    params = M.init_params(CFG)
+    momenta = [jnp.zeros_like(p) for p in params]
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+    lr = jnp.asarray([0.3], jnp.float32)
+    scale = jnp.asarray([1.0], jnp.float32)
+    first = None
+    last = None
+    for _ in range(12):
+        out = step(*params, tokens)
+        loss, grads = out[0], list(out[1:])
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        res = upd(*params, *grads, *momenta, lr, scale)
+        k = len(params)
+        params, momenta = list(res[:k]), list(res[k:])
+    assert last < 0.7 * first, f"loss {first} -> {last}"
+
+
+def test_grad_reduce_matches_numpy():
+    gr = M.make_grad_reduce(CFG, workers=3)
+    sizes = M.bucket_sizes(CFG)
+    stacked = [
+        jax.random.normal(jax.random.PRNGKey(i), (3, s), jnp.float32)
+        for i, s in enumerate(sizes)
+    ]
+    out = jax.jit(gr)(*stacked)
+    for o, s in zip(out, stacked):
+        np.testing.assert_allclose(o, np.asarray(s).mean(axis=0), rtol=1e-6, atol=1e-6)
+
+
+def test_scale_implements_gradient_accumulation():
+    # Applying the sum of two grads with scale=1/2 == applying their mean.
+    upd = M.make_apply_update(CFG)
+    params = M.init_params(CFG)
+    momenta = [jnp.zeros_like(p) for p in params]
+    g1 = [jnp.ones_like(p) for p in params]
+    g2 = [3.0 * jnp.ones_like(p) for p in params]
+    acc = [a + b for a, b in zip(g1, g2)]
+    mean = [(a + b) / 2 for a, b in zip(g1, g2)]
+    lr = jnp.asarray([0.1], jnp.float32)
+    k = len(params)
+    res_a = jax.jit(upd)(*params, *acc, *momenta, lr, jnp.asarray([0.5], jnp.float32))
+    res_b = jax.jit(upd)(*params, *mean, *momenta, lr, jnp.asarray([1.0], jnp.float32))
+    for a, b in zip(res_a[:k], res_b[:k]):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

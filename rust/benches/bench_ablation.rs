@@ -1,0 +1,112 @@
+//! DeFT mechanism ablation (DESIGN.md design-choice index): how much of
+//! the speedup comes from each of the three techniques the paper stacks?
+//!
+//!   A. baseline: US-Byte (non-sequential order, no dependency relaxing)
+//!   B. + delayed updates only (DeFT, single link, preserver off)
+//!   C. + heterogeneous links (DeFT, multi-link, preserver off)
+//!   D. + Preserver feedback (full DeFT)
+//!
+//! Also sweeps the recursive knapsack (Alg. 1) against a naive-only
+//! variant by comparing packed overlap on the backward stage instances.
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::Table;
+use deft::models::vgg19_table2_buckets;
+use deft::partition::{partition, Strategy};
+use deft::sched::{Deft, DeftOptions, Scheduler};
+use deft::sim::{simulate, SimOptions};
+use deft::solver::{naive_knapsack, recursive_knapsack, Item};
+use deft::util::Micros;
+
+fn main() {
+    let env = ClusterEnv::paper_testbed();
+    for wname in ["resnet101", "vgg19", "gpt2"] {
+        let w = workload_by_name(wname);
+        println!("=== DeFT mechanism ablation, {} ===\n", w.name);
+        let mut t = Table::new(&["variant", "iter time", "bubble %", "upd/iter", "vs us-byte"]);
+
+        let base = run_pipeline(&w, Scheme::UsByte, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        let base_t = base.sim.steady_iter_time;
+        t.row(&[
+            "A: us-byte (no dependency relaxing)".into(),
+            format!("{base_t}"),
+            format!("{:.1}", base.sim.bubble_ratio() * 100.0),
+            "1.00".into(),
+            "1.00x".into(),
+        ]);
+
+        let buckets = partition(
+            &w,
+            Strategy::DeftConstrained {
+                partition_size: PAPER_PARTITION,
+            },
+            &env,
+        );
+        let variants: Vec<(&str, Deft)> = vec![
+            ("B: + delayed updates (single link)", Deft::without_multilink()),
+            (
+                "C: + heterogeneous links",
+                Deft::new(DeftOptions {
+                    preserver: false,
+                    ..DeftOptions::default()
+                }),
+            ),
+            ("D: + preserver feedback (full DeFT)", Deft::new(DeftOptions::default())),
+        ];
+        for (label, deft) in variants {
+            let schedule = deft.schedule(&buckets);
+            let sim = simulate(
+                &buckets,
+                &schedule,
+                &env,
+                &SimOptions {
+                    iterations: (schedule.cycle.len() * 6).max(40),
+                    warmup: schedule.cycle.len().max(4),
+                    record_timeline: true,
+                },
+            );
+            t.row(&[
+                label.into(),
+                format!("{}", sim.steady_iter_time),
+                format!("{:.1}", sim.bubble_ratio() * 100.0),
+                format!("{:.2}", schedule.update_frequency()),
+                format!("{:.2}x", base_t.ratio(sim.steady_iter_time)),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // --- Algorithm 1 vs naive-only on backward-stage instances. ---
+    println!("=== Alg. 1 (recursive) vs naive knapsack on backward instances ===\n");
+    let mut t = Table::new(&["instance", "naive packed", "recursive packed", "gain"]);
+    let tbl2 = vgg19_table2_buckets();
+    // Backward readiness order: buckets n-1 .. 1, release = own bwd.
+    let items: Vec<Item> = tbl2[1..]
+        .iter()
+        .rev()
+        .map(|b| Item::new(b.id, b.comm))
+        .collect();
+    let release: Vec<Micros> = tbl2[1..].iter().rev().map(|b| b.bwd).collect();
+    let caps = [
+        Micros(30_000),
+        Micros(60_000),
+        Micros(93_119),
+        Micros(130_000),
+    ];
+    for cap in caps {
+        let n = naive_knapsack(&items, cap);
+        let r = recursive_knapsack(&items, &release, cap);
+        t.row(&[
+            format!("vgg19-table2 bwd, cap {cap}"),
+            format!("{}", n.total),
+            format!("{}", r.total),
+            format!(
+                "{:+.1}%",
+                (r.total.as_us() as f64 / n.total.as_us().max(1) as f64 - 1.0) * 100.0
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,40 @@
+//! Paper **Figs. 11–13** — bucket scheduling orders of the four schemes
+//! on ResNet-101 (Fig. 11), VGG-19 (Fig. 12) and GPT-2 (Fig. 13),
+//! rendered as ASCII Gantt charts over one steady-state window; plus the
+//! Table III feature matrix header.
+//!
+//! Expected shapes (paper):
+//!  * DDP: all comm in the backward/gap window, big bubbles before fwd.
+//!  * Bytescheduler/US-Byte: comm spills into the forward window, fewer
+//!    bubbles, still capped by CR.
+//!  * DeFT: two links busy concurrently, forward never stalls (delayed
+//!    updates), bucket #1's comm moved into the next forward window.
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::gantt_steady;
+use deft::sched::feature_matrix;
+
+fn main() {
+    println!("=== Table III (feature matrix) ===\n{}", feature_matrix());
+    let env = ClusterEnv::paper_testbed();
+    for (fig, wname) in [("Fig. 11", "resnet101"), ("Fig. 12", "vgg19"), ("Fig. 13", "gpt2")] {
+        let w = workload_by_name(wname);
+        println!("\n=== {fig}: bucket scheduling orders, {} ===", w.name);
+        let mut schemes = Scheme::ALL.to_vec();
+        schemes.push(Scheme::DeftNoMultilink);
+        for scheme in schemes {
+            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+            println!(
+                "\n--- {} | buckets {} | iter {} | bubbles {:.1}% | upd/iter {:.2} ---",
+                scheme.name(),
+                r.buckets.len(),
+                r.sim.steady_iter_time,
+                r.sim.bubble_ratio() * 100.0,
+                r.schedule.update_frequency(),
+            );
+            println!("{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 112));
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Paper **Fig. 14** — scalability: relative speedup (vs one GPU) of the
+//! four schemes at 2 / 4 / 8 / 16 GPUs on the three DNNs.
+//!
+//! Paper shape: DeFT closest to linear everywhere; its speedup is
+//! 1.21–1.92× US-Byte, 1.32–1.98× Bytescheduler, 1.55–2.24× PyTorch.
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::Table;
+
+fn main() {
+    let gpu_counts = [2usize, 4, 8, 16];
+    for wname in ["resnet101", "vgg19", "gpt2"] {
+        let w = workload_by_name(wname);
+        // 1-GPU reference: no communication; iteration = compute.
+        let single_iter = w.total_compute();
+        println!("=== Fig. 14: speedup vs #GPUs, {} (linear = N) ===\n", w.name);
+        let mut t = Table::new(&["scheme", "2 GPUs", "4 GPUs", "8 GPUs", "16 GPUs"]);
+        let mut per_scheme: Vec<(String, Vec<f64>)> = Vec::new();
+        for scheme in Scheme::ALL {
+            let mut speedups = Vec::new();
+            for &n in &gpu_counts {
+                let env = ClusterEnv::paper_testbed().with_workers(n);
+                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30);
+                // Relative speedup = N-GPU throughput / 1-GPU throughput
+                //                  = N * t_single / t_N.
+                let s = n as f64 * single_iter.ratio(r.sim.steady_iter_time).min(1.0);
+                speedups.push(s);
+            }
+            per_scheme.push((scheme.name().into(), speedups));
+        }
+        t.row(&[
+            "linear".into(),
+            "2.00".into(),
+            "4.00".into(),
+            "8.00".into(),
+            "16.00".into(),
+        ]);
+        for (name, sp) in &per_scheme {
+            t.row(&[
+                name.clone(),
+                format!("{:.2}", sp[0]),
+                format!("{:.2}", sp[1]),
+                format!("{:.2}", sp[2]),
+                format!("{:.2}", sp[3]),
+            ]);
+        }
+        println!("{}", t.render());
+        // Paper bands at 16 GPUs.
+        let deft16 = per_scheme.iter().find(|(n, _)| n == "deft").unwrap().1[3];
+        let usb16 = per_scheme.iter().find(|(n, _)| n == "us-byte").unwrap().1[3];
+        let bs16 = per_scheme.iter().find(|(n, _)| n == "bytescheduler").unwrap().1[3];
+        let ddp16 = per_scheme.iter().find(|(n, _)| n == "pytorch-ddp").unwrap().1[3];
+        println!(
+            "at 16 GPUs: deft/us-byte {:.2}x (paper 1.21-1.92), deft/bytesched {:.2}x (1.32-1.98), deft/ddp {:.2}x (1.55-2.24)\n",
+            deft16 / usb16,
+            deft16 / bs16,
+            deft16 / ddp16
+        );
+    }
+}

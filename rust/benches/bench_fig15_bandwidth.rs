@@ -1,0 +1,55 @@
+//! Paper **Fig. 15** — throughput of the four schemes at 10 / 20 / 30 /
+//! 40 Gbps inter-node bandwidth (16 GPUs).
+//!
+//! Paper shape: DeFT highest at every bandwidth; 1.28–2.83× US-Byte,
+//! 1.36–3.09× Bytescheduler, 1.61–3.94× PyTorch, with DeFT's speedup
+//! growing as bandwidth shrinks (its volume reduction matters more) but
+//! staying linear-in-bandwidth thanks to the Preserver bound.
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::Table;
+
+fn main() {
+    let bandwidths = [10.0f64, 20.0, 30.0, 40.0];
+    for wname in ["resnet101", "vgg19", "gpt2"] {
+        let w = workload_by_name(wname);
+        println!(
+            "=== Fig. 15: throughput (samples/s) vs bandwidth, {} ===\n",
+            w.name
+        );
+        let mut t = Table::new(&["scheme", "10Gbps", "20Gbps", "30Gbps", "40Gbps"]);
+        let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        for scheme in Scheme::ALL {
+            let mut tp = Vec::new();
+            for &bw in &bandwidths {
+                let env = ClusterEnv::paper_testbed().with_bandwidth(bw);
+                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30);
+                tp.push(r.sim.throughput(w.batch_size, env.workers));
+            }
+            rows.push((scheme.name().into(), tp));
+        }
+        for (name, tp) in &rows {
+            t.row(&[
+                name.clone(),
+                format!("{:.0}", tp[0]),
+                format!("{:.0}", tp[1]),
+                format!("{:.0}", tp[2]),
+                format!("{:.0}", tp[3]),
+            ]);
+        }
+        println!("{}", t.render());
+        let get = |n: &str| rows.iter().find(|(x, _)| x == n).unwrap().1.clone();
+        let deft = get("deft");
+        let usb = get("us-byte");
+        let ddp = get("pytorch-ddp");
+        println!(
+            "deft/us-byte: {:.2}x @10G … {:.2}x @40G (paper band 1.28-2.83); deft/ddp: {:.2}x … {:.2}x (1.61-3.94)\n",
+            deft[0] / usb[0],
+            deft[3] / usb[3],
+            deft[0] / ddp[0],
+            deft[3] / ddp[3],
+        );
+    }
+}

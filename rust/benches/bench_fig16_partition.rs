@@ -1,0 +1,60 @@
+//! Paper **Fig. 16** — influence of partition size on the four schemes'
+//! schedules, VGG-19 at partition sizes 3e6 / 4e6 / 8e6 / 1e7 (DDP bucket
+//! caps 10 / 15 / 30 / 40 MB respectively).
+//!
+//! Paper shape: small partitions inflate Bytescheduler's startup
+//! overhead (many blocks); US-Byte's fusion cuts total comm; DeFT caps
+//! each bucket at fwd/μ, so its total comm is not the lowest, but its
+//! iteration time is (heterogeneous links + delayed updates).
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::{gantt_steady, Table};
+
+fn main() {
+    let w = workload_by_name("vgg19");
+    let env = ClusterEnv::paper_testbed();
+    let settings: [(u64, f64); 5] = [
+        (3_000_000, 10.0),
+        (4_000_000, 15.0),
+        (6_500_000, PAPER_DDP_MB),
+        (8_000_000, 30.0),
+        (10_000_000, 40.0),
+    ];
+    for (psize, ddp_mb) in settings {
+        println!(
+            "=== Fig. 16: VGG-19, partition size {psize} (DDP bucket {ddp_mb} MB) ===\n"
+        );
+        let mut t = Table::new(&[
+            "scheme",
+            "buckets",
+            "iter time",
+            "bubble %",
+            "upd/iter",
+            "speedup vs ddp",
+        ]);
+        let mut ddp_time = None;
+        for scheme in Scheme::ALL {
+            let r = run_pipeline(&w, scheme, &env, psize, ddp_mb, 30);
+            if scheme == Scheme::PytorchDdp {
+                ddp_time = Some(r.sim.steady_iter_time);
+            }
+            t.row(&[
+                scheme.name().into(),
+                r.buckets.len().to_string(),
+                format!("{}", r.sim.steady_iter_time),
+                format!("{:.1}", r.sim.bubble_ratio() * 100.0),
+                format!("{:.2}", r.schedule.update_frequency()),
+                ddp_time
+                    .map(|d| format!("{:.2}x", d.ratio(r.sim.steady_iter_time)))
+                    .unwrap_or("-".into()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    // One detailed schedule rendering at 8e6 (the paper's Fig. 16(c)).
+    let r = run_pipeline(&w, Scheme::Deft, &env, 8_000_000, 30.0, 30);
+    println!("--- DeFT schedule at partition 8e6 (cf. Fig. 16c) ---");
+    println!("{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 112));
+}

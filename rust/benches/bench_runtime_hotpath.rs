@@ -1,0 +1,161 @@
+//! L3 hot-path microbenchmarks: DES simulation throughput (events/s),
+//! scheduler solve latency, PJRT dispatch latency, and the gradient
+//! reduction path (Rust loop vs the AOT Pallas `grad_reduce` executable).
+//!
+//! These are the §Perf numbers recorded in EXPERIMENTS.md. The PJRT rows
+//! self-skip when artifacts are missing.
+
+use deft::bench::{run_pipeline, time_it, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::ClusterEnv;
+use deft::metrics::Table;
+use deft::runtime::{ArtifactManifest, Engine, HostTensor};
+
+fn main() {
+    let env = ClusterEnv::paper_testbed();
+    let mut t = Table::new(&["benchmark", "median", "derived"]);
+
+    // --- DES throughput ---
+    let w = workload_by_name("gpt2");
+    for (label, iters) in [("sim 100 iters (gpt2/deft)", 100usize), ("sim 400 iters", 400)] {
+        let (med, _) = time_it(1, 5, || {
+            std::hint::black_box(run_pipeline(
+                &w,
+                Scheme::Deft,
+                &env,
+                PAPER_PARTITION,
+                PAPER_DDP_MB,
+                iters,
+            ));
+        });
+        // Rough event count: per iteration 2 compute tasks per bucket +
+        // ~1.2 ops; use spans as proxy.
+        let r = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, iters);
+        let events = r.sim.timeline.spans.len();
+        t.row(&[
+            label.into(),
+            format!("{:.2} ms", med * 1e3),
+            format!("{:.2} M spans/s", events as f64 / med / 1e6),
+        ]);
+    }
+
+    // --- scheduler solve latency (steady-state planning) ---
+    for scheme in [Scheme::UsByte, Scheme::Deft] {
+        let buckets = deft::partition::partition(
+            &w,
+            deft::partition::Strategy::DeftConstrained {
+                partition_size: PAPER_PARTITION,
+            },
+            &env,
+        );
+        let s = deft::bench::scheduler_for(scheme, true);
+        let (med, _) = time_it(2, 10, || {
+            std::hint::black_box(s.schedule(&buckets));
+        });
+        t.row(&[
+            format!("schedule solve ({})", scheme.name()),
+            format!("{:.3} ms", med * 1e3),
+            format!("{} buckets", buckets.len()),
+        ]);
+    }
+
+    // --- PJRT paths (need artifacts) ---
+    if std::path::Path::new("artifacts/manifest.toml").exists() {
+        let m = ArtifactManifest::load(std::path::Path::new("artifacts/manifest.toml")).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let reduce = engine.load(m.exe("grad_reduce").unwrap()).unwrap();
+        let workers = m.meta_usize("workers").unwrap();
+        let sizes: Vec<usize> = reduce
+            .spec
+            .inputs
+            .iter()
+            .map(|s| s.elements() / workers)
+            .collect();
+        let total: usize = sizes.iter().sum();
+
+        let stacked: Vec<Vec<f32>> = reduce
+            .spec
+            .inputs
+            .iter()
+            .map(|s| vec![0.5f32; s.elements()])
+            .collect();
+
+        // PJRT grad_reduce (Pallas bucket_reduce kernel, AOT).
+        let inputs: Vec<HostTensor> = stacked.iter().cloned().map(HostTensor::F32).collect();
+        let (med_pjrt, _) = time_it(2, 10, || {
+            std::hint::black_box(reduce.run(&inputs).unwrap());
+        });
+        t.row(&[
+            "grad_reduce via PJRT (Pallas)".into(),
+            format!("{:.3} ms", med_pjrt * 1e3),
+            format!(
+                "{:.2} GB/s effective",
+                (total * workers * 4) as f64 / med_pjrt / 1e9
+            ),
+        ]);
+
+        // Equivalent Rust loop (zip-based, matching the trainer's
+        // `Trainer::allreduce` so the comparison reflects production).
+        let (med_rust, _) = time_it(2, 10, || {
+            let mut out: Vec<Vec<f32>> = sizes.iter().map(|&s| vec![0.0; s]).collect();
+            for (b, slab) in stacked.iter().enumerate() {
+                let n = sizes[b];
+                for wk in 0..workers {
+                    let src = &slab[wk * n..(wk + 1) * n];
+                    for (a, x) in out[b].iter_mut().zip(src) {
+                        *a += *x;
+                    }
+                }
+                let inv = 1.0 / workers as f32;
+                for a in out[b].iter_mut() {
+                    *a *= inv;
+                }
+            }
+            std::hint::black_box(out);
+        });
+        t.row(&[
+            "grad_reduce in Rust loop".into(),
+            format!("{:.3} ms", med_rust * 1e3),
+            format!(
+                "{:.2} GB/s effective",
+                (total * workers * 4) as f64 / med_rust / 1e9
+            ),
+        ]);
+
+        // train_step dispatch latency (full fwd+bwd of the small model).
+        let step = engine.load(m.exe("train_step").unwrap()).unwrap();
+        let init: Vec<Vec<f32>> = m.meta["init_files"]
+            .split(';')
+            .map(|f| {
+                std::fs::read(m.dir.join(f))
+                    .unwrap()
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            })
+            .collect();
+        let batch = m.meta_usize("batch").unwrap();
+        let seq = m.meta_usize("seq").unwrap();
+        let mut step_inputs: Vec<HostTensor> =
+            init.iter().cloned().map(HostTensor::F32).collect();
+        step_inputs.push(HostTensor::I32(vec![1i32; batch * (seq + 1)]));
+        let (med_step, _) = time_it(1, 5, || {
+            std::hint::black_box(step.run(&step_inputs).unwrap());
+        });
+        let params: usize = sizes.iter().sum();
+        let flops = 6.0 * params as f64 * (batch * seq) as f64;
+        t.row(&[
+            "train_step fwd+bwd via PJRT".into(),
+            format!("{:.1} ms", med_step * 1e3),
+            format!("{:.2} GFLOP/s", flops / med_step / 1e9),
+        ]);
+    } else {
+        t.row(&[
+            "PJRT benches".into(),
+            "SKIPPED".into(),
+            "run `make artifacts`".into(),
+        ]);
+    }
+
+    println!("=== L3 hot-path microbenchmarks ===\n\n{}", t.render());
+}

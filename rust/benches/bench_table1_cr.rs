@@ -1,0 +1,40 @@
+//! Paper **Table I** — per-iteration forward/backward/communication times
+//! and coverage rate (CR) of the three evaluation DNNs at the reference
+//! environment (16 GPUs, 40 Gbps).
+//!
+//! Paper values: ResNet-101 59/118/242 ms (CR misprinted 1.67, computed
+//! 1.37); VGG-19 37/93/258 (1.98); GPT-2 169/381/546.4 (0.99).
+
+use deft::bench::workload_by_name;
+use deft::metrics::Table;
+
+fn main() {
+    println!("=== Table I: computation and communication time of DNNs ===\n");
+    let mut t = Table::new(&[
+        "DNN",
+        "T_forward",
+        "T_backward",
+        "T_communication",
+        "CR",
+        "paper (fwd/bwd/comm/CR)",
+    ]);
+    let paper = [
+        ("resnet101", "59ms/118ms/242ms/1.37*"),
+        ("vgg19", "37ms/93ms/258ms/1.98"),
+        ("gpt2", "169ms/381ms/546.4ms/0.99"),
+        ("llama2", "(section VI: CR < 0.1)"),
+    ];
+    for (name, paper_row) in paper {
+        let w = workload_by_name(name);
+        t.row(&[
+            w.name.clone(),
+            format!("{:.1}ms", w.total_fwd().as_ms_f64()),
+            format!("{:.1}ms", w.total_bwd().as_ms_f64()),
+            format!("{:.1}ms", w.total_comm_ref().as_ms_f64()),
+            format!("{:.2}", w.coverage_rate_ref()),
+            paper_row.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("* the paper's CR column prints 1.67 for ResNet-101; 242/(59+118) = 1.37 (the text says \"approximately 1.4\").");
+}

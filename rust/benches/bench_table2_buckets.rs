@@ -1,0 +1,63 @@
+//! Paper **Table II** — per-bucket communication/computation times of
+//! VGG-19 at partition size 6,500,000: the published measurement verbatim
+//! (the scheduling instance every figure reuses), side by side with the
+//! bucket profile our own partition + link model produces.
+
+use deft::bench::PAPER_PARTITION;
+use deft::links::ClusterEnv;
+use deft::metrics::Table;
+use deft::models::{vgg19, vgg19_table2_buckets};
+use deft::partition::{partition, Strategy};
+use deft::util::Micros;
+
+fn main() {
+    println!("=== Table II: VGG-19 bucket times (partition 6.5M) ===\n");
+    println!("-- paper measurement (verbatim) --");
+    let mut t = Table::new(&["bucket", "forward(us)", "backward(us)", "communication(us)"]);
+    let paper = vgg19_table2_buckets();
+    for b in &paper {
+        t.row(&[
+            format!("{}", b.id + 1),
+            b.fwd.as_us().to_string(),
+            b.bwd.as_us().to_string(),
+            b.comm.as_us().to_string(),
+        ]);
+    }
+    let (f, bw, c): (Micros, Micros, Micros) = paper.iter().fold(
+        (Micros::ZERO, Micros::ZERO, Micros::ZERO),
+        |(a, b, cc), x| (a + x.fwd, b + x.bwd, cc + x.comm),
+    );
+    t.row(&[
+        "total".into(),
+        f.as_us().to_string(),
+        bw.as_us().to_string(),
+        format!("{} (paper total row: 257725 — 10ms row misprint)", c.as_us()),
+    ]);
+    println!("{}", t.render());
+
+    println!("-- our layer model partitioned US-Byte-style at 6.5M --");
+    let w = vgg19();
+    let buckets = partition(
+        &w,
+        Strategy::UsByte {
+            partition_size: PAPER_PARTITION,
+        },
+        &ClusterEnv::paper_testbed(),
+    );
+    let mut t2 = Table::new(&["bucket", "params", "forward(us)", "backward(us)", "comm(us)"]);
+    for b in &buckets {
+        t2.row(&[
+            format!("{}", b.id + 1),
+            b.params.to_string(),
+            b.fwd.as_us().to_string(),
+            b.bwd.as_us().to_string(),
+            b.comm.as_us().to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+    println!(
+        "shape check: the fc6 bucket dominates comm ({}% of total) as in the paper's bucket #4.",
+        buckets.iter().map(|b| b.comm.as_us()).max().unwrap() * 100
+            / buckets.iter().map(|b| b.comm.as_us()).sum::<u64>()
+    );
+}

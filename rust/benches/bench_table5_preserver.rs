@@ -1,0 +1,72 @@
+//! Paper **Table V** — expected-state evolution E_B(s_{t+1}) of the
+//! fixed-batch order O_B vs DeFT's variable-batch order O_D on the
+//! ResNet-101 setting (A = 1000, N = 4, S* = 0, η = 0.01, B = 256).
+//!
+//! Paper row values: O_B E = .2103 .2054 .1989 .1967 .1922; O_D merges
+//! iteration A+1..A+2 into one B=512 update (E = .2012) and the final
+//! ratio is 0.993.
+
+use deft::metrics::Table;
+use deft::preserver::{acceptable, quantify, table5_setting, EPSILON};
+
+fn main() {
+    let (walk, b) = table5_setting();
+    println!("=== Table V: E_B(s_t+1) of O_B and O_D, ResNet-101 ===");
+    println!("setting: A=1000, N=4, S*=0, eta=0.01, s_A={}\n", walk.s_t);
+
+    let rep = quantify(&walk, b, &[2, 1, 1]);
+    let mut t = Table::new(&["order", "iter A", "A+1", "A+2", "A+3", "A+4", "final ratio"]);
+    let fmt = |v: f64| format!("{v:.4}");
+    t.row(&[
+        "O_B (paper)".into(),
+        "0.2103".into(),
+        "0.2054".into(),
+        "0.1989".into(),
+        "0.1967".into(),
+        "0.1922".into(),
+        "0.993".into(),
+    ]);
+    t.row(&[
+        "O_B (ours)".into(),
+        fmt(walk.s_t),
+        fmt(rep.baseline[0]),
+        fmt(rep.baseline[1]),
+        fmt(rep.baseline[2]),
+        fmt(rep.baseline[3]),
+        format!("{:.4}", rep.ratio),
+    ]);
+    t.row(&[
+        "O_D (paper)".into(),
+        "0.2103".into(),
+        "0.2012 (B=512)".into(),
+        "-".into(),
+        "0.1979".into(),
+        "0.1935".into(),
+        "".into(),
+    ]);
+    t.row(&[
+        "O_D (ours)".into(),
+        fmt(walk.s_t),
+        format!("{} (B=512)", fmt(rep.deft[0])),
+        "-".into(),
+        fmt(rep.deft[1]),
+        fmt(rep.deft[2]),
+        "".into(),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "ratio within [1-eps, 1+eps]? {} (eps = {EPSILON})",
+        acceptable(&rep, 0.03)
+    );
+    println!("\n=== sweep: how much merging does the walk tolerate? ===");
+    let mut t2 = Table::new(&["k sequence", "ratio", "acceptable"]);
+    for ks in [vec![1u64; 4], vec![2, 1, 1], vec![2, 2], vec![4], vec![8], vec![32]] {
+        let r = quantify(&walk, b, &ks);
+        t2.row(&[
+            format!("{ks:?}"),
+            format!("{:.4}", r.ratio),
+            acceptable(&r, EPSILON).to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+}

@@ -1,0 +1,150 @@
+//! Bench harness shared by `rust/benches/*` (the offline build has no
+//! criterion): warm-up + timed repetitions, median/stddev reporting, and
+//! helpers that assemble the standard experiment pipeline
+//! (workload → partition → schedule → simulate).
+
+use std::time::Instant;
+
+use crate::config::Scheme;
+use crate::links::ClusterEnv;
+use crate::models::{self, BucketProfile, Workload};
+use crate::partition::{partition, Strategy};
+use crate::sched::{Bytescheduler, Deft, DeftOptions, Schedule, Scheduler, UsByte, Wfbp};
+use crate::sim::{simulate, SimOptions, SimResult};
+use crate::util::stats;
+
+/// Time `f` with `warmup` unmeasured and `reps` measured runs; returns
+/// (median_s, stddev_s).
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (stats::median(&samples), stats::stddev(&samples))
+}
+
+/// Resolve a workload by name.
+pub fn workload_by_name(name: &str) -> Workload {
+    match name {
+        "resnet101" => models::resnet101(),
+        "vgg19" => models::vgg19(),
+        "gpt2" => models::gpt2(),
+        "llama2" | "llama2_7b_like" => models::llama2_7b_like(),
+        "small" => models::small_transformer(4, 256, 2048, 128),
+        other => panic!("unknown workload `{other}`"),
+    }
+}
+
+/// Build the scheduler for a scheme (paper defaults).
+pub fn scheduler_for(scheme: Scheme, preserver: bool) -> Box<dyn Scheduler> {
+    match scheme {
+        Scheme::PytorchDdp => Box::new(Wfbp),
+        Scheme::Bytescheduler => Box::new(Bytescheduler),
+        Scheme::UsByte => Box::new(UsByte),
+        Scheme::Deft => Box::new(Deft::new(DeftOptions {
+            preserver,
+            ..DeftOptions::default()
+        })),
+        Scheme::DeftNoMultilink => Box::new(Deft::without_multilink()),
+    }
+}
+
+/// The standard experiment pipeline used by most benches: partition the
+/// workload for the scheme, schedule, and simulate.
+pub struct PipelineResult {
+    pub buckets: Vec<BucketProfile>,
+    pub schedule: Schedule,
+    pub sim: SimResult,
+}
+
+/// Run workload × scheme × env through partition → schedule → simulate.
+pub fn run_pipeline(
+    workload: &Workload,
+    scheme: Scheme,
+    env: &ClusterEnv,
+    partition_size: u64,
+    ddp_bucket_mb: f64,
+    iterations: usize,
+) -> PipelineResult {
+    let strategy = match scheme {
+        Scheme::PytorchDdp => Strategy::DdpFixed {
+            bucket_size_mb: ddp_bucket_mb,
+        },
+        Scheme::Bytescheduler => Strategy::Uniform { partition_size },
+        Scheme::UsByte => Strategy::UsByte { partition_size },
+        Scheme::Deft | Scheme::DeftNoMultilink => Strategy::DeftConstrained { partition_size },
+    };
+    // Single-link ablation still partitions with the DeFT constraint.
+    let buckets = partition(workload, strategy, env);
+    let scheduler = scheduler_for(scheme, true);
+    let schedule = scheduler.schedule(&buckets);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let iterations = iterations.max(warmup * 3 + 4);
+    let sim = simulate(
+        &buckets,
+        &schedule,
+        env,
+        &SimOptions {
+            iterations,
+            warmup,
+            record_timeline: true,
+        },
+    );
+    PipelineResult {
+        buckets,
+        schedule,
+        sim,
+    }
+}
+
+/// Convenience: paper-default partition sizes.
+pub const PAPER_PARTITION: u64 = 6_500_000;
+pub const PAPER_DDP_MB: f64 = 25.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_runs_all_schemes_on_gpt2() {
+        let w = workload_by_name("gpt2");
+        let env = ClusterEnv::paper_testbed();
+        for scheme in Scheme::ALL {
+            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+            assert!(r.sim.steady_iter_time.as_us() > 0, "{scheme:?}");
+            assert!(!r.buckets.is_empty());
+        }
+    }
+
+    #[test]
+    fn deft_beats_ddp_on_vgg19() {
+        // The paper's headline: DeFT speedup on the CR≈2 workload.
+        let w = workload_by_name("vgg19");
+        let env = ClusterEnv::paper_testbed();
+        let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        // Compare per-sample time: DeFT updates less often but each
+        // iteration still consumes one batch per worker, so iteration
+        // time is the right unit.
+        let speedup = ddp.sim.steady_iter_time.ratio(deft.sim.steady_iter_time);
+        assert!(
+            speedup > 1.3,
+            "DeFT speedup over DDP only {speedup:.2}x (ddp {:?} vs deft {:?})",
+            ddp.sim.steady_iter_time,
+            deft.sim.steady_iter_time
+        );
+    }
+
+    #[test]
+    fn time_it_returns_positive() {
+        let (med, _sd) = time_it(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(med >= 0.0);
+    }
+}

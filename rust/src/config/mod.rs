@@ -1,0 +1,268 @@
+//! Configuration system: a TOML-subset parser (offline build — no serde)
+//! plus the typed experiment configuration consumed by the launcher.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"x"`), boolean, integer, and float values, `#` comments. That covers
+//! every config this project ships; nested tables and arrays are
+//! deliberately out of scope.
+
+pub mod toml_lite;
+
+pub use toml_lite::{parse, ParseError, Value};
+
+use crate::links::ClusterEnv;
+use crate::partition::Strategy;
+use std::collections::BTreeMap;
+
+/// Which scheduling scheme to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    PytorchDdp,
+    Bytescheduler,
+    UsByte,
+    Deft,
+    DeftNoMultilink,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] = [
+        Scheme::PytorchDdp,
+        Scheme::Bytescheduler,
+        Scheme::UsByte,
+        Scheme::Deft,
+    ];
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "pytorch-ddp" | "ddp" | "pytorch" => Some(Scheme::PytorchDdp),
+            "bytescheduler" => Some(Scheme::Bytescheduler),
+            "us-byte" | "usbyte" => Some(Scheme::UsByte),
+            "deft" => Some(Scheme::Deft),
+            "deft-nolink" | "deft-no-multilink" => Some(Scheme::DeftNoMultilink),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::PytorchDdp => "pytorch-ddp",
+            Scheme::Bytescheduler => "bytescheduler",
+            Scheme::UsByte => "us-byte",
+            Scheme::Deft => "deft",
+            Scheme::DeftNoMultilink => "deft-nolink",
+        }
+    }
+}
+
+/// Full experiment configuration (simulation path).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Workload name: resnet101 | vgg19 | gpt2 | llama2 | small.
+    pub workload: String,
+    pub scheme: Scheme,
+    pub workers: usize,
+    pub bandwidth_gbps: f64,
+    pub multi_link: bool,
+    pub partition_size: u64,
+    pub ddp_bucket_mb: f64,
+    pub iterations: usize,
+    pub warmup: usize,
+    pub mu: f64,
+    pub preserver: bool,
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            workload: "vgg19".into(),
+            scheme: Scheme::Deft,
+            workers: 16,
+            bandwidth_gbps: 40.0,
+            multi_link: true,
+            partition_size: 6_500_000,
+            ddp_bucket_mb: 25.0,
+            iterations: 60,
+            warmup: 8,
+            mu: crate::links::PAPER_MU,
+            preserver: true,
+            epsilon: crate::preserver::EPSILON,
+            seed: 17,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from TOML-subset text. Unknown keys are rejected — configs
+    /// must not silently ignore typos.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, String> {
+        let doc = parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in doc.flatten() {
+            cfg.set_key(&key, &value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be ≥ 1".into());
+        }
+        if self.bandwidth_gbps <= 0.0 {
+            return Err("bandwidth must be positive".into());
+        }
+        if self.partition_size == 0 {
+            return Err("partition_size must be positive".into());
+        }
+        if self.iterations <= self.warmup {
+            return Err("iterations must exceed warmup".into());
+        }
+        if !(0.0..1.0).contains(&self.epsilon) {
+            return Err("epsilon must be in [0, 1)".into());
+        }
+        Ok(())
+    }
+
+    /// The cluster environment this config describes.
+    pub fn env(&self) -> ClusterEnv {
+        let mut env = ClusterEnv::paper_testbed()
+            .with_workers(self.workers)
+            .with_bandwidth(self.bandwidth_gbps);
+        env.multi_link = self.multi_link;
+        env.mu = self.mu;
+        env
+    }
+
+    /// The partition strategy this config's scheme uses.
+    pub fn strategy(&self) -> Strategy {
+        match self.scheme {
+            Scheme::PytorchDdp => Strategy::DdpFixed {
+                bucket_size_mb: self.ddp_bucket_mb,
+            },
+            Scheme::Bytescheduler => Strategy::Uniform {
+                partition_size: self.partition_size,
+            },
+            Scheme::UsByte => Strategy::UsByte {
+                partition_size: self.partition_size,
+            },
+            Scheme::Deft | Scheme::DeftNoMultilink => Strategy::DeftConstrained {
+                partition_size: self.partition_size,
+            },
+        }
+    }
+
+    /// Apply `--key=value` command-line overrides: each value is parsed
+    /// as a TOML scalar if possible, else treated as a bare string.
+    pub fn apply_overrides(&mut self, overrides: &BTreeMap<String, String>) -> Result<(), String> {
+        for (k, v) in overrides {
+            let value = Value::parse_scalar(v);
+            self.set_key(k, &value)?;
+        }
+        self.validate()
+    }
+
+    fn set_key(&mut self, key: &str, value: &Value) -> Result<(), String> {
+        match key {
+            "experiment.workload" | "workload" => self.workload = value.as_str()?.to_string(),
+            "experiment.scheme" | "scheme" => {
+                self.scheme = Scheme::parse(value.as_str()?)
+                    .ok_or_else(|| format!("unknown scheme {value:?}"))?
+            }
+            "cluster.workers" | "workers" => self.workers = value.as_int()? as usize,
+            "cluster.bandwidth_gbps" | "bandwidth_gbps" => self.bandwidth_gbps = value.as_float()?,
+            "cluster.multi_link" | "multi_link" => self.multi_link = value.as_bool()?,
+            "cluster.mu" | "mu" => self.mu = value.as_float()?,
+            "schedule.partition_size" | "partition_size" => {
+                self.partition_size = value.as_int()? as u64
+            }
+            "schedule.ddp_bucket_mb" | "ddp_bucket_mb" => self.ddp_bucket_mb = value.as_float()?,
+            "schedule.preserver" | "preserver" => self.preserver = value.as_bool()?,
+            "schedule.epsilon" | "epsilon" => self.epsilon = value.as_float()?,
+            "run.iterations" | "iterations" => self.iterations = value.as_int()? as usize,
+            "run.warmup" | "warmup" => self.warmup = value.as_int()? as usize,
+            "run.seed" | "seed" => self.seed = value.as_int()? as u64,
+            other => return Err(format!("unknown config key `{other}`")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# DeFT experiment
+[experiment]
+workload = "gpt2"
+scheme = "deft"
+
+[cluster]
+workers = 8
+bandwidth_gbps = 20.0
+multi_link = false
+
+[schedule]
+partition_size = 4000000
+preserver = true
+
+[run]
+iterations = 30
+warmup = 4
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.workload, "gpt2");
+        assert_eq!(cfg.scheme, Scheme::Deft);
+        assert_eq!(cfg.workers, 8);
+        assert!((cfg.bandwidth_gbps - 20.0).abs() < 1e-12);
+        assert!(!cfg.multi_link);
+        assert_eq!(cfg.partition_size, 4_000_000);
+        assert_eq!(cfg.iterations, 30);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(ExperimentConfig::from_toml("nonsense = 1\n").is_err());
+        assert!(ExperimentConfig::from_toml("scheme = \"magic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("workers = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("iterations = 2\nwarmup = 5\n").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = ExperimentConfig::default();
+        let mut ov = BTreeMap::new();
+        ov.insert("workers".to_string(), "4".to_string());
+        ov.insert("scheme".to_string(), "us-byte".to_string());
+        cfg.apply_overrides(&ov).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.scheme, Scheme::UsByte);
+    }
+
+    #[test]
+    fn strategy_matches_scheme() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheme = Scheme::PytorchDdp;
+        assert!(matches!(cfg.strategy(), Strategy::DdpFixed { .. }));
+        cfg.scheme = Scheme::Bytescheduler;
+        assert!(matches!(cfg.strategy(), Strategy::Uniform { .. }));
+        cfg.scheme = Scheme::Deft;
+        assert!(matches!(cfg.strategy(), Strategy::DeftConstrained { .. }));
+    }
+
+    #[test]
+    fn env_reflects_cluster_settings() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 4;
+        cfg.bandwidth_gbps = 10.0;
+        cfg.multi_link = false;
+        let env = cfg.env();
+        assert_eq!(env.workers, 4);
+        assert!((env.bandwidth_gbps - 10.0).abs() < 1e-12);
+        assert!(!env.multi_link);
+    }
+}

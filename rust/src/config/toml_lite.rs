@@ -1,0 +1,303 @@
+//! A small TOML-subset parser (the offline build has no `toml`/`serde`).
+//!
+//! Supported: `[section]` headers, `key = value` pairs, `#` comments,
+//! string / bool / integer / float scalars. Sections flatten to
+//! dot-joined keys (`[cluster] workers = 8` → `cluster.workers`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => Err(format!("expected string, got {v:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(format!("expected bool, got {v:?}")),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64, String> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            v => Err(format!("expected integer, got {v:?}")),
+        }
+    }
+
+    /// Ints coerce to floats; floats stay floats.
+    pub fn as_float(&self) -> Result<f64, String> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            v => Err(format!("expected float, got {v:?}")),
+        }
+    }
+
+    /// Render back to TOML syntax.
+    pub fn render(&self) -> String {
+        match self {
+            Value::Str(s) => format!("\"{s}\""),
+            Value::Bool(b) => b.to_string(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => format!("{f}"),
+        }
+    }
+
+    /// Parse a scalar token: quoted string, bool, int, float — falling
+    /// back to a bare string (used by CLI overrides).
+    pub fn parse_scalar(raw: &str) -> Value {
+        let t = raw.trim();
+        if let Some(stripped) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return Value::Str(stripped.to_string());
+        }
+        match t {
+            "true" => return Value::Bool(true),
+            "false" => return Value::Bool(false),
+            _ => {}
+        }
+        if let Ok(i) = t.replace('_', "").parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = t.replace('_', "").parse::<f64>() {
+            return Value::Float(f);
+        }
+        Value::Str(t.to_string())
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: Vec<(String, Value)>,
+}
+
+impl Document {
+    /// All keys flattened to `section.key` form, in file order.
+    pub fn flatten(&self) -> Vec<(String, Value)> {
+        self.entries.clone()
+    }
+
+    /// Lookup a flattened key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    /// Keys as a map (last duplicate wins).
+    pub fn as_map(&self) -> BTreeMap<String, Value> {
+        self.entries.iter().cloned().collect()
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line_no = ln + 1;
+        // Strip comments outside quotes.
+        let line = strip_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+            {
+                return Err(ParseError {
+                    line: line_no,
+                    message: format!("invalid section name `{name}`"),
+                });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| ParseError {
+            line: line_no,
+            message: "expected `key = value`".into(),
+        })?;
+        let key = line[..eq].trim();
+        let raw_val = line[eq + 1..].trim();
+        if key.is_empty()
+            || !key
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+        {
+            return Err(ParseError {
+                line: line_no,
+                message: format!("invalid key `{key}`"),
+            });
+        }
+        if raw_val.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                message: format!("missing value for `{key}`"),
+            });
+        }
+        let value = parse_value(raw_val).map_err(|m| ParseError {
+            line: line_no,
+            message: m,
+        })?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.push((full, value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> Result<Value, String> {
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {raw}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in {raw}"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = raw.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(Value::Float(f));
+        }
+    }
+    Err(format!("unparseable value `{raw}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+top = 1
+[a]
+s = "hello"   # trailing comment
+flag = true
+f = 2.5
+big = 6_500_000
+[b.c]
+x = -3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("a.s"), Some(&Value::Str("hello".into())));
+        assert_eq!(doc.get("a.flag"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("a.f"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("a.big"), Some(&Value::Int(6_500_000)));
+        assert_eq!(doc.get("b.c.x"), Some(&Value::Int(-3)));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("# a comment\n\n  \nx = 1 # inline\n").unwrap();
+        assert_eq!(doc.flatten().len(), 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("x = \n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("x = \"open\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_in_get() {
+        let doc = parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(doc.get("x"), Some(&Value::Int(2)));
+        assert_eq!(doc.as_map().len(), 1);
+    }
+
+    #[test]
+    fn scalar_parse_fallbacks() {
+        assert_eq!(Value::parse_scalar("8"), Value::Int(8));
+        assert_eq!(Value::parse_scalar("8.5"), Value::Float(8.5));
+        assert_eq!(Value::parse_scalar("true"), Value::Bool(true));
+        assert_eq!(Value::parse_scalar("us-byte"), Value::Str("us-byte".into()));
+        assert_eq!(Value::parse_scalar("\"q\""), Value::Str("q".into()));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert!(Value::Str("x".into()).as_int().is_err());
+        assert!(Value::Bool(true).as_str().is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # deft — Mitigating Data Dependencies for Flexible Communication Scheduling
+//!
+//! Full-system reproduction of *DeFT: Mitigating Data Dependencies for
+//! Flexible Communication Scheduling in Distributed Training* (CS.DC 2025).
+//!
+//! The crate is organised as three layers:
+//!
+//! * **L3 — Rust coordinator** (this crate): the paper's contribution —
+//!   bucket partitioning, the two-stage 0/1 multi-knapsack communication
+//!   scheduler with delayed updates and heterogeneous links, the accuracy
+//!   Preserver, the trace Profiler, plus every substrate it depends on
+//!   (a discrete-event cluster simulator, allreduce link-cost models,
+//!   a config system, a launcher and a metrics/timeline exporter).
+//! * **L2 — JAX model** (`python/compile/model.py`, build-time only): a
+//!   bucketed transformer whose `train_step`/`apply_update` are AOT-lowered
+//!   to HLO text and executed from Rust via PJRT.
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): the compute
+//!   hot-spots (causal attention, gradient bucket reduction, fused
+//!   momentum-SGD update), lowered in interpret mode into the same HLO.
+//!
+//! The public API is intentionally small: build a [`models::Workload`],
+//! pick a [`sched::Scheduler`], run it through [`sim::ClusterSim`], or
+//! drive real training with [`train::Trainer`].
+
+pub mod util;
+pub mod solver;
+pub mod partition;
+pub mod models;
+pub mod links;
+pub mod sim;
+pub mod sched;
+pub mod preserver;
+pub mod profiler;
+pub mod config;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod bench;

@@ -1,0 +1,232 @@
+//! `deft` — the CLI / launcher for the DeFT reproduction.
+//!
+//! Subcommands:
+//!   simulate   run workload × scheme through the DES, print metrics + Gantt
+//!   compare    all four schemes side by side on one workload
+//!   train      real end-to-end DP training via the PJRT runtime
+//!   features   print the Table III feature matrix
+//!
+//! Options are `--key=value` overrides of the experiment config (see
+//! `deft::config::ExperimentConfig`), plus `--config=FILE` to load a
+//! TOML-subset config.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use deft::bench::{run_pipeline, workload_by_name};
+use deft::config::{ExperimentConfig, Scheme};
+use deft::metrics::{gantt_steady, Table};
+use deft::train::{TrainOptions, Trainer};
+
+fn usage() -> &'static str {
+    "usage: deft <simulate|compare|train|features> [--config=FILE] [--key=value ...]\n\
+     keys: workload scheme workers bandwidth_gbps multi_link partition_size\n\
+           ddp_bucket_mb iterations warmup mu preserver epsilon seed\n\
+     train-only: --manifest=PATH --lr=F --momentum=F --log-every=N"
+}
+
+fn parse_args(args: &[String]) -> Result<(BTreeMap<String, String>, Option<String>), String> {
+    let mut overrides = BTreeMap::new();
+    let mut config_file = None;
+    for a in args {
+        let Some(body) = a.strip_prefix("--") else {
+            return Err(format!("unexpected argument `{a}`\n{}", usage()));
+        };
+        let (k, v) = body
+            .split_once('=')
+            .ok_or_else(|| format!("expected --key=value, got `{a}`"))?;
+        if k == "config" {
+            config_file = Some(v.to_string());
+        } else {
+            overrides.insert(k.replace('-', "_"), v.to_string());
+        }
+    }
+    Ok((overrides, config_file))
+}
+
+fn load_config(
+    overrides: &BTreeMap<String, String>,
+    config_file: &Option<String>,
+) -> Result<ExperimentConfig, String> {
+    let mut cfg = match config_file {
+        Some(f) => {
+            let text = std::fs::read_to_string(f).map_err(|e| format!("reading {f}: {e}"))?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    // Train-only keys are consumed elsewhere; filter them here.
+    let mut core = overrides.clone();
+    for k in ["manifest", "lr", "momentum", "log_every"] {
+        core.remove(k);
+    }
+    cfg.apply_overrides(&core)?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
+    let w = workload_by_name(&cfg.workload);
+    let r = run_pipeline(
+        &w,
+        cfg.scheme,
+        &cfg.env(),
+        cfg.partition_size,
+        cfg.ddp_bucket_mb,
+        cfg.iterations,
+    );
+    println!(
+        "workload={} scheme={} workers={} bw={}Gbps multi_link={}",
+        w.name,
+        cfg.scheme.name(),
+        cfg.workers,
+        cfg.bandwidth_gbps,
+        cfg.multi_link
+    );
+    println!(
+        "buckets={} cycle={} updates/cycle={} k={:?}",
+        r.buckets.len(),
+        r.schedule.cycle.len(),
+        r.schedule.updates_per_cycle,
+        r.schedule.batch_multipliers
+    );
+    println!(
+        "steady iter time = {}   bubble ratio = {:.1}%   throughput = {:.1} samples/s",
+        r.sim.steady_iter_time,
+        r.sim.bubble_ratio() * 100.0,
+        r.sim.throughput(w.batch_size, cfg.workers)
+    );
+    println!("\n{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 110));
+    Ok(())
+}
+
+fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
+    let w = workload_by_name(&cfg.workload);
+    let mut table = Table::new(&[
+        "scheme",
+        "iter time",
+        "bubble %",
+        "samples/s",
+        "updates/iter",
+        "speedup vs ddp",
+    ]);
+    let mut ddp_time = None;
+    let mut schemes = Scheme::ALL.to_vec();
+    schemes.push(Scheme::DeftNoMultilink);
+    for scheme in schemes {
+        let r = run_pipeline(
+            &w,
+            scheme,
+            &cfg.env(),
+            cfg.partition_size,
+            cfg.ddp_bucket_mb,
+            cfg.iterations,
+        );
+        let t = r.sim.steady_iter_time;
+        if scheme == Scheme::PytorchDdp {
+            ddp_time = Some(t);
+        }
+        let speedup = ddp_time
+            .map(|d| format!("{:.2}x", d.ratio(t)))
+            .unwrap_or_else(|| "-".into());
+        table.row(&[
+            scheme.name().to_string(),
+            format!("{t}"),
+            format!("{:.1}", r.sim.bubble_ratio() * 100.0),
+            format!("{:.1}", r.sim.throughput(w.batch_size, cfg.workers)),
+            format!("{:.2}", r.schedule.update_frequency()),
+            speedup,
+        ]);
+    }
+    println!(
+        "workload={} workers={} bw={}Gbps",
+        w.name, cfg.workers, cfg.bandwidth_gbps
+    );
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_train(
+    cfg: &ExperimentConfig,
+    overrides: &BTreeMap<String, String>,
+) -> Result<(), String> {
+    let mut opts = TrainOptions {
+        scheme: cfg.scheme,
+        workers: cfg.workers.min(8),
+        iterations: cfg.iterations,
+        env: cfg.env(),
+        ..TrainOptions::default()
+    };
+    if let Some(m) = overrides.get("manifest") {
+        opts.manifest = m.clone();
+    }
+    if let Some(lr) = overrides.get("lr") {
+        opts.lr = lr.parse().map_err(|e| format!("lr: {e}"))?;
+    }
+    if let Some(m) = overrides.get("momentum") {
+        opts.momentum = m.parse().map_err(|e| format!("momentum: {e}"))?;
+    }
+    if let Some(l) = overrides.get("log_every") {
+        opts.log_every = l.parse().map_err(|e| format!("log_every: {e}"))?;
+    }
+
+    let mut trainer = Trainer::new(opts.clone()).map_err(|e| format!("{e:#}"))?;
+    let profiles = trainer.profile_buckets(2).map_err(|e| format!("{e:#}"))?;
+    let scheduler = deft::bench::scheduler_for(cfg.scheme, cfg.preserver);
+    let schedule = scheduler.schedule(&profiles);
+    let report = trainer.run(&schedule, &profiles).map_err(|e| format!("{e:#}"))?;
+
+    println!(
+        "scheme={} workers={} iters={} updates={}",
+        report.scheme, opts.workers, opts.iterations, report.updates
+    );
+    println!(
+        "measured step = {}   simulated iter = {}",
+        report.measured_step, report.sim_iter_time
+    );
+    println!(
+        "loss curve (iter, loss):  [uniform baseline = {:.3}]",
+        report.uniform_loss
+    );
+    for (it, loss) in &report.losses {
+        println!("  {it:>5}  {loss:.4}");
+    }
+    println!("final loss = {:.4}", report.final_loss);
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let (overrides, config_file) = match parse_args(&args[1..]) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "features" => {
+            println!("{}", deft::sched::feature_matrix());
+            Ok(())
+        }
+        "simulate" | "compare" | "train" => match load_config(&overrides, &config_file) {
+            Ok(cfg) => match cmd.as_str() {
+                "simulate" => cmd_simulate(&cfg),
+                "compare" => cmd_compare(&cfg),
+                _ => cmd_train(&cfg, &overrides),
+            },
+            Err(e) => Err(e),
+        },
+        other => Err(format!("unknown command `{other}`\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

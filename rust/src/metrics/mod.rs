@@ -1,0 +1,216 @@
+//! Metrics presentation: ASCII Gantt rendering (paper Figs. 11–13, 16),
+//! CSV export, and summary tables.
+
+use crate::links::LinkKind;
+use crate::sim::{SimResult, SpanKind, StreamId, Timeline};
+use crate::util::Micros;
+
+/// Render a timeline window as an ASCII Gantt chart: one row per stream,
+/// bucket ids as glyphs (`0`-`9`, `a`-`z`), `.` for idle.
+///
+/// `window` selects the wall-clock range; `cols` the chart width.
+pub fn gantt(timeline: &Timeline, window: (Micros, Micros), cols: usize) -> String {
+    assert!(window.1 > window.0 && cols > 0);
+    let span = (window.1 - window.0).as_us() as f64;
+    let glyph = |bucket: usize, upper: bool| -> char {
+        let c = match bucket {
+            0..=9 => (b'0' + bucket as u8) as char,
+            10..=35 => (b'a' + (bucket - 10) as u8) as char,
+            _ => '#',
+        };
+        if upper {
+            c.to_ascii_uppercase()
+        } else {
+            c
+        }
+    };
+
+    let streams = [
+        (StreamId::Compute, "compute"),
+        (StreamId::Link(LinkKind::Nccl), "nccl   "),
+        (StreamId::Link(LinkKind::Gloo), "gloo   "),
+    ];
+    let mut out = String::new();
+    for (stream, label) in streams {
+        let mut row = vec!['.'; cols];
+        for s in timeline.on_stream(stream) {
+            if s.end <= window.0 || s.start >= window.1 {
+                continue;
+            }
+            let a = ((s.start.max(window.0) - window.0).as_us() as f64 / span * cols as f64)
+                as usize;
+            let b = ((s.end.min(window.1) - window.0).as_us() as f64 / span * cols as f64)
+                .ceil() as usize;
+            let (bucket, upper) = match &s.kind {
+                SpanKind::Fwd { bucket, .. } => (*bucket, false),
+                SpanKind::Bwd { bucket, .. } => (*bucket, true),
+                SpanKind::Comm { bucket, .. } => (*bucket, false),
+            };
+            for c in row.iter_mut().take(b.min(cols)).skip(a) {
+                *c = glyph(bucket, upper);
+            }
+        }
+        out.push_str(label);
+        out.push_str(" |");
+        out.extend(row);
+        out.push_str("|\n");
+    }
+    out.push_str(&format!(
+        "window {} .. {}  (fwd = lowercase/digits, bwd = uppercase, comm = bucket glyph)\n",
+        window.0, window.1
+    ));
+    out
+}
+
+/// Render the steady-state window (one cycle after warm-up) of a result.
+pub fn gantt_steady(result: &SimResult, cycle_iters: usize, cols: usize) -> String {
+    let iters = result.iter_ends.len();
+    if iters < cycle_iters + 2 {
+        return gantt(
+            &result.timeline,
+            (Micros::ZERO, result.total.max(Micros(1))),
+            cols,
+        );
+    }
+    let mid = iters / 2;
+    let start = result.iter_ends[mid.saturating_sub(1)];
+    let end = result.iter_ends[(mid + cycle_iters).min(iters - 1)];
+    gantt(&result.timeline, (start, end.max(start + Micros(1))), cols)
+}
+
+/// CSV export of a timeline (stream,kind,iter,bucket,start_us,end_us).
+pub fn timeline_csv(timeline: &Timeline) -> String {
+    let mut out = String::from("stream,kind,iter,bucket,merged,start_us,end_us\n");
+    for s in &timeline.spans {
+        let stream = match s.stream {
+            StreamId::Compute => "compute".to_string(),
+            StreamId::Link(k) => k.name().to_string(),
+        };
+        let (kind, iter, bucket, merged) = match &s.kind {
+            SpanKind::Fwd { iter, bucket } => ("fwd", *iter, *bucket, 1),
+            SpanKind::Bwd { iter, bucket } => ("bwd", *iter, *bucket, 1),
+            SpanKind::Comm {
+                iter,
+                bucket,
+                merged,
+            } => ("comm", *iter, *bucket, *merged),
+        };
+        out.push_str(&format!(
+            "{stream},{kind},{iter},{bucket},{merged},{},{}\n",
+            s.start.as_us(),
+            s.end.as_us()
+        ));
+    }
+    out
+}
+
+/// A fixed-width table printer for bench outputs.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 3 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Span;
+
+    #[test]
+    fn gantt_renders_spans() {
+        let tl = Timeline {
+            spans: vec![
+                Span {
+                    stream: StreamId::Compute,
+                    kind: SpanKind::Fwd { iter: 0, bucket: 1 },
+                    start: Micros(0),
+                    end: Micros(50),
+                },
+                Span {
+                    stream: StreamId::Link(LinkKind::Nccl),
+                    kind: SpanKind::Comm {
+                        iter: 0,
+                        bucket: 2,
+                        merged: 1,
+                    },
+                    start: Micros(50),
+                    end: Micros(100),
+                },
+            ],
+        };
+        let g = gantt(&tl, (Micros(0), Micros(100)), 20);
+        assert!(g.contains('1'), "fwd glyph missing: {g}");
+        assert!(g.contains('2'), "comm glyph missing: {g}");
+        assert!(g.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_has_all_spans() {
+        let tl = Timeline {
+            spans: vec![Span {
+                stream: StreamId::Compute,
+                kind: SpanKind::Bwd { iter: 3, bucket: 7 },
+                start: Micros(10),
+                end: Micros(30),
+            }],
+        };
+        let csv = timeline_csv(&tl);
+        assert!(csv.contains("compute,bwd,3,7,1,10,30"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("a   | bb"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Workload models — the DNNs the paper evaluates (§V, Tables I–II, VI).
+//!
+//! A [`Workload`] is a layer-level description (input → output order) of
+//! one training job: per-layer parameter counts and forward/backward
+//! compute times, plus a calibrated communication rate. The paper's own
+//! published numbers are the calibration targets:
+//!
+//! * Table I — per-iteration fwd/bwd/comm totals and coverage rate (CR)
+//!   for ResNet-101, VGG-19 and GPT-2 on 16 GPUs / 40 Gbps.
+//! * Table II — per-bucket fwd/bwd/comm of VGG-19 at partition size 6.5M.
+//! * §VI — a Llama-2-7B-like workload with CR < 0.1 (the negative result).
+//!
+//! Layer *structures* follow the real architectures (VGG-19's 16 conv +
+//! 3 fc layers, ResNet-101's bottleneck stages, GPT-2's transformer
+//! blocks); per-layer times are synthesized to sum exactly to the paper's
+//! totals, since the authors' per-operator traces are not public. Note the
+//! paper's Table I CR column lists 1.67 for ResNet-101 while the text says
+//! "approximately 1.4" — 242/(59+118) = 1.37, so we follow the computed
+//! value (the text), not the misprinted column.
+
+mod profiles;
+mod zoo;
+
+pub use profiles::{
+    coverage_rate, gpt2_buckets_calibrated, totals, vgg19_table2_buckets, BucketProfile,
+};
+pub use zoo::{gpt2, llama2_7b_like, resnet101, small_transformer, vgg19};
+
+use crate::util::Micros;
+
+/// One parameter tensor (layer) of a DNN, in forward order.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    /// Number of f32 parameters in this layer's gradient tensor.
+    pub params: u64,
+    /// Forward compute time of this layer (one iteration, profiled scale).
+    pub fwd: Micros,
+    /// Backward compute time of this layer.
+    pub bwd: Micros,
+}
+
+/// What the benchmark tracks as "solution" for time-to-solution curves.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TargetMetric {
+    /// Top-1 accuracy target (image classification).
+    Accuracy(f64),
+    /// Training-loss target (text generation).
+    Loss(f64),
+}
+
+/// A full data-parallel training workload.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    /// Layers in forward order (`layers[0]` is the input side). Backward
+    /// traverses them in reverse.
+    pub layers: Vec<Layer>,
+    /// Calibrated NCCL communication rate, µs per parameter, at the
+    /// reference point (16 GPUs, 40 Gbps, ring allreduce). The paper's
+    /// Table I totals pin this per workload; `links::ClusterEnv` rescales
+    /// it for other worker counts / bandwidths.
+    pub comm_rate_ref: f64,
+    /// Per-GPU batch size used in the paper's runs.
+    pub batch_size: u32,
+    pub target: TargetMetric,
+}
+
+impl Workload {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Total forward compute per iteration.
+    pub fn total_fwd(&self) -> Micros {
+        self.layers.iter().map(|l| l.fwd).sum()
+    }
+
+    /// Total backward compute per iteration.
+    pub fn total_bwd(&self) -> Micros {
+        self.layers.iter().map(|l| l.bwd).sum()
+    }
+
+    /// Total compute per iteration (fwd + bwd) — the knapsack capacity
+    /// base of paper Problem 1.
+    pub fn total_compute(&self) -> Micros {
+        self.total_fwd() + self.total_bwd()
+    }
+
+    /// Total NCCL communication time at the reference environment.
+    pub fn total_comm_ref(&self) -> Micros {
+        Micros::from_us_f64(self.total_params() as f64 * self.comm_rate_ref)
+    }
+
+    /// Coverage rate CR = T_comm / (T_fwd + T_bwd) at the reference
+    /// environment (paper §I).
+    pub fn coverage_rate_ref(&self) -> f64 {
+        self.total_comm_ref().ratio(self.total_compute())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I reproduction at model level: totals must match the paper
+    /// within 2% (per-layer synthesis rounds to integer µs).
+    #[test]
+    fn table1_totals_match_paper() {
+        // (workload, fwd_ms, bwd_ms, comm_ms)
+        let cases: Vec<(Workload, f64, f64, f64)> = vec![
+            (resnet101(), 59.0, 118.0, 242.0),
+            (vgg19(), 37.0, 93.0, 258.0),
+            (gpt2(), 169.0, 381.0, 546.4),
+        ];
+        for (w, fwd, bwd, comm) in cases {
+            let got_fwd = w.total_fwd().as_ms_f64();
+            let got_bwd = w.total_bwd().as_ms_f64();
+            let got_comm = w.total_comm_ref().as_ms_f64();
+            assert!(
+                (got_fwd - fwd).abs() / fwd < 0.02,
+                "{}: fwd {got_fwd} vs {fwd}",
+                w.name
+            );
+            assert!(
+                (got_bwd - bwd).abs() / bwd < 0.02,
+                "{}: bwd {got_bwd} vs {bwd}",
+                w.name
+            );
+            assert!(
+                (got_comm - comm).abs() / comm < 0.02,
+                "{}: comm {got_comm} vs {comm}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn coverage_rates_match_paper_text() {
+        // Text: ResNet-101 ≈ 1.4 (computed 1.37), VGG-19 ≈ 2.0 (1.98),
+        // GPT-2 ≈ 0.99.
+        assert!((resnet101().coverage_rate_ref() - 1.37).abs() < 0.05);
+        assert!((vgg19().coverage_rate_ref() - 1.98).abs() < 0.06);
+        assert!((gpt2().coverage_rate_ref() - 0.99).abs() < 0.04);
+    }
+
+    #[test]
+    fn parameter_counts_match_paper() {
+        // Table VI: VGG-19 143,652,544; GPT-2 81,894,144.
+        let vgg = vgg19().total_params() as f64;
+        assert!((vgg - 143_652_544.0).abs() / 143_652_544.0 < 0.01, "vgg {vgg}");
+        let g = gpt2().total_params() as f64;
+        assert!((g - 81_894_144.0).abs() / 81_894_144.0 < 0.01, "gpt2 {g}");
+        // ResNet-101 ≈ 44.5M (well known).
+        let r = resnet101().total_params() as f64;
+        assert!((r - 44.5e6).abs() / 44.5e6 < 0.03, "resnet {r}");
+    }
+
+    #[test]
+    fn llama_cr_below_point_one() {
+        // §VI: CR < 0.1 for the Llama-2-7B-like workload.
+        let w = llama2_7b_like();
+        assert!(w.coverage_rate_ref() < 0.1, "CR = {}", w.coverage_rate_ref());
+    }
+
+    #[test]
+    fn layers_ordered_and_positive() {
+        for w in [resnet101(), vgg19(), gpt2(), llama2_7b_like()] {
+            assert!(w.num_layers() >= 3, "{} too few layers", w.name);
+            for l in &w.layers {
+                assert!(l.params > 0, "{}: zero-param layer {}", w.name, l.name);
+            }
+            assert!(w.total_fwd() > Micros::ZERO);
+            assert!(w.total_bwd() > w.total_fwd(), "{}: bwd should exceed fwd", w.name);
+        }
+    }
+
+    #[test]
+    fn small_transformer_is_configurable() {
+        let w = small_transformer(4, 256, 2048, 128);
+        assert!(w.total_params() > 1_000_000);
+        assert!(w.coverage_rate_ref() > 0.0);
+    }
+}

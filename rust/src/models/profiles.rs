@@ -1,0 +1,146 @@
+//! Bucket-level profiles — the direct inputs to the schedulers.
+//!
+//! A [`BucketProfile`] is what the paper's Profiler module hands the
+//! Solver: for each gradient bucket, its forward/backward computation
+//! time and its (reference-link) communication time. Profiles come from
+//! three sources in this repo:
+//!
+//! 1. [`vgg19_table2_buckets`] — the paper's own Table II, verbatim.
+//! 2. `partition::partition(..)` — layer-level workloads partitioned by a
+//!    strategy and priced by a `links::ClusterEnv`.
+//! 3. `profiler::reconstruct(..)` — recovered from raw operator traces.
+
+use crate::util::Micros;
+
+/// Per-bucket profile: the scheduling unit of every scheme in the paper.
+///
+/// Buckets are numbered in **forward order**: bucket `0` is nearest the
+/// input (paper bucket #1); its backward completes *last* and its
+/// communication is the one hard-blocked between iterations (the paper's
+/// motivating hard dependency).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketProfile {
+    pub id: usize,
+    /// Number of f32 parameters carried by the bucket.
+    pub params: u64,
+    /// Forward computation time of the bucket's layers.
+    pub fwd: Micros,
+    /// Backward computation time of the bucket's layers.
+    pub bwd: Micros,
+    /// Communication (allreduce) time on the reference (NCCL) link.
+    pub comm: Micros,
+}
+
+/// Total fwd/bwd/comm over a profile set.
+pub fn totals(buckets: &[BucketProfile]) -> (Micros, Micros, Micros) {
+    let fwd = buckets.iter().map(|b| b.fwd).sum();
+    let bwd = buckets.iter().map(|b| b.bwd).sum();
+    let comm = buckets.iter().map(|b| b.comm).sum();
+    (fwd, bwd, comm)
+}
+
+/// Coverage rate CR = comm / (fwd + bwd) of a profile set.
+pub fn coverage_rate(buckets: &[BucketProfile]) -> f64 {
+    let (fwd, bwd, comm) = totals(buckets);
+    comm.ratio(fwd + bwd)
+}
+
+/// Paper **Table II**: the measured per-bucket times of VGG-19 at
+/// partition size 6,500,000 — used verbatim by `bench_table2_buckets` and
+/// the Fig. 12 scheduling-order bench. Bucket ids are paper ids minus 1.
+pub fn vgg19_table2_buckets() -> Vec<BucketProfile> {
+    // (fwd, bwd, comm) µs — paper Table II rows 1..=6.
+    let rows: [(u64, u64, u64); 6] = [
+        (1_238, 72_496, 1_968),
+        (28_799, 12_786, 11_262),
+        (4_801, 4_872, 15_447),
+        (1_899, 2_319, 178_643),
+        (326, 484, 31_754),
+        (103, 162, 8_651),
+    ];
+    // Param counts back-solved from comm at the Table II effective rate
+    // (1.794e-3 µs/param); bucket 3 is dominated by VGG's 102.8M fc6.
+    let params: [u64; 6] = [
+        1_097_000, 6_278_000, 8_611_000, 99_577_000, 17_700_000, 4_822_000,
+    ];
+    rows.iter()
+        .zip(params)
+        .enumerate()
+        .map(|(id, (&(fwd, bwd, comm), params))| BucketProfile {
+            id,
+            params,
+            fwd: Micros(fwd),
+            bwd: Micros(bwd),
+            comm: Micros(comm),
+        })
+        .collect()
+}
+
+/// A GPT-2 bucket profile calibrated to Table I totals with the balanced
+/// per-bucket structure §V.B.3 describes (~13 buckets at partition 6.5M).
+/// Used by the Fig. 13 scheduling-order bench when the layer-level
+/// pipeline is not exercised.
+pub fn gpt2_buckets_calibrated() -> Vec<BucketProfile> {
+    let n = 13usize;
+    let total_fwd = Micros::from_ms(169);
+    let total_bwd = Micros::from_ms(381);
+    let total_comm = Micros::from_us_f64(546_400.0);
+    let total_params = 81_894_144u64;
+    let weights = vec![1.0; n];
+    let fwd = super::zoo::distribute(total_fwd, &weights);
+    let bwd = super::zoo::distribute(total_bwd, &weights);
+    let comm = super::zoo::distribute(total_comm, &weights);
+    (0..n)
+        .map(|id| BucketProfile {
+            id,
+            params: total_params / n as u64,
+            fwd: fwd[id],
+            bwd: bwd[id],
+            comm: comm[id],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals_match_paper_rows() {
+        let b = vgg19_table2_buckets();
+        let (fwd, bwd, comm) = totals(&b);
+        assert_eq!(fwd, Micros(37_166));
+        assert_eq!(bwd, Micros(93_119));
+        // NOTE: the paper's Table II "total" row prints 257,725 µs, but
+        // its six comm rows sum to 247,725 µs — a 10 ms misprint in one
+        // of them. We reproduce the rows as published.
+        assert_eq!(comm, Micros(247_725));
+    }
+
+    #[test]
+    fn table2_bucket4_dominates_comm() {
+        let b = vgg19_table2_buckets();
+        // Paper bucket #4 (id 3) carries fc6: > 70% of total comm.
+        assert!(b[3].comm.as_us() * 10 > 247_725 * 7);
+    }
+
+    #[test]
+    fn table2_coverage_rate_near_two() {
+        // 247,725 / 130,285 = 1.90 from the published rows (the paper's
+        // total row would give 1.98 — see the misprint note above).
+        let b = vgg19_table2_buckets();
+        assert!((coverage_rate(&b) - 1.90).abs() < 0.02);
+    }
+
+    #[test]
+    fn gpt2_profile_balanced_and_cr_one() {
+        let b = gpt2_buckets_calibrated();
+        assert_eq!(b.len(), 13);
+        let cr = coverage_rate(&b);
+        assert!((cr - 0.99).abs() < 0.02, "cr = {cr}");
+        // Balance: max/min comm within 1.01 (uniform split).
+        let max = b.iter().map(|x| x.comm.as_us()).max().unwrap();
+        let min = b.iter().map(|x| x.comm.as_us()).min().unwrap();
+        assert!(max - min <= 1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Constructors for the paper's evaluation workloads (Table VI) plus the
+//! small transformer used by the real end-to-end trainer.
+//!
+//! Layer structures follow the real architectures; per-layer compute times
+//! are synthesized by distributing the paper's Table I totals across
+//! layers **proportionally to each layer's MAC count**, so partitioning at
+//! any granularity sees realistic imbalance (the paper's problem 3).
+//!
+//! Communication calibration: each workload carries `comm_rate_ref`, the
+//! µs/parameter NCCL allreduce rate at the paper's reference environment
+//! (16 GPUs, 40 Gbps), pinned so total comm matches Table I. The paper's
+//! own tables are mutually inconsistent here (Table IV's microbenchmark
+//! rate would give VGG-19 a 480 ms comm total, not 258 ms), so each table
+//! is calibrated independently — see DESIGN.md.
+
+use super::{Layer, TargetMetric, Workload};
+use crate::util::Micros;
+
+/// Split `total` µs across weights (largest-remainder apportionment) so
+/// the per-layer values sum *exactly* to `total`.
+pub(crate) fn distribute(total: Micros, weights: &[f64]) -> Vec<Micros> {
+    assert!(!weights.is_empty());
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0, "weights must be positive");
+    let t = total.as_us();
+    // Floor shares + distribute the remainder to the largest fractional
+    // parts (stable by index for determinism).
+    let raw: Vec<f64> = weights.iter().map(|w| t as f64 * w / wsum).collect();
+    let mut shares: Vec<u64> = raw.iter().map(|r| r.floor() as u64).collect();
+    let assigned: u64 = shares.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - raw[a].floor();
+        let fb = raw[b] - raw[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for i in 0..(t - assigned) as usize {
+        shares[order[i % order.len()]] += 1;
+    }
+    shares.into_iter().map(Micros).collect()
+}
+
+fn mk_layers(
+    names: Vec<String>,
+    params: Vec<u64>,
+    macs: Vec<f64>,
+    total_fwd: Micros,
+    total_bwd: Micros,
+) -> Vec<Layer> {
+    assert_eq!(names.len(), params.len());
+    assert_eq!(names.len(), macs.len());
+    let fwd = distribute(total_fwd, &macs);
+    let bwd = distribute(total_bwd, &macs);
+    names
+        .into_iter()
+        .zip(params)
+        .zip(fwd.into_iter().zip(bwd))
+        .map(|((name, params), (fwd, bwd))| Layer {
+            name,
+            params,
+            fwd,
+            bwd,
+        })
+        .collect()
+}
+
+/// VGG-19 (Table VI: 143,652,544 params; Table I: 37/93/258 ms).
+///
+/// 16 conv layers + 3 fully connected. The fc6 layer alone holds 102.8M
+/// parameters — the source of the paper's bucket-imbalance problem
+/// (Table II bucket #4).
+pub fn vgg19() -> Workload {
+    // (name, params, MACs in millions at 224×224)
+    let spec: Vec<(&str, u64, f64)> = vec![
+        ("conv1_1", 1_792, 86.7),
+        ("conv1_2", 36_928, 1_849.7),
+        ("conv2_1", 73_856, 924.8),
+        ("conv2_2", 147_584, 1_849.7),
+        ("conv3_1", 295_168, 924.8),
+        ("conv3_2", 590_080, 1_849.7),
+        ("conv3_3", 590_080, 1_849.7),
+        ("conv3_4", 590_080, 1_849.7),
+        ("conv4_1", 1_180_160, 924.8),
+        ("conv4_2", 2_359_808, 1_849.7),
+        ("conv4_3", 2_359_808, 1_849.7),
+        ("conv4_4", 2_359_808, 1_849.7),
+        ("conv5_1", 2_359_808, 462.4),
+        ("conv5_2", 2_359_808, 462.4),
+        ("conv5_3", 2_359_808, 462.4),
+        ("conv5_4", 2_359_808, 462.4),
+        ("fc6", 102_764_544, 102.8),
+        ("fc7", 16_781_312, 16.8),
+        ("fc8", 4_097_000, 4.1),
+    ];
+    // Trim 5,506 params from fc8 biases/etc. so the total matches the
+    // paper's 143,652,544 exactly.
+    let mut spec = spec;
+    let raw_total: u64 = spec.iter().map(|s| s.1).sum();
+    let excess = raw_total - 143_652_544;
+    spec.last_mut().unwrap().1 -= excess;
+
+    let names = spec.iter().map(|s| s.0.to_string()).collect();
+    let params = spec.iter().map(|s| s.1).collect();
+    let macs = spec.iter().map(|s| s.2).collect();
+    let layers = mk_layers(
+        names,
+        params,
+        macs,
+        Micros::from_ms(37),
+        Micros::from_ms(93),
+    );
+    let total_params: u64 = 143_652_544;
+    Workload {
+        name: "vgg19".into(),
+        layers,
+        // Table I: 258 ms total comm over 143.65M params.
+        comm_rate_ref: 258_000.0 / total_params as f64,
+        batch_size: 64,
+        target: TargetMetric::Accuracy(0.71),
+    }
+}
+
+/// ResNet-101 (≈44.5M params; Table I: 59/118/242 ms).
+///
+/// conv1 + bottleneck stages [3, 4, 23, 3] + fc. Blocks have roughly
+/// equal MAC counts (~220M each), which is why ResNet buckets are *time*
+/// balanced but *size* imbalanced (later stages hold most parameters).
+pub fn resnet101() -> Workload {
+    let mut names: Vec<String> = vec!["conv1".into()];
+    let mut params: Vec<u64> = vec![9_408 + 64];
+    let mut macs: Vec<f64> = vec![118.0];
+
+    // (stage, blocks, width w; block params: 1x1 in->w, 3x3 w->w, 1x1 w->4w)
+    let stages: [(usize, usize, u64, u64); 4] = [
+        // (stage idx, num blocks, width, input channels)
+        (1, 3, 64, 64),
+        (2, 4, 128, 256),
+        (3, 23, 256, 512),
+        (4, 3, 512, 1024),
+    ];
+    for (si, blocks, w, cin) in stages {
+        for b in 0..blocks {
+            let cin_b = if b == 0 { cin } else { 4 * w };
+            let mut p = cin_b * w + 9 * w * w + w * 4 * w + (w + w + 4 * w); // convs + BN-ish
+            if b == 0 {
+                p += cin_b * 4 * w; // downsample projection
+            }
+            names.push(format!("res{}_{}", si, b + 1));
+            params.push(p);
+            // Roughly equal MACs per block; first block of a stage does the
+            // downsample so costs a bit more.
+            macs.push(if b == 0 { 260.0 } else { 215.0 });
+        }
+    }
+    names.push("fc".into());
+    params.push(2048 * 1000 + 1000);
+    macs.push(2.1);
+
+    // Nudge conv1 params so the total lands on 44.55M (BN/bias bookkeeping).
+    let total: u64 = params.iter().sum();
+    let target: u64 = 44_549_160;
+    if total < target {
+        params[0] += target - total;
+    } else {
+        params[0] -= total - target;
+    }
+
+    let layers = mk_layers(
+        names,
+        params,
+        macs,
+        Micros::from_ms(59),
+        Micros::from_ms(118),
+    );
+    Workload {
+        name: "resnet101".into(),
+        layers,
+        comm_rate_ref: 242_000.0 / target as f64,
+        batch_size: 256,
+        target: TargetMetric::Accuracy(0.76),
+    }
+}
+
+/// GPT-2 variant (Table VI: 81,894,144 params; Table I: 169/381/546.4 ms).
+///
+/// 11 transformer blocks (d=768) + a THUC-News-sized input embedding:
+/// 11 × 7,084,800 + 3,961,344 = 81,894,144 exactly. At partition size
+/// 6.5M this yields ~13 buckets, matching the paper's mention of bucket
+/// #13. Per-block compute is uniform, so bucket computation/communication
+/// times are "relatively balanced" as §V.B.3 observes.
+pub fn gpt2() -> Workload {
+    let mut names: Vec<String> = vec!["wte".into()];
+    let mut params: Vec<u64> = vec![3_961_344]; // 5158-token embedding × 768
+    let mut macs: Vec<f64> = vec![2.0];
+    for b in 0..11 {
+        // attention: qkv (768→2304) + proj (768→768), with biases
+        names.push(format!("h{b}_attn"));
+        params.push(768 * 2304 + 2304 + 768 * 768 + 768);
+        macs.push(45.0);
+        // mlp: 768→3072→768, with biases
+        names.push(format!("h{b}_mlp"));
+        params.push(768 * 3072 + 3072 + 3072 * 768 + 768);
+        macs.push(55.0);
+    }
+    let layers = mk_layers(
+        names,
+        params,
+        macs,
+        Micros::from_ms(169),
+        Micros::from_ms(381),
+    );
+    let total: u64 = layers.iter().map(|l| l.params).sum();
+    debug_assert_eq!(total, 81_894_144);
+    Workload {
+        name: "gpt2".into(),
+        layers,
+        comm_rate_ref: 546_400.0 / total as f64,
+        batch_size: 16,
+        target: TargetMetric::Loss(2.8),
+    }
+}
+
+/// Llama-2-7B-like workload (paper §VI): coverage rate < 0.1, the regime
+/// where communication scheduling cannot help. Only the CR matters for
+/// the reported negative result; absolute times are per-iteration with
+/// activation checkpointing and long sequences.
+pub fn llama2_7b_like() -> Workload {
+    let mut names = Vec::new();
+    let mut params = Vec::new();
+    let mut macs = Vec::new();
+    names.push("embed".to_string());
+    params.push(32_000u64 * 4096);
+    macs.push(5.0);
+    for b in 0..32 {
+        names.push(format!("l{b}_attn"));
+        params.push(4 * 4096 * 4096);
+        macs.push(40.0);
+        names.push(format!("l{b}_mlp"));
+        params.push(3 * 4096 * 11008);
+        macs.push(60.0);
+    }
+    let layers = mk_layers(
+        names,
+        params,
+        macs,
+        Micros::from_secs(25),
+        Micros::from_secs(60),
+    );
+    Workload {
+        name: "llama2_7b_like".into(),
+        layers,
+        // Large fused tensors reach near-peak ring bandwidth.
+        comm_rate_ref: 1.0e-3,
+        batch_size: 4,
+        target: TargetMetric::Loss(2.2),
+    }
+}
+
+/// The small GPT-style transformer trained end-to-end by
+/// `examples/train_e2e.rs` (real gradients through the PJRT runtime).
+///
+/// Compute times are *estimates* for planning only — the real trainer
+/// measures its own step times and re-profiles the workload.
+pub fn small_transformer(n_layers: u32, d_model: u64, vocab: u64, seq: u64) -> Workload {
+    let mut names: Vec<String> = vec!["wte".into()];
+    let mut params: Vec<u64> = vec![vocab * d_model + seq * d_model];
+    let mut macs: Vec<f64> = vec![(vocab * d_model) as f64 * 0.05];
+    for b in 0..n_layers {
+        names.push(format!("h{b}_attn"));
+        params.push(4 * d_model * d_model + 4 * d_model);
+        macs.push((4 * d_model * d_model * seq) as f64);
+        names.push(format!("h{b}_mlp"));
+        params.push(8 * d_model * d_model + 5 * d_model);
+        macs.push((8 * d_model * d_model * seq) as f64);
+    }
+    names.push("lm_head".into());
+    params.push(vocab * d_model);
+    macs.push((vocab * d_model * seq) as f64);
+
+    // Rough CPU-class estimate: 1 GFLOP ≈ 100 ms; fwd ≈ 2·MAC, bwd ≈ 4·MAC.
+    let total_macs: f64 = macs.iter().sum();
+    let fwd = Micros::from_us_f64((total_macs * 2.0 / 1e9 * 100_000.0).max(1_000.0));
+    let bwd = Micros::from_us_f64((total_macs * 4.0 / 1e9 * 100_000.0).max(2_000.0));
+    let layers = mk_layers(names, params, macs, fwd, bwd);
+    Workload {
+        name: format!("small_transformer_L{n_layers}_d{d_model}"),
+        layers,
+        // Loopback-class effective rate (the trainer charges simulated wire
+        // time via links::ClusterEnv, this is just the planning default).
+        comm_rate_ref: 1.0e-3,
+        batch_size: 8,
+        target: TargetMetric::Loss(1.5),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribute_sums_exactly() {
+        let shares = distribute(Micros(1000), &[1.0, 2.0, 3.0]);
+        let total: Micros = shares.iter().sum();
+        assert_eq!(total, Micros(1000));
+        assert!(shares[2] > shares[1] && shares[1] > shares[0]);
+    }
+
+    #[test]
+    fn distribute_handles_tiny_totals() {
+        let shares = distribute(Micros(2), &[1.0, 1.0, 1.0]);
+        let total: Micros = shares.iter().sum();
+        assert_eq!(total, Micros(2));
+    }
+
+    #[test]
+    fn gpt2_param_count_exact() {
+        assert_eq!(gpt2().total_params(), 81_894_144);
+    }
+
+    #[test]
+    fn vgg_param_count_exact() {
+        assert_eq!(vgg19().total_params(), 143_652_544);
+    }
+
+    #[test]
+    fn resnet_has_34_plus_layers() {
+        let r = resnet101();
+        assert_eq!(r.num_layers(), 1 + 3 + 4 + 23 + 3 + 1);
+    }
+
+    #[test]
+    fn fc6_dominates_vgg_params() {
+        let v = vgg19();
+        let fc6 = v.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert!(fc6.params * 2 > v.total_params());
+    }
+}

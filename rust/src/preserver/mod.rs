@@ -1,0 +1,254 @@
+//! The Preserver — DeFT's accuracy-preserving mechanism (paper §IV.C).
+//!
+//! DeFT's delayed updates make training equivalent to a **variable batch
+//! size sequence**: an update that merges `k` iterations' gradients is an
+//! update with batch `k·B` (gradient accumulation). The Preserver
+//! quantifies the convergence impact of that sequence with the
+//! Gaussian-random-walk-with-rebound model of Yin et al. (KDD'17, paper
+//! ref [25]) and drives a feedback loop: if the expected-state ratio
+//! between DeFT's sequence `O_D` and the fixed-batch baseline `O_B`
+//! leaves `[1−ε, 1+ε]`, the Solver's knapsack capacity is enlarged
+//! (allowing more communication per iteration ⇒ higher update frequency)
+//! and the schedule is re-solved, up to 10 times.
+
+use crate::util::mathx::phi;
+
+/// Parameters of the Gaussian walk at one training point.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkParams {
+    /// Current state s_t (training loss).
+    pub s_t: f64,
+    /// Objective value S* (loss floor).
+    pub s_star: f64,
+    /// Learning rate η.
+    pub eta: f64,
+    /// μ_t — mean step (square sum of the gradient at iteration t).
+    pub mu_t: f64,
+    /// σ_t — per-sample noise scale (× covariance), before the 1/√B
+    /// batch reduction.
+    pub sigma_t: f64,
+}
+
+/// Expected next state `E_B^{s_t}(s_{t+1})` for batch size `b` — the
+/// paper's Equation (1):
+///
+/// ```text
+/// E = (s_t − S* − η·μ_t)·{Φ(a) − Φ(−a)} + η·σ_B·√(2/π)·exp(−a²/2) + S*
+/// a = (s_t − S* − η·μ_t) / (η·σ_B),   σ_B = σ_t/√B
+/// ```
+///
+/// The walk either descends toward S* or rebounds off it; larger batches
+/// shrink the noise term σ_B and tighten the expectation.
+pub fn expected_next_state(p: &WalkParams, b: f64) -> f64 {
+    assert!(b >= 1.0, "batch size must be ≥ 1");
+    let sigma_b = p.sigma_t / b.sqrt();
+    let drift = p.s_t - p.s_star - p.eta * p.mu_t;
+    if sigma_b <= 0.0 || p.eta <= 0.0 {
+        // Deterministic limit: pure descent with rebound.
+        return (drift).abs() + p.s_star;
+    }
+    let a = drift / (p.eta * sigma_b);
+    let gauss_term = p.eta * sigma_b * (2.0 / std::f64::consts::PI).sqrt() * (-0.5 * a * a).exp();
+    drift * (phi(a) - phi(-a)) + gauss_term + p.s_star
+}
+
+/// Evolve the expected state over a batch-size sequence, returning each
+/// intermediate expectation (length = sequence length) — the rows of the
+/// paper's Table V.
+///
+/// Gradient magnitude and noise are re-estimated at each step
+/// proportionally to the distance from the floor (`μ, σ ∝ s_t − S*`),
+/// matching the contraction visible in Table V's E_B column.
+pub fn evolve_sequence(start: &WalkParams, batch_sizes: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(batch_sizes.len());
+    let mut s = start.s_t;
+    // Ratios fixed from the starting point.
+    let mu_ratio = if start.s_t > start.s_star {
+        start.mu_t / (start.s_t - start.s_star)
+    } else {
+        0.0
+    };
+    let sigma_ratio = if start.s_t > start.s_star {
+        start.sigma_t / (start.s_t - start.s_star)
+    } else {
+        0.0
+    };
+    for &b in batch_sizes {
+        let p = WalkParams {
+            s_t: s,
+            s_star: start.s_star,
+            eta: start.eta,
+            mu_t: mu_ratio * (s - start.s_star),
+            sigma_t: sigma_ratio * (s - start.s_star),
+        };
+        s = expected_next_state(&p, b);
+        out.push(s);
+    }
+    out
+}
+
+/// Convergence comparison between the baseline order `O_B` (N updates of
+/// batch `B`) and DeFT's order `O_D` (updates of `k_i·B`, Σk_i = N).
+#[derive(Clone, Debug)]
+pub struct ConvergenceReport {
+    /// E over the baseline sequence (length N).
+    pub baseline: Vec<f64>,
+    /// E over DeFT's sequence (length m ≤ N).
+    pub deft: Vec<f64>,
+    /// Final-expectation ratio E_OB / E_OD (paper: must sit in [1−ε,1+ε]).
+    pub ratio: f64,
+}
+
+/// Quantify DeFT's schedule against the fixed-batch baseline.
+///
+/// `multipliers` is the k-sequence of one steady-state cycle; `n` = cycle
+/// length in iterations (= Σk). Both orders start from the same state.
+pub fn quantify(start: &WalkParams, base_batch: f64, multipliers: &[u64]) -> ConvergenceReport {
+    let n: u64 = multipliers.iter().sum();
+    assert!(n > 0, "empty multiplier sequence");
+    let baseline = evolve_sequence(start, &vec![base_batch; n as usize]);
+    let deft_batches: Vec<f64> = multipliers
+        .iter()
+        .map(|&k| k as f64 * base_batch)
+        .collect();
+    let deft = evolve_sequence(start, &deft_batches);
+    let eb = *baseline.last().expect("n > 0");
+    let ed = *deft.last().expect("non-empty");
+    let ratio = if (ed - start.s_star).abs() < f64::EPSILON {
+        1.0
+    } else {
+        (eb - start.s_star) / (ed - start.s_star)
+    };
+    ConvergenceReport {
+        baseline,
+        deft,
+        ratio,
+    }
+}
+
+/// Feedback decision: is the schedule's convergence acceptable?
+pub fn acceptable(report: &ConvergenceReport, epsilon: f64) -> bool {
+    (report.ratio - 1.0).abs() <= epsilon
+}
+
+/// The paper's default acceptance band ε (§IV.C.3).
+pub const EPSILON: f64 = 0.01;
+
+/// Maximum Solver retries before giving up and taking the closest
+/// schedule (§IV.C.3: "up to ten times").
+pub const MAX_RETRIES: usize = 10;
+
+/// Table V's experimental setting for ResNet-101.
+pub fn table5_setting() -> (WalkParams, f64) {
+    (
+        WalkParams {
+            // Loss s_A = 0.2103 at iteration A = 1000 per Table V; the
+            // published column actually lists E at each following step.
+            s_t: 0.2103,
+            s_star: 0.0,
+            eta: 0.01,
+            // Fit to Table V's per-step contraction (~2.3% per update at
+            // B=256): η·μ ≈ 0.0048; σ chosen so the batch-size effect is
+            // visible at the 4th decimal, as in the published column.
+            mu_t: 0.48,
+            sigma_t: 110.0,
+        },
+        256.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn base() -> WalkParams {
+        WalkParams {
+            s_t: 0.2103,
+            s_star: 0.0,
+            eta: 0.01,
+            mu_t: 0.48,
+            sigma_t: 7.0,
+        }
+    }
+
+    #[test]
+    fn expectation_decreases_toward_floor() {
+        let p = base();
+        let e = expected_next_state(&p, 256.0);
+        assert!(e < p.s_t, "E {e} should contract below s_t {}", p.s_t);
+        assert!(e > p.s_star, "E {e} stays above the floor");
+    }
+
+    #[test]
+    fn larger_batch_tightens_expectation() {
+        // Far from the floor the noise term hurts; larger batch => smaller
+        // noise => smaller expected next loss.
+        let p = base();
+        let e_small = expected_next_state(&p, 64.0);
+        let e_big = expected_next_state(&p, 1024.0);
+        assert!(e_big <= e_small, "{e_big} vs {e_small}");
+    }
+
+    #[test]
+    fn table5_structure_reproduced() {
+        // O_B: four updates at B=256; O_D: 512 (merged), skip, 256, 256.
+        let (p, b) = table5_setting();
+        let rep = quantify(&p, b, &[2, 1, 1]);
+        // Paper Table V: E decreases monotonically for both orders and the
+        // final ratio ≈ 0.993 (within 1%).
+        for w in rep.baseline.windows(2) {
+            assert!(w[1] < w[0], "baseline non-monotone: {:?}", rep.baseline);
+        }
+        for w in rep.deft.windows(2) {
+            assert!(w[1] < w[0], "deft non-monotone: {:?}", rep.deft);
+        }
+        assert!(
+            (rep.ratio - 1.0).abs() < 0.03,
+            "ratio {} should be near 1 as in Table V (0.993)",
+            rep.ratio
+        );
+        // First baseline step ≈ 0.2054 in the paper; ours within 2%.
+        let first = rep.baseline[0];
+        assert!((first - 0.2054).abs() / 0.2054 < 0.02, "first E = {first}");
+    }
+
+    #[test]
+    fn degenerate_sequences_ratio_one() {
+        let (p, b) = table5_setting();
+        let rep = quantify(&p, b, &[1, 1, 1, 1]);
+        assert!(acceptable(&rep, 1e-9), "identical sequences ratio {}", rep.ratio);
+    }
+
+    #[test]
+    fn extreme_merging_fails_epsilon() {
+        // One giant update of 64·B over 64 iterations diverges from 64
+        // small updates: the feedback loop must reject it.
+        let (p, b) = table5_setting();
+        let rep = quantify(&p, b, &[64]);
+        assert!(!acceptable(&rep, EPSILON), "ratio {} unexpectedly ok", rep.ratio);
+    }
+
+    #[test]
+    fn prop_expectation_bounded_and_monotone_in_state() {
+        check("E bounded by rebound walls", 200, |g| {
+            let s_t = g.f64_in(0.05, 5.0);
+            let p = WalkParams {
+                s_t,
+                s_star: 0.0,
+                eta: g.f64_in(0.001, 0.1),
+                mu_t: g.f64_in(0.0, 10.0),
+                sigma_t: g.f64_in(0.0, 20.0),
+            };
+            let b = g.f64_in(1.0, 4096.0);
+            let e = expected_next_state(&p, b);
+            if !(e.is_finite()) {
+                return Err(format!("E not finite: {e}"));
+            }
+            if e < p.s_star - 1e-9 {
+                return Err(format!("E {e} below the floor"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! The Profiler — operator-trace collection and bucket-level
+//! reconstruction (paper §IV.B, Fig. 8).
+//!
+//! The paper drives NVIDIA Nsight Systems and reconstructs bucket-level
+//! times from raw operator logs via External IDs and timestamps. Here the
+//! raw-trace *producer* is a synthetic generator (same schema: kernel
+//! name, thread id, External ID, timestamp) driven by a ground-truth
+//! workload, and the *consumer* implements the paper's 4-step analysis.
+//! Tests check reconstruction == ground truth.
+
+mod reconstruct;
+mod trace;
+
+pub use reconstruct::{reconstruct, ReconstructedBucket};
+pub use trace::{generate_trace, RawEvent, ThreadId, TraceOptions};

@@ -1,0 +1,224 @@
+//! The 4-step operator→bucket reconstruction of paper Fig. 8.
+//!
+//! Steps (quoting §IV.B):
+//! 1. identify the External ID of each communication operator — one per
+//!    bucket;
+//! 2. via that External ID, find the bucket's **last backward operator**
+//!    in the backward host thread, and its kernel in the computing
+//!    stream → the bucket's backward endpoint;
+//! 3. find the corresponding **first forward operator** of the bucket in
+//!    the forward thread (the backward op's layer), and its kernel → the
+//!    bucket's forward start;
+//! 4. difference consecutive boundaries to obtain per-bucket forward /
+//!    backward times; communication time is the comm op's own span.
+
+use std::collections::BTreeMap;
+
+use super::trace::{RawEvent, ThreadId};
+use crate::util::Micros;
+
+/// Reconstructed per-bucket times (the Profiler's output, which feeds
+/// the Solver).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReconstructedBucket {
+    /// Bucket id in forward order (0 = input side).
+    pub id: usize,
+    pub fwd: Micros,
+    pub bwd: Micros,
+    pub comm: Micros,
+}
+
+/// Strip the generator's operator-name decorations to recover the layer
+/// name shared between a backward host op and its forward counterpart.
+fn layer_of_bwd_name(name: &str) -> Option<&str> {
+    name.strip_prefix("autograd::")?.strip_suffix("_bwd")
+}
+
+/// Run the reconstruction over one iteration's raw events.
+///
+/// Returns buckets in forward order. Panics on malformed traces (missing
+/// correlation ids) — tests feed both clean and adversarial traces.
+pub fn reconstruct(events: &[RawEvent]) -> Vec<ReconstructedBucket> {
+    // Index events.
+    let mut comm_ops: Vec<&RawEvent> = events
+        .iter()
+        .filter(|e| e.thread == ThreadId::CommStream)
+        .collect();
+    comm_ops.sort_by_key(|e| e.start);
+    let n = comm_ops.len();
+    assert!(n > 0, "trace has no communication operators");
+
+    let by_ext_host_bwd: BTreeMap<u64, &RawEvent> = events
+        .iter()
+        .filter(|e| e.thread == ThreadId::BackwardHost)
+        .map(|e| (e.external_id, e))
+        .collect();
+    let by_ext_kernel: BTreeMap<u64, &RawEvent> = events
+        .iter()
+        .filter(|e| e.thread == ThreadId::ComputeStream)
+        .map(|e| (e.external_id, e))
+        .collect();
+    let fwd_host_by_name: BTreeMap<&str, &RawEvent> = events
+        .iter()
+        .filter(|e| e.thread == ThreadId::ForwardHost)
+        .map(|e| (e.name.as_str(), e))
+        .collect();
+
+    // Forward/backward kernel regions on the compute stream.
+    let fwd_kernels: Vec<&RawEvent> = events
+        .iter()
+        .filter(|e| e.thread == ThreadId::ComputeStream && e.name.ends_with("_fwd"))
+        .collect();
+    let fwd_region_start = fwd_kernels.iter().map(|e| e.start).min().unwrap();
+    let fwd_region_end = fwd_kernels.iter().map(|e| e.end).max().unwrap();
+
+    // Step 1+2: comm op → last backward op → backward endpoint kernel.
+    // Comm ops appear in backward order: first comm = output-most bucket.
+    struct B {
+        bucket: usize,
+        comm: Micros,
+        bwd_end: Micros,
+        fwd_start: Micros,
+    }
+    let mut recs: Vec<B> = Vec::with_capacity(n);
+    for (i, comm) in comm_ops.iter().enumerate() {
+        let bucket = n - 1 - i; // forward-order id
+        let host_bwd = by_ext_host_bwd
+            .get(&comm.external_id)
+            .unwrap_or_else(|| panic!("comm op {} lacks backward host op", comm.name));
+        let bwd_kernel = by_ext_kernel
+            .get(&host_bwd.external_id)
+            .unwrap_or_else(|| panic!("backward op {} lacks kernel", host_bwd.name));
+        // Step 3: the backward op's layer → its forward op → fwd kernel.
+        let layer = layer_of_bwd_name(&host_bwd.name)
+            .unwrap_or_else(|| panic!("unparseable backward op name {}", host_bwd.name));
+        let fwd_name = format!("aten::{layer}_fwd");
+        let host_fwd = fwd_host_by_name
+            .get(fwd_name.as_str())
+            .unwrap_or_else(|| panic!("no forward host op {fwd_name}"));
+        let fwd_kernel = by_ext_kernel
+            .get(&host_fwd.external_id)
+            .unwrap_or_else(|| panic!("forward op {fwd_name} lacks kernel"));
+        recs.push(B {
+            bucket,
+            comm: comm.end - comm.start,
+            bwd_end: bwd_kernel.end,
+            fwd_start: fwd_kernel.start,
+        });
+    }
+    recs.sort_by_key(|r| r.bucket);
+
+    // Step 4: difference boundaries.
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // Backward: buckets complete in order n-1, n-2, …, 0; bucket i's
+        // backward spans from bucket i+1's endpoint (or the backward
+        // region start = forward region end).
+        let bwd_start = if i + 1 < n {
+            recs[i + 1].bwd_end
+        } else {
+            fwd_region_end
+        };
+        let bwd = recs[i].bwd_end.saturating_sub(bwd_start);
+        // Forward: bucket i spans from its first kernel to bucket i+1's
+        // first kernel (or the forward region end).
+        let fwd_end = if i + 1 < n {
+            recs[i + 1].fwd_start
+        } else {
+            fwd_region_end
+        };
+        let fwd_start = if i == 0 {
+            fwd_region_start
+        } else {
+            recs[i].fwd_start
+        };
+        let fwd = fwd_end.saturating_sub(fwd_start);
+        out.push(ReconstructedBucket {
+            id: i,
+            fwd,
+            bwd,
+            comm: recs[i].comm,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{generate_trace, TraceOptions};
+    use super::*;
+    use crate::models::{gpt2, resnet101, vgg19};
+
+    fn close(a: Micros, b: Micros, tol: Micros) -> bool {
+        a.max(b) - a.min(b) <= tol
+    }
+
+    #[test]
+    fn reconstruction_matches_ground_truth_vgg() {
+        let w = vgg19();
+        let mut opts = TraceOptions::uniform(&w, 6);
+        opts.jitter_us = 0;
+        let (events, truth) = generate_trace(&w, &opts);
+        let rec = reconstruct(&events);
+        assert_eq!(rec.len(), 6);
+        // Launch-latency slack: a few gaps of (host 2µs + delay 6µs).
+        let tol = Micros(40);
+        for (r, (fwd, bwd, comm)) in rec.iter().zip(truth.buckets.iter()) {
+            assert!(close(r.fwd, *fwd, tol), "bucket {} fwd {:?} vs {:?}", r.id, r.fwd, fwd);
+            assert!(close(r.bwd, *bwd, tol), "bucket {} bwd {:?} vs {:?}", r.id, r.bwd, bwd);
+            assert!(close(r.comm, *comm, tol), "bucket {} comm", r.id);
+        }
+    }
+
+    #[test]
+    fn reconstruction_robust_to_jitter_and_models() {
+        for w in [resnet101(), gpt2()] {
+            let opts = TraceOptions::uniform(&w, 8);
+            let (events, truth) = generate_trace(&w, &opts);
+            let rec = reconstruct(&events);
+            assert_eq!(rec.len(), 8);
+            let total_bwd_true: Micros = truth.buckets.iter().map(|b| b.1).sum();
+            let total_bwd_rec: Micros = rec.iter().map(|r| r.bwd).sum();
+            // Totals agree within 1%.
+            let diff = total_bwd_true.max(total_bwd_rec) - total_bwd_true.min(total_bwd_rec);
+            assert!(
+                diff.as_us() as f64 <= 0.01 * total_bwd_true.as_us() as f64 + 100.0,
+                "{}: bwd {total_bwd_rec:?} vs {total_bwd_true:?}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no communication operators")]
+    fn empty_trace_panics() {
+        reconstruct(&[]);
+    }
+
+    #[test]
+    fn profile_feeds_scheduler() {
+        // End-to-end: trace → reconstruction → BucketProfile → DeFT.
+        use crate::models::BucketProfile;
+        use crate::sched::{Deft, DeftOptions, Scheduler};
+        let w = vgg19();
+        let opts = TraceOptions::uniform(&w, 6);
+        let (events, _) = generate_trace(&w, &opts);
+        let rec = reconstruct(&events);
+        let buckets: Vec<BucketProfile> = rec
+            .iter()
+            .map(|r| BucketProfile {
+                id: r.id,
+                params: 1_000_000,
+                fwd: r.fwd,
+                bwd: r.bwd,
+                comm: r.comm,
+            })
+            .collect();
+        let s = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        })
+        .schedule(&buckets);
+        s.validate().unwrap();
+    }
+}

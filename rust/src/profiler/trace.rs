@@ -1,0 +1,276 @@
+//! Synthetic raw-trace generator with the Nsight-style schema the paper's
+//! Profiler consumes.
+//!
+//! A trace is a flat list of [`RawEvent`]s across four threads:
+//! forward host thread, backward host thread, the GPU computing stream
+//! and the communication stream. Host-side (autograd) operators carry an
+//! **External ID**; each communication operator's External ID matches the
+//! backward operator that filled its bucket — the hook the 4-step
+//! reconstruction keys on (Fig. 8).
+
+use crate::models::Workload;
+use crate::util::{Micros, Rng};
+
+/// Trace thread identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ThreadId {
+    /// Host thread issuing forward operators.
+    ForwardHost,
+    /// Host thread issuing backward (autograd) operators.
+    BackwardHost,
+    /// Device computing stream (kernels).
+    ComputeStream,
+    /// Device communication stream (allreduce kernels).
+    CommStream,
+}
+
+/// One raw log record (the paper's "kernel name, thread ID, timestamp,
+/// External ID" tuple).
+#[derive(Clone, Debug)]
+pub struct RawEvent {
+    pub name: String,
+    pub thread: ThreadId,
+    pub start: Micros,
+    pub end: Micros,
+    /// Correlation id linking host ops to device kernels and comm ops to
+    /// the backward op that filled the bucket. 0 = none.
+    pub external_id: u64,
+}
+
+/// Options for the generator.
+#[derive(Clone, Debug)]
+pub struct TraceOptions {
+    /// Bucket boundaries: layer count per bucket (forward order). Must sum
+    /// to the workload's layer count.
+    pub layers_per_bucket: Vec<usize>,
+    /// Gap between host-op issue and kernel start (launch latency).
+    pub launch_delay: Micros,
+    /// Random jitter (µs) added to operator durations.
+    pub jitter_us: u64,
+    pub seed: u64,
+}
+
+impl TraceOptions {
+    pub fn uniform(workload: &Workload, n_buckets: usize) -> TraceOptions {
+        let n = workload.num_layers();
+        assert!(n_buckets >= 1 && n_buckets <= n);
+        let base = n / n_buckets;
+        let extra = n % n_buckets;
+        let layers_per_bucket = (0..n_buckets)
+            .map(|i| base + usize::from(i < extra))
+            .collect();
+        TraceOptions {
+            layers_per_bucket,
+            launch_delay: Micros(6),
+            jitter_us: 2,
+            seed: 17,
+        }
+    }
+}
+
+/// Ground truth attached to a generated trace for test validation.
+#[derive(Clone, Debug)]
+pub struct TraceGroundTruth {
+    /// Per-bucket (fwd, bwd, comm) times actually generated.
+    pub buckets: Vec<(Micros, Micros, Micros)>,
+}
+
+/// Generate one training iteration's raw trace for `workload`.
+///
+/// Returns the events (shuffled — raw logs are not conveniently ordered)
+/// and the ground truth the reconstruction must recover.
+pub fn generate_trace(
+    workload: &Workload,
+    opts: &TraceOptions,
+) -> (Vec<RawEvent>, TraceGroundTruth) {
+    let total: usize = opts.layers_per_bucket.iter().sum();
+    assert_eq!(
+        total,
+        workload.num_layers(),
+        "layers_per_bucket must cover the workload"
+    );
+    let mut rng = Rng::new(opts.seed);
+    let mut events: Vec<RawEvent> = Vec::new();
+    let mut ext_id = 1u64;
+
+    // Assign layers to buckets (forward order).
+    let mut bucket_of_layer = Vec::with_capacity(total);
+    for (b, &k) in opts.layers_per_bucket.iter().enumerate() {
+        for _ in 0..k {
+            bucket_of_layer.push(b);
+        }
+    }
+    let n_buckets = opts.layers_per_bucket.len();
+
+    let jitter = |rng: &mut Rng, d: Micros| -> Micros {
+        if opts.jitter_us == 0 {
+            d
+        } else {
+            let j = rng.range_u64(0, opts.jitter_us);
+            d + Micros(j)
+        }
+    };
+
+    // --- Forward pass: host issues op, kernel follows on compute stream.
+    let mut host_t = Micros::ZERO;
+    let mut dev_t = Micros::ZERO;
+    let mut fwd_true = vec![Micros::ZERO; n_buckets];
+    let mut fwd_last_ext = vec![0u64; n_buckets]; // last fwd op ext id per bucket
+    for (li, layer) in workload.layers.iter().enumerate() {
+        let d = jitter(&mut rng, layer.fwd);
+        let id = ext_id;
+        ext_id += 1;
+        let h_start = host_t;
+        let h_end = h_start + Micros(2);
+        events.push(RawEvent {
+            name: format!("aten::{}_fwd", layer.name),
+            thread: ThreadId::ForwardHost,
+            start: h_start,
+            end: h_end,
+            external_id: id,
+        });
+        let k_start = dev_t.max(h_end + opts.launch_delay);
+        let k_end = k_start + d;
+        events.push(RawEvent {
+            name: format!("kernel::{}_fwd", layer.name),
+            thread: ThreadId::ComputeStream,
+            start: k_start,
+            end: k_end,
+            external_id: id,
+        });
+        host_t = h_end;
+        dev_t = k_end;
+        let b = bucket_of_layer[li];
+        fwd_true[b] += d;
+        fwd_last_ext[b] = id;
+    }
+
+    // --- Backward pass: reverse layer order on a separate host thread.
+    let mut bwd_true = vec![Micros::ZERO; n_buckets];
+    let mut comm_true = vec![Micros::ZERO; n_buckets];
+    let mut bwd_last_ext = vec![0u64; n_buckets]; // ext id of the bucket's LAST bwd op
+    let mut comm_t = dev_t;
+    host_t = dev_t; // backward host follows forward completion
+    for li in (0..workload.num_layers()).rev() {
+        let layer = &workload.layers[li];
+        let d = jitter(&mut rng, layer.bwd);
+        let id = ext_id;
+        ext_id += 1;
+        let h_start = host_t;
+        let h_end = h_start + Micros(2);
+        events.push(RawEvent {
+            name: format!("autograd::{}_bwd", layer.name),
+            thread: ThreadId::BackwardHost,
+            start: h_start,
+            end: h_end,
+            external_id: id,
+        });
+        let k_start = dev_t.max(h_end + opts.launch_delay);
+        let k_end = k_start + d;
+        events.push(RawEvent {
+            name: format!("kernel::{}_bwd", layer.name),
+            thread: ThreadId::ComputeStream,
+            start: k_start,
+            end: k_end,
+            external_id: id,
+        });
+        host_t = h_end;
+        dev_t = k_end;
+        let b = bucket_of_layer[li];
+        bwd_true[b] += d;
+        // Bucket finished when its input-most layer's backward is done
+        // (layers are visited in reverse, so the last visit per bucket is
+        // its first layer).
+        bwd_last_ext[b] = id;
+        let bucket_done = li == 0 || bucket_of_layer[li - 1] != b;
+        if bucket_done {
+            // Emit the bucket's allreduce on the comm stream, correlated
+            // to this backward op's external id.
+            let c = jitter(
+                &mut rng,
+                Micros::from_us_f64(
+                    workload.layers.iter().enumerate()
+                        .filter(|(lj, _)| bucket_of_layer[*lj] == b)
+                        .map(|(_, l)| l.params as f64)
+                        .sum::<f64>()
+                        * workload.comm_rate_ref,
+                ),
+            );
+            let c_start = comm_t.max(k_end);
+            let c_end = c_start + c;
+            events.push(RawEvent {
+                name: format!("nccl::AllReduce_bucket{b}"),
+                thread: ThreadId::CommStream,
+                start: c_start,
+                end: c_end,
+                external_id: id,
+            });
+            comm_t = c_end;
+            comm_true[b] = c;
+        }
+    }
+
+    // Shuffle: raw logs arrive unordered across threads.
+    rng.shuffle(&mut events);
+
+    let buckets = (0..n_buckets)
+        .map(|b| (fwd_true[b], bwd_true[b], comm_true[b]))
+        .collect();
+    (events, TraceGroundTruth { buckets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg19;
+
+    #[test]
+    fn trace_has_all_threads_and_comm_ops() {
+        let w = vgg19();
+        let opts = TraceOptions::uniform(&w, 6);
+        let (events, truth) = generate_trace(&w, &opts);
+        assert_eq!(truth.buckets.len(), 6);
+        for t in [
+            ThreadId::ForwardHost,
+            ThreadId::BackwardHost,
+            ThreadId::ComputeStream,
+            ThreadId::CommStream,
+        ] {
+            assert!(events.iter().any(|e| e.thread == t), "missing {t:?}");
+        }
+        let comm_count = events
+            .iter()
+            .filter(|e| e.thread == ThreadId::CommStream)
+            .count();
+        assert_eq!(comm_count, 6, "one allreduce per bucket");
+    }
+
+    #[test]
+    fn ground_truth_totals_match_workload() {
+        let w = vgg19();
+        let mut opts = TraceOptions::uniform(&w, 4);
+        opts.jitter_us = 0;
+        let (_, truth) = generate_trace(&w, &opts);
+        let fwd: Micros = truth.buckets.iter().map(|b| b.0).sum();
+        let bwd: Micros = truth.buckets.iter().map(|b| b.1).sum();
+        assert_eq!(fwd, w.total_fwd());
+        assert_eq!(bwd, w.total_bwd());
+    }
+
+    #[test]
+    fn comm_external_ids_match_backward_ops() {
+        let w = vgg19();
+        let opts = TraceOptions::uniform(&w, 6);
+        let (events, _) = generate_trace(&w, &opts);
+        for comm in events.iter().filter(|e| e.thread == ThreadId::CommStream) {
+            assert!(
+                events
+                    .iter()
+                    .any(|e| e.thread == ThreadId::BackwardHost
+                        && e.external_id == comm.external_id),
+                "comm op {} has no matching backward host op",
+                comm.name
+            );
+        }
+    }
+}

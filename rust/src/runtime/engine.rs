@@ -1,0 +1,204 @@
+//! The PJRT engine: compile HLO-text artifacts once, execute many times.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo/`: text → `HloModuleProto`
+//! → `XlaComputation` → `PjRtLoadedExecutable`. Outputs are 1-tuples
+//! (jax lowering uses `return_tuple=True`) that decompose into the
+//! manifest's declared outputs.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, ExeSpec, TensorSpec};
+
+/// A compiled executable plus its signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ExeSpec,
+}
+
+/// The PJRT engine owning the client and compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// A host-side tensor travelling in/out of executables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input `{}` dtype {} != provided {}",
+                spec.name,
+                spec.dtype.name(),
+                self.dtype().name()
+            );
+        }
+        if self.len() != spec.elements() {
+            bail!(
+                "input `{}` wants {} elements, got {}",
+                spec.name,
+                spec.elements(),
+                self.len()
+            );
+        }
+        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        // Scalars and vectors need no reshape when dims match vec1.
+        if spec.dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims)
+                .with_context(|| format!("reshaping input `{}`", spec.name))
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let t = match spec.dtype {
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        };
+        if t.len() != spec.elements() {
+            bail!(
+                "output `{}` expected {} elements, got {}",
+                spec.name,
+                spec.elements(),
+                t.len()
+            );
+        }
+        Ok(t)
+    }
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, spec: &ExeSpec) -> Result<Executable> {
+        let path: &Path = &spec.file;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            spec: spec.clone(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "exe `{}` wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.spec.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // jax lowers with return_tuple=True: the root is a tuple of the
+        // declared outputs.
+        let parts = root.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "exe `{}` returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            dims: vec![2, 2],
+        };
+        let ok = HostTensor::F32(vec![1.0; 4]).to_literal(&spec);
+        assert!(ok.is_ok());
+        let bad_len = HostTensor::F32(vec![1.0; 3]).to_literal(&spec);
+        assert!(bad_len.is_err());
+        let bad_ty = HostTensor::I32(vec![1; 4]).to_literal(&spec);
+        assert!(bad_ty.is_err());
+    }
+
+    // Engine-level integration tests live in rust/tests/runtime_e2e.rs —
+    // they need the artifacts built by `make artifacts`.
+}

@@ -1,0 +1,215 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! The manifest (`artifacts/manifest.toml`, TOML-subset) records, per
+//! executable, the HLO file and the ordered input/output tensor specs so
+//! the runtime can allocate and check buffers without Python present.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::toml_lite;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a tensor (the subset our models use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// One tensor in an executable's signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Parse `name:dtype:AxBxC` (scalar = `name:dtype:1`).
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!("bad tensor spec `{s}` (want name:dtype:dims)");
+        }
+        let dims: Vec<usize> = if parts[2].is_empty() {
+            vec![]
+        } else {
+            parts[2]
+                .split('x')
+                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("dim `{d}`: {e}")))
+                .collect::<Result<Vec<usize>>>()?
+        };
+        Ok(TensorSpec {
+            name: parts[0].to_string(),
+            dtype: DType::parse(parts[1])?,
+            dims,
+        })
+    }
+}
+
+/// One executable entry.
+#[derive(Clone, Debug)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    /// Model metadata (free-form key → string).
+    pub meta: BTreeMap<String, String>,
+    pub exes: BTreeMap<String, ExeSpec>,
+    /// Directory the manifest was loaded from (file paths are relative).
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    pub fn load(path: &Path) -> Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let dir = path
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."));
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactManifest> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut meta = BTreeMap::new();
+        let mut raw: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for (key, value) in doc.flatten() {
+            let sval = match &value {
+                toml_lite::Value::Str(s) => s.clone(),
+                v => v.render(),
+            };
+            if let Some(rest) = key.strip_prefix("meta.") {
+                meta.insert(rest.to_string(), sval);
+            } else if let Some(rest) = key.strip_prefix("exe.") {
+                let (exe, field) = rest
+                    .rsplit_once('.')
+                    .ok_or_else(|| anyhow!("bad exe key `{key}`"))?;
+                raw.entry(exe.to_string())
+                    .or_default()
+                    .insert(field.to_string(), sval);
+            } else {
+                bail!("unknown manifest key `{key}`");
+            }
+        }
+        let mut exes = BTreeMap::new();
+        for (name, fields) in raw {
+            let file = fields
+                .get("file")
+                .ok_or_else(|| anyhow!("exe `{name}` missing file"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                fields
+                    .get(key)
+                    .ok_or_else(|| anyhow!("exe `{name}` missing {key}"))?
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            exes.insert(
+                name.clone(),
+                ExeSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(ArtifactManifest { meta, exes, dir })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no executable `{name}`"))
+    }
+
+    /// Integer metadata accessor.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest missing meta.{key}"))?
+            .parse::<usize>()
+            .with_context(|| format!("meta.{key} not an integer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[meta]
+model = "small_transformer"
+n_buckets = 3
+vocab = 512
+
+[exe.train_step]
+file = "train_step.hlo.txt"
+inputs = "b0:f32:100;b1:f32:200;tokens:i32:8x128"
+outputs = "loss:f32:1;g0:f32:100;g1:f32:200"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.meta.get("model").unwrap(), "small_transformer");
+        assert_eq!(m.meta_usize("n_buckets").unwrap(), 3);
+        let e = m.exe("train_step").unwrap();
+        assert_eq!(e.file, PathBuf::from("/tmp/a/train_step.hlo.txt"));
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[2].dims, vec![8, 128]);
+        assert_eq!(e.inputs[2].dtype, DType::I32);
+        assert_eq!(e.outputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let t = TensorSpec::parse("x:f32:4x5x6").unwrap();
+        assert_eq!(t.elements(), 120);
+        assert!(TensorSpec::parse("bad").is_err());
+        assert!(TensorSpec::parse("x:f64:1").is_err());
+        assert!(TensorSpec::parse("x:f32:ax2").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let text = "[exe.x]\nfile = \"x.hlo\"\ninputs = \"a:f32:1\"\n";
+        assert!(ArtifactManifest::parse(text, PathBuf::new()).is_err());
+        let text2 = "[bogus]\nk = 1\n";
+        assert!(ArtifactManifest::parse(text2, PathBuf::new()).is_err());
+        let m = ArtifactManifest::parse("[meta]\nx = \"1\"\n", PathBuf::new()).unwrap();
+        assert!(m.exe("none").is_err());
+    }
+}

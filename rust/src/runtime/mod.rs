@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at training time: `make artifacts` lowers the L2 JAX
+//! model (with its L1 Pallas kernels inlined via `interpret=True`) to
+//! **HLO text**, and this module compiles + executes it via the `xla`
+//! crate's PJRT CPU client. See `/opt/xla-example/README.md` for why text
+//! (not serialized protos) is the interchange format.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use manifest::{ArtifactManifest, TensorSpec};

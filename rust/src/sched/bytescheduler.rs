@@ -1,0 +1,74 @@
+//! Bytescheduler baseline: priority (sequential) scheduling (paper §II.B,
+//! SOSP'19 ref [8]).
+//!
+//! Gradient blocks are uniform partitions (see
+//! `partition::Strategy::Uniform`); the communication queue serves blocks
+//! by **layer priority** — the block nearest the input (bucket 0) always
+//! preempts queue order — so the next iteration's forward can begin as
+//! early as possible, and lower-priority blocks spill naturally into the
+//! forward window (overlapping forward compute).
+
+use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
+use crate::links::LinkKind;
+use crate::models::BucketProfile;
+
+/// Priority / sequential scheduler à la Bytescheduler & P3.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Bytescheduler;
+
+impl Scheduler for Bytescheduler {
+    fn name(&self) -> &'static str {
+        "bytescheduler"
+    }
+
+    fn schedule(&self, buckets: &[BucketProfile]) -> Schedule {
+        let n = buckets.len();
+        assert!(n > 0);
+        // All ops launch in the backward window when their gradient is
+        // ready; the link's priority queue (smallest bucket index first)
+        // realises the sequential-priority policy, and unfinished ops
+        // keep transmitting through the next forward window.
+        let bwd_ops = (0..n)
+            .map(|bucket| CommOp {
+                bucket,
+                link: LinkKind::Nccl,
+                stage: Stage::Backward,
+                priority: bucket as i64, // input-side first
+                grad_age: 0,
+                merged: 1,
+                update_offset: 0,
+            })
+            .collect();
+        Schedule {
+            scheme: self.name().into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops,
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::PerBucket,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 1,
+            max_outstanding_iters: usize::MAX,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg19_table2_buckets;
+
+    #[test]
+    fn priorities_follow_layer_order() {
+        let buckets = vgg19_table2_buckets();
+        let s = Bytescheduler.schedule(&buckets);
+        s.validate().unwrap();
+        assert_eq!(s.fwd_dependency, FwdDependency::PerBucket);
+        for (i, op) in s.cycle[0].bwd_ops.iter().enumerate() {
+            assert_eq!(op.bucket, i);
+            assert_eq!(op.priority, i as i64);
+        }
+    }
+}

@@ -1,0 +1,695 @@
+//! DeFT — the paper's scheduler (§III, Algorithms 1–2, Fig. 4).
+//!
+//! Key mechanisms, all implemented here:
+//!
+//! * **Delayed updates** eliminate hard dependencies: bucket #1 (input
+//!   side, id 0) is never shipped in the backward window that produced
+//!   it; buckets that do not fit this iteration's overlap capacity wait
+//!   in the *current/future task queues* and ship under later compute.
+//! * **Adaptive update frequency**: when queues accumulate a full old
+//!   iteration, its gradients are *merged* (gradient accumulation) with
+//!   the new iteration's — one transfer carries several iterations'
+//!   gradients, cutting communication volume (coverage-rate reduction).
+//! * **Two-stage 0/1 (multi-)knapsack**: the forward stage packs old
+//!   buckets into the forward-compute capacity (Case 1); the backward
+//!   stage packs old buckets first (Cases 2–3) and then this iteration's
+//!   buckets via Algorithm 1's recursive knapsack (Cases 3–4).
+//! * **Heterogeneous links**: with `heterogeneous`, every pack is a
+//!   two-knapsack problem — NCCL capacity C and gloo capacity C/μ (the
+//!   μ-slower link holds μ× less reference-time communication).
+//! * **Preserver feedback**: the resulting batch-multiplier sequence is
+//!   quantified with the Gaussian-walk model; if the expected-state ratio
+//!   leaves `[1−ε, 1+ε]`, knapsack capacities grow 15% and the schedule
+//!   is re-solved (≤ 10 retries, §IV.C.3).
+//!
+//! The steady-state cycle is found by running the queue state machine
+//! until its state signature repeats.
+
+use std::collections::BTreeMap;
+
+use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
+use crate::links::LinkKind;
+use crate::models::BucketProfile;
+use crate::preserver::{self, WalkParams};
+use crate::solver::{multi_knapsack_greedy, Item};
+use crate::util::Micros;
+
+/// DeFT configuration.
+#[derive(Clone, Debug)]
+pub struct DeftOptions {
+    /// gloo slowdown factor μ (paper: 1.65).
+    pub mu: f64,
+    /// Enable the heterogeneous (NCCL + gloo) second knapsack.
+    pub heterogeneous: bool,
+    /// Run the Preserver feedback loop (§IV.C.3).
+    pub preserver: bool,
+    /// Preserver acceptance band ε.
+    pub epsilon: f64,
+    /// Baseline batch size B for the Preserver's walk.
+    pub base_batch: f64,
+    /// Walk parameters at the profiling point (defaults to the Table V
+    /// ResNet setting scaled to the workload).
+    pub walk: WalkParams,
+    /// Initial knapsack capacity multiplier (1.0 = exactly the compute
+    /// time; the Preserver may raise it).
+    pub capacity_scale: f64,
+    /// Maximum iterations to search for a steady-state cycle.
+    pub max_cycle_search: usize,
+}
+
+impl Default for DeftOptions {
+    fn default() -> Self {
+        let (walk, base_batch) = preserver::table5_setting();
+        DeftOptions {
+            mu: crate::links::PAPER_MU,
+            heterogeneous: true,
+            preserver: true,
+            epsilon: preserver::EPSILON,
+            base_batch,
+            walk,
+            capacity_scale: 1.0,
+            max_cycle_search: 512,
+        }
+    }
+}
+
+/// The DeFT scheduler.
+#[derive(Clone, Debug, Default)]
+pub struct Deft {
+    pub opts: DeftOptions,
+}
+
+impl Deft {
+    pub fn new(opts: DeftOptions) -> Deft {
+        Deft { opts }
+    }
+
+    /// DeFT without the heterogeneous link (the paper's §V.B.4 ablation,
+    /// which also disables the Preserver guard).
+    pub fn without_multilink() -> Deft {
+        Deft {
+            opts: DeftOptions {
+                heterogeneous: false,
+                preserver: false,
+                ..DeftOptions::default()
+            },
+        }
+    }
+}
+
+/// A queued (delayed) gradient bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct QItem {
+    bucket: usize,
+    /// Iterations' gradients merged into this pending transfer.
+    merged: usize,
+}
+
+/// One stage's pack result: per-link chosen items.
+struct PackOut {
+    per_link: Vec<(LinkKind, Vec<QItem>)>,
+}
+
+impl PackOut {
+    fn shipped(&self) -> impl Iterator<Item = (LinkKind, QItem)> + '_ {
+        self.per_link
+            .iter()
+            .flat_map(|(l, v)| v.iter().map(move |q| (*l, *q)))
+    }
+}
+
+/// Queue state machine state (the cycle-detection signature).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct QueueState {
+    current: Vec<QItem>,
+    future: Vec<QItem>,
+    active_iters: usize,
+    forming_iters: usize,
+    /// NCCL wire time owed from force-shipped oversized items whose
+    /// communication exceeded the window that launched them; it is paid
+    /// off from subsequent iterations' overlap capacity so the planner
+    /// never claims more overlap than exists.
+    debt: Micros,
+}
+
+impl Deft {
+    /// Capacities (reference-link time units) for one stage with compute
+    /// window `compute`.
+    fn capacities(&self, compute: Micros, scale: f64) -> Vec<Micros> {
+        let c = compute.scale(scale);
+        if self.opts.heterogeneous {
+            vec![c, c.scale(1.0 / self.opts.mu)]
+        } else {
+            vec![c]
+        }
+    }
+
+    fn link_of(&self, sack: usize) -> LinkKind {
+        if sack == 0 {
+            LinkKind::Nccl
+        } else {
+            LinkKind::Gloo
+        }
+    }
+
+    /// Greedy multi-knapsack pack of queue items (Cases 1–2, order1).
+    fn pack(&self, items: &[QItem], buckets: &[BucketProfile], caps: &[Micros]) -> PackOut {
+        let solver_items: Vec<Item> = items
+            .iter()
+            .enumerate()
+            .map(|(i, q)| Item::new(i, buckets[q.bucket].comm))
+            .collect();
+        let r = multi_knapsack_greedy(&solver_items, caps);
+        let per_link = r
+            .assignments
+            .iter()
+            .enumerate()
+            .map(|(k, ids)| {
+                (
+                    self.link_of(k),
+                    ids.iter().map(|&i| items[i]).collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        PackOut { per_link }
+    }
+
+    /// Algorithm 1 generalised to multiple knapsacks: compare packing the
+    /// whole readiness-ordered suffix now against deferring the head item
+    /// (losing the next bucket's backward time from every capacity).
+    fn recursive_pack(
+        &self,
+        items: &[QItem],
+        release: &[Micros],
+        buckets: &[BucketProfile],
+        caps: &[Micros],
+    ) -> PackOut {
+        assert_eq!(items.len(), release.len());
+        if items.is_empty() {
+            return PackOut {
+                per_link: Vec::new(),
+            };
+        }
+        let now = self.pack(items, buckets, caps);
+        let now_total: Micros = now
+            .shipped()
+            .map(|(_, q)| buckets[q.bucket].comm)
+            .sum();
+        let deferred = if items.len() > 1 {
+            let reduced: Vec<Micros> = caps
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| {
+                    // NCCL loses `release` of overlap; the μ-slower sack
+                    // loses release/μ in reference units.
+                    let loss = if k == 0 {
+                        release[1]
+                    } else {
+                        release[1].scale(1.0 / self.opts.mu)
+                    };
+                    c.saturating_sub(loss)
+                })
+                .collect();
+            Some(self.recursive_pack(&items[1..], &release[1..], buckets, &reduced))
+        } else {
+            None
+        };
+        match deferred {
+            Some(d) => {
+                let d_total: Micros = d.shipped().map(|(_, q)| buckets[q.bucket].comm).sum();
+                if now_total >= d_total {
+                    now
+                } else {
+                    d
+                }
+            }
+            None => now,
+        }
+    }
+
+    /// Run the queue state machine once with fixed capacity scale and
+    /// return the steady-state schedule.
+    fn solve_with_scale(&self, buckets: &[BucketProfile], scale: f64) -> Schedule {
+        let n = buckets.len();
+        let fwd_compute: Micros = buckets.iter().map(|b| b.fwd).sum();
+        let bwd_compute: Micros = buckets.iter().map(|b| b.bwd).sum();
+
+        let mut st = QueueState::default();
+        let mut plans: Vec<IterPlan> = Vec::new();
+        let mut multipliers_log: Vec<u64> = Vec::new(); // k at each update
+        let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+
+        // Steady state can take ~CR iterations to reach (merge counts grow
+        // until volume fits capacity), and an oversized bucket needs
+        // ~comm/max_cap iterations before its first force-ship — scale the
+        // search horizon accordingly.
+        let cap_per_iter = (fwd_compute + bwd_compute).scale(scale).as_us().max(1);
+        let total_comm: u64 = buckets.iter().map(|b| b.comm.as_us()).sum();
+        let max_bucket_comm = buckets.iter().map(|b| b.comm.as_us()).max().unwrap_or(0);
+        let cr_bound = total_comm / cap_per_iter + max_bucket_comm / cap_per_iter;
+        let search_limit = self
+            .opts
+            .max_cycle_search
+            .max(64 + 6 * cr_bound as usize);
+
+        let debug = std::env::var_os("DEFT_DEBUG").is_some();
+        let mut cycle: Option<(usize, usize)> = None; // [start, end)
+        for t in 0..search_limit {
+            // Cycle signature: queue contents + group counters. The debt
+            // is deliberately excluded — it is a planning heuristic whose
+            // exact µs value decays aperiodically; two iterations with
+            // equal queue states bracket a window in which every produced
+            // gradient was shipped exactly once (inflow = outflow), which
+            // is what the steady-state cycle must guarantee. Debt is
+            // quantised into the signature coarsely so grossly different
+            // regimes are still distinguished.
+            let sig = format!(
+                "{:?}|{:?}|{}|{}|{}",
+                st.current,
+                st.future,
+                st.active_iters,
+                st.forming_iters,
+                st.debt.as_us() / (fwd_compute + bwd_compute).as_us().max(1) / 4
+            );
+            if debug && t < 80 {
+                eprintln!("[deft] t={t} {st:?}");
+            }
+            if let Some(&prev) = seen.get(&sig) {
+                cycle = Some((prev, t));
+                break;
+            }
+            seen.insert(sig, t);
+
+            let mut plan = IterPlan::default();
+
+            // ---- Forward stage (Case 1): ship old buckets. ----
+            if !st.current.is_empty() {
+                let mut caps = self.capacities(fwd_compute, scale);
+                let pay = caps[0].min(st.debt);
+                caps[0] = caps[0] - pay;
+                st.debt = st.debt - pay;
+                let out = self.pack(&st.current, buckets, &caps);
+                let mut prio = 0i64;
+                for (link, q) in out.shipped() {
+                    plan.fwd_ops.push(CommOp {
+                        bucket: q.bucket,
+                        link,
+                        stage: Stage::Forward,
+                        priority: prio,
+                        grad_age: 1,
+                        merged: q.merged,
+                        update_offset: 0,
+                    });
+                    prio += 1;
+                    st.current.retain(|c| c != &q);
+                }
+            }
+
+            // ---- Backward stage. ----
+            // This iteration's gradients join the forming group.
+            st.forming_iters += 1;
+            merge_iteration(&mut st.future, n);
+
+            let mut caps = self.capacities(bwd_compute, scale);
+            {
+                let pay = caps[0].min(st.debt);
+                caps[0] = caps[0] - pay;
+                st.debt = st.debt - pay;
+            }
+            // Robustness fallback: an item whose communication exceeds
+            // every knapsack (forward and backward) can never be packed.
+            // §III.D's constrained re-partition prevents this, but raw
+            // DDP-style profiles (e.g. Table II's 178 ms fc6 bucket) can
+            // contain such giants. DeFT's recourse is pure merging: the
+            // stuck item absorbs each new iteration's gradient of the
+            // same bucket (volume amortisation) and is force-shipped once
+            // enough compute has accumulated to pay for its wire time
+            // (merged · max_cap ≥ comm); the shipment consumes backward
+            // capacity, so everything else keeps queueing honestly.
+            let max_cap = self
+                .capacities(bwd_compute.max(fwd_compute), scale)
+                .into_iter()
+                .max()
+                .unwrap_or(Micros::ZERO);
+            if !max_cap.is_zero() {
+                let stuck: Vec<usize> = st
+                    .current
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| buckets[q.bucket].comm > max_cap)
+                    .map(|(i, _)| i)
+                    .collect();
+                for i in stuck {
+                    // Absorb the forming group's gradient of this bucket.
+                    let bucket = st.current[i].bucket;
+                    if let Some(pos) = st.future.iter().position(|f| f.bucket == bucket) {
+                        st.current[i].merged += st.future[pos].merged;
+                        st.future.remove(pos);
+                    }
+                }
+                // Self-regulating threshold: an oversized item ships only
+                // once it has merged enough iterations that the NCCL
+                // capacity accumulated over them covers both its own wire
+                // time and the outstanding debt — otherwise debt would
+                // grow without bound and no steady state would exist.
+                let cap_iter = (fwd_compute + bwd_compute).scale(scale);
+                let ready: Vec<QItem> = st
+                    .current
+                    .iter()
+                    .copied()
+                    .filter(|q| {
+                        buckets[q.bucket].comm > max_cap
+                            && Micros(cap_iter.as_us().saturating_mul(q.merged as u64))
+                                >= buckets[q.bucket].comm + st.debt
+                    })
+                    .collect();
+                for q in ready {
+                    plan.bwd_ops.push(CommOp {
+                        bucket: q.bucket,
+                        link: LinkKind::Nccl,
+                        stage: Stage::Backward,
+                        priority: -1, // it blocks the whole queue: go first
+                        grad_age: 1,
+                        merged: q.merged,
+                        update_offset: 0,
+                    });
+                    st.current.retain(|c| c != &q);
+                    // Its wire time eats the backward overlap window; any
+                    // overflow is owed by future iterations.
+                    let comm = buckets[q.bucket].comm;
+                    let covered = caps[0].min(comm);
+                    caps[0] = caps[0] - covered;
+                    st.debt += comm - covered;
+                }
+            }
+            // Old buckets first (Cases 2–3, order1).
+            if !st.current.is_empty() {
+                let out = self.pack(&st.current, buckets, &caps);
+                let mut prio = 0i64;
+                for (link, q) in out.shipped() {
+                    plan.bwd_ops.push(CommOp {
+                        bucket: q.bucket,
+                        link,
+                        stage: Stage::Backward,
+                        priority: prio,
+                        grad_age: 1,
+                        merged: q.merged,
+                        update_offset: 0,
+                    });
+                    prio += 1;
+                    st.current.retain(|c| c != &q);
+                    // Consume capacity.
+                    let link_idx = if link == LinkKind::Nccl { 0 } else { 1 };
+                    caps[link_idx] = caps[link_idx].saturating_sub(buckets[q.bucket].comm);
+                }
+            }
+
+            // New buckets via Algorithm 1 (Cases 3–4, order2) — only when
+            // the old queue fully drained, and never bucket 0 (hard dep).
+            if st.current.is_empty() {
+                // Readiness order n-1 .. 1; release = own backward time.
+                let mut items: Vec<QItem> = Vec::new();
+                let mut release: Vec<Micros> = Vec::new();
+                for b in (1..n).rev() {
+                    if let Some(q) = st.future.iter().find(|q| q.bucket == b) {
+                        items.push(*q);
+                        release.push(buckets[b].bwd);
+                    }
+                }
+                // Capacity excludes bucket n-1's backward (nothing is
+                // ready while it runs) — paper Alg. 2 line 15.
+                let caps2: Vec<Micros> = caps
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &c)| {
+                        let loss = if k == 0 {
+                            buckets[n - 1].bwd
+                        } else {
+                            buckets[n - 1].bwd.scale(1.0 / self.opts.mu)
+                        };
+                        c.saturating_sub(loss)
+                    })
+                    .collect();
+                let out = self.recursive_pack(&items, &release, buckets, &caps2);
+                let offset = usize::from(st.active_iters > 0);
+                let mut prio = 1000; // after order1 ops
+                for (link, q) in out.shipped() {
+                    plan.bwd_ops.push(CommOp {
+                        bucket: q.bucket,
+                        link,
+                        stage: Stage::Backward,
+                        priority: prio,
+                        grad_age: 0,
+                        merged: q.merged,
+                        update_offset: offset,
+                    });
+                    prio += 1;
+                    st.future.retain(|c| c != &q);
+                }
+            }
+
+            // ---- Iteration end: update & queue promotion. ----
+            let mut update = false;
+            if st.current.is_empty() {
+                if st.active_iters > 0 {
+                    update = true;
+                    multipliers_log.push(st.active_iters as u64);
+                }
+                st.current = std::mem::take(&mut st.future);
+                st.current.sort();
+                st.active_iters = st.forming_iters;
+                st.forming_iters = 0;
+            }
+            plan.update_at_end = update;
+            plans.push(plan);
+        }
+
+        let (start, end) = cycle.unwrap_or_else(|| {
+            panic!("no steady-state cycle within {search_limit} iterations")
+        });
+        let cycle_plans: Vec<IterPlan> = plans[start..end].to_vec();
+        // Multipliers of updates inside the cycle window.
+        let updates_before: usize = plans[..start].iter().filter(|p| p.update_at_end).count();
+        let updates_in: usize = cycle_plans.iter().filter(|p| p.update_at_end).count();
+        let ks: Vec<u64> =
+            multipliers_log[updates_before..updates_before + updates_in].to_vec();
+
+        let schedule = Schedule {
+            scheme: if self.opts.heterogeneous {
+                "deft".into()
+            } else {
+                "deft-nolink".into()
+            },
+            cycle: cycle_plans,
+            fwd_dependency: FwdDependency::None,
+            updates_per_cycle: updates_in,
+            batch_multipliers: ks,
+            warmup_iters: start,
+            // Two-queue staleness bound: at most the active + forming
+            // groups' communications may be in flight.
+            max_outstanding_iters: (2 * (end - start)).max(2),
+        };
+        debug_assert!(schedule.validate().is_ok(), "{:?}", schedule.validate());
+        schedule
+    }
+}
+
+/// Merge one fresh iteration's gradients (all buckets) into the forming
+/// queue: existing entries accumulate, absent buckets appear with count 1.
+fn merge_iteration(future: &mut Vec<QItem>, n: usize) {
+    for b in 0..n {
+        if let Some(q) = future.iter_mut().find(|q| q.bucket == b) {
+            q.merged += 1;
+        } else {
+            future.push(QItem { bucket: b, merged: 1 });
+        }
+    }
+    future.sort();
+}
+
+impl Scheduler for Deft {
+    fn name(&self) -> &'static str {
+        if self.opts.heterogeneous {
+            "deft"
+        } else {
+            "deft-nolink"
+        }
+    }
+
+    fn schedule(&self, buckets: &[BucketProfile]) -> Schedule {
+        let mut scale = self.opts.capacity_scale;
+        let mut best = self.solve_with_scale(buckets, scale);
+        if !self.opts.preserver {
+            return best;
+        }
+        // Preserver feedback loop (§IV.C.3): enlarge capacities until the
+        // expected-state ratio is inside [1−ε, 1+ε] or retries exhaust.
+        for _ in 0..preserver::MAX_RETRIES {
+            let report =
+                preserver::quantify(&self.opts.walk, self.opts.base_batch, &best.batch_multipliers);
+            if preserver::acceptable(&report, self.opts.epsilon) {
+                break;
+            }
+            scale *= 1.15;
+            best = self.solve_with_scale(buckets, scale);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{gpt2_buckets_calibrated, vgg19_table2_buckets};
+
+    fn vgg() -> Vec<BucketProfile> {
+        vgg19_table2_buckets()
+    }
+
+    #[test]
+    fn schedule_validates_and_has_delayed_updates_on_vgg() {
+        // VGG CR ≈ 1.9: with heterogeneous links + merging of the fc6
+        // giant, DeFT amortises volume via merged transfers; without the
+        // second link the capacity deficit must lower update frequency.
+        let d = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let s = d.schedule(&vgg());
+        s.validate().unwrap();
+        assert_eq!(s.fwd_dependency, FwdDependency::None);
+        assert!(s.update_frequency() <= 1.0);
+        // Volume reduction: some transfer carries ≥ 2 iterations' grads.
+        assert!(
+            s.cycle
+                .iter()
+                .flat_map(|p| p.all_ops())
+                .any(|op| op.merged >= 2),
+            "no merged transfers on a CR≈1.9 workload"
+        );
+        let solo = Deft::without_multilink().schedule(&vgg());
+        solo.validate().unwrap();
+        assert!(
+            solo.update_frequency() < 1.0,
+            "single-link freq = {} (cycle {} updates {})",
+            solo.update_frequency(),
+            solo.cycle.len(),
+            solo.updates_per_cycle
+        );
+    }
+
+    #[test]
+    fn bucket0_never_ships_with_age_zero() {
+        // The paper's hard dependency: bucket #1's gradient (ready at the
+        // very end of backward) is always delayed.
+        let d = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        for bs in [vgg(), gpt2_buckets_calibrated()] {
+            let s = d.schedule(&bs);
+            for plan in &s.cycle {
+                for op in plan.all_ops() {
+                    if op.bucket == 0 {
+                        assert!(
+                            op.grad_age >= 1,
+                            "bucket 0 shipped in its own backward window"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_gradient_is_shipped_exactly_once_per_cycle() {
+        // Volume conservation: over one cycle, the merged iteration count
+        // shipped per bucket equals the cycle length (each iteration's
+        // gradient leaves exactly once, possibly merged).
+        let d = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        for bs in [vgg(), gpt2_buckets_calibrated()] {
+            let s = d.schedule(&bs);
+            let n = bs.len();
+            for b in 0..n {
+                let shipped: usize = s
+                    .cycle
+                    .iter()
+                    .flat_map(|p| p.all_ops())
+                    .filter(|op| op.bucket == b)
+                    .map(|op| op.merged)
+                    .sum();
+                assert_eq!(
+                    shipped,
+                    s.cycle.len(),
+                    "bucket {b}: shipped {shipped} iterations' grads over a {}-iter cycle",
+                    s.cycle.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_uses_both_links() {
+        let d = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let s = d.schedule(&vgg());
+        let gloo_ops = s
+            .cycle
+            .iter()
+            .flat_map(|p| p.all_ops())
+            .filter(|op| op.link == LinkKind::Gloo)
+            .count();
+        assert!(gloo_ops > 0, "heterogeneous schedule never used gloo");
+    }
+
+    #[test]
+    fn nolink_reduces_update_frequency_further() {
+        let het = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let solo = Deft::without_multilink();
+        let f_het = het.schedule(&vgg()).update_frequency();
+        let f_solo = solo.schedule(&vgg()).update_frequency();
+        assert!(
+            f_solo <= f_het + 1e-9,
+            "single-link should update no more often: {f_solo} vs {f_het}"
+        );
+    }
+
+    #[test]
+    fn gpt2_near_full_frequency() {
+        // CR ≈ 0.99: with heterogeneous links DeFT should keep the update
+        // frequency high (≥ 0.5).
+        let d = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let s = d.schedule(&gpt2_buckets_calibrated());
+        assert!(
+            s.update_frequency() >= 0.5,
+            "freq = {}",
+            s.update_frequency()
+        );
+    }
+
+    #[test]
+    fn preserver_feedback_raises_frequency_or_accepts() {
+        let with = Deft::new(DeftOptions::default());
+        let without = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let f_with = with.schedule(&vgg()).update_frequency();
+        let f_without = without.schedule(&vgg()).update_frequency();
+        assert!(
+            f_with + 1e-9 >= f_without,
+            "preserver should never lower frequency: {f_with} vs {f_without}"
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Communication schedulers — PyTorch-DDP WFBP, Bytescheduler, US-Byte,
+//! and DeFT itself (paper §II.B, §III).
+//!
+//! Every scheme consumes a bucket profile set (`Vec<BucketProfile>`) and
+//! produces a [`Schedule`]: a steady-state **cycle** of per-iteration
+//! plans. Baselines have a cycle of length 1 (every iteration identical,
+//! one update per iteration); DeFT's delayed updates make its steady
+//! state span several iterations with fewer updates (the paper's N:M
+//! coverage-ratio reduction).
+//!
+//! The plan language is deliberately small — buckets, links, launch
+//! stages, gradient ages, merge counts, update markers — and the
+//! discrete-event simulator ([`crate::sim`]) is the single executor of
+//! plans, so all four schemes are compared under identical dependency
+//! rules (WFBP's DAG, §II.A).
+
+mod bytescheduler;
+mod deft;
+pub mod lifecycle;
+mod plan;
+mod usbyte;
+mod wfbp;
+
+pub use bytescheduler::Bytescheduler;
+pub use deft::{Deft, DeftOptions};
+pub use lifecycle::{run_lifecycle, LifecycleOptions, LifecycleReport};
+pub use plan::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
+pub use usbyte::UsByte;
+pub use wfbp::Wfbp;
+
+use crate::models::BucketProfile;
+
+/// A communication-scheduling scheme.
+pub trait Scheduler {
+    /// Scheme name as used in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Build the steady-state schedule for `buckets`.
+    ///
+    /// `buckets` are in forward order (bucket 0 nearest the input); comm
+    /// times are reference-link (NCCL) µs. Schedulers that use the slow
+    /// link must account for its μ slowdown themselves via the options
+    /// they were constructed with.
+    fn schedule(&self, buckets: &[BucketProfile]) -> Schedule;
+}
+
+/// Table III — the qualitative feature matrix, printable by benches.
+pub fn feature_matrix() -> String {
+    let mut s = String::new();
+    s.push_str("scheme         | fwd overlap | tensor fusion           | strategy           | hard dependency | convergence\n");
+    s.push_str("---------------+-------------+-------------------------+--------------------+-----------------+------------\n");
+    s.push_str("pytorch-ddp    | no          | regular & uniform       | -                  | exists          | baseline\n");
+    s.push_str("bytescheduler  | yes         | auto-tune & uniform     | sequential         | exists          | exact\n");
+    s.push_str("us-byte        | yes         | unequal-sized           | non-sequential     | exists          | exact\n");
+    s.push_str("deft           | yes         | unequal (constrained)   | 0/1 multi-knapsack | eliminated      | approximate\n");
+    s
+}

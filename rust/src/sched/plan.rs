@@ -1,0 +1,224 @@
+//! The schedule plan language shared by all four schemes.
+
+use crate::links::LinkKind;
+use crate::util::Micros;
+
+/// Launch window of a communication op within an iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Launched once the iteration's forward stage begins (ops carrying
+    /// *old* gradients — priority scheduling / DeFT Case 1).
+    Forward,
+    /// Launched during the backward stage (classic WFBP window).
+    Backward,
+}
+
+/// One scheduled bucket communication.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CommOp {
+    /// Bucket id (forward order, 0 = input side — paper bucket #1).
+    pub bucket: usize,
+    /// Transport link.
+    pub link: LinkKind,
+    /// Launch window.
+    pub stage: Stage,
+    /// Link-queue priority: when several ops are ready, the link serves
+    /// the smallest priority value first.
+    pub priority: i64,
+    /// 0 ⇒ the transfer includes the **current** iteration's gradient
+    /// (data ready only when this iteration's backward for the bucket
+    /// finishes); k ≥ 1 ⇒ it carries only gradients from ≥ k iterations
+    /// ago (ready immediately — DeFT's delayed communication).
+    pub grad_age: usize,
+    /// How many iterations' gradients are merged into this transfer
+    /// (gradient accumulation; 1 for baselines). Merged transfers are the
+    /// same byte size — that is DeFT's communication-volume saving.
+    pub merged: usize,
+    /// Which future parameter update consumes this transfer: 0 = the next
+    /// update to fire, 1 = the one after, … The simulator blocks update
+    /// `u` until every op with `update_offset` resolving to `u` is done.
+    pub update_offset: usize,
+}
+
+/// How the next iteration's forward depends on gradient communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdDependency {
+    /// DDP: a global barrier — forward of iteration t+1 starts only after
+    /// every communication of iteration t completed (allreduce + step).
+    Barrier,
+    /// Priority schemes: forward of bucket b in iteration t+1 waits only
+    /// for bucket b's own gradient communication of iteration t.
+    PerBucket,
+    /// DeFT delayed updates: forward never waits on communication (it
+    /// runs with the previous parameter version when needed).
+    None,
+}
+
+/// Plan for one iteration of the steady-state cycle.
+#[derive(Clone, Debug, Default)]
+pub struct IterPlan {
+    /// Ops launched in the forward window, served by priority.
+    pub fwd_ops: Vec<CommOp>,
+    /// Ops launched in the backward window, served by priority.
+    pub bwd_ops: Vec<CommOp>,
+    /// Does a parameter update fire at the end of this iteration?
+    pub update_at_end: bool,
+}
+
+impl IterPlan {
+    pub fn all_ops(&self) -> impl Iterator<Item = &CommOp> {
+        self.fwd_ops.iter().chain(self.bwd_ops.iter())
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.fwd_ops.len() + self.bwd_ops.len()
+    }
+}
+
+/// A steady-state schedule: `cycle` repeats forever.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub scheme: String,
+    pub cycle: Vec<IterPlan>,
+    /// Forward-dependency regime of the scheme.
+    pub fwd_dependency: FwdDependency,
+    /// Number of parameter updates per cycle (= `cycle` entries with
+    /// `update_at_end`).
+    pub updates_per_cycle: usize,
+    /// Batch-size multipliers `k_1..k_m` of the updates in one cycle
+    /// (paper §IV.C.1): update i applies gradients of `k_i` iterations.
+    /// Baselines: all 1. Σk_i = cycle length.
+    pub batch_multipliers: Vec<u64>,
+    /// Warm-up iterations before the steady-state cycle applies (DeFT's
+    /// queue fill); informational.
+    pub warmup_iters: usize,
+    /// Staleness bound: iteration `t` may not begin until every comm op
+    /// launched in iterations `≤ t − max_outstanding_iters` has completed.
+    /// DeFT's two-queue structure holds at most the active + forming
+    /// groups in flight, so its bound is ~2 cycles; schemes whose forward
+    /// dependencies are already stricter use `usize::MAX`.
+    pub max_outstanding_iters: usize,
+}
+
+impl Schedule {
+    /// Effective update frequency = updates per iteration.
+    pub fn update_frequency(&self) -> f64 {
+        self.updates_per_cycle as f64 / self.cycle.len() as f64
+    }
+
+    /// Total communications launched per cycle.
+    pub fn ops_per_cycle(&self) -> usize {
+        self.cycle.iter().map(|p| p.num_ops()).sum()
+    }
+
+    /// Validate internal consistency (used by tests and debug asserts):
+    /// Σ batch multipliers = cycle length, update markers match
+    /// `updates_per_cycle`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cycle.is_empty() {
+            return Err("empty cycle".into());
+        }
+        let marks = self.cycle.iter().filter(|p| p.update_at_end).count();
+        if marks != self.updates_per_cycle {
+            return Err(format!(
+                "updates_per_cycle {} != update markers {marks}",
+                self.updates_per_cycle
+            ));
+        }
+        if self.updates_per_cycle != self.batch_multipliers.len() {
+            return Err(format!(
+                "batch multipliers {:?} vs {} updates",
+                self.batch_multipliers, self.updates_per_cycle
+            ));
+        }
+        let ksum: u64 = self.batch_multipliers.iter().sum();
+        if ksum != self.cycle.len() as u64 {
+            return Err(format!(
+                "Σk = {ksum} != cycle length {}",
+                self.cycle.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total reference-link communication time launched per cycle, given
+    /// per-bucket comm times (diagnostics; gloo ops are still counted in
+    /// reference units).
+    pub fn comm_per_cycle(&self, comm: &[Micros]) -> Micros {
+        self.cycle
+            .iter()
+            .flat_map(|p| p.all_ops())
+            .map(|op| comm[op.bucket])
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(bucket: usize) -> CommOp {
+        CommOp {
+            bucket,
+            link: LinkKind::Nccl,
+            stage: Stage::Backward,
+            priority: 0,
+            grad_age: 0,
+            merged: 1,
+            update_offset: 0,
+        }
+    }
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let mut s = Schedule {
+            scheme: "test".into(),
+            cycle: vec![IterPlan {
+                fwd_ops: vec![],
+                bwd_ops: vec![op(0)],
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::Barrier,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 0,
+            max_outstanding_iters: usize::MAX,
+        };
+        assert!(s.validate().is_ok());
+        s.updates_per_cycle = 2;
+        assert!(s.validate().is_err());
+        s.updates_per_cycle = 1;
+        s.batch_multipliers = vec![2];
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn frequency_and_ops() {
+        let plan = IterPlan {
+            fwd_ops: vec![op(1)],
+            bwd_ops: vec![op(0), op(2)],
+            update_at_end: false,
+        };
+        let s = Schedule {
+            scheme: "t".into(),
+            cycle: vec![
+                plan,
+                IterPlan {
+                    fwd_ops: vec![],
+                    bwd_ops: vec![op(0)],
+                    update_at_end: true,
+                },
+            ],
+            fwd_dependency: FwdDependency::None,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![2],
+            warmup_iters: 0,
+            max_outstanding_iters: usize::MAX,
+        };
+        assert!((s.update_frequency() - 0.5).abs() < 1e-12);
+        assert_eq!(s.ops_per_cycle(), 4);
+        assert!(s.validate().is_ok());
+        let comm = vec![Micros(10), Micros(20), Micros(30)];
+        assert_eq!(s.comm_per_cycle(&comm), Micros(10 + 20 + 30 + 10));
+    }
+}

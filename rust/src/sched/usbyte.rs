@@ -1,0 +1,176 @@
+//! US-Byte baseline: non-sequential greedy scheduling of unequal-sized
+//! tensor blocks (paper §II.B, TPDS'23 ref [12]).
+//!
+//! US-Byte's observation: with unequal block sizes, strict layer-priority
+//! order is sub-optimal — sometimes a longer, later-needed block should
+//! transmit first to reduce the total stall of the next iteration's
+//! forward. We reconstruct their low-complexity greedy as a one-step
+//! lookahead: at each link-free instant, among *ready* blocks pick the
+//! one whose selection minimizes the projected forward makespan of the
+//! next iteration (remaining blocks ordered by deadline). O(N³) offline,
+//! once per schedule.
+
+use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
+use crate::links::LinkKind;
+use crate::models::BucketProfile;
+use crate::util::Micros;
+
+/// Non-sequential greedy scheduler à la US-Byte.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UsByte;
+
+impl UsByte {
+    /// Compute the transmission order for one steady-state iteration.
+    ///
+    /// Inputs are the steady-state readiness times of each bucket's
+    /// gradient (relative to backward start) and the forward/comm times;
+    /// output is the bucket order the link should follow.
+    fn greedy_order(buckets: &[BucketProfile]) -> Vec<usize> {
+        let n = buckets.len();
+        // Gradient readiness: backward runs n-1 .. 0.
+        let mut ready = vec![Micros::ZERO; n];
+        let mut cursor = Micros::ZERO;
+        for b in (0..n).rev() {
+            cursor += buckets[b].bwd;
+            ready[b] = cursor;
+        }
+        let bwd_total = cursor;
+
+        // Evaluate a complete order: simulated comm finish times, then the
+        // next iteration's forward makespan (fwd_b waits for comm_b).
+        let eval = |order: &[usize]| -> Micros {
+            let mut link_t = Micros::ZERO;
+            let mut done = vec![Micros::ZERO; n];
+            for &b in order {
+                link_t = link_t.max(ready[b]) + buckets[b].comm;
+                done[b] = link_t;
+            }
+            let mut fwd_cursor = bwd_total; // forward starts after backward
+            for b in 0..n {
+                fwd_cursor = fwd_cursor.max(done[b]) + buckets[b].fwd;
+            }
+            fwd_cursor
+        };
+
+        let mut remaining: Vec<usize> = (0..n).collect();
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut link_t = Micros::ZERO;
+        while !remaining.is_empty() {
+            // Ready candidates at the link's current free time (or the
+            // earliest-ready if none).
+            let min_ready = remaining.iter().map(|&b| ready[b]).min().unwrap();
+            let decision_t = link_t.max(min_ready);
+            let candidates: Vec<usize> = remaining
+                .iter()
+                .copied()
+                .filter(|&b| ready[b] <= decision_t)
+                .collect();
+            let mut best: Option<(Micros, usize)> = None;
+            for &c in &candidates {
+                // Tentative full order: c, then the rest by layer index
+                // (deadline order).
+                let mut tail: Vec<usize> =
+                    remaining.iter().copied().filter(|&b| b != c).collect();
+                tail.sort_unstable();
+                let mut cand_order = order.clone();
+                cand_order.push(c);
+                cand_order.extend(tail);
+                let makespan = eval(&cand_order);
+                if best.map_or(true, |(m, bb)| (makespan, c) < (m, bb)) {
+                    best = Some((makespan, c));
+                }
+            }
+            let (_, chosen) = best.expect("candidates nonempty");
+            link_t = link_t.max(ready[chosen]) + buckets[chosen].comm;
+            order.push(chosen);
+            remaining.retain(|&b| b != chosen);
+        }
+        order
+    }
+}
+
+impl Scheduler for UsByte {
+    fn name(&self) -> &'static str {
+        "us-byte"
+    }
+
+    fn schedule(&self, buckets: &[BucketProfile]) -> Schedule {
+        let n = buckets.len();
+        assert!(n > 0);
+        let order = Self::greedy_order(buckets);
+        let bwd_ops = order
+            .iter()
+            .enumerate()
+            .map(|(pos, &bucket)| CommOp {
+                bucket,
+                link: LinkKind::Nccl,
+                stage: Stage::Backward,
+                priority: pos as i64,
+                grad_age: 0,
+                merged: 1,
+                update_offset: 0,
+            })
+            .collect();
+        Schedule {
+            scheme: self.name().into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops,
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::PerBucket,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 1,
+            max_outstanding_iters: usize::MAX,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{vgg19_table2_buckets, BucketProfile};
+
+    #[test]
+    fn order_is_a_permutation() {
+        let buckets = vgg19_table2_buckets();
+        let order = UsByte::greedy_order(&buckets);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..buckets.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn schedule_validates() {
+        let s = UsByte.schedule(&vgg19_table2_buckets());
+        s.validate().unwrap();
+        assert_eq!(s.ops_per_cycle(), 6);
+    }
+
+    #[test]
+    fn non_sequential_when_sizes_are_unequal() {
+        // A case where strict priority is sub-optimal: a tiny bucket 0
+        // ready last, a huge bucket 1 ready earlier. The greedy should
+        // transmit the huge one first (it is ready first anyway) — i.e.
+        // NOT hold the link idle for priority order.
+        let buckets = vec![
+            BucketProfile {
+                id: 0,
+                params: 1,
+                fwd: Micros(10),
+                bwd: Micros(100),
+                comm: Micros(5),
+            },
+            BucketProfile {
+                id: 1,
+                params: 1,
+                fwd: Micros(10),
+                bwd: Micros(10),
+                comm: Micros(200),
+            },
+        ];
+        let order = UsByte::greedy_order(&buckets);
+        assert_eq!(order[0], 1, "greedy should ship the ready bucket first");
+    }
+}

@@ -1,0 +1,72 @@
+//! PyTorch DDP baseline: WFBP + tensor fusion (paper §II.A, baseline 1).
+//!
+//! Every bucket's allreduce launches as soon as its backward finishes
+//! (FIFO readiness order, all on NCCL); the optimizer steps after all
+//! allreduces of the iteration complete, and the next iteration's forward
+//! waits for the step — the full barrier that creates Fig. 1(a)'s hard
+//! dependencies.
+
+use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
+use crate::links::LinkKind;
+use crate::models::BucketProfile;
+
+/// PyTorch DistributedDataParallel-style scheduler.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Wfbp;
+
+impl Scheduler for Wfbp {
+    fn name(&self) -> &'static str {
+        "pytorch-ddp"
+    }
+
+    fn schedule(&self, buckets: &[BucketProfile]) -> Schedule {
+        let n = buckets.len();
+        assert!(n > 0);
+        // Backward produces gradients for bucket n-1 first; FIFO service.
+        let bwd_ops = (0..n)
+            .rev()
+            .enumerate()
+            .map(|(rank, bucket)| CommOp {
+                bucket,
+                link: LinkKind::Nccl,
+                stage: Stage::Backward,
+                priority: rank as i64, // readiness order
+                grad_age: 0,
+                merged: 1,
+                update_offset: 0,
+            })
+            .collect();
+        Schedule {
+            scheme: self.name().into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops,
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::Barrier,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 0,
+            max_outstanding_iters: usize::MAX,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg19_table2_buckets;
+
+    #[test]
+    fn one_op_per_bucket_every_iteration() {
+        let buckets = vgg19_table2_buckets();
+        let s = Wfbp.schedule(&buckets);
+        s.validate().unwrap();
+        assert_eq!(s.cycle.len(), 1);
+        assert_eq!(s.ops_per_cycle(), buckets.len());
+        assert_eq!(s.fwd_dependency, FwdDependency::Barrier);
+        // Readiness order: bucket 5 first.
+        assert_eq!(s.cycle[0].bwd_ops[0].bucket, 5);
+        assert_eq!(s.cycle[0].bwd_ops.last().unwrap().bucket, 0);
+    }
+}

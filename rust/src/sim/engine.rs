@@ -1,0 +1,610 @@
+//! The discrete-event engine executing schedules under WFBP rules.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Span, SpanKind, StreamId, Timeline};
+use crate::links::{ClusterEnv, LinkKind};
+use crate::models::BucketProfile;
+use crate::sched::{FwdDependency, Schedule, Stage};
+use crate::util::Micros;
+
+/// Simulation options.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// Number of training iterations to execute.
+    pub iterations: usize,
+    /// Iterations excluded from the steady-state iteration-time metric
+    /// (queue warm-up).
+    pub warmup: usize,
+    /// Record the span timeline (disable for large metric-only sweeps).
+    pub record_timeline: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            iterations: 50,
+            warmup: 5,
+            record_timeline: true,
+        }
+    }
+}
+
+/// Simulation outputs.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheme: String,
+    /// Wall-clock end of each iteration's *compute* (monotone).
+    pub iter_ends: Vec<Micros>,
+    /// Time of each parameter update (update u at `update_times[u]`).
+    pub update_times: Vec<Micros>,
+    /// Total wall time until everything (compute, comm, updates) drained.
+    pub total: Micros,
+    /// Idle time in the compute stream (the paper's "bubbles").
+    pub compute_bubbles: Micros,
+    /// Average steady-state iteration time (excluding warm-up).
+    pub steady_iter_time: Micros,
+    /// Per-link busy time.
+    pub link_busy: Vec<(LinkKind, Micros)>,
+    pub timeline: Timeline,
+}
+
+impl SimResult {
+    /// Throughput in samples/second for the whole cluster.
+    pub fn throughput(&self, batch_per_gpu: u32, workers: usize) -> f64 {
+        let per_iter = batch_per_gpu as f64 * workers as f64;
+        per_iter / self.steady_iter_time.as_secs_f64()
+    }
+
+    /// Bubble ratio = compute idle / total compute-stream span.
+    pub fn bubble_ratio(&self) -> f64 {
+        let busy = self.timeline.busy(StreamId::Compute);
+        let span = busy + self.compute_bubbles;
+        if span.is_zero() {
+            0.0
+        } else {
+            self.compute_bubbles.ratio(span)
+        }
+    }
+}
+
+/// Internal: one materialized communication op instance.
+#[derive(Clone, Debug)]
+struct OpInst {
+    bucket: usize,
+    link: LinkKind,
+    iter: usize,
+    stage: Stage,
+    priority: i64,
+    grad_age: usize,
+    merged: usize,
+    /// Global update index this op's gradients feed.
+    update_idx: usize,
+    /// Wire time on its link.
+    wire: Micros,
+    /// Resolved readiness (None until known).
+    ready: Option<Micros>,
+    done: Option<Micros>,
+}
+
+/// Compute-task cursor: which task the compute stream runs next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum CompTask {
+    Fwd { iter: usize, bucket: usize },
+    Bwd { iter: usize, bucket: usize },
+    Done,
+}
+
+/// Execute `schedule` over `buckets` in `env` and return metrics.
+///
+/// Panics on malformed schedules (deadlock, missing gradient coverage for
+/// a dependency) — the property tests rely on this to catch scheduler
+/// bugs.
+pub fn simulate(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+) -> SimResult {
+    schedule.validate().expect("invalid schedule");
+    let n = buckets.len();
+    assert!(n > 0, "no buckets");
+    let iters = opts.iterations;
+    assert!(iters > 0);
+
+    // ---- Materialize op instances for every iteration. ----
+    let cycle_len = schedule.cycle.len();
+    // updates_before[t] = number of update markers in iterations < t.
+    let mut updates_before = vec![0usize; iters + 1];
+    for t in 0..iters {
+        let plan = &schedule.cycle[t % cycle_len];
+        updates_before[t + 1] = updates_before[t] + usize::from(plan.update_at_end);
+    }
+    let total_updates = updates_before[iters];
+
+    let mut ops: Vec<OpInst> = Vec::new();
+    for t in 0..iters {
+        let plan = &schedule.cycle[t % cycle_len];
+        for op in plan.all_ops() {
+            assert!(
+                !(op.grad_age == 0 && op.stage == Stage::Forward),
+                "op for current-iter grad cannot launch in forward window"
+            );
+            let wire = match op.link {
+                LinkKind::Nccl => buckets[op.bucket].comm,
+                LinkKind::Gloo => {
+                    let base = buckets[op.bucket].comm.scale(env.mu);
+                    if env.multi_link {
+                        base
+                    } else {
+                        base.scale(1.0 + env.contention_penalty(buckets[op.bucket].params))
+                    }
+                }
+            };
+            ops.push(OpInst {
+                bucket: op.bucket,
+                link: op.link,
+                iter: t,
+                stage: op.stage,
+                priority: op.priority,
+                grad_age: op.grad_age,
+                merged: op.merged,
+                update_idx: updates_before[t] + op.update_offset,
+                wire,
+                ready: None,
+                done: None,
+            });
+        }
+    }
+
+    // Update bookkeeping: iteration whose end carries update u, and the
+    // set of ops feeding u.
+    let mut update_iter = vec![usize::MAX; total_updates.max(1)];
+    {
+        let mut u = 0;
+        for t in 0..iters {
+            if schedule.cycle[t % cycle_len].update_at_end {
+                update_iter[u] = t;
+                u += 1;
+            }
+        }
+    }
+    let mut update_outstanding = vec![0usize; total_updates];
+    for op in &ops {
+        if op.update_idx < total_updates {
+            update_outstanding[op.update_idx] += 1;
+        }
+        // Ops whose update lies beyond the horizon never gate anything.
+    }
+
+    // Coverage map for PerBucket forward dependencies:
+    // covered[(iter, bucket)] -> op index whose transfer includes that
+    // iteration's gradient of that bucket.
+    let mut covers: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    if schedule.fwd_dependency == FwdDependency::PerBucket {
+        for (oi, op) in ops.iter().enumerate() {
+            let newest = op.iter as i64 - op.grad_age as i64;
+            for k in 0..op.merged {
+                let covered_iter = newest - k as i64;
+                if covered_iter >= 0 {
+                    covers.insert((covered_iter as usize, op.bucket), oi);
+                }
+            }
+        }
+    }
+
+    // ---- Event-driven execution. ----
+    // Resources: compute stream cursor + two link servers.
+    let mut now = Micros::ZERO;
+    let mut timeline = Timeline::default();
+    let record = |tl: &mut Timeline, span: Span| {
+        if opts.record_timeline {
+            tl.spans.push(span);
+        }
+    };
+
+    // Per-link ready pools: ordered by (priority, iter, bucket, op idx).
+    let mut pool: BTreeMap<LinkKind, BTreeSet<(i64, usize, usize, usize)>> = BTreeMap::new();
+    pool.insert(LinkKind::Nccl, BTreeSet::new());
+    pool.insert(LinkKind::Gloo, BTreeSet::new());
+    // Link busy-until and in-flight op.
+    let mut link_free: BTreeMap<LinkKind, Micros> = BTreeMap::new();
+    link_free.insert(LinkKind::Nccl, Micros::ZERO);
+    link_free.insert(LinkKind::Gloo, Micros::ZERO);
+    let mut in_flight: BTreeMap<LinkKind, Option<usize>> = BTreeMap::new();
+    in_flight.insert(LinkKind::Nccl, None);
+    in_flight.insert(LinkKind::Gloo, None);
+
+    // Staleness-bound bookkeeping (incremental — a linear scan of all ops
+    // per dispatch made the engine quadratic in iterations):
+    // `iter_ops_remaining[it]` counts incomplete ops launched in iteration
+    // `it`; `watermark` is the first iteration with incomplete ops;
+    // `cum_max_done[it]` (valid for it < watermark) is the latest
+    // completion time among all ops of iterations ≤ it.
+    let mut iter_ops_remaining = vec![0usize; iters];
+    for op in &ops {
+        iter_ops_remaining[op.iter] += 1;
+    }
+    let mut iter_max_done = vec![Micros::ZERO; iters];
+    let mut cum_max_done = vec![Micros::ZERO; iters];
+    let mut watermark = 0usize;
+    while watermark < iters && iter_ops_remaining[watermark] == 0 {
+        cum_max_done[watermark] = if watermark == 0 {
+            Micros::ZERO
+        } else {
+            cum_max_done[watermark - 1]
+        };
+        watermark += 1;
+    }
+
+    // Compute bookkeeping.
+    let mut comp = CompTask::Fwd { iter: 0, bucket: 0 };
+    let mut comp_busy_until = Micros::ZERO;
+    let mut comp_running = false;
+    let mut compute_busy = Micros::ZERO;
+    let mut first_comp_start: Option<Micros> = None;
+    let mut iter_ends: Vec<Micros> = Vec::with_capacity(iters);
+    // Compute end of iteration t (backward fully done).
+    let mut comp_iter_end: Vec<Option<Micros>> = vec![None; iters];
+    // Fwd window open time per iteration (= compute end of previous iter).
+    let mut update_times: Vec<Option<Micros>> = vec![None; total_updates];
+    let mut update_pending_end: Vec<Option<Micros>> = vec![None; total_updates];
+
+    // Index ops by (iter, stage) for window-open insertion and by
+    // (iter, bucket) for data-ready insertion.
+    let mut by_window: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
+    let mut by_data: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (oi, op) in ops.iter().enumerate() {
+        if op.grad_age == 0 {
+            by_data.entry((op.iter, op.bucket)).or_default().push(oi);
+        } else {
+            let stage_key = if op.stage == Stage::Forward { 0 } else { 1 };
+            by_window.entry((op.iter, stage_key)).or_default().push(oi);
+        }
+    }
+
+    // Helper: make ops ready and insert into pools.
+    macro_rules! make_ready {
+        ($indices:expr, $time:expr) => {
+            for &oi in $indices.iter() {
+                let op = &mut ops[oi];
+                debug_assert!(op.ready.is_none());
+                op.ready = Some($time);
+                pool.get_mut(&op.link)
+                    .unwrap()
+                    .insert((op.priority, op.iter, op.bucket, oi));
+            }
+        };
+    }
+
+    // Iteration 0 forward window opens at t=0.
+    if let Some(is) = by_window.get(&(0usize, 0u8)) {
+        let is = is.clone();
+        make_ready!(is, Micros::ZERO);
+    }
+
+    let mut safety = 0u64;
+    let safety_cap = 10_000_000u64 + ops.len() as u64 * 16;
+
+    loop {
+        safety += 1;
+        assert!(safety < safety_cap, "simulator livelock — scheduler bug?");
+
+        let mut progressed = false;
+
+        // --- 1. Dispatch links: serve best ready op if free. ---
+        for kind in LinkKind::ALL {
+            if in_flight[&kind].is_some() {
+                continue;
+            }
+            let free_at = link_free[&kind].max(Micros::ZERO);
+            // Ops are inserted into the pool at the very event that made
+            // them ready (ready ≤ now always), so the best candidate is
+            // simply the first element in (priority, iter, bucket) order.
+            let candidate = pool[&kind]
+                .first()
+                .filter(|&&(_, _, _, oi)| ops[oi].ready.unwrap() <= now.max(free_at))
+                .copied();
+            if let Some(key) = candidate {
+                let oi = key.3;
+                pool.get_mut(&kind).unwrap().remove(&key);
+                let start = ops[oi].ready.unwrap().max(link_free[&kind]).max(
+                    // Links are causal: cannot start in the past.
+                    Micros::ZERO,
+                );
+                let end = start + ops[oi].wire;
+                ops[oi].done = Some(end);
+                *link_free.get_mut(&kind).unwrap() = end;
+                *in_flight.get_mut(&kind).unwrap() = Some(oi);
+                record(
+                    &mut timeline,
+                    Span {
+                        stream: StreamId::Link(kind),
+                        kind: SpanKind::Comm {
+                            iter: ops[oi].iter,
+                            bucket: ops[oi].bucket,
+                            merged: ops[oi].merged,
+                        },
+                        start,
+                        end,
+                    },
+                );
+                progressed = true;
+            }
+        }
+
+        // --- 2. Dispatch compute if idle and dependencies resolved. ---
+        if !comp_running {
+            match comp {
+                CompTask::Fwd { iter, bucket } => {
+                    // Dependency gate for the very first task of the fwd.
+                    let mut dep_time = Some(if iter == 0 {
+                        Micros::ZERO
+                    } else {
+                        comp_iter_end[iter - 1].expect("prev iter must be done")
+                    });
+                    // Staleness back-pressure: every op launched in
+                    // iterations ≤ iter − max_outstanding must be done
+                    // (the two-queue memory bound; see Schedule docs).
+                    if bucket == 0 && iter >= schedule.max_outstanding_iters.saturating_add(1) {
+                        let horizon = iter - schedule.max_outstanding_iters;
+                        if watermark >= horizon {
+                            dep_time = dep_time.map(|d| d.max(cum_max_done[horizon - 1]));
+                        } else {
+                            dep_time = None;
+                        }
+                    }
+                    match schedule.fwd_dependency {
+                        FwdDependency::Barrier => {
+                            if bucket == 0 && iter > 0 {
+                                // All updates of iterations < iter.
+                                let need = updates_before[iter];
+                                for u in 0..need {
+                                    match update_times[u] {
+                                        Some(t) => {
+                                            dep_time = dep_time.map(|d| d.max(t));
+                                        }
+                                        None => dep_time = None,
+                                    }
+                                }
+                            }
+                        }
+                        FwdDependency::PerBucket => {
+                            if iter > 0 {
+                                let oi = *covers.get(&(iter - 1, bucket)).unwrap_or_else(|| {
+                                    panic!(
+                                        "no op covers grad (iter {}, bucket {bucket})",
+                                        iter - 1
+                                    )
+                                });
+                                match ops[oi].done {
+                                    Some(t) => dep_time = dep_time.map(|d| d.max(t)),
+                                    None => dep_time = None,
+                                }
+                            }
+                        }
+                        FwdDependency::None => {}
+                    }
+                    if let Some(dep) = dep_time {
+                        let start = now.max(dep).max(comp_busy_until);
+                        let end = start + buckets[bucket].fwd;
+                        first_comp_start.get_or_insert(start);
+                        compute_busy += buckets[bucket].fwd;
+                        record(
+                            &mut timeline,
+                            Span {
+                                stream: StreamId::Compute,
+                                kind: SpanKind::Fwd { iter, bucket },
+                                start,
+                                end,
+                            },
+                        );
+                        comp_busy_until = end;
+                        comp_running = true;
+                        progressed = true;
+                    }
+                }
+                CompTask::Bwd { iter, bucket } => {
+                    let start = now.max(comp_busy_until);
+                    let end = start + buckets[bucket].bwd;
+                    compute_busy += buckets[bucket].bwd;
+                    record(
+                        &mut timeline,
+                        Span {
+                            stream: StreamId::Compute,
+                            kind: SpanKind::Bwd { iter, bucket },
+                            start,
+                            end,
+                        },
+                    );
+                    comp_busy_until = end;
+                    comp_running = true;
+                    progressed = true;
+                }
+                CompTask::Done => {}
+            }
+        }
+
+        // --- 3. Advance time to the next event. ---
+        let mut next_time: Option<Micros> = None;
+        let consider = |t: Micros, next: &mut Option<Micros>| {
+            if t > now {
+                *next = Some(next.map_or(t, |n: Micros| n.min(t)));
+            }
+        };
+        if comp_running {
+            consider(comp_busy_until, &mut next_time);
+        }
+        for kind in LinkKind::ALL {
+            if in_flight[&kind].is_some() {
+                consider(link_free[&kind], &mut next_time);
+            }
+            // Idle links need no wake-up: pool entries are ready the
+            // moment they are inserted (see the dispatch invariant), so
+            // an idle link with work is served in the same event round.
+        }
+        // Pending update whose iteration end passed but ops outstanding:
+        // resolved by op-done events, nothing to schedule here.
+
+        if !progressed {
+            match next_time {
+                Some(t) => now = t,
+                None => break, // nothing running, nothing pending
+            }
+        } else {
+            continue;
+        }
+
+        // --- 4. Fire completions at `now`. ---
+        // Link completions.
+        for kind in LinkKind::ALL {
+            if let Some(oi) = in_flight[&kind] {
+                if ops[oi].done.unwrap() <= now {
+                    *in_flight.get_mut(&kind).unwrap() = None;
+                    // Advance the staleness watermark.
+                    let op_iter = ops[oi].iter;
+                    let done_t = ops[oi].done.unwrap();
+                    iter_ops_remaining[op_iter] -= 1;
+                    iter_max_done[op_iter] = iter_max_done[op_iter].max(done_t);
+                    while watermark < iters && iter_ops_remaining[watermark] == 0 {
+                        let prev = if watermark == 0 {
+                            Micros::ZERO
+                        } else {
+                            cum_max_done[watermark - 1]
+                        };
+                        cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
+                        watermark += 1;
+                    }
+                    let u = ops[oi].update_idx;
+                    if u < total_updates {
+                        update_outstanding[u] -= 1;
+                        if update_outstanding[u] == 0 {
+                            if let Some(iter_end) = update_pending_end[u] {
+                                update_times[u] = Some(iter_end.max(ops[oi].done.unwrap()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Compute completion.
+        if comp_running && comp_busy_until <= now {
+            comp_running = false;
+            // Advance the task cursor and fire boundary effects.
+            match comp {
+                CompTask::Fwd { iter, bucket } => {
+                    if bucket + 1 < n {
+                        comp = CompTask::Fwd {
+                            iter,
+                            bucket: bucket + 1,
+                        };
+                    } else {
+                        // Backward window of this iteration opens.
+                        if let Some(is) = by_window.get(&(iter, 1u8)) {
+                            let is = is.clone();
+                            make_ready!(is, comp_busy_until);
+                        }
+                        comp = CompTask::Bwd {
+                            iter,
+                            bucket: n - 1,
+                        };
+                    }
+                }
+                CompTask::Bwd { iter, bucket } => {
+                    // This bucket's gradient is ready.
+                    if let Some(is) = by_data.get(&(iter, bucket)) {
+                        let is = is.clone();
+                        make_ready!(is, comp_busy_until);
+                    }
+                    if bucket > 0 {
+                        comp = CompTask::Bwd {
+                            iter,
+                            bucket: bucket - 1,
+                        };
+                    } else {
+                        // Iteration end.
+                        comp_iter_end[iter] = Some(comp_busy_until);
+                        iter_ends.push(comp_busy_until);
+                        if schedule.cycle[iter % cycle_len].update_at_end {
+                            let u = updates_before[iter + 1] - 1;
+                            update_pending_end[u] = Some(comp_busy_until);
+                            if update_outstanding[u] == 0 {
+                                update_times[u] = Some(comp_busy_until);
+                            }
+                        }
+                        if iter + 1 < iters {
+                            // Next iteration's forward window opens.
+                            if let Some(is) = by_window.get(&(iter + 1, 0u8)) {
+                                let is = is.clone();
+                                make_ready!(is, comp_busy_until);
+                            }
+                            comp = CompTask::Fwd {
+                                iter: iter + 1,
+                                bucket: 0,
+                            };
+                        } else {
+                            comp = CompTask::Done;
+                        }
+                    }
+                }
+                CompTask::Done => {}
+            }
+        }
+    }
+
+    // ---- Post-conditions & metrics. ----
+    assert_eq!(iter_ends.len(), iters, "compute did not finish all iterations");
+    for (oi, op) in ops.iter().enumerate() {
+        assert!(op.done.is_some(), "op {oi} never executed: {op:?}");
+    }
+    let update_times: Vec<Micros> = update_times
+        .into_iter()
+        .enumerate()
+        .map(|(u, t)| t.unwrap_or_else(|| panic!("update {u} never fired")))
+        .collect();
+
+    let total = iter_ends
+        .last()
+        .copied()
+        .unwrap_or(Micros::ZERO)
+        .max(update_times.last().copied().unwrap_or(Micros::ZERO))
+        .max(
+            ops.iter()
+                .map(|o| o.done.unwrap())
+                .max()
+                .unwrap_or(Micros::ZERO),
+        );
+
+    // Steady-state iteration time: average over post-warm-up iterations.
+    let w = opts.warmup.min(iters - 1);
+    let steady_span = iter_ends[iters - 1] - if w == 0 { Micros::ZERO } else { iter_ends[w - 1] };
+    let steady_iter_time = steady_span / (iters - w) as u64;
+
+    let compute_span_end = iter_ends[iters - 1];
+    let compute_span_start = first_comp_start.unwrap_or(Micros::ZERO);
+    let compute_bubbles = (compute_span_end - compute_span_start).saturating_sub(compute_busy);
+
+    let link_busy = LinkKind::ALL
+        .iter()
+        .map(|&k| {
+            (
+                k,
+                ops.iter()
+                    .filter(|o| o.link == k)
+                    .map(|o| o.wire)
+                    .sum::<Micros>(),
+            )
+        })
+        .collect();
+
+    SimResult {
+        scheme: schedule.scheme.clone(),
+        iter_ends,
+        update_times,
+        total,
+        compute_bubbles,
+        steady_iter_time,
+        link_busy,
+        timeline,
+    }
+}

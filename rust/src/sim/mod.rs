@@ -1,0 +1,154 @@
+//! Discrete-event cluster simulator — the execution substrate replacing
+//! the paper's 16-GPU testbed (see DESIGN.md §Substitutions).
+//!
+//! The simulator executes a [`Schedule`] over a bucket profile set under
+//! exactly the WFBP dependency rules of paper §II.A:
+//!
+//! * one serial **compute stream** per data-parallel group (forward
+//!   bucket 0‥N−1, then backward N−1‥0 each iteration);
+//! * one serial **communication stream per link** (NCCL, gloo), served by
+//!   op priority among *ready* ops (non-preemptive);
+//! * a gradient's communication may not start before its producing
+//!   backward finishes (unless it carries an older iteration's gradient —
+//!   DeFT's delayed updates);
+//! * forward of iteration t+1 depends on gradient communication per the
+//!   scheme's [`FwdDependency`] (DDP barrier / per-bucket / none).
+//!
+//! Outputs: per-iteration wall times, compute-stream bubble time, update
+//! times, and a full span timeline for the Gantt renderings of paper
+//! Figs. 11–13 and 16.
+
+mod convergence;
+mod engine;
+
+pub use convergence::{training_curve, ConvergenceModel, TrainingCurve};
+pub use engine::{simulate, SimOptions, SimResult};
+
+use crate::links::LinkKind;
+use crate::util::Micros;
+
+/// Which resource a timeline span occupied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamId {
+    Compute,
+    Link(LinkKind),
+}
+
+/// What the span did.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Forward compute of `bucket` in `iter`.
+    Fwd { iter: usize, bucket: usize },
+    /// Backward compute of `bucket` in `iter`.
+    Bwd { iter: usize, bucket: usize },
+    /// Communication of `bucket` launched in `iter`, carrying `merged`
+    /// iterations' gradients.
+    Comm {
+        iter: usize,
+        bucket: usize,
+        merged: usize,
+    },
+}
+
+/// One occupied interval on a stream.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub stream: StreamId,
+    pub kind: SpanKind,
+    pub start: Micros,
+    pub end: Micros,
+}
+
+impl Span {
+    pub fn duration(&self) -> Micros {
+        self.end - self.start
+    }
+}
+
+/// Full execution trace of a simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    /// Spans on one stream, in start order.
+    pub fn on_stream(&self, stream: StreamId) -> Vec<&Span> {
+        let mut v: Vec<&Span> = self.spans.iter().filter(|s| s.stream == stream).collect();
+        v.sort_by_key(|s| (s.start, s.end));
+        v
+    }
+
+    /// Total busy time on a stream.
+    pub fn busy(&self, stream: StreamId) -> Micros {
+        self.spans
+            .iter()
+            .filter(|s| s.stream == stream)
+            .map(|s| s.duration())
+            .sum()
+    }
+
+    /// Idle (bubble) time on a stream between its first and last span.
+    pub fn bubbles(&self, stream: StreamId) -> Micros {
+        let spans = self.on_stream(stream);
+        if spans.is_empty() {
+            return Micros::ZERO;
+        }
+        let mut idle = Micros::ZERO;
+        let mut cursor = spans[0].start;
+        for s in &spans {
+            if s.start > cursor {
+                idle += s.start - cursor;
+            }
+            cursor = cursor.max(s.end);
+        }
+        idle
+    }
+
+    pub fn end_time(&self) -> Micros {
+        self.spans
+            .iter()
+            .map(|s| s.end)
+            .max()
+            .unwrap_or(Micros::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_busy_and_bubbles() {
+        let t = Timeline {
+            spans: vec![
+                Span {
+                    stream: StreamId::Compute,
+                    kind: SpanKind::Fwd { iter: 0, bucket: 0 },
+                    start: Micros(0),
+                    end: Micros(10),
+                },
+                Span {
+                    stream: StreamId::Compute,
+                    kind: SpanKind::Fwd { iter: 0, bucket: 1 },
+                    start: Micros(15),
+                    end: Micros(20),
+                },
+                Span {
+                    stream: StreamId::Link(LinkKind::Nccl),
+                    kind: SpanKind::Comm {
+                        iter: 0,
+                        bucket: 0,
+                        merged: 1,
+                    },
+                    start: Micros(10),
+                    end: Micros(30),
+                },
+            ],
+        };
+        assert_eq!(t.busy(StreamId::Compute), Micros(15));
+        assert_eq!(t.bubbles(StreamId::Compute), Micros(5));
+        assert_eq!(t.busy(StreamId::Link(LinkKind::Nccl)), Micros(20));
+        assert_eq!(t.end_time(), Micros(30));
+    }
+}

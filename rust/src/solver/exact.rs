@@ -1,0 +1,244 @@
+//! Exact knapsack solvers — test oracles and ablation references.
+//!
+//! These certify the quality of the paper's greedy heuristics on real
+//! workload instances (`bench_solver_overhead` reports greedy/optimal
+//! ratios). Branch-and-bound with a fractional (LP) upper bound: item
+//! profits equal weights, so the fractional bound is simply
+//! `min(capacity, sum of remaining items)` — cheap and tight.
+//!
+//! Instance sizes in this problem are tiny (the paper caps N < 20 buckets,
+//! M = 2 links), so exponential worst cases are irrelevant; we still guard
+//! with an explicit node budget and assert on instance size.
+
+use super::{Item, PackResult};
+use crate::util::Micros;
+
+const MAX_EXACT_ITEMS: usize = 28;
+const NODE_BUDGET: u64 = 20_000_000;
+
+/// Exact single 0/1 knapsack (profit = weight = comm time).
+///
+/// Panics if given more than `MAX_EXACT_ITEMS` items — this is an oracle,
+/// not a production solver.
+pub fn knapsack_exact(items: &[Item], capacity: Micros) -> PackResult {
+    assert!(
+        items.len() <= MAX_EXACT_ITEMS,
+        "exact solver limited to {MAX_EXACT_ITEMS} items"
+    );
+    // Sort descending for a tighter first incumbent.
+    let mut order: Vec<&Item> = items.iter().collect();
+    order.sort_by(|a, b| b.comm.cmp(&a.comm).then(a.id.cmp(&b.id)));
+
+    // suffix[i] = total comm of order[i..]
+    let mut suffix = vec![Micros::ZERO; order.len() + 1];
+    for i in (0..order.len()).rev() {
+        suffix[i] = suffix[i + 1] + order[i].comm;
+    }
+
+    struct Ctx<'a> {
+        order: &'a [&'a Item],
+        suffix: &'a [Micros],
+        best: Micros,
+        best_set: Vec<usize>,
+        cur_set: Vec<usize>,
+        nodes: u64,
+    }
+
+    fn dfs(ctx: &mut Ctx, i: usize, used: Micros, capacity: Micros) {
+        ctx.nodes += 1;
+        assert!(ctx.nodes < NODE_BUDGET, "exact solver node budget blown");
+        if used > ctx.best {
+            ctx.best = used;
+            ctx.best_set = ctx.cur_set.clone();
+        }
+        if i == ctx.order.len() {
+            return;
+        }
+        // Bound: even taking every remaining item can't beat incumbent.
+        if used + ctx.suffix[i] <= ctx.best {
+            return;
+        }
+        let item = ctx.order[i];
+        // Branch: take (if it fits), then skip.
+        if used + item.comm <= capacity {
+            ctx.cur_set.push(item.id);
+            dfs(ctx, i + 1, used + item.comm, capacity);
+            ctx.cur_set.pop();
+        }
+        dfs(ctx, i + 1, used, capacity);
+    }
+
+    let mut ctx = Ctx {
+        order: &order,
+        suffix: &suffix,
+        best: Micros::ZERO,
+        best_set: Vec::new(),
+        cur_set: Vec::new(),
+        nodes: 0,
+    };
+    dfs(&mut ctx, 0, Micros::ZERO, capacity);
+    PackResult {
+        chosen: ctx.best_set,
+        total: ctx.best,
+    }
+}
+
+/// Exact 0/1 multi-knapsack: maximize total packed comm across `capacities`.
+///
+/// Returns `(assignments, total)` where `assignments[k]` lists the ids in
+/// knapsack `k`. Exhaustive DFS over (M+1)-way item placement with the
+/// fractional bound; intended for M ≤ 3, N ≤ 18 (test/bench scale).
+pub fn multi_knapsack_exact(
+    items: &[Item],
+    capacities: &[Micros],
+) -> (Vec<Vec<usize>>, Micros) {
+    assert!(items.len() <= 18, "exact multi-knapsack limited to 18 items");
+    assert!(capacities.len() <= 3, "exact multi-knapsack limited to 3 sacks");
+
+    let mut order: Vec<&Item> = items.iter().collect();
+    order.sort_by(|a, b| b.comm.cmp(&a.comm).then(a.id.cmp(&b.id)));
+    let mut suffix = vec![Micros::ZERO; order.len() + 1];
+    for i in (0..order.len()).rev() {
+        suffix[i] = suffix[i + 1] + order[i].comm;
+    }
+
+    struct Ctx<'a> {
+        order: &'a [&'a Item],
+        suffix: &'a [Micros],
+        best: Micros,
+        best_assign: Vec<Vec<usize>>,
+        cur_assign: Vec<Vec<usize>>,
+        nodes: u64,
+    }
+
+    fn dfs(ctx: &mut Ctx, i: usize, used: Micros, remaining: &mut Vec<Micros>) {
+        ctx.nodes += 1;
+        assert!(ctx.nodes < NODE_BUDGET, "exact solver node budget blown");
+        if used > ctx.best {
+            ctx.best = used;
+            ctx.best_assign = ctx.cur_assign.clone();
+        }
+        if i == ctx.order.len() {
+            return;
+        }
+        if used + ctx.suffix[i] <= ctx.best {
+            return;
+        }
+        let item = ctx.order[i];
+        // Try each knapsack (skip symmetric identical-capacity repeats).
+        let mut tried: Vec<Micros> = Vec::with_capacity(remaining.len());
+        for k in 0..remaining.len() {
+            if item.comm <= remaining[k] && !tried.contains(&remaining[k]) {
+                tried.push(remaining[k]);
+                remaining[k] = remaining[k] - item.comm;
+                ctx.cur_assign[k].push(item.id);
+                dfs(ctx, i + 1, used + item.comm, remaining);
+                ctx.cur_assign[k].pop();
+                remaining[k] = remaining[k] + item.comm;
+            }
+        }
+        // Skip the item.
+        dfs(ctx, i + 1, used, remaining);
+    }
+
+    let mut ctx = Ctx {
+        order: &order,
+        suffix: &suffix,
+        best: Micros::ZERO,
+        best_assign: vec![Vec::new(); capacities.len()],
+        cur_assign: vec![Vec::new(); capacities.len()],
+        nodes: 0,
+    };
+    let mut remaining = capacities.to_vec();
+    dfs(&mut ctx, 0, Micros::ZERO, &mut remaining);
+    (ctx.best_assign, ctx.best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{multi_knapsack_greedy, naive_knapsack};
+    use crate::util::prop::check;
+
+    fn mk(comms: &[u64]) -> Vec<Item> {
+        comms
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Item::new(i, Micros(c)))
+            .collect()
+    }
+
+    #[test]
+    fn exact_beats_greedy_on_adversarial_instance() {
+        // Greedy longest-first packs 7 then nothing else fits (cap 10);
+        // optimal is 6+4 = 10.
+        let its = mk(&[7, 6, 4]);
+        let greedy = naive_knapsack(&its, Micros(10));
+        let exact = knapsack_exact(&its, Micros(10));
+        assert_eq!(greedy.total, Micros(7));
+        assert_eq!(exact.total, Micros(10));
+    }
+
+    #[test]
+    fn exact_multi_simple() {
+        let its = mk(&[5, 4, 3]);
+        let (assign, total) = multi_knapsack_exact(&its, &[Micros(5), Micros(7)]);
+        assert_eq!(total, Micros(12));
+        let all: usize = assign.iter().map(|a| a.len()).sum();
+        assert_eq!(all, 3);
+    }
+
+    #[test]
+    fn prop_exact_dominates_greedy_single() {
+        check("exact >= greedy (single)", 150, |g| {
+            let comms = g.vec_u64(0..=10, 0..=200);
+            let cap = Micros(g.u64_in(0..=800));
+            let its = mk(&comms);
+            let e = knapsack_exact(&its, cap);
+            let n = naive_knapsack(&its, cap);
+            if e.total < n.total {
+                return Err(format!("exact {:?} < greedy {:?}", e.total, n.total));
+            }
+            if e.total > cap {
+                return Err("exact over capacity".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_exact_dominates_greedy_multi() {
+        check("exact >= greedy (multi)", 80, |g| {
+            let comms = g.vec_u64(0..=9, 0..=150);
+            let caps_raw = g.vec_u64(1..=2, 0..=400);
+            let caps: Vec<Micros> = caps_raw.iter().map(|&c| Micros(c)).collect();
+            let its = mk(&comms);
+            let (_, e_total) = multi_knapsack_exact(&its, &caps);
+            let gr = multi_knapsack_greedy(&its, &caps);
+            if e_total < gr.total {
+                return Err(format!("exact {e_total:?} < greedy {:?}", gr.total));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn greedy_single_within_half_of_optimal() {
+        // Classic bound: profit=weight greedy (longest-first) achieves
+        // >= 1/2 of optimal. Verify on random instances.
+        check("greedy 1/2-approximation", 150, |g| {
+            let comms = g.vec_u64(1..=10, 1..=200);
+            let cap = Micros(g.u64_in(1..=800));
+            let its = mk(&comms);
+            let e = knapsack_exact(&its, cap);
+            let n = naive_knapsack(&its, cap);
+            if e.total.as_us() > 0 && (n.total.as_us() as f64) < 0.5 * e.total.as_us() as f64 {
+                return Err(format!(
+                    "greedy {:?} below half of optimal {:?}",
+                    n.total, e.total
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Greedy knapsack heuristics — the solvers DeFT actually runs online.
+//!
+//! The paper (§III.C) argues exact multi-knapsack is NP-hard and uses a
+//! greedy strategy: *"we first sort the capacity of each knapsack and the
+//! time of each bucket, and then start with the backpack with smaller
+//! capacity, and try to prioritize placing the bucket with longer time"*.
+//! Placement is O(N·M) for N items, M knapsacks.
+
+use super::{Item, PackResult};
+use crate::util::Micros;
+
+/// The paper's `NaiveKnapsack`: greedily pack items, longest
+/// communication first, into a single knapsack of capacity `capacity`.
+///
+/// Since every item's weight equals its profit, longest-first greedy is a
+/// 1/2-approximation; on the paper's instances (≤ 20 items whose sizes are
+/// bounded by the capacity constraint of §III.D) it is usually optimal —
+/// `solver::knapsack_exact` certifies the gap in tests and benches.
+pub fn naive_knapsack(items: &[Item], capacity: Micros) -> PackResult {
+    let mut order: Vec<&Item> = items.iter().collect();
+    // Longest first; tie-break on id for determinism.
+    order.sort_by(|a, b| b.comm.cmp(&a.comm).then(a.id.cmp(&b.id)));
+    let mut remaining = capacity;
+    let mut chosen = Vec::new();
+    let mut total = Micros::ZERO;
+    for item in order {
+        if item.comm <= remaining {
+            remaining = remaining - item.comm;
+            total += item.comm;
+            chosen.push(item.id);
+        }
+    }
+    PackResult { chosen, total }
+}
+
+/// Per-knapsack assignment produced by the multi-knapsack solvers.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MultiKnapsackResult {
+    /// `assignments[k]` = ids packed into knapsack `k` (original index
+    /// into the `capacities` argument, not the sorted order).
+    pub assignments: Vec<Vec<usize>>,
+    /// Total packed communication time in *reference-link* units.
+    pub total: Micros,
+    /// Ids that did not fit anywhere.
+    pub leftover: Vec<usize>,
+}
+
+/// Paper **Problem 2** greedy: 0/1 multi-knapsack over heterogeneous
+/// links.
+///
+/// `capacities[k]` is the overlap capacity of link `k` *in reference-link
+/// time units* (the caller divides a slow link's raw compute window by its
+/// slowdown μ, per §III.C/III.D: the gloo knapsack holds `capacity/μ`
+/// worth of NCCL-time communication).
+///
+/// Strategy (verbatim from the paper): sort knapsacks by ascending
+/// capacity, items by descending time; fill the smallest knapsack first
+/// with the longest items that fit. O(N·M) placement after the sorts.
+pub fn multi_knapsack_greedy(items: &[Item], capacities: &[Micros]) -> MultiKnapsackResult {
+    let mut result = MultiKnapsackResult {
+        assignments: vec![Vec::new(); capacities.len()],
+        total: Micros::ZERO,
+        leftover: Vec::new(),
+    };
+    if capacities.is_empty() {
+        result.leftover = items.iter().map(|i| i.id).collect();
+        return result;
+    }
+
+    // Knapsacks ascending by capacity (remember original index).
+    let mut sacks: Vec<(usize, Micros)> =
+        capacities.iter().copied().enumerate().collect();
+    sacks.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+
+    // Items descending by comm time.
+    let mut order: Vec<&Item> = items.iter().collect();
+    order.sort_by(|a, b| b.comm.cmp(&a.comm).then(a.id.cmp(&b.id)));
+
+    let mut remaining: Vec<Micros> = sacks.iter().map(|&(_, c)| c).collect();
+    let mut placed = vec![false; order.len()];
+
+    // Fill the smallest knapsack first with the longest items that fit.
+    for (si, &(orig_k, _)) in sacks.iter().enumerate() {
+        for (ii, item) in order.iter().enumerate() {
+            if placed[ii] {
+                continue;
+            }
+            if item.comm <= remaining[si] {
+                remaining[si] = remaining[si] - item.comm;
+                result.assignments[orig_k].push(item.id);
+                result.total += item.comm;
+                placed[ii] = true;
+            }
+        }
+    }
+    for (ii, item) in order.iter().enumerate() {
+        if !placed[ii] {
+            result.leftover.push(item.id);
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn items(comms: &[u64]) -> Vec<Item> {
+        comms
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Item::new(i, Micros(c)))
+            .collect()
+    }
+
+    #[test]
+    fn naive_packs_all_when_capacity_large() {
+        let its = items(&[3, 5, 2]);
+        let r = naive_knapsack(&its, Micros(100));
+        assert_eq!(r.total, Micros(10));
+        assert_eq!(r.chosen.len(), 3);
+        // Longest-first order: item 1 (5), item 0 (3), item 2 (2).
+        assert_eq!(r.chosen, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn naive_respects_capacity() {
+        let its = items(&[6, 5, 4]);
+        let r = naive_knapsack(&its, Micros(10));
+        assert!(r.total <= Micros(10));
+        // Greedy: 6 then 4 fits => total 10 (optimal here).
+        assert_eq!(r.total, Micros(10));
+    }
+
+    #[test]
+    fn naive_empty_inputs() {
+        assert!(naive_knapsack(&[], Micros(10)).is_empty());
+        let r = naive_knapsack(&items(&[5]), Micros::ZERO);
+        assert!(r.is_empty());
+        assert_eq!(r.total, Micros::ZERO);
+    }
+
+    #[test]
+    fn multi_fills_smallest_first() {
+        let its = items(&[8, 6, 4, 2]);
+        // capacities: [10 (nccl), 6 (gloo, already divided by mu)]
+        let r = multi_knapsack_greedy(&its, &[Micros(10), Micros(6)]);
+        // Smallest sack (cap 6, original index 1) takes item 1 (6).
+        assert_eq!(r.assignments[1], vec![1]);
+        // Larger sack takes 8 then 2.
+        assert_eq!(r.assignments[0], vec![0, 3]);
+        assert_eq!(r.total, Micros(16));
+        assert_eq!(r.leftover, vec![2]);
+    }
+
+    #[test]
+    fn multi_no_knapsacks() {
+        let its = items(&[1, 2]);
+        let r = multi_knapsack_greedy(&its, &[]);
+        assert_eq!(r.leftover, vec![0, 1]);
+        assert_eq!(r.total, Micros::ZERO);
+    }
+
+    #[test]
+    fn prop_naive_within_capacity_and_no_duplicates() {
+        check("naive knapsack invariants", 300, |g| {
+            let comms = g.vec_u64(0..=20, 0..=500);
+            let cap = Micros(g.u64_in(0..=2_000));
+            let its = items(&comms);
+            let r = naive_knapsack(&its, cap);
+            if r.total > cap {
+                return Err(format!("total {:?} exceeds capacity {cap:?}", r.total));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &id in &r.chosen {
+                if !seen.insert(id) {
+                    return Err(format!("duplicate id {id}"));
+                }
+                if id >= its.len() {
+                    return Err(format!("unknown id {id}"));
+                }
+            }
+            let sum: Micros = r.chosen.iter().map(|&id| its[id].comm).sum();
+            if sum != r.total {
+                return Err("total mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_multi_each_item_at_most_once_and_capacity() {
+        check("multi knapsack invariants", 300, |g| {
+            let comms = g.vec_u64(0..=15, 0..=300);
+            let caps_raw = g.vec_u64(1..=3, 0..=600);
+            let caps: Vec<Micros> = caps_raw.iter().map(|&c| Micros(c)).collect();
+            let its = items(&comms);
+            let r = multi_knapsack_greedy(&its, &caps);
+            let mut seen = std::collections::HashSet::new();
+            for (k, sack) in r.assignments.iter().enumerate() {
+                let sum: Micros = sack.iter().map(|&id| its[id].comm).sum();
+                if sum > caps[k] {
+                    return Err(format!("sack {k} over capacity"));
+                }
+                for &id in sack {
+                    if !seen.insert(id) {
+                        return Err(format!("item {id} placed twice"));
+                    }
+                }
+            }
+            for &id in &r.leftover {
+                if !seen.insert(id) {
+                    return Err(format!("leftover {id} also placed"));
+                }
+            }
+            if seen.len() != its.len() {
+                return Err("items lost".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! Knapsack solvers — the optimization core of DeFT (paper §III.B–C).
+//!
+//! DeFT transforms two-stage communication scheduling into 0/1 knapsack
+//! problems: knapsack **capacity** is computation time available for
+//! overlap, **items** are bucket communications, and an item's weight and
+//! profit are both its communication time (we maximize overlapped
+//! communication).
+//!
+//! Four solvers are provided:
+//!
+//! * [`naive_knapsack`] — the paper's `NaiveKnapsack`: a greedy
+//!   largest-first packing (the paper's low-cost heuristic).
+//! * [`recursive_knapsack`] — paper **Algorithm 1**: recursion over the
+//!   suffix of the ready-ordered item list, comparing "pack everything
+//!   available now" against "drop the newest item and recurse with the
+//!   capacity that excludes its producing computation".
+//! * [`multi_knapsack_greedy`] — paper **Problem 2**: the 0/1
+//!   multi-knapsack across heterogeneous links (NCCL + gloo), solved with
+//!   the paper's greedy (sort capacities ascending, place longest items
+//!   first).
+//! * [`knapsack_exact`] / [`multi_knapsack_exact`] — branch-and-bound
+//!   exact solvers used as test oracles and for the ablation bench
+//!   (`bench_solver_overhead`): they certify how far the paper's greedy
+//!   heuristics sit from optimal on real workload instances.
+//!
+//! All capacities/weights are [`Micros`] — integer µs — so DP/B&B are
+//! exact.
+
+mod exact;
+mod greedy;
+mod recursive;
+
+pub use exact::{knapsack_exact, multi_knapsack_exact};
+pub use greedy::{multi_knapsack_greedy, naive_knapsack, MultiKnapsackResult};
+pub use recursive::recursive_knapsack;
+
+use crate::util::Micros;
+
+/// An item offered to a knapsack: one bucket's pending communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Item {
+    /// Caller-side identifier (bucket id); opaque to the solver.
+    pub id: usize,
+    /// Communication time on the *reference* (NCCL) link. Heterogeneous
+    /// solvers rescale per link via the link's slowdown factor.
+    pub comm: Micros,
+}
+
+impl Item {
+    pub fn new(id: usize, comm: Micros) -> Item {
+        Item { id, comm }
+    }
+}
+
+/// Result of a single-knapsack solve: chosen item ids (in packing order)
+/// and the total packed communication time.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PackResult {
+    pub chosen: Vec<usize>,
+    pub total: Micros,
+}
+
+impl PackResult {
+    pub fn is_empty(&self) -> bool {
+        self.chosen.is_empty()
+    }
+}
+
+/// Sum of communication times of a set of items.
+pub fn total_comm(items: &[Item]) -> Micros {
+    items.iter().map(|i| i.comm).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_total() {
+        let items = vec![Item::new(0, Micros(5)), Item::new(1, Micros(7))];
+        assert_eq!(total_comm(&items), Micros(12));
+    }
+}

@@ -1,0 +1,165 @@
+//! Paper **Algorithm 1** — `RecursiveKnapsack`.
+//!
+//! During the backward stage, bucket gradients become ready progressively
+//! (bucket N first, bucket 1 last). Packing at bucket N's ready point sees
+//! all later buckets as *future* items but the full remaining backward
+//! time as capacity; deferring the decision to bucket N-1's ready point
+//! shrinks the capacity by bucket N-1's backward computation time but can
+//! yield a better packing of the still-unready tail. Algorithm 1 explores
+//! exactly this trade-off: compare the greedy packing of the current
+//! suffix against the best packing of the next suffix with reduced
+//! capacity, recursively.
+
+use super::{greedy::naive_knapsack, Item, PackResult};
+use crate::util::Micros;
+
+/// Recursive two-way choice of paper Algorithm 1.
+///
+/// * `items` — pending bucket communications in **readiness order**
+///   (`items[0]` is ready first; for a backward stage this is
+///   `{C_N, C_{N-1}, …}`).
+/// * `release` — `release[i]` is the computation time that elapses between
+///   `items[i-1]`'s ready point and `items[i]`'s ready point (for the
+///   backward stage, bucket `i`'s backward time). `release[0]` is unused
+///   by the recursion (capacity is already measured from `items[0]`'s
+///   ready point).
+/// * `capacity` — overlap capacity measured from `items[0]`'s ready point.
+///
+/// Returns the better of: greedily packing the whole suffix now, or
+/// dropping the head item (deferring it to a later stage / iteration — in
+/// DeFT it lands in the task queues) and recursing with the capacity that
+/// remains once the next bucket is ready.
+pub fn recursive_knapsack(items: &[Item], release: &[Micros], capacity: Micros) -> PackResult {
+    assert_eq!(
+        items.len(),
+        release.len(),
+        "items and release times must align"
+    );
+    if items.is_empty() {
+        return PackResult::default();
+    }
+    // order1: pack everything visible now into the current capacity.
+    let order1 = naive_knapsack(items, capacity);
+    // order2: defer the head item; the next bucket's backward computation
+    // elapses, shrinking the capacity.
+    let order2 = if items.len() > 1 {
+        let reduced = capacity.saturating_sub(release[1]);
+        recursive_knapsack(&items[1..], &release[1..], reduced)
+    } else {
+        PackResult::default()
+    };
+    if order1.total >= order2.total {
+        order1
+    } else {
+        order2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::total_comm;
+    use crate::util::prop::check;
+
+    fn mk(comms: &[u64]) -> Vec<Item> {
+        comms
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Item::new(i, Micros(c)))
+            .collect()
+    }
+
+    fn rel(times: &[u64]) -> Vec<Micros> {
+        times.iter().map(|&t| Micros(t)).collect()
+    }
+
+    #[test]
+    fn empty_returns_empty() {
+        let r = recursive_knapsack(&[], &[], Micros(100));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn single_item_fits_or_not() {
+        let its = mk(&[10]);
+        let r = recursive_knapsack(&its, &rel(&[5]), Micros(10));
+        assert_eq!(r.total, Micros(10));
+        let r = recursive_knapsack(&its, &rel(&[5]), Micros(9));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn defer_wins_when_tail_packs_better() {
+        // Head item is huge and blocks the sack; deferring to the tail
+        // (capacity - release) packs more total communication.
+        // capacity 120; items [90, 60, 45]; release [_, 5, 5].
+        // order1: greedy packs 90 only (remaining 30 fits nothing) => 90.
+        // defer: capacity 115, items [60, 45] => packs both = 105. Wins.
+        let its = mk(&[90, 60, 45]);
+        let r = recursive_knapsack(&its, &rel(&[0, 5, 5]), Micros(120));
+        assert_eq!(r.total, Micros(105));
+        assert!(!r.chosen.contains(&0));
+    }
+
+    #[test]
+    fn keep_wins_when_release_cost_high() {
+        // Deferring loses so much capacity the tail can't compete.
+        let its = mk(&[50, 60]);
+        // order1: packs 60 + 50 = 110 if capacity 110.
+        let r = recursive_knapsack(&its, &rel(&[0, 100]), Micros(110));
+        assert_eq!(r.total, Micros(110));
+    }
+
+    #[test]
+    fn matches_paper_structure_on_backward_list() {
+        // Backward readiness order {C_6..C_1} for VGG-like imbalance:
+        // deferring should never *reduce* the packed total below the plain
+        // greedy answer.
+        let its = mk(&[8651, 31754, 178643, 15447, 11262, 1968]);
+        let release = rel(&[162, 484, 2319, 4872, 12786, 72496]);
+        let cap = Micros(93119);
+        let r = recursive_knapsack(&its, &release, cap);
+        let greedy = naive_knapsack(&its, cap);
+        assert!(r.total >= greedy.total);
+        assert!(r.total <= cap);
+    }
+
+    #[test]
+    fn prop_never_worse_than_naive_and_within_capacity() {
+        check("recursive >= naive, within capacity", 300, |g| {
+            let comms = g.vec_u64(0..=12, 0..=400);
+            let its = mk(&comms);
+            let release: Vec<Micros> = comms
+                .iter()
+                .map(|&c| Micros(c / 3)) // arbitrary but deterministic
+                .collect();
+            let cap = Micros(g.u64_in(0..=1_500));
+            let r = recursive_knapsack(&its, &release, cap);
+            if r.total > cap {
+                return Err(format!("over capacity: {:?} > {cap:?}", r.total));
+            }
+            let naive = naive_knapsack(&its, cap);
+            if r.total < naive.total {
+                return Err(format!(
+                    "recursive {:?} worse than naive {:?}",
+                    r.total, naive.total
+                ));
+            }
+            // chosen ids must be valid and unique
+            let mut seen = std::collections::HashSet::new();
+            for &id in &r.chosen {
+                if id >= its.len() || !seen.insert(id) {
+                    return Err(format!("bad id {id}"));
+                }
+            }
+            let sum: Micros = r.chosen.iter().map(|&id| its[id].comm).sum();
+            if sum != r.total {
+                return Err("sum mismatch".into());
+            }
+            if r.total > total_comm(&its) {
+                return Err("packed more than exists".into());
+            }
+            Ok(())
+        });
+    }
+}

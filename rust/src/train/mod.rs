@@ -1,0 +1,15 @@
+//! Real data-parallel training driver (the end-to-end path).
+//!
+//! `examples/train_e2e.rs` uses this to train the small transformer with
+//! *real* gradients through the PJRT runtime while the communication
+//! timing is charged by the link model — one run produces both a loss
+//! curve and scheduling metrics. DeFT's delayed-update semantics (the
+//! current/future queue algebra of §III.B) are applied to the actual
+//! gradient buffers: delayed buckets accumulate locally and parameter
+//! updates fire exactly when the schedule says they do.
+
+mod data;
+mod trainer;
+
+pub use data::{CorpusGen, DataOptions};
+pub use trainer::{TrainOptions, TrainReport, Trainer};

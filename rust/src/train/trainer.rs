@@ -1,0 +1,372 @@
+//! The data-parallel trainer: real gradients, schedule-driven updates.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::data::{CorpusGen, DataOptions};
+use crate::config::Scheme;
+use crate::links::ClusterEnv;
+use crate::models::BucketProfile;
+use crate::runtime::{ArtifactManifest, Engine, Executable};
+use crate::runtime::engine::HostTensor;
+use crate::sched::Schedule;
+use crate::sim::{simulate, SimOptions};
+use crate::util::Micros;
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// Path to `artifacts/manifest.toml`.
+    pub manifest: String,
+    pub scheme: Scheme,
+    /// Simulated data-parallel workers (each computes real gradients on
+    /// its own shard).
+    pub workers: usize,
+    pub iterations: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// Record loss every `log_every` iterations.
+    pub log_every: usize,
+    /// Cluster environment for the co-simulated wire time.
+    pub env: ClusterEnv,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            manifest: "artifacts/manifest.toml".into(),
+            scheme: Scheme::Deft,
+            workers: 4,
+            iterations: 100,
+            lr: 0.2,
+            momentum: 0.9,
+            seed: 23,
+            log_every: 5,
+            env: ClusterEnv::paper_testbed().with_workers(4),
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub scheme: String,
+    /// (iteration, mean loss across workers) samples.
+    pub losses: Vec<(usize, f64)>,
+    /// Number of parameter updates applied.
+    pub updates: usize,
+    /// Mean measured wall time of one train_step execution.
+    pub measured_step: Micros,
+    /// Co-simulated steady-state iteration time under the schedule.
+    pub sim_iter_time: Micros,
+    pub final_loss: f64,
+    pub uniform_loss: f64,
+}
+
+/// The trainer.
+pub struct Trainer {
+    opts: TrainOptions,
+    train_step: Executable,
+    apply_update: Executable,
+    /// Per-bucket parameter vectors (shared across workers — synchronous
+    /// DP keeps replicas identical; updates are delayed identically).
+    params: Vec<Vec<f32>>,
+    momenta: Vec<Vec<f32>>,
+    bucket_sizes: Vec<usize>,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    data: Vec<CorpusGen>,
+}
+
+impl Trainer {
+    /// Load artifacts and initial parameters.
+    pub fn new(opts: TrainOptions) -> Result<Trainer> {
+        let manifest = ArtifactManifest::load(Path::new(&opts.manifest))?;
+        let engine = Engine::cpu()?;
+        let train_spec = manifest.exe("train_step")?;
+        let update_spec = manifest.exe("apply_update")?;
+        let train_step = engine.load(train_spec)?;
+        let apply_update = engine.load(update_spec)?;
+
+        let n_buckets = manifest.meta_usize("n_buckets")?;
+        let vocab = manifest.meta_usize("vocab")?;
+        let seq = manifest.meta_usize("seq")?;
+        let batch = manifest.meta_usize("batch")?;
+
+        // Bucket sizes from the train_step signature: b0..b{K-1}, tokens.
+        if train_spec.inputs.len() != n_buckets + 1 {
+            bail!(
+                "train_step wants {} inputs, expected {} buckets + tokens",
+                train_spec.inputs.len(),
+                n_buckets
+            );
+        }
+        let bucket_sizes: Vec<usize> = train_spec.inputs[..n_buckets]
+            .iter()
+            .map(|t| t.elements())
+            .collect();
+
+        // Initial parameters from the binary init files.
+        let init_files = manifest
+            .meta
+            .get("init_files")
+            .context("manifest missing meta.init_files")?
+            .clone();
+        let mut params = Vec::with_capacity(n_buckets);
+        for (i, f) in init_files.split(';').filter(|s| !s.is_empty()).enumerate() {
+            let path = manifest.dir.join(f);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading init file {}", path.display()))?;
+            if bytes.len() != bucket_sizes[i] * 4 {
+                bail!(
+                    "init file {} has {} bytes, bucket {i} wants {}",
+                    path.display(),
+                    bytes.len(),
+                    bucket_sizes[i] * 4
+                );
+            }
+            let v: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(v);
+        }
+        if params.len() != n_buckets {
+            bail!("manifest lists {} init files, want {n_buckets}", params.len());
+        }
+        let momenta = bucket_sizes.iter().map(|&s| vec![0.0f32; s]).collect();
+
+        // One independent data stream per worker (disjoint shards via
+        // distinct seeds).
+        let data = (0..opts.workers)
+            .map(|w| {
+                CorpusGen::new(DataOptions {
+                    vocab,
+                    seq_len: seq,
+                    seed: opts.seed.wrapping_add(1 + w as u64),
+                    ..DataOptions::default()
+                })
+            })
+            .collect();
+
+        Ok(Trainer {
+            opts,
+            train_step,
+            apply_update,
+            params,
+            momenta,
+            bucket_sizes,
+            batch,
+            seq,
+            vocab,
+            data,
+        })
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.bucket_sizes.len()
+    }
+
+    /// One worker's real train step: loss + per-bucket gradients.
+    fn worker_step(&mut self, worker: usize) -> Result<(f64, Vec<Vec<f32>>)> {
+        let tokens = self.data[worker].sample_batch(self.batch);
+        debug_assert_eq!(tokens.len(), self.batch * (self.seq + 1));
+        let mut inputs: Vec<HostTensor> = self
+            .params
+            .iter()
+            .map(|p| HostTensor::F32(p.clone()))
+            .collect();
+        inputs.push(HostTensor::I32(tokens));
+        let outputs = self.train_step.run(&inputs)?;
+        let loss = outputs[0].as_f32()?[0] as f64;
+        let grads = outputs[1..]
+            .iter()
+            .map(|t| t.as_f32().map(|s| s.to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// Mean-allreduce gradients across workers (the real reduction the
+    /// link model charges wire time for).
+    fn allreduce(grads: &mut [Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+        let w = grads.len() as f32;
+        let n_buckets = grads[0].len();
+        let mut out = Vec::with_capacity(n_buckets);
+        for b in 0..n_buckets {
+            let mut acc = std::mem::take(&mut grads[0][b]);
+            for g in grads.iter().skip(1) {
+                for (a, x) in acc.iter_mut().zip(&g[b]) {
+                    *a += *x;
+                }
+            }
+            for a in acc.iter_mut() {
+                *a /= w;
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Apply a (possibly merged) update: `scale` divides the accumulated
+    /// gradient (1/k for a k-iteration merge).
+    fn update(&mut self, acc: &[Vec<f32>], scale: f32) -> Result<()> {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(self.n_buckets() * 3 + 2);
+        for p in &self.params {
+            inputs.push(HostTensor::F32(p.clone()));
+        }
+        for g in acc {
+            inputs.push(HostTensor::F32(g.clone()));
+        }
+        for m in &self.momenta {
+            inputs.push(HostTensor::F32(m.clone()));
+        }
+        inputs.push(HostTensor::F32(vec![self.opts.lr]));
+        inputs.push(HostTensor::F32(vec![scale]));
+        let out = self.apply_update.run(&inputs)?;
+        let k = self.n_buckets();
+        for (i, t) in out[..k].iter().enumerate() {
+            self.params[i] = t.as_f32()?.to_vec();
+        }
+        for (i, t) in out[k..2 * k].iter().enumerate() {
+            self.momenta[i] = t.as_f32()?.to_vec();
+        }
+        Ok(())
+    }
+
+    /// Run training under `schedule` (whose cycle defines update timing
+    /// and merge factors) and co-simulate the wall clock with `profiles`.
+    pub fn run(
+        &mut self,
+        schedule: &Schedule,
+        profiles: &[BucketProfile],
+    ) -> Result<TrainReport> {
+        schedule.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let cycle = schedule.cycle.len();
+        let mut losses = Vec::new();
+        let mut updates = 0usize;
+        let mut acc: Vec<Vec<f32>> = self
+            .bucket_sizes
+            .iter()
+            .map(|&s| vec![0.0f32; s])
+            .collect();
+        let mut acc_iters = 0usize;
+        let mut step_times = Vec::new();
+
+        for it in 0..self.opts.iterations {
+            // Real compute: every worker steps on its own shard.
+            let t0 = Instant::now();
+            let mut worker_grads = Vec::with_capacity(self.opts.workers);
+            let mut mean_loss = 0.0;
+            for w in 0..self.opts.workers {
+                let (loss, grads) = self.worker_step(w)?;
+                mean_loss += loss;
+                worker_grads.push(grads);
+            }
+            mean_loss /= self.opts.workers as f64;
+            step_times.push(t0.elapsed().as_secs_f64());
+
+            // The "communication": mean across workers, then accumulate
+            // into the pending-update buffer (DeFT's local accumulation).
+            let reduced = Self::allreduce(&mut worker_grads);
+            for (a, g) in acc.iter_mut().zip(&reduced) {
+                for (x, y) in a.iter_mut().zip(g) {
+                    *x += *y;
+                }
+            }
+            acc_iters += 1;
+
+            // Update when the schedule says so.
+            if schedule.cycle[it % cycle].update_at_end {
+                let scale = 1.0 / acc_iters as f32;
+                let acc_snapshot = acc.clone();
+                self.update(&acc_snapshot, scale)?;
+                for a in acc.iter_mut() {
+                    a.iter_mut().for_each(|x| *x = 0.0);
+                }
+                acc_iters = 0;
+                updates += 1;
+            }
+
+            if it % self.opts.log_every == 0 || it + 1 == self.opts.iterations {
+                losses.push((it, mean_loss));
+            }
+        }
+
+        // Co-simulate the wall clock for the schedule over the measured
+        // profiles.
+        let sim = simulate(
+            profiles,
+            schedule,
+            &self.opts.env,
+            &SimOptions {
+                iterations: (cycle * 6).max(24),
+                warmup: cycle.max(4),
+                record_timeline: false,
+            },
+        );
+
+        let measured_step = Micros::from_us_f64(
+            crate::util::stats::median(&step_times) * 1e6 / self.opts.workers.max(1) as f64,
+        );
+        let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f64::INFINITY);
+        Ok(TrainReport {
+            scheme: schedule.scheme.clone(),
+            losses,
+            updates,
+            measured_step,
+            sim_iter_time: sim.steady_iter_time,
+            final_loss,
+            uniform_loss: (self.vocab as f64).ln(),
+        })
+    }
+
+    /// Measure real per-step compute and derive bucket profiles for the
+    /// co-simulation: the measured step time is split across buckets
+    /// proportionally to parameter counts (fwd:bwd = 1:2), and the wire
+    /// rate is chosen so the workload's coverage rate equals `cr_target`
+    /// — emulating the paper's bandwidth-constrained testbed, where a
+    /// model this small would otherwise have CR ≈ 0 on loopback.
+    pub fn profile_buckets_with_cr(
+        &mut self,
+        probe_steps: usize,
+        cr_target: f64,
+    ) -> Result<Vec<BucketProfile>> {
+        let mut times = Vec::with_capacity(probe_steps.max(1));
+        for _ in 0..probe_steps.max(1) {
+            let t0 = Instant::now();
+            let _ = self.worker_step(0)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let step = crate::util::stats::median(&times); // fwd+bwd seconds
+        let total_params: usize = self.bucket_sizes.iter().sum();
+        // µs per parameter such that total comm = cr_target × compute.
+        let rate = cr_target * step * 1e6 / total_params as f64;
+        Ok(self
+            .bucket_sizes
+            .iter()
+            .enumerate()
+            .map(|(id, &sz)| {
+                let frac = sz as f64 / total_params as f64;
+                let fwd = Micros::from_us_f64(step * 1e6 / 3.0 * frac);
+                let bwd = Micros::from_us_f64(step * 1e6 * 2.0 / 3.0 * frac);
+                let comm = Micros::from_us_f64(sz as f64 * rate);
+                BucketProfile {
+                    id,
+                    params: sz as u64,
+                    fwd,
+                    bwd,
+                    comm,
+                }
+            })
+            .collect())
+    }
+
+    /// Default profiling at the paper-like CR of 1.5.
+    pub fn profile_buckets(&mut self, probe_steps: usize) -> Result<Vec<BucketProfile>> {
+        self.profile_buckets_with_cr(probe_steps, 1.5)
+    }
+}

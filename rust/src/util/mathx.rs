@@ -1,0 +1,151 @@
+//! Scalar special functions not in `std`.
+//!
+//! The Preserver's Gaussian-walk quantifier (paper §IV.C) needs the
+//! standard-normal CDF Φ, which needs `erf`. We use the Abramowitz–Stegun
+//! 7.1.26 rational approximation (|error| < 1.5e-7) — four orders of
+//! magnitude below the ε = 0.01 threshold the feedback mechanism uses.
+
+/// Error function, |absolute error| < 1.5e-7 (Abramowitz & Stegun 7.1.26).
+pub fn erf(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * ax);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    1.0 - erf(x)
+}
+
+/// Standard normal CDF Φ(x) = P(Z ≤ x), Z ~ N(0,1).
+pub fn phi(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Standard normal PDF.
+pub fn normal_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Natural log of the gamma function (Lanczos, g=7, n=9) — used by the
+/// synthetic-workload generators for Zipf/Gamma-distributed layer costs.
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain");
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values from standard tables.
+    #[test]
+    fn erf_reference_points() {
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.520_499_877_8),
+            (1.0, 0.842_700_792_9),
+            (1.5, 0.966_105_146_5),
+            (2.0, 0.995_322_265_0),
+            (3.0, 0.999_977_909_5),
+        ];
+        for (x, want) in cases {
+            let got = erf(x);
+            assert!(
+                (got - want).abs() < 2e-7,
+                "erf({x}) = {got}, want {want}"
+            );
+            assert!((erf(-x) + want).abs() < 2e-7, "odd symmetry at {x}");
+        }
+    }
+
+    #[test]
+    fn phi_reference_points() {
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.841_344_746_1),
+            (-1.0, 0.158_655_253_9),
+            (1.96, 0.975_002_104_9),
+            (-2.575_829, 0.005_000_0),
+        ];
+        for (x, want) in cases {
+            let got = phi(x);
+            assert!((got - want).abs() < 1e-5, "phi({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn phi_monotone_and_bounded() {
+        let mut prev = 0.0;
+        let mut x = -6.0;
+        while x <= 6.0 {
+            let p = phi(x);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p >= prev - 1e-12, "phi not monotone at {x}");
+            prev = p;
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn ln_gamma_factorials() {
+        // Γ(n) = (n-1)!
+        let facts: [f64; 7] = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, want) in facts.iter().enumerate() {
+            let got = ln_gamma(n as f64 + 1.0);
+            assert!(
+                (got - want.ln()).abs() < 1e-10,
+                "ln_gamma({}) = {got}, want {}",
+                n + 1,
+                want.ln()
+            );
+        }
+        // Γ(1/2) = sqrt(pi)
+        let half = ln_gamma(0.5);
+        assert!((half - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pdf_integrates_to_cdf() {
+        // Trapezoid integral of the pdf matches phi differences.
+        let a = -1.3_f64;
+        let b = 0.7_f64;
+        let n = 10_000;
+        let h = (b - a) / n as f64;
+        let mut integral = 0.5 * (normal_pdf(a) + normal_pdf(b));
+        for i in 1..n {
+            integral += normal_pdf(a + i as f64 * h);
+        }
+        integral *= h;
+        assert!((integral - (phi(b) - phi(a))).abs() < 1e-6);
+    }
+}

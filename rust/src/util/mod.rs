@@ -1,0 +1,24 @@
+//! Small self-contained utilities shared by every layer of the crate.
+//!
+//! Nothing here depends on the rest of the crate. Because this build is
+//! fully offline (no `rand`, no `proptest`, no `serde`), this module owns
+//! the substrates those crates would normally provide:
+//!
+//! * [`time`] — fixed-point microsecond arithmetic ([`time::Micros`]); all
+//!   scheduling and simulation math uses integer microseconds so that
+//!   discrete-event ordering is exactly deterministic.
+//! * [`rng`] — splitmix64 / xoshiro256++ deterministic PRNGs.
+//! * [`stats`] — mean/median/percentile/stddev helpers for benches.
+//! * [`prop`] — a miniature property-based-testing harness (seeded cases,
+//!   integer/vec generators, shrinking) used by the test suite.
+//! * [`mathx`] — erf/Φ (normal CDF) needed by the Preserver's
+//!   Gaussian-walk quantifier.
+
+pub mod time;
+pub mod rng;
+pub mod stats;
+pub mod prop;
+pub mod mathx;
+
+pub use rng::Rng;
+pub use time::Micros;

@@ -1,0 +1,255 @@
+//! Miniature property-based testing harness.
+//!
+//! The offline build has no `proptest`, so the test suite uses this: a
+//! seeded case runner with simple generators and greedy shrinking for the
+//! two shapes our invariants need (integer vectors and "workload-like"
+//! structured cases built from them).
+//!
+//! Usage (no_run: doctest binaries miss the xla rpath in this image):
+//! ```no_run
+//! use deft::util::prop::{check, Gen};
+//! check("sum is order independent", 200, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0..=20, 0..=1_000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     let a: u64 = xs.iter().sum();
+//!     let b: u64 = ys.iter().sum();
+//!     if a != b { return Err(format!("{a} != {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// A generation context handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated vectors, kept so the harness can shrink them.
+    trace: Vec<Vec<u64>>,
+    /// When replaying a shrunk case, pre-recorded values to return.
+    replay: Option<Vec<Vec<u64>>>,
+    replay_idx: usize,
+}
+
+impl Gen {
+    /// Public constructor for reproducing specific property cases outside
+    /// the harness (debugging helpers, examples).
+    pub fn new_pub(seed: u64) -> Gen {
+        Gen::new(seed)
+    }
+
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            trace: Vec::new(),
+            replay: None,
+            replay_idx: 0,
+        }
+    }
+
+    fn replaying(values: Vec<Vec<u64>>) -> Gen {
+        Gen {
+            rng: Rng::new(0),
+            trace: Vec::new(),
+            replay: Some(values),
+            replay_idx: 0,
+        }
+    }
+
+    /// A random u64 in the inclusive range.
+    pub fn u64_in(&mut self, range: RangeInclusive<u64>) -> u64 {
+        let v = self.vec_u64(1..=1, range);
+        v[0]
+    }
+
+    /// A random usize in the inclusive range.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        self.u64_in(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    /// A random f64 in `[lo, hi)` — derived from a u64 draw so it shrinks.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let raw = self.u64_in(0..=1_000_000);
+        lo + (hi - lo) * (raw as f64 / 1_000_000.0)
+    }
+
+    /// A vector of u64s with random length in `len` and values in `vals`.
+    ///
+    /// This is the primitive every other generator is built from; the
+    /// harness records it for shrinking (shorter vectors / smaller values).
+    pub fn vec_u64(
+        &mut self,
+        len: RangeInclusive<usize>,
+        vals: RangeInclusive<u64>,
+    ) -> Vec<u64> {
+        if let Some(replay) = &self.replay {
+            let v = replay
+                .get(self.replay_idx)
+                .cloned()
+                .unwrap_or_else(|| vec![*vals.start()]);
+            self.replay_idx += 1;
+            // Clamp replayed values into the requested range so shrinking
+            // cannot push a value outside the property's domain.
+            let v: Vec<u64> = v
+                .into_iter()
+                .map(|x| x.clamp(*vals.start(), *vals.end()))
+                .collect();
+            let lo = *len.start();
+            let mut v = v;
+            while v.len() < lo {
+                v.push(*vals.start());
+            }
+            self.trace.push(v.clone());
+            return v;
+        }
+        let n = self.rng.range(*len.start(), *len.end());
+        let v: Vec<u64> = (0..n)
+            .map(|_| self.rng.range_u64(*vals.start(), *vals.end()))
+            .collect();
+        self.trace.push(v.clone());
+        v
+    }
+}
+
+/// Outcome of a single case: `Ok(())` or a failure description.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `property`; on failure, greedily shrink the
+/// generated vectors (drop elements, then halve values) and panic with the
+/// smallest failing case found.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    // Fixed base seed => reproducible CI; vary per case index.
+    for case in 0..cases {
+        let seed = 0xDEF7_0000_0000_0000 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = property(&mut gen) {
+            let trace = gen.trace.clone();
+            let (small, small_msg) = shrink(&mut property, trace, msg);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {small_msg}\n  minimal input: {small:?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: try removing each element of each vector, then halving
+/// each value, re-running the property; keep any transformation that still
+/// fails. Bounded to avoid quadratic blowups on big cases.
+fn shrink<F>(
+    property: &mut F,
+    mut failing: Vec<Vec<u64>>,
+    mut msg: String,
+) -> (Vec<Vec<u64>>, String)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let mut improved = true;
+    let mut budget = 2_000usize;
+    while improved && budget > 0 {
+        improved = false;
+        // Phase 1: try dropping single elements.
+        'outer: for vi in 0..failing.len() {
+            for ei in 0..failing[vi].len() {
+                budget = budget.saturating_sub(1);
+                if budget == 0 {
+                    break 'outer;
+                }
+                let mut cand = failing.clone();
+                cand[vi].remove(ei);
+                let mut g = Gen::replaying(cand.clone());
+                if let Err(m) = property(&mut g) {
+                    failing = g.trace;
+                    msg = m;
+                    improved = true;
+                    break 'outer;
+                }
+            }
+        }
+        if improved {
+            continue;
+        }
+        // Phase 2: try halving values.
+        'outer2: for vi in 0..failing.len() {
+            for ei in 0..failing[vi].len() {
+                budget = budget.saturating_sub(1);
+                if budget == 0 {
+                    break 'outer2;
+                }
+                if failing[vi][ei] == 0 {
+                    continue;
+                }
+                let mut cand = failing.clone();
+                cand[vi][ei] /= 2;
+                let mut g = Gen::replaying(cand.clone());
+                if let Err(m) = property(&mut g) {
+                    failing = g.trace;
+                    msg = m;
+                    improved = true;
+                    break 'outer2;
+                }
+            }
+        }
+    }
+    (failing, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("tautology", 50, |g| {
+            let _ = g.vec_u64(0..=5, 0..=10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Property: no vector contains a value >= 8. Failing input should
+        // shrink toward a single offending element.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("has big value", 100, |g| {
+                let xs = g.vec_u64(0..=10, 0..=20);
+                if xs.iter().any(|&x| x >= 8) {
+                    Err(format!("found big value in {xs:?}"))
+                } else {
+                    Ok(())
+                }
+            });
+        }));
+        let err = result.expect_err("property should fail");
+        let text = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(text.contains("minimal input"), "panic message: {text}");
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges respected", 100, |g| {
+            let n = g.usize_in(2..=6);
+            if !(2..=6).contains(&n) {
+                return Err(format!("usize {n} out of range"));
+            }
+            let f = g.f64_in(-1.0, 1.0);
+            if !(-1.0..1.0000001).contains(&f) {
+                return Err(format!("f64 {f} out of range"));
+            }
+            let v = g.vec_u64(3..=3, 5..=9);
+            if v.len() != 3 || v.iter().any(|&x| !(5..=9).contains(&x)) {
+                return Err(format!("vec {v:?} out of spec"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! Fixed-point time arithmetic for the scheduling / simulation path.
+//!
+//! All scheduler and simulator math uses integer **microseconds**. The
+//! paper reports bucket times in µs (Table II) and iteration times in ms;
+//! floating-point time would make discrete-event tie-breaking platform
+//! dependent, so floats only appear at the presentation layer.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// A non-negative duration or timestamp in microseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    pub const ZERO: Micros = Micros(0);
+    pub const MAX: Micros = Micros(u64::MAX);
+
+    /// Construct from milliseconds.
+    pub const fn from_ms(ms: u64) -> Micros {
+        Micros(ms * 1_000)
+    }
+
+    /// Construct from (possibly fractional) milliseconds.
+    pub fn from_ms_f64(ms: f64) -> Micros {
+        debug_assert!(ms >= 0.0, "negative duration");
+        Micros((ms * 1_000.0).round() as u64)
+    }
+
+    /// Construct from seconds.
+    pub const fn from_secs(s: u64) -> Micros {
+        Micros(s * 1_000_000)
+    }
+
+    /// Construct from (possibly fractional) microseconds.
+    pub fn from_us_f64(us: f64) -> Micros {
+        debug_assert!(us >= 0.0, "negative duration");
+        Micros(us.round() as u64)
+    }
+
+    pub fn as_us(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    /// Saturating subtraction — durations never go negative.
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Multiply by a non-negative float ratio (rounding to nearest µs).
+    pub fn scale(self, ratio: f64) -> Micros {
+        debug_assert!(ratio >= 0.0, "negative scale");
+        Micros((self.0 as f64 * ratio).round() as u64)
+    }
+
+    /// Ratio of two durations as f64 (`self / other`).
+    pub fn ratio(self, other: Micros) -> f64 {
+        assert!(other.0 != 0, "ratio by zero duration");
+        self.0 as f64 / other.0 as f64
+    }
+
+    pub fn max(self, other: Micros) -> Micros {
+        Micros(self.0.max(other.0))
+    }
+
+    pub fn min(self, other: Micros) -> Micros {
+        Micros(self.0.min(other.0))
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl Add for Micros {
+    type Output = Micros;
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0.checked_add(rhs.0).expect("Micros overflow"))
+    }
+}
+
+impl AddAssign for Micros {
+    fn add_assign(&mut self, rhs: Micros) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for Micros {
+    type Output = Micros;
+    fn sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.checked_sub(rhs.0).expect("Micros underflow"))
+    }
+}
+
+impl SubAssign for Micros {
+    fn sub_assign(&mut self, rhs: Micros) {
+        *self = *self - rhs;
+    }
+}
+
+impl Mul<u64> for Micros {
+    type Output = Micros;
+    fn mul(self, rhs: u64) -> Micros {
+        Micros(self.0.checked_mul(rhs).expect("Micros overflow"))
+    }
+}
+
+impl Div<u64> for Micros {
+    type Output = Micros;
+    fn div(self, rhs: u64) -> Micros {
+        Micros(self.0 / rhs)
+    }
+}
+
+impl Sum for Micros {
+    fn sum<I: Iterator<Item = Micros>>(iter: I) -> Micros {
+        iter.fold(Micros::ZERO, |a, b| a + b)
+    }
+}
+
+impl<'a> Sum<&'a Micros> for Micros {
+    fn sum<I: Iterator<Item = &'a Micros>>(iter: I) -> Micros {
+        iter.fold(Micros::ZERO, |a, b| a + *b)
+    }
+}
+
+impl fmt::Debug for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}us", self.0)
+    }
+}
+
+impl fmt::Display for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}ms", self.as_ms_f64())
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_roundtrips() {
+        assert_eq!(Micros::from_ms(3).as_us(), 3_000);
+        assert_eq!(Micros::from_secs(2).as_us(), 2_000_000);
+        assert_eq!(Micros::from_ms_f64(1.5).as_us(), 1_500);
+        assert_eq!(Micros::from_us_f64(12.4).as_us(), 12);
+        assert!((Micros(2_500).as_ms_f64() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Micros(100);
+        let b = Micros(40);
+        assert_eq!(a + b, Micros(140));
+        assert_eq!(a - b, Micros(60));
+        assert_eq!(a * 3, Micros(300));
+        assert_eq!(a / 4, Micros(25));
+        assert_eq!(b.saturating_sub(a), Micros::ZERO);
+        assert_eq!(a.max(b), a);
+        assert_eq!(a.min(b), b);
+    }
+
+    #[test]
+    fn scale_and_ratio() {
+        assert_eq!(Micros(100).scale(1.65), Micros(165));
+        assert_eq!(Micros(100).scale(0.0), Micros::ZERO);
+        assert!((Micros(150).ratio(Micros(100)) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = Micros(1) - Micros(2);
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let v = vec![Micros(1), Micros(2), Micros(3)];
+        let s: Micros = v.iter().sum();
+        assert_eq!(s, Micros(6));
+        let s2: Micros = v.into_iter().sum();
+        assert_eq!(s2, Micros(6));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Micros(12)), "12us");
+        assert_eq!(format!("{}", Micros(12_500)), "12.500ms");
+        assert_eq!(format!("{}", Micros(2_000_000)), "2.000s");
+    }
+}

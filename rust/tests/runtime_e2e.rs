@@ -1,0 +1,192 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they self-skip (with a loud
+//! message) when `artifacts/manifest.toml` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::Path;
+
+use deft::runtime::{ArtifactManifest, Engine, HostTensor};
+
+fn manifest() -> Option<ArtifactManifest> {
+    let path = Path::new("artifacts/manifest.toml");
+    if !path.exists() {
+        eprintln!("SKIP: artifacts/manifest.toml missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactManifest::load(path).expect("manifest parses"))
+}
+
+fn read_init(m: &ArtifactManifest) -> Vec<Vec<f32>> {
+    m.meta["init_files"]
+        .split(';')
+        .map(|f| {
+            let bytes = std::fs::read(m.dir.join(f)).expect("init file");
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        })
+        .collect()
+}
+
+fn tokens(m: &ArtifactManifest, seed: u64) -> Vec<i32> {
+    let batch = m.meta_usize("batch").unwrap();
+    let seq = m.meta_usize("seq").unwrap();
+    let vocab = m.meta_usize("vocab").unwrap() as u64;
+    let mut rng = deft::util::Rng::new(seed);
+    (0..batch * (seq + 1))
+        .map(|_| rng.below(vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn train_step_runs_and_loss_is_near_uniform() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(m.exe("train_step").unwrap()).unwrap();
+    let init = read_init(&m);
+    let mut inputs: Vec<HostTensor> = init.iter().cloned().map(HostTensor::F32).collect();
+    inputs.push(HostTensor::I32(tokens(&m, 1)));
+    let out = exe.run(&inputs).unwrap();
+    let loss = out[0].as_f32().unwrap()[0];
+    let vocab = m.meta_usize("vocab").unwrap() as f32;
+    let uniform = vocab.ln();
+    assert!(
+        loss > 0.5 * uniform && loss < 1.5 * uniform,
+        "init loss {loss} vs ln(V) {uniform}"
+    );
+    // Gradients must be non-trivial for every bucket.
+    for (i, g) in out[1..].iter().enumerate() {
+        let g = g.as_f32().unwrap();
+        let max = g.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        assert!(max > 0.0, "bucket {i} gradient is all-zero");
+        assert!(max.is_finite(), "bucket {i} gradient not finite");
+    }
+}
+
+#[test]
+fn update_then_step_reduces_loss() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let step = engine.load(m.exe("train_step").unwrap()).unwrap();
+    let update = engine.load(m.exe("apply_update").unwrap()).unwrap();
+    let k = m.meta_usize("n_buckets").unwrap();
+    let mut params = read_init(&m);
+    let mut momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let toks = tokens(&m, 2);
+
+    let run_step = |params: &[Vec<f32>], toks: &[i32]| {
+        let mut inputs: Vec<HostTensor> =
+            params.iter().cloned().map(HostTensor::F32).collect();
+        inputs.push(HostTensor::I32(toks.to_vec()));
+        step.run(&inputs).unwrap()
+    };
+
+    let out0 = run_step(&params, &toks);
+    let loss0 = out0[0].as_f32().unwrap()[0];
+
+    // Three SGD steps on the same batch must reduce the loss.
+    let mut loss_prev = loss0;
+    for _ in 0..3 {
+        let out = run_step(&params, &toks);
+        let grads: Vec<Vec<f32>> = out[1..]
+            .iter()
+            .map(|t| t.as_f32().unwrap().to_vec())
+            .collect();
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        for p in &params {
+            inputs.push(HostTensor::F32(p.clone()));
+        }
+        for g in &grads {
+            inputs.push(HostTensor::F32(g.clone()));
+        }
+        for mo in &momenta {
+            inputs.push(HostTensor::F32(mo.clone()));
+        }
+        inputs.push(HostTensor::F32(vec![0.3]));
+        inputs.push(HostTensor::F32(vec![1.0]));
+        let out = update.run(&inputs).unwrap();
+        for i in 0..k {
+            params[i] = out[i].as_f32().unwrap().to_vec();
+            momenta[i] = out[k + i].as_f32().unwrap().to_vec();
+        }
+        let loss = run_step(&params, &toks)[0].as_f32().unwrap()[0];
+        assert!(loss.is_finite());
+        loss_prev = loss;
+    }
+    assert!(
+        loss_prev < loss0 * 0.98,
+        "loss did not drop: {loss0} -> {loss_prev}"
+    );
+}
+
+#[test]
+fn grad_reduce_matches_rust_mean() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let reduce = engine.load(m.exe("grad_reduce").unwrap()).unwrap();
+    let workers = m.meta_usize("workers").unwrap();
+    let spec = &reduce.spec.inputs;
+    let mut rng = deft::util::Rng::new(3);
+    let stacked: Vec<Vec<f32>> = spec
+        .iter()
+        .map(|s| {
+            (0..s.elements())
+                .map(|_| (rng.f64() as f32) - 0.5)
+                .collect()
+        })
+        .collect();
+    let inputs: Vec<HostTensor> = stacked.iter().cloned().map(HostTensor::F32).collect();
+    let out = reduce.run(&inputs).unwrap();
+    for (slab, o) in stacked.iter().zip(out.iter()) {
+        let o = o.as_f32().unwrap();
+        let n = o.len();
+        for j in 0..n {
+            let mut mean = 0.0f64;
+            for w in 0..workers {
+                mean += slab[w * n + j] as f64;
+            }
+            mean /= workers as f64;
+            assert!(
+                (o[j] as f64 - mean).abs() < 1e-5,
+                "element {j}: {} vs {mean}",
+                o[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn trainer_end_to_end_short_run() {
+    let Some(_m) = manifest() else { return };
+    use deft::config::Scheme;
+    use deft::links::ClusterEnv;
+    use deft::train::{TrainOptions, Trainer};
+
+    let opts = TrainOptions {
+        manifest: "artifacts/manifest.toml".into(),
+        scheme: Scheme::Deft,
+        workers: 2,
+        iterations: 8,
+        lr: 0.2,
+        momentum: 0.9,
+        seed: 5,
+        log_every: 2,
+        env: ClusterEnv::paper_testbed().with_workers(2),
+    };
+    let mut trainer = Trainer::new(opts).unwrap();
+    let profiles = trainer.profile_buckets(1).unwrap();
+    assert_eq!(profiles.len(), trainer.n_buckets());
+    let scheduler = deft::bench::scheduler_for(Scheme::Deft, false);
+    let schedule = scheduler.schedule(&profiles);
+    let report = trainer.run(&schedule, &profiles).unwrap();
+    assert!(report.updates > 0, "no updates fired");
+    let first = report.losses.first().unwrap().1;
+    let last = report.final_loss;
+    assert!(last.is_finite() && first.is_finite());
+    assert!(
+        last < first,
+        "8 iterations should reduce loss: {first} -> {last}"
+    );
+}

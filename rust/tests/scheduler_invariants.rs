@@ -1,0 +1,190 @@
+//! Property tests over the schedule contract — the invariants every
+//! scheme must satisfy regardless of the bucket profile it is given.
+//!
+//! Uses the crate's own miniature property harness (`deft::util::prop`);
+//! the offline build has no proptest.
+
+use deft::links::ClusterEnv;
+use deft::models::BucketProfile;
+use deft::sched::{
+    Bytescheduler, Deft, DeftOptions, Schedule, Scheduler, Stage, UsByte, Wfbp,
+};
+use deft::sim::{simulate, SimOptions};
+use deft::util::prop::{check, Gen};
+use deft::util::Micros;
+
+/// Generate a random but plausible bucket profile set.
+fn gen_buckets(g: &mut Gen) -> Vec<BucketProfile> {
+    let n = g.usize_in(1..=10);
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n {
+        let fwd = g.u64_in(50..=30_000);
+        let bwd = g.u64_in(100..=80_000);
+        let comm = g.u64_in(100..=150_000);
+        out.push(BucketProfile {
+            id,
+            params: comm * 500, // plausible param/comm proportionality
+            fwd: Micros(fwd),
+            bwd: Micros(bwd),
+            comm: Micros(comm),
+        });
+    }
+    out
+}
+
+fn schedulers() -> Vec<(&'static str, Box<dyn Scheduler>)> {
+    vec![
+        ("wfbp", Box::new(Wfbp)),
+        ("bytescheduler", Box::new(Bytescheduler)),
+        ("us-byte", Box::new(UsByte)),
+        (
+            "deft",
+            Box::new(Deft::new(DeftOptions {
+                preserver: false,
+                ..DeftOptions::default()
+            })),
+        ),
+        ("deft-nolink", Box::new(Deft::without_multilink())),
+    ]
+}
+
+/// Invariant 1: schedules validate and conserve gradient volume — over
+/// one cycle, each bucket's shipped `merged` counts sum to exactly the
+/// cycle length (every iteration's gradient leaves exactly once).
+#[test]
+fn prop_volume_conservation() {
+    check("gradient volume conservation", 120, |g| {
+        let buckets = gen_buckets(g);
+        for (name, s) in schedulers() {
+            let schedule = s.schedule(&buckets);
+            schedule.validate().map_err(|e| format!("{name}: {e}"))?;
+            for b in 0..buckets.len() {
+                let shipped: usize = schedule
+                    .cycle
+                    .iter()
+                    .flat_map(|p| p.all_ops())
+                    .filter(|op| op.bucket == b)
+                    .map(|op| op.merged)
+                    .sum();
+                if shipped != schedule.cycle.len() {
+                    return Err(format!(
+                        "{name}: bucket {b} ships {shipped} iters over {}-iter cycle",
+                        schedule.cycle.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 2: no op for the current iteration's gradient launches in
+/// the forward window (the data does not exist yet), and DeFT never
+/// ships bucket 0 with age 0 (the paper's hard dependency).
+#[test]
+fn prop_causality_of_launch_windows() {
+    check("launch-window causality", 120, |g| {
+        let buckets = gen_buckets(g);
+        for (name, s) in schedulers() {
+            let schedule = s.schedule(&buckets);
+            for plan in &schedule.cycle {
+                for op in plan.all_ops() {
+                    if op.grad_age == 0 && op.stage == Stage::Forward {
+                        return Err(format!("{name}: fresh grad in forward window"));
+                    }
+                    if name.starts_with("deft") && op.bucket == 0 && op.grad_age == 0 {
+                        return Err(format!("{name}: bucket 0 shipped un-delayed"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 3: the simulator executes every schedule to completion with
+/// a steady iteration time no smaller than the compute floor.
+#[test]
+fn prop_simulation_terminates_above_compute_floor() {
+    check("simulation floor", 60, |g| {
+        let buckets = gen_buckets(g);
+        let compute: Micros = buckets.iter().map(|b| b.fwd + b.bwd).sum();
+        let env = ClusterEnv::paper_testbed();
+        for (name, s) in schedulers() {
+            let schedule = s.schedule(&buckets);
+            let iters = (schedule.cycle.len() * 4).max(12);
+            let r = simulate(
+                &buckets,
+                &schedule,
+                &env,
+                &SimOptions {
+                    iterations: iters,
+                    warmup: schedule.cycle.len().max(2),
+                    record_timeline: false,
+                },
+            );
+            if r.steady_iter_time < compute {
+                return Err(format!(
+                    "{name}: iter {} below compute floor {compute}",
+                    r.steady_iter_time
+                ));
+            }
+            if r.update_times.is_empty() {
+                return Err(format!("{name}: no updates fired"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 4: DeFT's update pattern is consistent — Σ batch
+/// multipliers equals the cycle length, and the update frequency equals
+/// updates/cycle (validate() already enforces it; this checks through
+/// the public accessors on random inputs plus monotonicity vs the
+/// no-multilink ablation).
+#[test]
+fn prop_deft_update_accounting() {
+    check("deft update accounting", 80, |g| {
+        let buckets = gen_buckets(g);
+        let het = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        })
+        .schedule(&buckets);
+        let solo = Deft::without_multilink().schedule(&buckets);
+        let k_sum: u64 = het.batch_multipliers.iter().sum();
+        if k_sum != het.cycle.len() as u64 {
+            return Err(format!("Σk {k_sum} != cycle {}", het.cycle.len()));
+        }
+        if solo.update_frequency() > het.update_frequency() + 1e-9 {
+            return Err(format!(
+                "single-link updates more often: {} vs {}",
+                solo.update_frequency(),
+                het.update_frequency()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 5: baselines update exactly once per iteration (exact
+/// convergence consistency, Table III).
+#[test]
+fn prop_baselines_update_every_iteration() {
+    check("baseline update frequency", 100, |g| {
+        let buckets = gen_buckets(g);
+        for (name, s) in schedulers() {
+            if name.starts_with("deft") {
+                continue;
+            }
+            let schedule: Schedule = s.schedule(&buckets);
+            if (schedule.update_frequency() - 1.0).abs() > 1e-12 {
+                return Err(format!("{name}: freq {}", schedule.update_frequency()));
+            }
+            if schedule.batch_multipliers.iter().any(|&k| k != 1) {
+                return Err(format!("{name}: non-unit batch multiplier"));
+            }
+        }
+        Ok(())
+    });
+}
