@@ -1,22 +1,72 @@
 //! Schedule explorer: render the per-scheme bucket scheduling timelines
-//! of paper Figs. 11–13 for any workload, plus the profiler round-trip
-//! (raw operator trace → bucket reconstruction → schedule).
+//! of paper Figs. 11–13 for any workload and link topology, plus the
+//! profiler round-trip (raw operator trace → bucket reconstruction →
+//! schedule) and a per-link busy/bubble table.
 //!
-//! Run: `cargo run --release --example schedule_explorer -- [workload]`
-//! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19)
+//! Run: `cargo run --release --example schedule_explorer -- [workload] [--links <preset>]`
+//! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
+//!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link)
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::ClusterEnv;
-use deft::metrics::gantt_steady;
+use deft::links::{LinkId, LinkPreset};
+use deft::metrics::{gantt_steady, Table};
 use deft::models::BucketProfile;
 use deft::profiler::{generate_trace, reconstruct, TraceOptions};
 use deft::sched::feature_matrix;
+use deft::sim::{SimResult, StreamId};
+
+fn parse_args() -> (String, LinkPreset) {
+    let mut workload = "vgg19".to_string();
+    let mut preset = LinkPreset::Paper2Link;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let looked_up = if let Some(v) = a.strip_prefix("--links=") {
+            Some(v.to_string())
+        } else if a == "--links" {
+            Some(args.next().expect("--links needs a preset name"))
+        } else {
+            workload = a;
+            None
+        };
+        if let Some(name) = looked_up {
+            preset = LinkPreset::parse(&name).unwrap_or_else(|| {
+                panic!(
+                    "unknown links preset `{name}` (known: {})",
+                    LinkPreset::ALL
+                        .iter()
+                        .map(|p| p.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            });
+        }
+    }
+    (workload, preset)
+}
+
+/// Per-link busy/bubble table computed from the simulation timeline.
+fn link_table(sim: &SimResult) -> String {
+    let mut t = Table::new(&["link", "busy", "bubbles", "utilization"]);
+    for (k, name) in sim.link_names.iter().enumerate() {
+        let stream = StreamId::Link(LinkId(k));
+        let busy = sim.timeline.busy(stream);
+        let bubbles = sim.timeline.bubbles(stream);
+        let span = busy + bubbles;
+        let util = if span.is_zero() {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", busy.ratio(span) * 100.0)
+        };
+        t.row(&[name.clone(), format!("{busy}"), format!("{bubbles}"), util]);
+    }
+    t.render()
+}
 
 fn main() {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "vgg19".into());
+    let (name, preset) = parse_args();
     let workload = workload_by_name(&name);
-    let env = ClusterEnv::paper_testbed();
+    let env = preset.env();
 
     println!("=== Table III: scheme feature matrix ===\n{}", feature_matrix());
 
@@ -56,7 +106,12 @@ fn main() {
         .collect();
     let _ = buckets; // (the pipeline below re-partitions per scheme)
 
-    println!("\n=== Scheduling orders (paper Figs. 11-13) for {} ===", workload.name);
+    println!(
+        "\n=== Scheduling orders (paper Figs. 11-13) for {} on {} ({}) ===",
+        workload.name,
+        preset.name(),
+        env.link_names().join("+")
+    );
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
     for scheme in schemes {
@@ -69,5 +124,6 @@ fn main() {
             r.sim.bubble_ratio() * 100.0
         );
         println!("{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 110));
+        println!("{}", link_table(&r.sim));
     }
 }

@@ -20,8 +20,9 @@ use deft::config::Scheme;
 use deft::links::ClusterEnv;
 use deft::metrics::Table;
 use deft::train::{TrainOptions, Trainer};
+use deft::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let iterations: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(4);
 
     if !std::path::Path::new("artifacts/manifest.toml").exists() {
-        anyhow::bail!("artifacts/manifest.toml missing — run `make artifacts` first");
+        deft::bail!("artifacts/manifest.toml missing — run `make artifacts` first");
     }
 
     // One shared measured profile set keeps the scheme comparison fair
@@ -40,6 +41,7 @@ fn main() -> anyhow::Result<()> {
     let mut shared_profiles = None;
     let mut reports = Vec::new();
     for scheme in [Scheme::PytorchDdp, Scheme::Deft] {
+        let env = ClusterEnv::paper_testbed().with_workers(workers);
         let opts = TrainOptions {
             manifest: "artifacts/manifest.toml".into(),
             scheme,
@@ -49,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             momentum: 0.9,
             seed: 23,
             log_every: (iterations / 20).max(1),
-            env: ClusterEnv::paper_testbed().with_workers(workers),
+            env: env.clone(),
         };
         println!("=== training with {} semantics ===", scheme.name());
         let mut trainer = Trainer::new(opts)?;
@@ -64,7 +66,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|b| (b.id, b.params, b.comm.as_ms_f64()))
                 .collect::<Vec<_>>()
         );
-        let scheduler = deft::bench::scheduler_for(scheme, true);
+        let scheduler = deft::bench::scheduler_for(scheme, true, &env);
         let schedule = scheduler.schedule(&profiles);
         println!(
             "schedule: cycle {} iters, {} updates, k = {:?}",
@@ -106,14 +108,12 @@ fn main() -> anyhow::Result<()> {
         "|DeFT - DDP| final-loss gap = {gap:.4} ({}% of DDP)",
         (100.0 * gap / ddp.final_loss) as i64
     );
-    anyhow::ensure!(
-        ddp.final_loss < ddp.uniform_loss * 0.85,
-        "DDP run failed to learn"
-    );
-    anyhow::ensure!(
-        deft.final_loss < deft.uniform_loss * 0.9,
-        "DeFT run failed to learn"
-    );
+    if ddp.final_loss >= ddp.uniform_loss * 0.85 {
+        deft::bail!("DDP run failed to learn");
+    }
+    if deft.final_loss >= deft.uniform_loss * 0.9 {
+        deft::bail!("DeFT run failed to learn");
+    }
     println!("OK: end-to-end three-layer training validated.");
     Ok(())
 }

@@ -48,7 +48,7 @@ fn main() {
             },
             &env,
         );
-        let s = deft::bench::scheduler_for(scheme, true);
+        let s = deft::bench::scheduler_for(scheme, true, &env);
         let (med, _) = time_it(2, 10, || {
             std::hint::black_box(s.schedule(&buckets));
         });

@@ -40,17 +40,24 @@ pub fn workload_by_name(name: &str) -> Workload {
     }
 }
 
-/// Build the scheduler for a scheme (paper defaults).
-pub fn scheduler_for(scheme: Scheme, preserver: bool) -> Box<dyn Scheduler> {
+/// Build the scheduler for a scheme; DeFT's knapsack set follows the
+/// environment's link registry (one knapsack per link).
+pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<dyn Scheduler> {
     match scheme {
         Scheme::PytorchDdp => Box::new(Wfbp),
         Scheme::Bytescheduler => Box::new(Bytescheduler),
         Scheme::UsByte => Box::new(UsByte),
         Scheme::Deft => Box::new(Deft::new(DeftOptions {
             preserver,
+            link_mus: env.link_mus(),
             ..DeftOptions::default()
         })),
-        Scheme::DeftNoMultilink => Box::new(Deft::without_multilink()),
+        Scheme::DeftNoMultilink => Box::new(Deft::new(DeftOptions {
+            heterogeneous: false,
+            preserver: false,
+            link_mus: env.link_mus(),
+            ..DeftOptions::default()
+        })),
     }
 }
 
@@ -81,7 +88,7 @@ pub fn run_pipeline(
     };
     // Single-link ablation still partitions with the DeFT constraint.
     let buckets = partition(workload, strategy, env);
-    let scheduler = scheduler_for(scheme, true);
+    let scheduler = scheduler_for(scheme, true, env);
     let schedule = scheduler.schedule(&buckets);
     let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
     let iterations = iterations.max(warmup * 3 + 4);

@@ -1,17 +1,41 @@
 //! Configuration system: a TOML-subset parser (offline build — no serde)
 //! plus the typed experiment configuration consumed by the launcher.
 //!
-//! Supported syntax: `[section]` headers, `key = value` with string
-//! (`"x"`), boolean, integer, and float values, `#` comments. That covers
-//! every config this project ships; nested tables and arrays are
-//! deliberately out of scope.
+//! Supported syntax: `[section]` headers, `[[links]]` array-of-tables
+//! blocks (custom link topologies), `key = value` with string (`"x"`),
+//! boolean, integer, and float values, `#` comments.
+//!
+//! Link topology is configured either by preset name
+//! (`links_preset = "nvlink-ib-tcp"` — see [`LinkPreset`]) or by an
+//! explicit `[[links]]` array, one block per link:
+//!
+//! ```toml
+//! [[links]]
+//! name = "nccl"
+//! mu = 1.0
+//! alpha_us = 300
+//! bandwidth_gbps = 40.0
+//! contention_group = 0
+//!
+//! [[links]]
+//! name = "gloo"
+//! mu = 1.65
+//! alpha_us = 900
+//! contention_group = 1
+//! staging_ramp = 0.12
+//! ```
+//!
+//! The legacy knobs are kept: `multi_link = false` collapses a 2-link
+//! preset onto one NIC (the Table IV configuration) and `mu` overrides
+//! the slow link's μ of a 2-link preset.
 
 pub mod toml_lite;
 
 pub use toml_lite::{parse, ParseError, Value};
 
-use crate::links::ClusterEnv;
+use crate::links::{ClusterEnv, LinkPreset, LinkSpec};
 use crate::partition::Strategy;
+use crate::util::Micros;
 use std::collections::BTreeMap;
 
 /// Which scheduling scheme to run.
@@ -62,7 +86,13 @@ pub struct ExperimentConfig {
     pub scheme: Scheme,
     pub workers: usize,
     pub bandwidth_gbps: f64,
+    /// Legacy knob: `false` collapses a 2-link preset onto one NIC.
     pub multi_link: bool,
+    /// Link topology preset name (see [`LinkPreset`]); ignored when
+    /// `custom_links` is non-empty.
+    pub links_preset: String,
+    /// Explicit `[[links]]` topology; overrides `links_preset` when set.
+    pub custom_links: Vec<LinkSpec>,
     pub partition_size: u64,
     pub ddp_bucket_mb: f64,
     pub iterations: usize,
@@ -81,6 +111,8 @@ impl Default for ExperimentConfig {
             workers: 16,
             bandwidth_gbps: 40.0,
             multi_link: true,
+            links_preset: "paper-2link".into(),
+            custom_links: Vec::new(),
             partition_size: 6_500_000,
             ddp_bucket_mb: 25.0,
             iterations: 60,
@@ -122,6 +154,43 @@ impl ExperimentConfig {
         if !(0.0..1.0).contains(&self.epsilon) {
             return Err("epsilon must be in [0, 1)".into());
         }
+        if self.mu <= 0.0 {
+            return Err("mu must be positive".into());
+        }
+        if self.custom_links.is_empty() {
+            if LinkPreset::parse(&self.links_preset).is_none() {
+                return Err(format!(
+                    "unknown links preset `{}` (known: {})",
+                    self.links_preset,
+                    LinkPreset::ALL
+                        .iter()
+                        .map(|p| p.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        } else {
+            for (i, l) in self.custom_links.iter().enumerate() {
+                if l.name.is_empty() {
+                    return Err(format!(
+                        "links[{i}]: name must be set — every [[links]] entry (or \
+                         links.{i}.* override) needs an explicit name"
+                    ));
+                }
+                if l.mu <= 0.0 {
+                    return Err(format!("links[{i}]: mu must be positive"));
+                }
+                if l.bandwidth_gbps <= 0.0 {
+                    return Err(format!("links[{i}]: bandwidth_gbps must be positive"));
+                }
+                if self.custom_links[..i].iter().any(|o| o.name == l.name) {
+                    return Err(format!("links[{i}]: duplicate link name `{}`", l.name));
+                }
+            }
+            if (self.custom_links[0].mu - 1.0).abs() > 1e-9 {
+                return Err("links[0] is the reference link and must have mu = 1.0".into());
+            }
+        }
         Ok(())
     }
 
@@ -130,8 +199,24 @@ impl ExperimentConfig {
         let mut env = ClusterEnv::paper_testbed()
             .with_workers(self.workers)
             .with_bandwidth(self.bandwidth_gbps);
-        env.multi_link = self.multi_link;
-        env.mu = self.mu;
+        if !self.custom_links.is_empty() {
+            env.links = self.custom_links.clone();
+            return env;
+        }
+        let preset = LinkPreset::parse(&self.links_preset).expect("validated preset");
+        env.links = preset.links();
+        // Legacy knobs apply to 2-link presets only: `mu` retunes the
+        // slow link, `multi_link = false` collapses onto one NIC. (Wider
+        // topologies use `with_single_link()` / contention groups
+        // explicitly.)
+        if env.links.len() == 2 {
+            env.links[1].mu = self.mu;
+            if !self.multi_link {
+                for l in &mut env.links {
+                    l.contention_group = 0;
+                }
+            }
+        }
         env
     }
 
@@ -174,6 +259,9 @@ impl ExperimentConfig {
             "cluster.bandwidth_gbps" | "bandwidth_gbps" => self.bandwidth_gbps = value.as_float()?,
             "cluster.multi_link" | "multi_link" => self.multi_link = value.as_bool()?,
             "cluster.mu" | "mu" => self.mu = value.as_float()?,
+            "cluster.links_preset" | "links_preset" => {
+                self.links_preset = value.as_str()?.to_string()
+            }
             "schedule.partition_size" | "partition_size" => {
                 self.partition_size = value.as_int()? as u64
             }
@@ -183,7 +271,42 @@ impl ExperimentConfig {
             "run.iterations" | "iterations" => self.iterations = value.as_int()? as usize,
             "run.warmup" | "warmup" => self.warmup = value.as_int()? as usize,
             "run.seed" | "seed" => self.seed = value.as_int()? as u64,
-            other => return Err(format!("unknown config key `{other}`")),
+            other => {
+                // `[[links]]` blocks flatten to `links.<index>.<field>`.
+                if let Some(rest) = other.strip_prefix("links.") {
+                    if let Some((idx, field)) = rest.split_once('.') {
+                        if let Ok(idx) = idx.parse::<usize>() {
+                            return self.set_link_field(idx, field, value);
+                        }
+                    }
+                }
+                return Err(format!("unknown config key `{other}`"));
+            }
+        }
+        Ok(())
+    }
+
+    fn set_link_field(&mut self, idx: usize, field: &str, value: &Value) -> Result<(), String> {
+        if idx > 16 {
+            return Err(format!("links[{idx}]: implausibly many links"));
+        }
+        // Filler entries carry an empty name; validate() rejects any link
+        // that is never explicitly named, so a stray partial override
+        // (e.g. `--links.1.mu=2.0` on its own) fails loudly instead of
+        // silently replacing the preset topology.
+        while self.custom_links.len() <= idx {
+            let i = self.custom_links.len();
+            self.custom_links.push(LinkSpec::new("", 1.0).with_group(i));
+        }
+        let link = &mut self.custom_links[idx];
+        match field {
+            "name" => link.name = value.as_str()?.to_string(),
+            "mu" => link.mu = value.as_float()?,
+            "alpha_us" => link.alpha = Micros(value.as_int()? as u64),
+            "bandwidth_gbps" => link.bandwidth_gbps = value.as_float()?,
+            "contention_group" => link.contention_group = value.as_int()? as usize,
+            "staging_ramp" => link.staging_ramp = value.as_float()?,
+            other => return Err(format!("unknown link field `{other}`")),
         }
         Ok(())
     }
@@ -256,6 +379,7 @@ warmup = 4
 
     #[test]
     fn env_reflects_cluster_settings() {
+        use crate::links::LinkId;
         let mut cfg = ExperimentConfig::default();
         cfg.workers = 4;
         cfg.bandwidth_gbps = 10.0;
@@ -263,6 +387,85 @@ warmup = 4
         let env = cfg.env();
         assert_eq!(env.workers, 4);
         assert!((env.bandwidth_gbps - 10.0).abs() < 1e-12);
-        assert!(!env.multi_link);
+        // multi_link = false collapses the pair onto one NIC: the slow
+        // link now pays contention.
+        assert!(env.contended(LinkId(1)));
+        assert!(!env.contended(LinkId(0)));
+        // And the legacy μ knob retunes the slow link.
+        cfg.mu = 2.0;
+        assert!((cfg.env().links[1].mu - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn links_preset_key_selects_topology() {
+        let cfg = ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\n",
+        )
+        .unwrap();
+        let env = cfg.env();
+        assert_eq!(env.n_links(), 3);
+        assert_eq!(
+            env.link_names(),
+            vec!["nvlink".to_string(), "ib".to_string(), "tcp".to_string()]
+        );
+        assert!(
+            ExperimentConfig::from_toml("links_preset = \"warp-drive\"\n").is_err(),
+            "unknown preset must be rejected"
+        );
+    }
+
+    #[test]
+    fn custom_links_array_overrides_preset() {
+        let text = r#"
+[[links]]
+name = "nccl"
+mu = 1.0
+alpha_us = 250
+
+[[links]]
+name = "roce"
+mu = 2.0
+bandwidth_gbps = 20.0
+contention_group = 1
+staging_ramp = 0.05
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.custom_links.len(), 2);
+        let env = cfg.env();
+        assert_eq!(env.n_links(), 2);
+        assert_eq!(env.link_names(), vec!["nccl".to_string(), "roce".to_string()]);
+        assert_eq!(env.links[0].alpha, Micros(250));
+        assert!((env.links[1].mu - 2.0).abs() < 1e-12);
+        assert!((env.links[1].staging_ramp - 0.05).abs() < 1e-12);
+
+        // Reference link must have μ = 1.
+        let bad = "[[links]]\nname = \"slow\"\nmu = 2.0\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // Unknown link fields are rejected.
+        let bad2 = "[[links]]\nname = \"x\"\ncolour = \"red\"\n";
+        assert!(ExperimentConfig::from_toml(bad2).is_err());
+        // Every custom link must be explicitly named: a stray partial
+        // override must not silently replace the preset topology.
+        let mut cfg = ExperimentConfig::default();
+        let mut ov = BTreeMap::new();
+        ov.insert("links.1.mu".to_string(), "2.0".to_string());
+        assert!(cfg.apply_overrides(&ov).is_err());
+        // Duplicate names are ambiguous for the name-keyed registry.
+        let dup = "[[links]]\nname = \"nccl\"\nmu = 1.0\n[[links]]\nname = \"nccl\"\nmu = 2.0\n";
+        assert!(ExperimentConfig::from_toml(dup).is_err());
+    }
+
+    #[test]
+    fn legacy_knobs_do_not_touch_wider_presets() {
+        // multi_link/mu are 2-link legacy knobs; a 3-link preset must
+        // keep its contention groups and μs even if they are set.
+        let mut cfg = ExperimentConfig::default();
+        cfg.links_preset = "nvlink-ib-tcp".into();
+        cfg.multi_link = false;
+        cfg.mu = 9.0;
+        let env = cfg.env();
+        use crate::links::{LinkId, LinkPreset};
+        assert_eq!(env.links, LinkPreset::NvlinkIbTcp.links());
+        assert!(!env.contended(LinkId(1)));
     }
 }

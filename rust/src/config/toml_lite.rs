@@ -1,8 +1,10 @@
 //! A small TOML-subset parser (the offline build has no `toml`/`serde`).
 //!
-//! Supported: `[section]` headers, `key = value` pairs, `#` comments,
-//! string / bool / integer / float scalars. Sections flatten to
-//! dot-joined keys (`[cluster] workers = 8` → `cluster.workers`).
+//! Supported: `[section]` headers, `[[section]]` array-of-tables headers,
+//! `key = value` pairs, `#` comments, string / bool / integer / float
+//! scalars. Sections flatten to dot-joined keys (`[cluster] workers = 8`
+//! → `cluster.workers`); array-of-tables entries gain a running index
+//! (the second `[[links]]` block flattens to `links.1.<key>`).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -125,12 +127,36 @@ impl Document {
 pub fn parse(text: &str) -> Result<Document, ParseError> {
     let mut doc = Document::default();
     let mut section = String::new();
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
+    let valid_name = |name: &str| {
+        !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+    };
     for (ln, raw) in text.lines().enumerate() {
         let line_no = ln + 1;
         // Strip comments outside quotes.
         let line = strip_comment(raw);
         let line = line.trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest.strip_suffix("]]").ok_or_else(|| ParseError {
+                line: line_no,
+                message: "unterminated array-of-tables header".into(),
+            })?;
+            let name = name.trim();
+            if !valid_name(name) {
+                return Err(ParseError {
+                    line: line_no,
+                    message: format!("invalid array-of-tables name `{name}`"),
+                });
+            }
+            let idx = array_counts.entry(name.to_string()).or_insert(0);
+            section = format!("{name}.{idx}");
+            *idx += 1;
             continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
@@ -252,6 +278,33 @@ x = -3
         assert_eq!(doc.get("a.f"), Some(&Value::Float(2.5)));
         assert_eq!(doc.get("a.big"), Some(&Value::Int(6_500_000)));
         assert_eq!(doc.get("b.c.x"), Some(&Value::Int(-3)));
+    }
+
+    #[test]
+    fn array_of_tables_gains_running_index() {
+        let doc = parse(
+            r#"
+[[links]]
+name = "nccl"
+mu = 1.0
+[[links]]
+name = "gloo"
+mu = 1.65
+[cluster]
+workers = 8
+[[links]]
+name = "tcp"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("links.0.name"), Some(&Value::Str("nccl".into())));
+        assert_eq!(doc.get("links.1.name"), Some(&Value::Str("gloo".into())));
+        assert_eq!(doc.get("links.1.mu"), Some(&Value::Float(1.65)));
+        assert_eq!(doc.get("links.2.name"), Some(&Value::Str("tcp".into())));
+        assert_eq!(doc.get("cluster.workers"), Some(&Value::Int(8)));
+        let err = parse("[[broken\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(parse("[[ ]]\n").is_err());
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //!   Preserver, the trace Profiler, plus every substrate it depends on
 //!   (a discrete-event cluster simulator, allreduce link-cost models,
 //!   a config system, a launcher and a metrics/timeline exporter).
+//!
+//!   Heterogeneous communication is modelled by an **N-link topology
+//!   registry** ([`links::ClusterEnv`] owning [`links::LinkSpec`]s,
+//!   addressed by [`links::LinkId`]): schedulers solve one knapsack per
+//!   link, the simulator runs one serial stream per link, and the TOML
+//!   config selects a [`links::LinkPreset`] (`paper-2link`, `single-nic`,
+//!   `nvlink-ib-tcp`) or declares a custom `[[links]]` array. The
+//!   `paper-2link` preset reproduces the paper's NCCL+gloo pair exactly
+//!   (`tests/link_parity.rs`).
 //! * **L2 — JAX model** (`python/compile/model.py`, build-time only): a
 //!   bucketed transformer whose `train_step`/`apply_update` are AOT-lowered
 //!   to HLO text and executed from Rust via PJRT.
@@ -19,7 +28,7 @@
 //!   momentum-SGD update), lowered in interpret mode into the same HLO.
 //!
 //! The public API is intentionally small: build a [`models::Workload`],
-//! pick a [`sched::Scheduler`], run it through [`sim::ClusterSim`], or
+//! pick a [`sched::Scheduler`], run it through [`sim::simulate`], or
 //! drive real training with [`train::Trainer`].
 
 pub mod util;

@@ -1,63 +1,242 @@
-//! Communication-link cost models (paper §III.C, Table IV, Fig. 6).
+//! Communication-link cost models (paper §III.C, Table IV, Fig. 6) —
+//! generalized to an **N-link heterogeneous topology registry**.
 //!
 //! The paper runs two collective libraries concurrently: **NCCL** on one
-//! NIC and **gloo** on a second NIC ("heterogeneous multi-link"). In this
-//! reproduction the transports are replaced by calibrated ring-allreduce
+//! NIC and **gloo** on a second ("heterogeneous multi-link"). Earlier
+//! revisions hard-coded that pair as a two-variant enum; this module now
+//! models a cluster as an ordered registry of [`LinkSpec`]s owned by
+//! [`ClusterEnv`], addressed by [`LinkId`] (a plain index newtype). Each
+//! link carries a name, a startup latency α, a wire bandwidth, a slowdown
+//! factor μ relative to the *reference link* (index 0, μ = 1), a
+//! **contention group** (links in the same group share a NIC — the
+//! paper's Table IV single-NIC degradation becomes the general rule
+//! "every link but the fastest of a shared group pays the contention
+//! penalty"), and a CPU-staging ramp for transports that degrade
+//! superlinearly on very large tensors.
+//!
+//! The transports themselves are replaced by calibrated ring-allreduce
 //! α–β cost models — the scheduler only ever consumes *times*, so a model
 //! fit to the paper's own Table IV measurements preserves every
 //! scheduling decision (see DESIGN.md §Substitutions).
 //!
-//! Model: `T(p) = α + p · 4 B · 2(W−1)/W / (η · BW)` for `p` f32
-//! parameters over `W` workers at wire bandwidth `BW`, with link
-//! efficiency `η`. gloo is `μ ≈ 1.65×` slower than NCCL (paper Fig. 6);
-//! in **single-link** mode (both libraries on one NIC) concurrent large
-//! transfers contend and gloo degrades ~20% further (paper Table IV).
+//! Model: `T(p) = α + μ · p · 4 B · 2(W−1)/W / (η · BW)` for `p` f32
+//! parameters over `W` workers at reference wire bandwidth `BW`, with
+//! reference link efficiency `η`. The paper's gloo is `μ ≈ 1.65×` slower
+//! than NCCL (Fig. 6); in **single-NIC** mode concurrent large transfers
+//! contend and the slower link degrades ~20% further (Table IV).
+//!
+//! Built-in presets ([`LinkPreset`]):
+//!
+//! * `paper-2link`   — NCCL + gloo on distinct NICs; bit-for-bit the
+//!   numbers of the pre-registry enum (see `tests/link_parity.rs`).
+//! * `single-nic`    — the same pair sharing one NIC (Table IV rows).
+//! * `nvlink-ib-tcp` — a 3-link profile (intra-node NVLink-class link,
+//!   InfiniBand, TCP fallback) that the old enum could never express.
 
 use crate::util::Micros;
 
-/// Which transport a communication op uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum LinkKind {
-    /// Primary GPU collective library (fast link).
-    Nccl,
-    /// Secondary CPU collective library (slow link, factor μ).
-    Gloo,
-}
+/// Index of a link in a [`ClusterEnv`]'s registry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
 
-impl LinkKind {
-    pub const ALL: [LinkKind; 2] = [LinkKind::Nccl, LinkKind::Gloo];
+impl LinkId {
+    /// The reference link: μ = 1, and all bucket communication times are
+    /// priced in its time units.
+    pub const REFERENCE: LinkId = LinkId(0);
 
-    pub fn name(self) -> &'static str {
-        match self {
-            LinkKind::Nccl => "nccl",
-            LinkKind::Gloo => "gloo",
-        }
+    pub fn index(self) -> usize {
+        self.0
     }
 }
 
-/// The cluster communication environment: worker count, NIC bandwidth,
-/// link topology (multi vs single NIC) and the gloo slowdown μ.
+/// One communication link of the cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Human-readable transport name ("nccl", "gloo", "ib", …).
+    pub name: String,
+    /// Slowdown factor relative to the reference link (reference: 1.0).
+    /// Authoritative for all pricing; presets keep it consistent with
+    /// `bandwidth_gbps`.
+    pub mu: f64,
+    /// Fixed startup latency per collective.
+    pub alpha: Micros,
+    /// Wire bandwidth in Gbps (informational / config round-trip; μ is
+    /// what the schedulers and the simulator consume).
+    pub bandwidth_gbps: f64,
+    /// Links in the same contention group share a NIC: every link except
+    /// the group's fastest pays [`ClusterEnv::contention_penalty`] on
+    /// large tensors.
+    pub contention_group: usize,
+    /// CPU-staged transports degrade superlinearly on very large tensors
+    /// (Table IV: the NCCL:gloo ratio climbs from ~1.65 to ~1.85 at 67M
+    /// params). Ramp coefficient applied beyond `STAGING_KNEE` params;
+    /// 0.0 disables the ramp.
+    pub staging_ramp: f64,
+}
+
+impl LinkSpec {
+    /// A link with the given name and μ; other fields get neutral
+    /// defaults: α = 300 µs, 40 Gbps, no staging ramp, and contention
+    /// group **0**. Note the group default means links built only from
+    /// `new()` share one NIC — call [`LinkSpec::with_group`] to place
+    /// links on separate NICs (as every preset does).
+    pub fn new(name: &str, mu: f64) -> LinkSpec {
+        assert!(mu > 0.0, "link μ must be positive");
+        LinkSpec {
+            name: name.to_string(),
+            mu,
+            alpha: Micros(300),
+            bandwidth_gbps: 40.0,
+            contention_group: 0,
+            staging_ramp: 0.0,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: Micros) -> LinkSpec {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_bandwidth(mut self, gbps: f64) -> LinkSpec {
+        self.bandwidth_gbps = gbps;
+        self
+    }
+
+    pub fn with_group(mut self, group: usize) -> LinkSpec {
+        self.contention_group = group;
+        self
+    }
+
+    pub fn with_staging_ramp(mut self, ramp: f64) -> LinkSpec {
+        self.staging_ramp = ramp;
+        self
+    }
+}
+
+/// Built-in link-topology presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkPreset {
+    /// Paper testbed: NCCL + gloo on two NICs (no contention).
+    Paper2Link,
+    /// NCCL + gloo sharing one NIC (Table IV "single-link" rows).
+    SingleNic,
+    /// Three heterogeneous links: an NVLink-class intra-node link at the
+    /// reference speed, InfiniBand at μ = 2.5, and a TCP fallback at
+    /// μ = 6 with CPU staging — a modern shape the old two-variant enum
+    /// could not express.
+    NvlinkIbTcp,
+}
+
+impl LinkPreset {
+    pub const ALL: [LinkPreset; 3] = [
+        LinkPreset::Paper2Link,
+        LinkPreset::SingleNic,
+        LinkPreset::NvlinkIbTcp,
+    ];
+
+    pub fn parse(s: &str) -> Option<LinkPreset> {
+        match s {
+            "paper-2link" | "paper2link" | "paper" => Some(LinkPreset::Paper2Link),
+            "single-nic" | "single_nic" | "single" => Some(LinkPreset::SingleNic),
+            "nvlink-ib-tcp" | "nvlink_ib_tcp" | "3link" => Some(LinkPreset::NvlinkIbTcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkPreset::Paper2Link => "paper-2link",
+            LinkPreset::SingleNic => "single-nic",
+            LinkPreset::NvlinkIbTcp => "nvlink-ib-tcp",
+        }
+    }
+
+    /// The preset's link registry.
+    pub fn links(self) -> Vec<LinkSpec> {
+        match self {
+            LinkPreset::Paper2Link => vec![
+                LinkSpec {
+                    name: "nccl".into(),
+                    mu: 1.0,
+                    alpha: Micros(300),
+                    bandwidth_gbps: 40.0,
+                    contention_group: 0,
+                    staging_ramp: 0.0,
+                },
+                LinkSpec {
+                    name: "gloo".into(),
+                    mu: PAPER_MU,
+                    alpha: Micros(900),
+                    bandwidth_gbps: 40.0,
+                    contention_group: 1,
+                    staging_ramp: 0.12,
+                },
+            ],
+            LinkPreset::SingleNic => {
+                let mut links = LinkPreset::Paper2Link.links();
+                for l in &mut links {
+                    l.contention_group = 0;
+                }
+                links
+            }
+            LinkPreset::NvlinkIbTcp => vec![
+                LinkSpec {
+                    name: "nvlink".into(),
+                    mu: 1.0,
+                    alpha: Micros(150),
+                    bandwidth_gbps: 40.0,
+                    contention_group: 0,
+                    staging_ramp: 0.0,
+                },
+                LinkSpec {
+                    name: "ib".into(),
+                    mu: 2.5,
+                    alpha: Micros(600),
+                    bandwidth_gbps: 16.0,
+                    contention_group: 1,
+                    staging_ramp: 0.0,
+                },
+                LinkSpec {
+                    name: "tcp".into(),
+                    mu: 6.0,
+                    alpha: Micros(1500),
+                    bandwidth_gbps: 6.7,
+                    contention_group: 2,
+                    staging_ramp: 0.12,
+                },
+            ],
+        }
+    }
+
+    /// The paper testbed environment with this preset's links.
+    pub fn env(self) -> ClusterEnv {
+        let mut env = ClusterEnv::paper_testbed();
+        env.links = self.links();
+        env
+    }
+}
+
+/// The cluster communication environment: worker count, reference NIC
+/// bandwidth/efficiency, and the link registry.
 #[derive(Clone, Debug)]
 pub struct ClusterEnv {
     /// Number of data-parallel workers (GPUs).
     pub workers: usize,
-    /// Per-NIC wire bandwidth in Gbps (paper testbed: 40).
+    /// Reference NIC wire bandwidth in Gbps (paper testbed: 40).
     pub bandwidth_gbps: f64,
-    /// `true` = NCCL and gloo on distinct NICs (no contention);
-    /// `false` = both share one NIC (Table IV "single-link" rows).
-    pub multi_link: bool,
-    /// Speed ratio between NCCL and gloo (paper: 1.59–1.69, set 1.65).
-    pub mu: f64,
-    /// NCCL link efficiency η at the microbenchmark scale (fit to
+    /// Reference link efficiency η at the microbenchmark scale (fit to
     /// Table IV: β ≈ 3.2 ns/param at 16 GPUs / 40 Gbps ⇒ η ≈ 0.469).
-    pub nccl_efficiency: f64,
-    /// Fixed startup latency per collective (µs).
-    pub alpha_nccl: Micros,
-    pub alpha_gloo: Micros,
+    pub efficiency: f64,
+    /// The link registry; index = [`LinkId`]. Link 0 is the reference
+    /// link (μ = 1) that bucket comm times are priced on.
+    pub links: Vec<LinkSpec>,
 }
 
-/// Paper reference testbed: 16 GPUs, 40 Gbps, dual NICs.
+/// Speed ratio between the paper's NCCL and gloo (1.59–1.69, set 1.65).
 pub const PAPER_MU: f64 = 1.65;
+
+/// Params beyond which CPU-staged transports start their degradation ramp.
+const STAGING_KNEE: f64 = 33.6e6;
 
 impl Default for ClusterEnv {
     fn default() -> Self {
@@ -66,16 +245,14 @@ impl Default for ClusterEnv {
 }
 
 impl ClusterEnv {
-    /// The paper's testbed: 2 nodes × 8 A100, 40 Gbps Ethernet, 2 NICs.
+    /// The paper's testbed: 2 nodes × 8 A100, 40 Gbps Ethernet, 2 NICs,
+    /// NCCL + gloo (the `paper-2link` preset).
     pub fn paper_testbed() -> ClusterEnv {
         ClusterEnv {
             workers: 16,
             bandwidth_gbps: 40.0,
-            multi_link: true,
-            mu: PAPER_MU,
-            nccl_efficiency: 0.469,
-            alpha_nccl: Micros(300),
-            alpha_gloo: Micros(900),
+            efficiency: 0.469,
+            links: LinkPreset::Paper2Link.links(),
         }
     }
 
@@ -91,9 +268,76 @@ impl ClusterEnv {
         self
     }
 
-    pub fn with_single_link(mut self) -> ClusterEnv {
-        self.multi_link = false;
+    /// Replace the link registry.
+    pub fn with_links(mut self, links: Vec<LinkSpec>) -> ClusterEnv {
+        assert!(!links.is_empty(), "a cluster needs at least one link");
+        self.links = links;
         self
+    }
+
+    /// Collapse every link onto one NIC (all contention groups shared) —
+    /// the Table IV "single-link" configuration.
+    pub fn with_single_link(mut self) -> ClusterEnv {
+        for l in &mut self.links {
+            l.contention_group = 0;
+        }
+        self
+    }
+
+    /// Number of links in the registry.
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// All link ids, in registry order.
+    pub fn link_ids(&self) -> impl Iterator<Item = LinkId> {
+        (0..self.links.len()).map(LinkId)
+    }
+
+    /// The spec of one link.
+    pub fn spec(&self, id: LinkId) -> &LinkSpec {
+        &self.links[id.0]
+    }
+
+    /// Look a link up by name.
+    pub fn link(&self, name: &str) -> Option<LinkId> {
+        self.links.iter().position(|l| l.name == name).map(LinkId)
+    }
+
+    /// Link names in registry order.
+    pub fn link_names(&self) -> Vec<String> {
+        self.links.iter().map(|l| l.name.clone()).collect()
+    }
+
+    /// Per-link slowdown factors μ in registry order.
+    pub fn link_mus(&self) -> Vec<f64> {
+        self.links.iter().map(|l| l.mu).collect()
+    }
+
+    /// The largest μ in the registry (the slowest link; ≥ the reference's
+    /// μ). Used by §III.D's partition constraint — a bucket must fit the
+    /// smallest knapsack, whose capacity is compute/μ_max.
+    pub fn max_mu(&self) -> f64 {
+        self.links.iter().map(|l| l.mu).fold(0.0_f64, f64::max)
+    }
+
+    /// Does `id` pay the shared-NIC contention penalty? True iff another
+    /// link shares its contention group and `id` is not the group's
+    /// fastest member (smallest μ, ties to the lower index) — the paper's
+    /// observation that NCCL is unaffected while gloo degrades.
+    pub fn contended(&self, id: LinkId) -> bool {
+        let group = self.links[id.0].contention_group;
+        let mut members = 0usize;
+        let mut fastest = id.0;
+        for (i, l) in self.links.iter().enumerate() {
+            if l.contention_group == group {
+                members += 1;
+                if (l.mu, i) < (self.links[fastest].mu, fastest) {
+                    fastest = i;
+                }
+            }
+        }
+        members > 1 && fastest != id.0
     }
 
     /// Ring-allreduce traffic factor 2(W−1)/W.
@@ -105,44 +349,39 @@ impl ClusterEnv {
         }
     }
 
-    /// NCCL allreduce time for `params` f32 parameters, **microbenchmark
-    /// calibration** (Table IV / Fig. 6 scale).
-    pub fn allreduce_us(&self, kind: LinkKind, params: u64) -> Micros {
+    /// Allreduce time for `params` f32 parameters on `link`,
+    /// **microbenchmark calibration** (Table IV / Fig. 6 scale).
+    pub fn allreduce_us(&self, link: LinkId, params: u64) -> Micros {
         if self.workers <= 1 || params == 0 {
             return Micros::ZERO;
         }
+        let spec = self.spec(link);
         let bytes = params as f64 * 4.0 * self.ring_factor();
         let wire_bytes_per_us = self.bandwidth_gbps * 1e9 / 8.0 / 1e6; // B/µs
-        let base_us = bytes / (wire_bytes_per_us * self.nccl_efficiency);
-        match kind {
-            LinkKind::Nccl => self.alpha_nccl + Micros::from_us_f64(base_us),
-            LinkKind::Gloo => {
-                let t = self.alpha_gloo
-                    + Micros::from_us_f64(base_us * self.mu * self.gloo_oversize(params));
-                if self.multi_link {
-                    t
-                } else {
-                    t.scale(1.0 + self.contention_penalty(params))
-                }
-            }
+        let base_us = bytes / (wire_bytes_per_us * self.efficiency);
+        let t = spec.alpha
+            + Micros::from_us_f64(base_us * spec.mu * self.staging_factor(spec, params));
+        if self.contended(link) {
+            t.scale(1.0 + self.contention_penalty(params))
+        } else {
+            t
         }
     }
 
-    /// gloo's CPU-staged pipeline degrades superlinearly on very large
-    /// tensors (Table IV shows the NCCL:gloo ratio climbing from ~1.65 to
-    /// 1.85 at 67M params): +12% ramp beyond 33.6M params.
-    fn gloo_oversize(&self, params: u64) -> f64 {
-        const KNEE: f64 = 33.6e6;
+    /// Staging degradation factor: +`staging_ramp` beyond the knee
+    /// (Table IV shows the NCCL:gloo ratio climbing from ~1.65 to 1.85 at
+    /// 67M params ⇒ gloo's ramp is 0.12).
+    fn staging_factor(&self, spec: &LinkSpec, params: u64) -> f64 {
         let p = params as f64;
-        if p <= KNEE {
+        if spec.staging_ramp == 0.0 || p <= STAGING_KNEE {
             1.0
         } else {
-            1.0 + 0.12 * ((p - KNEE) / KNEE).min(1.0)
+            1.0 + spec.staging_ramp * ((p - STAGING_KNEE) / STAGING_KNEE).min(1.0)
         }
     }
 
-    /// Contention penalty for gloo sharing a NIC with NCCL (Table IV:
-    /// +0% at 4.2M params, ramping to ~+20% at ≥8.4M).
+    /// Contention penalty for a slow link sharing a NIC with a faster one
+    /// (Table IV: +0% at 4.2M params, ramping to ~+20% at ≥8.4M).
     pub fn contention_penalty(&self, params: u64) -> f64 {
         const LO: f64 = 5.0e6;
         const HI: f64 = 8.4e6;
@@ -174,19 +413,31 @@ impl ClusterEnv {
     ///
     /// `rate_ref` is the workload's µs/param at the reference point (from
     /// [`crate::models::Workload::comm_rate_ref`]).
-    pub fn bucket_comm(&self, kind: LinkKind, params: u64, rate_ref: f64) -> Micros {
-        let nccl_ref = Micros::from_us_f64(params as f64 * rate_ref);
-        let scaled = self.scale_workload_comm(nccl_ref);
-        match kind {
-            LinkKind::Nccl => scaled,
-            LinkKind::Gloo => {
-                let t = scaled.scale(self.mu);
-                if self.multi_link {
-                    t
-                } else {
-                    t.scale(1.0 + self.contention_penalty(params))
-                }
-            }
+    pub fn bucket_comm(&self, link: LinkId, params: u64, rate_ref: f64) -> Micros {
+        let ref_time = Micros::from_us_f64(params as f64 * rate_ref);
+        let scaled = self.scale_workload_comm(ref_time);
+        self.link_wire(link, scaled, params)
+    }
+
+    /// Wire time on `link` of a transfer whose **reference-link** time is
+    /// `comm_ref` (the pricing the discrete-event engine charges per op).
+    pub fn wire_time(&self, link: LinkId, comm_ref: Micros, params: u64) -> Micros {
+        self.link_wire(link, comm_ref, params)
+    }
+
+    fn link_wire(&self, link: LinkId, comm_ref: Micros, params: u64) -> Micros {
+        let spec = self.spec(link);
+        // μ = 1 short-circuits so reference-link pricing is exactly the
+        // input time (no float round-trip).
+        let t = if spec.mu == 1.0 {
+            comm_ref
+        } else {
+            comm_ref.scale(spec.mu)
+        };
+        if self.contended(link) {
+            t.scale(1.0 + self.contention_penalty(params))
+        } else {
+            t
         }
     }
 }
@@ -194,6 +445,14 @@ impl ClusterEnv {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn nccl(env: &ClusterEnv) -> LinkId {
+        env.link("nccl").expect("nccl registered")
+    }
+
+    fn gloo(env: &ClusterEnv) -> LinkId {
+        env.link("gloo").expect("gloo registered")
+    }
 
     /// Table IV (multi-link NCCL column): 4.2M→14ms … 67.1M→231ms.
     /// The α–β fit must land within 15% of each paper measurement.
@@ -208,7 +467,7 @@ mod tests {
             (67_108_864, 231_000.0),
         ];
         for (params, want_us) in cases {
-            let got = env.allreduce_us(LinkKind::Nccl, params).as_us() as f64;
+            let got = env.allreduce_us(nccl(&env), params).as_us() as f64;
             let err = (got - want_us).abs() / want_us;
             assert!(err < 0.15, "nccl {params}: got {got}, want {want_us}");
         }
@@ -226,7 +485,7 @@ mod tests {
             (67_108_864, 428_000.0),
         ];
         for (params, want_us) in cases {
-            let got = env.allreduce_us(LinkKind::Gloo, params).as_us() as f64;
+            let got = env.allreduce_us(gloo(&env), params).as_us() as f64;
             let err = (got - want_us).abs() / want_us;
             assert!(err < 0.15, "gloo {params}: got {got}, want {want_us}");
         }
@@ -239,19 +498,19 @@ mod tests {
         let multi = ClusterEnv::paper_testbed();
         let single = ClusterEnv::paper_testbed().with_single_link();
         assert_eq!(
-            multi.allreduce_us(LinkKind::Nccl, 33_554_432),
-            single.allreduce_us(LinkKind::Nccl, 33_554_432)
+            multi.allreduce_us(nccl(&multi), 33_554_432),
+            single.allreduce_us(nccl(&single), 33_554_432)
         );
-        let g_multi = multi.allreduce_us(LinkKind::Gloo, 33_554_432).as_us() as f64;
-        let g_single = single.allreduce_us(LinkKind::Gloo, 33_554_432).as_us() as f64;
+        let g_multi = multi.allreduce_us(gloo(&multi), 33_554_432).as_us() as f64;
+        let g_single = single.allreduce_us(gloo(&single), 33_554_432).as_us() as f64;
         let degradation = g_single / g_multi - 1.0;
         assert!(
             (0.15..=0.25).contains(&degradation),
             "degradation {degradation}"
         );
         // Small tensors: no contention.
-        let s_multi = multi.allreduce_us(LinkKind::Gloo, 4_194_304);
-        let s_single = single.allreduce_us(LinkKind::Gloo, 4_194_304);
+        let s_multi = multi.allreduce_us(gloo(&multi), 4_194_304);
+        let s_single = single.allreduce_us(gloo(&single), 4_194_304);
         assert_eq!(s_multi, s_single);
     }
 
@@ -260,8 +519,8 @@ mod tests {
     fn fig6_speed_ratio_converges_to_mu() {
         let env = ClusterEnv::paper_testbed();
         for params in [4_194_304u64, 16_777_216, 67_108_864] {
-            let n = env.allreduce_us(LinkKind::Nccl, params).as_us() as f64;
-            let g = env.allreduce_us(LinkKind::Gloo, params).as_us() as f64;
+            let n = env.allreduce_us(nccl(&env), params).as_us() as f64;
+            let g = env.allreduce_us(gloo(&env), params).as_us() as f64;
             let ratio = g / n;
             // Paper Fig. 6 / Table IV: 1.57–1.85 across this size range.
             assert!(
@@ -283,29 +542,101 @@ mod tests {
     #[test]
     fn workload_comm_scales_with_bandwidth_and_workers() {
         let base = ClusterEnv::paper_testbed();
-        let t40 = base.bucket_comm(LinkKind::Nccl, 10_000_000, 1.8e-3);
+        let r = LinkId::REFERENCE;
+        let t40 = base.bucket_comm(r, 10_000_000, 1.8e-3);
         let t20 = base
             .clone()
             .with_bandwidth(20.0)
-            .bucket_comm(LinkKind::Nccl, 10_000_000, 1.8e-3);
+            .bucket_comm(r, 10_000_000, 1.8e-3);
         // Half bandwidth => double time.
         assert!((t20.as_us() as f64 / t40.as_us() as f64 - 2.0).abs() < 0.01);
 
         let t2 = base
             .clone()
             .with_workers(2)
-            .bucket_comm(LinkKind::Nccl, 10_000_000, 1.8e-3);
+            .bucket_comm(r, 10_000_000, 1.8e-3);
         // 2 workers: ring factor 1.0 vs 1.875 => ~0.533×.
         assert!((t2.as_us() as f64 / t40.as_us() as f64 - 0.5333).abs() < 0.01);
 
         // 1 worker: no communication at all.
-        let t1 = base.with_workers(1).bucket_comm(LinkKind::Nccl, 10_000_000, 1.8e-3);
+        let t1 = base.with_workers(1).bucket_comm(r, 10_000_000, 1.8e-3);
         assert_eq!(t1, Micros::ZERO);
     }
 
     #[test]
     fn zero_params_free() {
         let env = ClusterEnv::paper_testbed();
-        assert_eq!(env.allreduce_us(LinkKind::Nccl, 0), Micros::ZERO);
+        assert_eq!(env.allreduce_us(LinkId::REFERENCE, 0), Micros::ZERO);
+    }
+
+    // ---- Registry-specific behaviour. ----
+
+    #[test]
+    fn registry_lookup_and_presets() {
+        let env = ClusterEnv::paper_testbed();
+        assert_eq!(env.n_links(), 2);
+        assert_eq!(env.link("nccl"), Some(LinkId(0)));
+        assert_eq!(env.link("gloo"), Some(LinkId(1)));
+        assert_eq!(env.link("ib"), None);
+        assert_eq!(env.link_names(), vec!["nccl".to_string(), "gloo".to_string()]);
+        assert_eq!(env.link_mus(), vec![1.0, PAPER_MU]);
+        assert!((env.max_mu() - PAPER_MU).abs() < 1e-12);
+
+        for preset in LinkPreset::ALL {
+            assert_eq!(LinkPreset::parse(preset.name()), Some(preset));
+            let links = preset.links();
+            assert!(!links.is_empty());
+            assert!((links[0].mu - 1.0).abs() < 1e-12, "{}: reference μ", preset.name());
+        }
+        assert_eq!(LinkPreset::parse("bogus"), None);
+    }
+
+    #[test]
+    fn contention_applies_to_all_but_fastest_group_member() {
+        // Distinct NICs: nobody contends.
+        let multi = ClusterEnv::paper_testbed();
+        assert!(!multi.contended(LinkId(0)));
+        assert!(!multi.contended(LinkId(1)));
+        // Shared NIC: only the slower link pays.
+        let single = LinkPreset::SingleNic.env();
+        assert!(!single.contended(LinkId(0)));
+        assert!(single.contended(LinkId(1)));
+        // 3-link preset: three separate groups, nobody pays.
+        let three = LinkPreset::NvlinkIbTcp.env();
+        for id in three.link_ids() {
+            assert!(!three.contended(id), "{:?}", id);
+        }
+        // Collapse the 3-link preset onto one NIC: ib and tcp pay.
+        let shared = LinkPreset::NvlinkIbTcp.env().with_single_link();
+        assert!(!shared.contended(LinkId(0)));
+        assert!(shared.contended(LinkId(1)));
+        assert!(shared.contended(LinkId(2)));
+    }
+
+    #[test]
+    fn wire_time_orders_by_mu() {
+        let env = LinkPreset::NvlinkIbTcp.env();
+        let comm = Micros(10_000);
+        let t0 = env.wire_time(LinkId(0), comm, 1_000_000);
+        let t1 = env.wire_time(LinkId(1), comm, 1_000_000);
+        let t2 = env.wire_time(LinkId(2), comm, 1_000_000);
+        // Reference pricing is exact; slower links scale by μ.
+        assert_eq!(t0, comm);
+        assert_eq!(t1, comm.scale(2.5));
+        assert_eq!(t2, comm.scale(6.0));
+        assert!(t0 < t1 && t1 < t2);
+    }
+
+    #[test]
+    fn three_link_allreduce_end_to_end() {
+        let env = LinkPreset::NvlinkIbTcp.env();
+        let p = 16_777_216u64;
+        let a0 = env.allreduce_us(LinkId(0), p);
+        let a1 = env.allreduce_us(LinkId(1), p);
+        let a2 = env.allreduce_us(LinkId(2), p);
+        assert!(a0 < a1 && a1 < a2, "{a0:?} {a1:?} {a2:?}");
+        // μ ratio dominates for large tensors.
+        let r = a1.as_us() as f64 / a0.as_us() as f64;
+        assert!((2.0..3.0).contains(&r), "ib/nvlink ratio {r}");
     }
 }

@@ -20,8 +20,9 @@ use deft::train::{TrainOptions, Trainer};
 
 fn usage() -> &'static str {
     "usage: deft <simulate|compare|train|features> [--config=FILE] [--key=value ...]\n\
-     keys: workload scheme workers bandwidth_gbps multi_link partition_size\n\
-           ddp_bucket_mb iterations warmup mu preserver epsilon seed\n\
+     keys: workload scheme workers bandwidth_gbps multi_link links_preset\n\
+           partition_size ddp_bucket_mb iterations warmup mu preserver\n\
+           epsilon seed   (links_preset: paper-2link | single-nic | nvlink-ib-tcp)\n\
      train-only: --manifest=PATH --lr=F --momentum=F --log-every=N"
 }
 
@@ -66,21 +67,22 @@ fn load_config(
 
 fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
     let w = workload_by_name(&cfg.workload);
+    let env = cfg.env();
     let r = run_pipeline(
         &w,
         cfg.scheme,
-        &cfg.env(),
+        &env,
         cfg.partition_size,
         cfg.ddp_bucket_mb,
         cfg.iterations,
     );
     println!(
-        "workload={} scheme={} workers={} bw={}Gbps multi_link={}",
+        "workload={} scheme={} workers={} bw={}Gbps links={}",
         w.name,
         cfg.scheme.name(),
         cfg.workers,
         cfg.bandwidth_gbps,
-        cfg.multi_link
+        env.link_names().join("+")
     );
     println!(
         "buckets={} cycle={} updates/cycle={} k={:?}",
@@ -101,6 +103,7 @@ fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
 
 fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
     let w = workload_by_name(&cfg.workload);
+    let env = cfg.env();
     let mut table = Table::new(&[
         "scheme",
         "iter time",
@@ -116,7 +119,7 @@ fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
         let r = run_pipeline(
             &w,
             scheme,
-            &cfg.env(),
+            &env,
             cfg.partition_size,
             cfg.ddp_bucket_mb,
             cfg.iterations,
@@ -138,8 +141,11 @@ fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
         ]);
     }
     println!(
-        "workload={} workers={} bw={}Gbps",
-        w.name, cfg.workers, cfg.bandwidth_gbps
+        "workload={} workers={} bw={}Gbps links={}",
+        w.name,
+        cfg.workers,
+        cfg.bandwidth_gbps,
+        env.link_names().join("+")
     );
     println!("{}", table.render());
     Ok(())
@@ -171,7 +177,7 @@ fn cmd_train(
 
     let mut trainer = Trainer::new(opts.clone()).map_err(|e| format!("{e:#}"))?;
     let profiles = trainer.profile_buckets(2).map_err(|e| format!("{e:#}"))?;
-    let scheduler = deft::bench::scheduler_for(cfg.scheme, cfg.preserver);
+    let scheduler = deft::bench::scheduler_for(cfg.scheme, cfg.preserver, &opts.env);
     let schedule = scheduler.schedule(&profiles);
     let report = trainer.run(&schedule, &profiles).map_err(|e| format!("{e:#}"))?;
 

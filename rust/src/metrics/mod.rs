@@ -1,15 +1,43 @@
 //! Metrics presentation: ASCII Gantt rendering (paper Figs. 11–13, 16),
 //! CSV export, and summary tables.
 
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::sim::{SimResult, SpanKind, StreamId, Timeline};
 use crate::util::Micros;
 
-/// Render a timeline window as an ASCII Gantt chart: one row per stream,
-/// bucket ids as glyphs (`0`-`9`, `a`-`z`), `.` for idle.
+/// Number of link rows to render: every named link plus any extra link
+/// index present in the timeline.
+fn link_row_count(timeline: &Timeline, link_names: &[String]) -> usize {
+    let in_timeline = timeline
+        .spans
+        .iter()
+        .filter_map(|s| match s.stream {
+            StreamId::Link(id) => Some(id.index() + 1),
+            StreamId::Compute => None,
+        })
+        .max()
+        .unwrap_or(0);
+    link_names.len().max(in_timeline)
+}
+
+fn link_label(link_names: &[String], k: usize) -> String {
+    link_names
+        .get(k)
+        .cloned()
+        .unwrap_or_else(|| format!("link{k}"))
+}
+
+/// Render a timeline window as an ASCII Gantt chart: one row per stream
+/// (compute + one per link, labelled from `link_names`), bucket ids as
+/// glyphs (`0`-`9`, `a`-`z`), `.` for idle.
 ///
 /// `window` selects the wall-clock range; `cols` the chart width.
-pub fn gantt(timeline: &Timeline, window: (Micros, Micros), cols: usize) -> String {
+pub fn gantt(
+    timeline: &Timeline,
+    window: (Micros, Micros),
+    cols: usize,
+    link_names: &[String],
+) -> String {
     assert!(window.1 > window.0 && cols > 0);
     let span = (window.1 - window.0).as_us() as f64;
     let glyph = |bucket: usize, upper: bool| -> char {
@@ -25,11 +53,12 @@ pub fn gantt(timeline: &Timeline, window: (Micros, Micros), cols: usize) -> Stri
         }
     };
 
-    let streams = [
-        (StreamId::Compute, "compute"),
-        (StreamId::Link(LinkKind::Nccl), "nccl   "),
-        (StreamId::Link(LinkKind::Gloo), "gloo   "),
-    ];
+    let n_links = link_row_count(timeline, link_names);
+    let mut streams: Vec<(StreamId, String)> = vec![(StreamId::Compute, "compute".to_string())];
+    for k in 0..n_links {
+        streams.push((StreamId::Link(LinkId(k)), link_label(link_names, k)));
+    }
+    let label_width = streams.iter().map(|(_, l)| l.len()).max().unwrap_or(7).max(7);
     let mut out = String::new();
     for (stream, label) in streams {
         let mut row = vec!['.'; cols];
@@ -50,7 +79,7 @@ pub fn gantt(timeline: &Timeline, window: (Micros, Micros), cols: usize) -> Stri
                 *c = glyph(bucket, upper);
             }
         }
-        out.push_str(label);
+        out.push_str(&format!("{label:<label_width$}"));
         out.push_str(" |");
         out.extend(row);
         out.push_str("|\n");
@@ -70,21 +99,28 @@ pub fn gantt_steady(result: &SimResult, cycle_iters: usize, cols: usize) -> Stri
             &result.timeline,
             (Micros::ZERO, result.total.max(Micros(1))),
             cols,
+            &result.link_names,
         );
     }
     let mid = iters / 2;
     let start = result.iter_ends[mid.saturating_sub(1)];
     let end = result.iter_ends[(mid + cycle_iters).min(iters - 1)];
-    gantt(&result.timeline, (start, end.max(start + Micros(1))), cols)
+    gantt(
+        &result.timeline,
+        (start, end.max(start + Micros(1))),
+        cols,
+        &result.link_names,
+    )
 }
 
-/// CSV export of a timeline (stream,kind,iter,bucket,start_us,end_us).
-pub fn timeline_csv(timeline: &Timeline) -> String {
+/// CSV export of a timeline (stream,kind,iter,bucket,start_us,end_us);
+/// link streams are labelled from `link_names` (registry order).
+pub fn timeline_csv(timeline: &Timeline, link_names: &[String]) -> String {
     let mut out = String::from("stream,kind,iter,bucket,merged,start_us,end_us\n");
     for s in &timeline.spans {
         let stream = match s.stream {
             StreamId::Compute => "compute".to_string(),
-            StreamId::Link(k) => k.name().to_string(),
+            StreamId::Link(id) => link_label(link_names, id.index()),
         };
         let (kind, iter, bucket, merged) = match &s.kind {
             SpanKind::Fwd { iter, bucket } => ("fwd", *iter, *bucket, 1),
@@ -155,6 +191,10 @@ mod tests {
     use super::*;
     use crate::sim::Span;
 
+    fn names(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn gantt_renders_spans() {
         let tl = Timeline {
@@ -166,7 +206,7 @@ mod tests {
                     end: Micros(50),
                 },
                 Span {
-                    stream: StreamId::Link(LinkKind::Nccl),
+                    stream: StreamId::Link(LinkId(0)),
                     kind: SpanKind::Comm {
                         iter: 0,
                         bucket: 2,
@@ -177,24 +217,61 @@ mod tests {
                 },
             ],
         };
-        let g = gantt(&tl, (Micros(0), Micros(100)), 20);
+        let g = gantt(&tl, (Micros(0), Micros(100)), 20, &names(&["nccl", "gloo"]));
         assert!(g.contains('1'), "fwd glyph missing: {g}");
         assert!(g.contains('2'), "comm glyph missing: {g}");
+        assert!(g.contains("nccl") && g.contains("gloo"), "labels missing: {g}");
         assert!(g.lines().count() >= 4);
+    }
+
+    #[test]
+    fn gantt_renders_a_row_per_registry_link() {
+        let tl = Timeline {
+            spans: vec![Span {
+                stream: StreamId::Link(LinkId(2)),
+                kind: SpanKind::Comm {
+                    iter: 0,
+                    bucket: 3,
+                    merged: 1,
+                },
+                start: Micros(0),
+                end: Micros(10),
+            }],
+        };
+        // Three named links → compute + 3 link rows + trailer.
+        let g = gantt(&tl, (Micros(0), Micros(10)), 10, &names(&["nvlink", "ib", "tcp"]));
+        assert!(g.contains("nvlink") && g.contains("ib") && g.contains("tcp"));
+        assert_eq!(g.lines().count(), 5, "{g}");
+        // Unnamed links fall back to an index label.
+        let g2 = gantt(&tl, (Micros(0), Micros(10)), 10, &[]);
+        assert!(g2.contains("link2"), "{g2}");
     }
 
     #[test]
     fn csv_has_all_spans() {
         let tl = Timeline {
-            spans: vec![Span {
-                stream: StreamId::Compute,
-                kind: SpanKind::Bwd { iter: 3, bucket: 7 },
-                start: Micros(10),
-                end: Micros(30),
-            }],
+            spans: vec![
+                Span {
+                    stream: StreamId::Compute,
+                    kind: SpanKind::Bwd { iter: 3, bucket: 7 },
+                    start: Micros(10),
+                    end: Micros(30),
+                },
+                Span {
+                    stream: StreamId::Link(LinkId(1)),
+                    kind: SpanKind::Comm {
+                        iter: 3,
+                        bucket: 7,
+                        merged: 2,
+                    },
+                    start: Micros(30),
+                    end: Micros(60),
+                },
+            ],
         };
-        let csv = timeline_csv(&tl);
+        let csv = timeline_csv(&tl, &names(&["nccl", "gloo"]));
         assert!(csv.contains("compute,bwd,3,7,1,10,30"));
+        assert!(csv.contains("gloo,comm,3,7,2,30,60"));
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! Output is a `Vec<BucketProfile>` priced on the reference (NCCL) link
 //! via the workload's calibrated rate and a [`ClusterEnv`].
 
-use crate::links::{ClusterEnv, LinkKind};
+use crate::links::{ClusterEnv, LinkId};
 use crate::models::{BucketProfile, Workload};
 use crate::util::Micros;
 
@@ -84,7 +84,7 @@ fn price(workload: &Workload, env: &ClusterEnv, segs: Vec<Segment>) -> Vec<Bucke
             params: s.params,
             fwd: s.fwd,
             bwd: s.bwd,
-            comm: env.bucket_comm(LinkKind::Nccl, s.params, workload.comm_rate_ref),
+            comm: env.bucket_comm(LinkId::REFERENCE, s.params, workload.comm_rate_ref),
         })
         .collect()
 }
@@ -206,18 +206,19 @@ fn usbyte_fuse(workload: &Workload, partition_size: u64) -> Vec<Segment> {
 }
 
 /// DeFT §III.D constraint: each bucket's *communication time* must be at
-/// most the smallest knapsack capacity — the forward time ÷ μ — otherwise
-/// it can never be packed. Oversized buckets are split into equal parts
-/// just small enough to satisfy the constraint.
+/// most the smallest knapsack capacity — the forward time ÷ μ of the
+/// slowest registry link — otherwise it can never be packed. Oversized
+/// buckets are split into equal parts just small enough to satisfy the
+/// constraint.
 fn deft_constrain(workload: &Workload, base: Vec<Segment>, env: &ClusterEnv) -> Vec<Segment> {
     let total_fwd = workload.total_fwd();
-    let cap = total_fwd.scale(1.0 / env.mu);
+    let cap = total_fwd.scale(1.0 / env.max_mu());
     if cap.is_zero() {
         return base;
     }
     let mut out = Vec::new();
     for seg in base {
-        let comm = env.bucket_comm(LinkKind::Nccl, seg.params, workload.comm_rate_ref);
+        let comm = env.bucket_comm(LinkId::REFERENCE, seg.params, workload.comm_rate_ref);
         if comm <= cap || seg.params <= 1 {
             out.push(seg);
             continue;
@@ -320,7 +321,7 @@ mod tests {
         let e = env();
         let b = partition(&w, Strategy::DeftConstrained { partition_size: 6_500_000 }, &e);
         conserved(&w, &b);
-        let cap = w.total_fwd().scale(1.0 / e.mu);
+        let cap = w.total_fwd().scale(1.0 / e.max_mu());
         for bucket in &b {
             assert!(
                 bucket.comm <= cap + Micros(1),

@@ -4,23 +4,16 @@
 //! → `XlaComputation` → `PjRtLoadedExecutable`. Outputs are 1-tuples
 //! (jax lowering uses `return_tuple=True`) that decompose into the
 //! manifest's declared outputs.
+//!
+//! The real engine needs the `xla` crate, which the offline image does
+//! not ship; it is gated behind the `pjrt` cargo feature. Without the
+//! feature, [`Engine`]/[`Executable`] present the same API but
+//! construction fails with a descriptive error, so every caller that
+//! self-skips on missing artifacts keeps working on a bare checkout.
 
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
-
-use super::manifest::{DType, ExeSpec, TensorSpec};
-
-/// A compiled executable plus its signature.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: ExeSpec,
-}
-
-/// The PJRT engine owning the client and compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
+use super::manifest::{DType, TensorSpec};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A host-side tensor travelling in/out of executables.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,7 +55,8 @@ impl HostTensor {
         }
     }
 
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+    /// Check this tensor against a manifest spec (dtype + element count).
+    fn check(&self, spec: &TensorSpec) -> Result<()> {
         if self.dtype() != spec.dtype {
             bail!(
                 "input `{}` dtype {} != provided {}",
@@ -79,8 +73,34 @@ impl HostTensor {
                 self.len()
             );
         }
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
+
+    use super::super::manifest::{DType, ExeSpec, TensorSpec};
+    use super::HostTensor;
+    use crate::bail;
+    use crate::util::error::{Context, Result};
+
+    /// A compiled executable plus its signature.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub spec: ExeSpec,
+    }
+
+    /// The PJRT engine owning the client and compiled executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
+    }
+
+    fn to_literal(t: &HostTensor, spec: &TensorSpec) -> Result<xla::Literal> {
+        t.check(spec)?;
         let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-        let lit = match self {
+        let lit = match t {
             HostTensor::F32(v) => xla::Literal::vec1(v),
             HostTensor::I32(v) => xla::Literal::vec1(v),
         };
@@ -95,8 +115,8 @@ impl HostTensor {
 
     fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
         let t = match spec.dtype {
-            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
-            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>().context("literal to f32")?),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>().context("literal to i32")?),
         };
         if t.len() != spec.elements() {
             bail!(
@@ -108,77 +128,125 @@ impl HostTensor {
         }
         Ok(t)
     }
-}
 
-impl Engine {
-    /// Create a CPU PJRT engine.
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, spec: &ExeSpec) -> Result<Executable> {
-        let path: &Path = &spec.file;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            spec: spec.clone(),
-        })
-    }
-}
-
-impl Executable {
-    /// Execute with host tensors; returns outputs in manifest order.
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "exe `{}` wants {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
+    impl Engine {
+        /// Create a CPU PJRT engine.
+        pub fn cpu() -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine { client })
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&self.spec.inputs)
-            .map(|(t, s)| t.to_literal(s))
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{}`", self.spec.name))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // jax lowers with return_tuple=True: the root is a tuple of the
-        // declared outputs.
-        let parts = root.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "exe `{}` returned {} outputs, manifest says {}",
-                self.spec.name,
-                parts.len(),
-                self.spec.outputs.len()
-            );
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        parts
-            .iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
-            .collect()
+
+        /// Load + compile one HLO-text artifact.
+        pub fn load(&self, spec: &ExeSpec) -> Result<Executable> {
+            let path: &Path = &spec.file;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable {
+                exe,
+                spec: spec.clone(),
+            })
+        }
+    }
+
+    impl Executable {
+        /// Execute with host tensors; returns outputs in manifest order.
+        pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            if inputs.len() != self.spec.inputs.len() {
+                bail!(
+                    "exe `{}` wants {} inputs, got {}",
+                    self.spec.name,
+                    self.spec.inputs.len(),
+                    inputs.len()
+                );
+            }
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .zip(&self.spec.inputs)
+                .map(|(t, s)| to_literal(t, s))
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing `{}`", self.spec.name))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // jax lowers with return_tuple=True: the root is a tuple of
+            // the declared outputs.
+            let parts = root.to_tuple().context("decomposing result tuple")?;
+            if parts.len() != self.spec.outputs.len() {
+                bail!(
+                    "exe `{}` returned {} outputs, manifest says {}",
+                    self.spec.name,
+                    parts.len(),
+                    self.spec.outputs.len()
+                );
+            }
+            parts
+                .iter()
+                .zip(&self.spec.outputs)
+                .map(|(lit, spec)| from_literal(lit, spec))
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::super::manifest::ExeSpec;
+    use super::HostTensor;
+    use crate::bail;
+    use crate::util::error::Result;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` feature (vendor the `xla` \
+         crate and enable it to execute HLO artifacts)";
+
+    /// Stub executable: carries the signature, cannot run.
+    pub struct Executable {
+        pub spec: ExeSpec,
+    }
+
+    /// Stub engine: same API as the real one, constructors fail.
+    pub struct Engine {
+        _priv: (),
+    }
+
+    impl Engine {
+        pub fn cpu() -> Result<Engine> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&self, _spec: &ExeSpec) -> Result<Executable> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            // Validate the signature anyway so misuse surfaces first.
+            for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+                t.check(s)?;
+            }
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+pub use imp::{Engine, Executable};
 
 #[cfg(test)]
 mod tests {
@@ -191,14 +259,19 @@ mod tests {
             dtype: DType::F32,
             dims: vec![2, 2],
         };
-        let ok = HostTensor::F32(vec![1.0; 4]).to_literal(&spec);
-        assert!(ok.is_ok());
-        let bad_len = HostTensor::F32(vec![1.0; 3]).to_literal(&spec);
-        assert!(bad_len.is_err());
-        let bad_ty = HostTensor::I32(vec![1; 4]).to_literal(&spec);
-        assert!(bad_ty.is_err());
+        assert!(HostTensor::F32(vec![1.0; 4]).check(&spec).is_ok());
+        assert!(HostTensor::F32(vec![1.0; 3]).check(&spec).is_err());
+        assert!(HostTensor::I32(vec![1; 4]).check(&spec).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let e = Engine::cpu().unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 
     // Engine-level integration tests live in rust/tests/runtime_e2e.rs —
-    // they need the artifacts built by `make artifacts`.
+    // they need the artifacts built by `make artifacts` and the `pjrt`
+    // feature.
 }

@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::config::toml_lite;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
 /// Element type of a tensor (the subset our models use).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,7 +60,7 @@ impl TensorSpec {
         } else {
             parts[2]
                 .split('x')
-                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("dim `{d}`: {e}")))
+                .map(|d| d.parse::<usize>().map_err(|e| err!("dim `{d}`: {e}")))
                 .collect::<Result<Vec<usize>>>()?
         };
         Ok(TensorSpec {
@@ -101,7 +102,7 @@ impl ArtifactManifest {
     }
 
     pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactManifest> {
-        let doc = toml_lite::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let doc = toml_lite::parse(text).map_err(|e| err!("{e}"))?;
         let mut meta = BTreeMap::new();
         let mut raw: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
         for (key, value) in doc.flatten() {
@@ -114,7 +115,7 @@ impl ArtifactManifest {
             } else if let Some(rest) = key.strip_prefix("exe.") {
                 let (exe, field) = rest
                     .rsplit_once('.')
-                    .ok_or_else(|| anyhow!("bad exe key `{key}`"))?;
+                    .ok_or_else(|| err!("bad exe key `{key}`"))?;
                 raw.entry(exe.to_string())
                     .or_default()
                     .insert(field.to_string(), sval);
@@ -126,11 +127,11 @@ impl ArtifactManifest {
         for (name, fields) in raw {
             let file = fields
                 .get("file")
-                .ok_or_else(|| anyhow!("exe `{name}` missing file"))?;
+                .ok_or_else(|| err!("exe `{name}` missing file"))?;
             let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
                 fields
                     .get(key)
-                    .ok_or_else(|| anyhow!("exe `{name}` missing {key}"))?
+                    .ok_or_else(|| err!("exe `{name}` missing {key}"))?
                     .split(';')
                     .filter(|s| !s.is_empty())
                     .map(TensorSpec::parse)
@@ -152,14 +153,14 @@ impl ArtifactManifest {
     pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
         self.exes
             .get(name)
-            .ok_or_else(|| anyhow!("manifest has no executable `{name}`"))
+            .ok_or_else(|| err!("manifest has no executable `{name}`"))
     }
 
     /// Integer metadata accessor.
     pub fn meta_usize(&self, key: &str) -> Result<usize> {
         self.meta
             .get(key)
-            .ok_or_else(|| anyhow!("manifest missing meta.{key}"))?
+            .ok_or_else(|| err!("manifest missing meta.{key}"))?
             .parse::<usize>()
             .with_context(|| format!("meta.{key} not an integer"))
     }

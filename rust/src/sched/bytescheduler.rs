@@ -9,7 +9,7 @@
 //! forward window (overlapping forward compute).
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::models::BucketProfile;
 
 /// Priority / sequential scheduler à la Bytescheduler & P3.
@@ -31,7 +31,7 @@ impl Scheduler for Bytescheduler {
         let bwd_ops = (0..n)
             .map(|bucket| CommOp {
                 bucket,
-                link: LinkKind::Nccl,
+                link: LinkId::REFERENCE,
                 stage: Stage::Backward,
                 priority: bucket as i64, // input-side first
                 grad_age: 0,

@@ -14,9 +14,10 @@
 //!   buckets into the forward-compute capacity (Case 1); the backward
 //!   stage packs old buckets first (Cases 2–3) and then this iteration's
 //!   buckets via Algorithm 1's recursive knapsack (Cases 3–4).
-//! * **Heterogeneous links**: with `heterogeneous`, every pack is a
-//!   two-knapsack problem — NCCL capacity C and gloo capacity C/μ (the
-//!   μ-slower link holds μ× less reference-time communication).
+//! * **Heterogeneous links**: with `heterogeneous`, every pack is an
+//!   N-knapsack problem — one knapsack per registry link, the capacity of
+//!   a μ-slower link being C/μ (it holds μ× less reference-time
+//!   communication). The paper's NCCL+gloo pair is the N = 2 case.
 //! * **Preserver feedback**: the resulting batch-multiplier sequence is
 //!   quantified with the Gaussian-walk model; if the expected-state ratio
 //!   leaves `[1−ε, 1+ε]`, knapsack capacities grow 15% and the schedule
@@ -28,7 +29,7 @@
 use std::collections::BTreeMap;
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkKind;
+use crate::links::{ClusterEnv, LinkId};
 use crate::models::BucketProfile;
 use crate::preserver::{self, WalkParams};
 use crate::solver::{multi_knapsack_greedy, Item};
@@ -37,9 +38,12 @@ use crate::util::Micros;
 /// DeFT configuration.
 #[derive(Clone, Debug)]
 pub struct DeftOptions {
-    /// gloo slowdown factor μ (paper: 1.65).
-    pub mu: f64,
-    /// Enable the heterogeneous (NCCL + gloo) second knapsack.
+    /// Per-link slowdown factors μ, in registry order (index = `LinkId`;
+    /// paper default: `[1.0, 1.65]` for NCCL + gloo). Build from an
+    /// environment via [`Deft::for_env`] / `ClusterEnv::link_mus`.
+    pub link_mus: Vec<f64>,
+    /// Use every registry link (true) or only the reference link (false —
+    /// the paper's §V.B.4 single-link ablation).
     pub heterogeneous: bool,
     /// Run the Preserver feedback loop (§IV.C.3).
     pub preserver: bool,
@@ -61,7 +65,7 @@ impl Default for DeftOptions {
     fn default() -> Self {
         let (walk, base_batch) = preserver::table5_setting();
         DeftOptions {
-            mu: crate::links::PAPER_MU,
+            link_mus: vec![1.0, crate::links::PAPER_MU],
             heterogeneous: true,
             preserver: true,
             epsilon: preserver::EPSILON,
@@ -81,10 +85,25 @@ pub struct Deft {
 
 impl Deft {
     pub fn new(opts: DeftOptions) -> Deft {
+        assert!(!opts.link_mus.is_empty(), "DeFT needs at least one link");
+        assert!(
+            opts.link_mus.iter().all(|&mu| mu > 0.0),
+            "link μ must be positive"
+        );
         Deft { opts }
     }
 
-    /// DeFT without the heterogeneous link (the paper's §V.B.4 ablation,
+    /// DeFT for a concrete cluster environment: the knapsack set follows
+    /// the environment's link registry (one knapsack per link).
+    pub fn for_env(env: &ClusterEnv, preserver: bool) -> Deft {
+        Deft::new(DeftOptions {
+            link_mus: env.link_mus(),
+            preserver,
+            ..DeftOptions::default()
+        })
+    }
+
+    /// DeFT without the heterogeneous links (the paper's §V.B.4 ablation,
     /// which also disables the Preserver guard).
     pub fn without_multilink() -> Deft {
         Deft {
@@ -94,6 +113,26 @@ impl Deft {
                 ..DeftOptions::default()
             },
         }
+    }
+
+    /// The μ factors of the links the scheduler may use: every registry
+    /// link, or just the reference link under the single-link ablation.
+    fn mus(&self) -> &[f64] {
+        if self.opts.heterogeneous {
+            &self.opts.link_mus
+        } else {
+            &self.opts.link_mus[..1]
+        }
+    }
+}
+
+/// Reference-time capacity lost on a μ-slower link when `release` of
+/// overlap compute disappears (the μ-slower knapsack holds μ× less).
+fn cap_loss(release: Micros, mu: f64) -> Micros {
+    if mu == 1.0 {
+        release
+    } else {
+        release.scale(1.0 / mu)
     }
 }
 
@@ -107,11 +146,11 @@ struct QItem {
 
 /// One stage's pack result: per-link chosen items.
 struct PackOut {
-    per_link: Vec<(LinkKind, Vec<QItem>)>,
+    per_link: Vec<(LinkId, Vec<QItem>)>,
 }
 
 impl PackOut {
-    fn shipped(&self) -> impl Iterator<Item = (LinkKind, QItem)> + '_ {
+    fn shipped(&self) -> impl Iterator<Item = (LinkId, QItem)> + '_ {
         self.per_link
             .iter()
             .flat_map(|(l, v)| v.iter().map(move |q| (*l, *q)))
@@ -134,22 +173,15 @@ struct QueueState {
 
 impl Deft {
     /// Capacities (reference-link time units) for one stage with compute
-    /// window `compute`.
+    /// window `compute` — one knapsack per usable link, a μ-slower link
+    /// holding μ× less reference-time communication.
     fn capacities(&self, compute: Micros, scale: f64) -> Vec<Micros> {
         let c = compute.scale(scale);
-        if self.opts.heterogeneous {
-            vec![c, c.scale(1.0 / self.opts.mu)]
-        } else {
-            vec![c]
-        }
+        self.mus().iter().map(|&mu| cap_loss(c, mu)).collect()
     }
 
-    fn link_of(&self, sack: usize) -> LinkKind {
-        if sack == 0 {
-            LinkKind::Nccl
-        } else {
-            LinkKind::Gloo
-        }
+    fn link_of(&self, sack: usize) -> LinkId {
+        LinkId(sack)
     }
 
     /// Greedy multi-knapsack pack of queue items (Cases 1–2, order1).
@@ -196,18 +228,14 @@ impl Deft {
             .map(|(_, q)| buckets[q.bucket].comm)
             .sum();
         let deferred = if items.len() > 1 {
+            let mus = self.mus();
             let reduced: Vec<Micros> = caps
                 .iter()
                 .enumerate()
                 .map(|(k, &c)| {
-                    // NCCL loses `release` of overlap; the μ-slower sack
-                    // loses release/μ in reference units.
-                    let loss = if k == 0 {
-                        release[1]
-                    } else {
-                        release[1].scale(1.0 / self.opts.mu)
-                    };
-                    c.saturating_sub(loss)
+                    // The reference link loses `release` of overlap; a
+                    // μ-slower sack loses release/μ in reference units.
+                    c.saturating_sub(cap_loss(release[1], mus[k]))
                 })
                 .collect();
             Some(self.recursive_pack(&items[1..], &release[1..], buckets, &reduced))
@@ -366,7 +394,7 @@ impl Deft {
                 for q in ready {
                     plan.bwd_ops.push(CommOp {
                         bucket: q.bucket,
-                        link: LinkKind::Nccl,
+                        link: LinkId::REFERENCE,
                         stage: Stage::Backward,
                         priority: -1, // it blocks the whole queue: go first
                         grad_age: 1,
@@ -399,8 +427,8 @@ impl Deft {
                     prio += 1;
                     st.current.retain(|c| c != &q);
                     // Consume capacity.
-                    let link_idx = if link == LinkKind::Nccl { 0 } else { 1 };
-                    caps[link_idx] = caps[link_idx].saturating_sub(buckets[q.bucket].comm);
+                    caps[link.index()] =
+                        caps[link.index()].saturating_sub(buckets[q.bucket].comm);
                 }
             }
 
@@ -418,17 +446,11 @@ impl Deft {
                 }
                 // Capacity excludes bucket n-1's backward (nothing is
                 // ready while it runs) — paper Alg. 2 line 15.
+                let mus = self.mus();
                 let caps2: Vec<Micros> = caps
                     .iter()
                     .enumerate()
-                    .map(|(k, &c)| {
-                        let loss = if k == 0 {
-                            buckets[n - 1].bwd
-                        } else {
-                            buckets[n - 1].bwd.scale(1.0 / self.opts.mu)
-                        };
-                        c.saturating_sub(loss)
-                    })
+                    .map(|(k, &c)| c.saturating_sub(cap_loss(buckets[n - 1].bwd, mus[k])))
                     .collect();
                 let out = self.recursive_pack(&items, &release, buckets, &caps2);
                 let offset = usize::from(st.active_iters > 0);
@@ -638,13 +660,44 @@ mod tests {
             ..DeftOptions::default()
         });
         let s = d.schedule(&vgg());
-        let gloo_ops = s
+        let slow_ops = s
             .cycle
             .iter()
             .flat_map(|p| p.all_ops())
-            .filter(|op| op.link == LinkKind::Gloo)
+            .filter(|op| op.link != LinkId::REFERENCE)
             .count();
-        assert!(gloo_ops > 0, "heterogeneous schedule never used gloo");
+        assert!(slow_ops > 0, "heterogeneous schedule never used the slow link");
+    }
+
+    #[test]
+    fn three_link_registry_spreads_load() {
+        // An N = 3 topology (nvlink + ib + tcp μs): DeFT must produce a
+        // valid, volume-conserving schedule whose ops only reference
+        // registered links.
+        let three = Deft::new(DeftOptions {
+            link_mus: vec![1.0, 2.5, 6.0],
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let s3 = three.schedule(&vgg());
+        s3.validate().unwrap();
+        for plan in &s3.cycle {
+            for op in plan.all_ops() {
+                assert!(op.link.index() < 3, "unregistered link {:?}", op.link);
+            }
+        }
+        // Volume conservation still holds with three knapsacks.
+        for b in 0..vgg().len() {
+            let shipped: usize = s3
+                .cycle
+                .iter()
+                .flat_map(|p| p.all_ops())
+                .filter(|op| op.bucket == b)
+                .map(|op| op.merged)
+                .sum();
+            assert_eq!(shipped, s3.cycle.len(), "bucket {b}");
+        }
+        assert!(s3.update_frequency() > 0.0);
     }
 
     #[test]

@@ -97,7 +97,7 @@ pub fn run_lifecycle(
             // Price on the reference link for the *target* environment
             // (the trace's comm column is from the profiling run).
             comm: env.bucket_comm(
-                crate::links::LinkKind::Nccl,
+                crate::links::LinkId::REFERENCE,
                 params,
                 workload.comm_rate_ref,
             ),
@@ -112,6 +112,9 @@ pub fn run_lifecycle(
         let deft = Deft::new(DeftOptions {
             capacity_scale: scale,
             preserver: false,
+            // The knapsack set always follows the target environment's
+            // link registry (one knapsack per link).
+            link_mus: env.link_mus(),
             ..opts.deft.clone()
         });
         let schedule = deft.schedule(&profile);

@@ -1,6 +1,6 @@
 //! The schedule plan language shared by all four schemes.
 
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::util::Micros;
 
 /// Launch window of a communication op within an iteration.
@@ -18,8 +18,8 @@ pub enum Stage {
 pub struct CommOp {
     /// Bucket id (forward order, 0 = input side — paper bucket #1).
     pub bucket: usize,
-    /// Transport link.
-    pub link: LinkKind,
+    /// Transport link (index into the environment's link registry).
+    pub link: LinkId,
     /// Launch window.
     pub stage: Stage,
     /// Link-queue priority: when several ops are ready, the link serves
@@ -55,7 +55,7 @@ pub enum FwdDependency {
 }
 
 /// Plan for one iteration of the steady-state cycle.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct IterPlan {
     /// Ops launched in the forward window, served by priority.
     pub fwd_ops: Vec<CommOp>,
@@ -76,7 +76,7 @@ impl IterPlan {
 }
 
 /// A steady-state schedule: `cycle` repeats forever.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Schedule {
     pub scheme: String,
     pub cycle: Vec<IterPlan>,
@@ -160,7 +160,7 @@ mod tests {
     fn op(bucket: usize) -> CommOp {
         CommOp {
             bucket,
-            link: LinkKind::Nccl,
+            link: LinkId::REFERENCE,
             stage: Stage::Backward,
             priority: 0,
             grad_age: 0,

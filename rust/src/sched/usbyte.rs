@@ -11,7 +11,7 @@
 //! once per schedule.
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::models::BucketProfile;
 use crate::util::Micros;
 
@@ -103,7 +103,7 @@ impl Scheduler for UsByte {
             .enumerate()
             .map(|(pos, &bucket)| CommOp {
                 bucket,
-                link: LinkKind::Nccl,
+                link: LinkId::REFERENCE,
                 stage: Stage::Backward,
                 priority: pos as i64,
                 grad_age: 0,

@@ -7,7 +7,7 @@
 //! dependencies.
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::models::BucketProfile;
 
 /// PyTorch DistributedDataParallel-style scheduler.
@@ -28,7 +28,7 @@ impl Scheduler for Wfbp {
             .enumerate()
             .map(|(rank, bucket)| CommOp {
                 bucket,
-                link: LinkKind::Nccl,
+                link: LinkId::REFERENCE,
                 stage: Stage::Backward,
                 priority: rank as i64, // readiness order
                 grad_age: 0,

@@ -3,7 +3,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::{Span, SpanKind, StreamId, Timeline};
-use crate::links::{ClusterEnv, LinkKind};
+use crate::links::{ClusterEnv, LinkId};
 use crate::models::BucketProfile;
 use crate::sched::{FwdDependency, Schedule, Stage};
 use crate::util::Micros;
@@ -44,8 +44,10 @@ pub struct SimResult {
     pub compute_bubbles: Micros,
     /// Average steady-state iteration time (excluding warm-up).
     pub steady_iter_time: Micros,
-    /// Per-link busy time.
-    pub link_busy: Vec<(LinkKind, Micros)>,
+    /// Per-link busy time, in registry order.
+    pub link_busy: Vec<(LinkId, Micros)>,
+    /// Link names in registry order (for timeline/metric rendering).
+    pub link_names: Vec<String>,
     pub timeline: Timeline,
 }
 
@@ -72,7 +74,7 @@ impl SimResult {
 #[derive(Clone, Debug)]
 struct OpInst {
     bucket: usize,
-    link: LinkKind,
+    link: LinkId,
     iter: usize,
     stage: Stage,
     priority: i64,
@@ -111,6 +113,8 @@ pub fn simulate(
     assert!(n > 0, "no buckets");
     let iters = opts.iterations;
     assert!(iters > 0);
+    let n_links = env.n_links();
+    assert!(n_links > 0, "environment has no links");
 
     // ---- Materialize op instances for every iteration. ----
     let cycle_len = schedule.cycle.len();
@@ -130,17 +134,12 @@ pub fn simulate(
                 !(op.grad_age == 0 && op.stage == Stage::Forward),
                 "op for current-iter grad cannot launch in forward window"
             );
-            let wire = match op.link {
-                LinkKind::Nccl => buckets[op.bucket].comm,
-                LinkKind::Gloo => {
-                    let base = buckets[op.bucket].comm.scale(env.mu);
-                    if env.multi_link {
-                        base
-                    } else {
-                        base.scale(1.0 + env.contention_penalty(buckets[op.bucket].params))
-                    }
-                }
-            };
+            assert!(
+                op.link.index() < n_links,
+                "op targets link {:?} but the environment registers only {n_links} links",
+                op.link
+            );
+            let wire = env.wire_time(op.link, buckets[op.bucket].comm, buckets[op.bucket].params);
             ops.push(OpInst {
                 bucket: op.bucket,
                 link: op.link,
@@ -194,7 +193,7 @@ pub fn simulate(
     }
 
     // ---- Event-driven execution. ----
-    // Resources: compute stream cursor + two link servers.
+    // Resources: compute stream cursor + one server per registry link.
     let mut now = Micros::ZERO;
     let mut timeline = Timeline::default();
     let record = |tl: &mut Timeline, span: Span| {
@@ -203,17 +202,12 @@ pub fn simulate(
         }
     };
 
-    // Per-link ready pools: ordered by (priority, iter, bucket, op idx).
-    let mut pool: BTreeMap<LinkKind, BTreeSet<(i64, usize, usize, usize)>> = BTreeMap::new();
-    pool.insert(LinkKind::Nccl, BTreeSet::new());
-    pool.insert(LinkKind::Gloo, BTreeSet::new());
-    // Link busy-until and in-flight op.
-    let mut link_free: BTreeMap<LinkKind, Micros> = BTreeMap::new();
-    link_free.insert(LinkKind::Nccl, Micros::ZERO);
-    link_free.insert(LinkKind::Gloo, Micros::ZERO);
-    let mut in_flight: BTreeMap<LinkKind, Option<usize>> = BTreeMap::new();
-    in_flight.insert(LinkKind::Nccl, None);
-    in_flight.insert(LinkKind::Gloo, None);
+    // Per-link ready pools (indexed by LinkId), ordered by
+    // (priority, iter, bucket, op idx).
+    let mut pool: Vec<BTreeSet<(i64, usize, usize, usize)>> = vec![BTreeSet::new(); n_links];
+    // Link busy-until and in-flight op, indexed by LinkId.
+    let mut link_free: Vec<Micros> = vec![Micros::ZERO; n_links];
+    let mut in_flight: Vec<Option<usize>> = vec![None; n_links];
 
     // Staleness-bound bookkeeping (incremental — a linear scan of all ops
     // per dispatch made the engine quadratic in iterations):
@@ -270,9 +264,7 @@ pub fn simulate(
                 let op = &mut ops[oi];
                 debug_assert!(op.ready.is_none());
                 op.ready = Some($time);
-                pool.get_mut(&op.link)
-                    .unwrap()
-                    .insert((op.priority, op.iter, op.bucket, oi));
+                pool[op.link.index()].insert((op.priority, op.iter, op.bucket, oi));
             }
         };
     }
@@ -293,33 +285,33 @@ pub fn simulate(
         let mut progressed = false;
 
         // --- 1. Dispatch links: serve best ready op if free. ---
-        for kind in LinkKind::ALL {
-            if in_flight[&kind].is_some() {
+        for k in 0..n_links {
+            if in_flight[k].is_some() {
                 continue;
             }
-            let free_at = link_free[&kind].max(Micros::ZERO);
+            let free_at = link_free[k].max(Micros::ZERO);
             // Ops are inserted into the pool at the very event that made
             // them ready (ready ≤ now always), so the best candidate is
             // simply the first element in (priority, iter, bucket) order.
-            let candidate = pool[&kind]
+            let candidate = pool[k]
                 .first()
                 .filter(|&&(_, _, _, oi)| ops[oi].ready.unwrap() <= now.max(free_at))
                 .copied();
             if let Some(key) = candidate {
                 let oi = key.3;
-                pool.get_mut(&kind).unwrap().remove(&key);
-                let start = ops[oi].ready.unwrap().max(link_free[&kind]).max(
+                pool[k].remove(&key);
+                let start = ops[oi].ready.unwrap().max(link_free[k]).max(
                     // Links are causal: cannot start in the past.
                     Micros::ZERO,
                 );
                 let end = start + ops[oi].wire;
                 ops[oi].done = Some(end);
-                *link_free.get_mut(&kind).unwrap() = end;
-                *in_flight.get_mut(&kind).unwrap() = Some(oi);
+                link_free[k] = end;
+                in_flight[k] = Some(oi);
                 record(
                     &mut timeline,
                     Span {
-                        stream: StreamId::Link(kind),
+                        stream: StreamId::Link(LinkId(k)),
                         kind: SpanKind::Comm {
                             iter: ops[oi].iter,
                             bucket: ops[oi].bucket,
@@ -435,9 +427,9 @@ pub fn simulate(
         if comp_running {
             consider(comp_busy_until, &mut next_time);
         }
-        for kind in LinkKind::ALL {
-            if in_flight[&kind].is_some() {
-                consider(link_free[&kind], &mut next_time);
+        for k in 0..n_links {
+            if in_flight[k].is_some() {
+                consider(link_free[k], &mut next_time);
             }
             // Idle links need no wake-up: pool entries are ready the
             // moment they are inserted (see the dispatch invariant), so
@@ -457,10 +449,10 @@ pub fn simulate(
 
         // --- 4. Fire completions at `now`. ---
         // Link completions.
-        for kind in LinkKind::ALL {
-            if let Some(oi) = in_flight[&kind] {
+        for k in 0..n_links {
+            if let Some(oi) = in_flight[k] {
                 if ops[oi].done.unwrap() <= now {
-                    *in_flight.get_mut(&kind).unwrap() = None;
+                    in_flight[k] = None;
                     // Advance the staleness watermark.
                     let op_iter = ops[oi].iter;
                     let done_t = ops[oi].done.unwrap();
@@ -584,13 +576,12 @@ pub fn simulate(
     let compute_span_start = first_comp_start.unwrap_or(Micros::ZERO);
     let compute_bubbles = (compute_span_end - compute_span_start).saturating_sub(compute_busy);
 
-    let link_busy = LinkKind::ALL
-        .iter()
-        .map(|&k| {
+    let link_busy = (0..n_links)
+        .map(|k| {
             (
-                k,
+                LinkId(k),
                 ops.iter()
-                    .filter(|o| o.link == k)
+                    .filter(|o| o.link.index() == k)
                     .map(|o| o.wire)
                     .sum::<Micros>(),
             )
@@ -605,6 +596,7 @@ pub fn simulate(
         compute_bubbles,
         steady_iter_time,
         link_busy,
+        link_names: env.link_names(),
         timeline,
     }
 }

@@ -6,8 +6,10 @@
 //!
 //! * one serial **compute stream** per data-parallel group (forward
 //!   bucket 0‥N−1, then backward N−1‥0 each iteration);
-//! * one serial **communication stream per link** (NCCL, gloo), served by
-//!   op priority among *ready* ops (non-preemptive);
+//! * one serial **communication stream per registry link** (the paper's
+//!   NCCL + gloo pair, or any N-link topology from
+//!   [`crate::links::ClusterEnv`]), served by op priority among *ready*
+//!   ops (non-preemptive);
 //! * a gradient's communication may not start before its producing
 //!   backward finishes (unless it carries an older iteration's gradient —
 //!   DeFT's delayed updates);
@@ -24,14 +26,14 @@ mod engine;
 pub use convergence::{training_curve, ConvergenceModel, TrainingCurve};
 pub use engine::{simulate, SimOptions, SimResult};
 
-use crate::links::LinkKind;
+use crate::links::LinkId;
 use crate::util::Micros;
 
 /// Which resource a timeline span occupied.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StreamId {
     Compute,
-    Link(LinkKind),
+    Link(LinkId),
 }
 
 /// What the span did.
@@ -135,7 +137,7 @@ mod tests {
                     end: Micros(20),
                 },
                 Span {
-                    stream: StreamId::Link(LinkKind::Nccl),
+                    stream: StreamId::Link(LinkId(0)),
                     kind: SpanKind::Comm {
                         iter: 0,
                         bucket: 0,
@@ -148,7 +150,7 @@ mod tests {
         };
         assert_eq!(t.busy(StreamId::Compute), Micros(15));
         assert_eq!(t.bubbles(StreamId::Compute), Micros(5));
-        assert_eq!(t.busy(StreamId::Link(LinkKind::Nccl)), Micros(20));
+        assert_eq!(t.busy(StreamId::Link(LinkId(0))), Micros(20));
         assert_eq!(t.end_time(), Micros(30));
     }
 }

@@ -87,13 +87,14 @@ pub fn knapsack_exact(items: &[Item], capacity: Micros) -> PackResult {
 ///
 /// Returns `(assignments, total)` where `assignments[k]` lists the ids in
 /// knapsack `k`. Exhaustive DFS over (M+1)-way item placement with the
-/// fractional bound; intended for M ≤ 3, N ≤ 18 (test/bench scale).
+/// fractional bound; intended for M ≤ 4 (the N-link topology registry's
+/// test range), N ≤ 18 (test/bench scale).
 pub fn multi_knapsack_exact(
     items: &[Item],
     capacities: &[Micros],
 ) -> (Vec<Vec<usize>>, Micros) {
     assert!(items.len() <= 18, "exact multi-knapsack limited to 18 items");
-    assert!(capacities.len() <= 3, "exact multi-knapsack limited to 3 sacks");
+    assert!(capacities.len() <= 4, "exact multi-knapsack limited to 4 sacks");
 
     let mut order: Vec<&Item> = items.iter().collect();
     order.sort_by(|a, b| b.comm.cmp(&a.comm).then(a.id.cmp(&b.id)));
@@ -217,6 +218,37 @@ mod tests {
             let gr = multi_knapsack_greedy(&its, &caps);
             if e_total < gr.total {
                 return Err(format!("exact {e_total:?} < greedy {:?}", gr.total));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_greedy_never_exceeds_exact_on_n_link_instances() {
+        // The registry generalizes the solver path to N knapsacks (one
+        // per link). For N ∈ {2, 3, 4}: the paper's greedy must never
+        // pack more total time than the exact optimum, must respect every
+        // capacity, and the exact optimum must fit the capacities too.
+        check("greedy <= exact (N-link)", 50, |g| {
+            for n_links in 2..=4usize {
+                let comms = g.vec_u64(0..=9, 0..=120);
+                let caps_raw = g.vec_u64(n_links..=n_links, 0..=360);
+                let caps: Vec<Micros> = caps_raw.iter().map(|&c| Micros(c)).collect();
+                let its = mk(&comms);
+                let (assign, e_total) = multi_knapsack_exact(&its, &caps);
+                let gr = multi_knapsack_greedy(&its, &caps);
+                if gr.total > e_total {
+                    return Err(format!(
+                        "N={n_links}: greedy {:?} beats exact {e_total:?}",
+                        gr.total
+                    ));
+                }
+                for (k, sack) in assign.iter().enumerate() {
+                    let used: Micros = sack.iter().map(|&id| its[id].comm).sum();
+                    if used > caps[k] {
+                        return Err(format!("N={n_links}: exact sack {k} over capacity"));
+                    }
+                }
             }
             Ok(())
         });

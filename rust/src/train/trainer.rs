@@ -3,7 +3,8 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Error, Result};
+use crate::bail;
 
 use super::data::{CorpusGen, DataOptions};
 use crate::config::Scheme;
@@ -244,7 +245,7 @@ impl Trainer {
         schedule: &Schedule,
         profiles: &[BucketProfile],
     ) -> Result<TrainReport> {
-        schedule.validate().map_err(|e| anyhow::anyhow!(e))?;
+        schedule.validate().map_err(Error::msg)?;
         let cycle = schedule.cycle.len();
         let mut losses = Vec::new();
         let mut updates = 0usize;

@@ -13,12 +13,15 @@
 //!   integer/vec generators, shrinking) used by the test suite.
 //! * [`mathx`] — erf/Φ (normal CDF) needed by the Preserver's
 //!   Gaussian-walk quantifier.
+//! * [`error`] — a string-backed error/context substrate (no `anyhow`)
+//!   used by the runtime and trainer layers.
 
 pub mod time;
 pub mod rng;
 pub mod stats;
 pub mod prop;
 pub mod mathx;
+pub mod error;
 
 pub use rng::Rng;
 pub use time::Micros;

@@ -1,0 +1,279 @@
+//! Regression parity: the `paper-2link` registry preset must reproduce
+//! the pre-refactor `LinkKind` enum (NCCL/gloo) **exactly** — same wire
+//! pricing, same schedules, same `SimResult` metrics — for all four
+//! schemes. The old enum's two-link cost model is reimplemented verbatim
+//! below as the reference oracle; the discrete-event engine is shared, so
+//! op-for-op wire equality plus schedule equality implies bit-for-bit
+//! metric equality (which the sim-level assertions then confirm).
+
+use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::{ClusterEnv, LinkId, LinkPreset, LinkSpec, PAPER_MU};
+use deft::models::{gpt2_buckets_calibrated, vgg19_table2_buckets, BucketProfile};
+use deft::sched::{Bytescheduler, Deft, DeftOptions, Schedule, Scheduler, UsByte, Wfbp};
+use deft::sim::{simulate, SimOptions, SimResult};
+use deft::util::Micros;
+
+/// The deleted enum's wire-time rule, verbatim: NCCL ships at the
+/// reference time; gloo at μ×, with the Table IV contention ramp when
+/// both libraries share a NIC.
+fn legacy_wire(env: &ClusterEnv, link: LinkId, comm: Micros, params: u64, single_nic: bool) -> Micros {
+    match link.index() {
+        0 => comm,
+        1 => {
+            let t = comm.scale(PAPER_MU);
+            if single_nic {
+                t.scale(1.0 + env.contention_penalty(params))
+            } else {
+                t
+            }
+        }
+        other => panic!("paper-2link schedule used unknown link {other}"),
+    }
+}
+
+fn schedulers() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(Wfbp),
+        Box::new(Bytescheduler),
+        Box::new(UsByte),
+        Box::new(Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        })),
+        Box::new(Deft::without_multilink()),
+    ]
+}
+
+fn sim(buckets: &[BucketProfile], schedule: &Schedule, env: &ClusterEnv) -> SimResult {
+    simulate(
+        buckets,
+        schedule,
+        env,
+        &SimOptions {
+            iterations: (schedule.cycle.len() * 4).max(24),
+            warmup: schedule.cycle.len().max(4),
+            record_timeline: true,
+        },
+    )
+}
+
+/// `paper_testbed()` and the preset must be the same registry, with
+/// exactly the old enum's constants.
+#[test]
+fn paper_preset_matches_old_constants() {
+    let env = ClusterEnv::paper_testbed();
+    assert_eq!(env.links, LinkPreset::Paper2Link.links());
+    assert_eq!(env.n_links(), 2);
+    let nccl = env.spec(LinkId(0));
+    let gloo = env.spec(LinkId(1));
+    assert_eq!(nccl.name, "nccl");
+    assert_eq!(gloo.name, "gloo");
+    assert!((nccl.mu - 1.0).abs() < 1e-12);
+    assert!((gloo.mu - PAPER_MU).abs() < 1e-12);
+    assert_eq!(nccl.alpha, Micros(300));
+    assert_eq!(gloo.alpha, Micros(900));
+    // Dual NICs: nobody contends. Single NIC: only gloo does (the old
+    // `multi_link: false` flag).
+    assert!(!env.contended(LinkId(0)) && !env.contended(LinkId(1)));
+    let single = ClusterEnv::paper_testbed().with_single_link();
+    assert!(!single.contended(LinkId(0)));
+    assert!(single.contended(LinkId(1)));
+    assert_eq!(single.links, LinkPreset::SingleNic.links());
+}
+
+/// Every op of every scheme prices identically to the legacy enum rule,
+/// in both the dual-NIC and single-NIC configurations.
+#[test]
+fn wire_pricing_matches_legacy_enum() {
+    let multi = ClusterEnv::paper_testbed();
+    let single = ClusterEnv::paper_testbed().with_single_link();
+    for buckets in [vgg19_table2_buckets(), gpt2_buckets_calibrated()] {
+        for s in schedulers() {
+            let schedule = s.schedule(&buckets);
+            for plan in &schedule.cycle {
+                for op in plan.all_ops() {
+                    let b = &buckets[op.bucket];
+                    assert_eq!(
+                        multi.wire_time(op.link, b.comm, b.params),
+                        legacy_wire(&multi, op.link, b.comm, b.params, false),
+                        "{}: multi-NIC wire mismatch on bucket {}",
+                        s.name(),
+                        op.bucket
+                    );
+                    assert_eq!(
+                        single.wire_time(op.link, b.comm, b.params),
+                        legacy_wire(&single, op.link, b.comm, b.params, true),
+                        "{}: single-NIC wire mismatch on bucket {}",
+                        s.name(),
+                        op.bucket
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The microbenchmark pricing (`allreduce_us`) matches the legacy enum's
+/// closed form across the Table IV size sweep, including the gloo
+/// oversize ramp and single-NIC contention.
+#[test]
+fn allreduce_matches_legacy_closed_form() {
+    let multi = ClusterEnv::paper_testbed();
+    let single = ClusterEnv::paper_testbed().with_single_link();
+    // Legacy constants, lifted from the deleted enum implementation.
+    let legacy = |env: &ClusterEnv, gloo: bool, single_nic: bool, params: u64| -> Micros {
+        if params == 0 {
+            return Micros::ZERO;
+        }
+        let ring = 2.0 * (env.workers as f64 - 1.0) / env.workers as f64;
+        let bytes = params as f64 * 4.0 * ring;
+        let wire_bytes_per_us = env.bandwidth_gbps * 1e9 / 8.0 / 1e6;
+        let base_us = bytes / (wire_bytes_per_us * 0.469);
+        if !gloo {
+            return Micros(300) + Micros::from_us_f64(base_us);
+        }
+        let knee = 33.6e6;
+        let p = params as f64;
+        let oversize = if p <= knee {
+            1.0
+        } else {
+            1.0 + 0.12 * ((p - knee) / knee).min(1.0)
+        };
+        let t = Micros(900) + Micros::from_us_f64(base_us * 1.65 * oversize);
+        if single_nic {
+            t.scale(1.0 + env.contention_penalty(params))
+        } else {
+            t
+        }
+    };
+    for params in [0u64, 1_048_576, 4_194_304, 8_388_608, 16_777_216, 33_554_432, 50_000_000, 67_108_864, 134_217_728] {
+        assert_eq!(
+            multi.allreduce_us(LinkId(0), params),
+            legacy(&multi, false, false, params),
+            "nccl @ {params}"
+        );
+        assert_eq!(
+            multi.allreduce_us(LinkId(1), params),
+            legacy(&multi, true, false, params),
+            "gloo multi @ {params}"
+        );
+        assert_eq!(
+            single.allreduce_us(LinkId(1), params),
+            legacy(&single, true, true, params),
+            "gloo single @ {params}"
+        );
+        // NCCL is never penalized by NIC sharing.
+        assert_eq!(
+            single.allreduce_us(LinkId(0), params),
+            multi.allreduce_us(LinkId(0), params)
+        );
+    }
+}
+
+/// Full pipeline parity: building the environment from the preset, from
+/// `paper_testbed()`, and from hand-rolled `LinkSpec`s must yield
+/// identical schedules and identical `SimResult` metrics for all four
+/// schemes (plus the no-multilink ablation) on the Table II profile.
+#[test]
+fn schedules_and_metrics_are_identical_across_constructions() {
+    let buckets = vgg19_table2_buckets();
+    let by_hand = ClusterEnv::paper_testbed().with_links(vec![
+        LinkSpec::new("nccl", 1.0).with_alpha(Micros(300)).with_group(0),
+        LinkSpec::new("gloo", PAPER_MU)
+            .with_alpha(Micros(900))
+            .with_group(1)
+            .with_staging_ramp(0.12),
+    ]);
+    let from_preset = LinkPreset::Paper2Link.env();
+    let testbed = ClusterEnv::paper_testbed();
+
+    for s in schedulers() {
+        let schedule = s.schedule(&buckets);
+        let r_hand = sim(&buckets, &schedule, &by_hand);
+        let r_preset = sim(&buckets, &schedule, &from_preset);
+        let r_testbed = sim(&buckets, &schedule, &testbed);
+        for (a, b) in [(&r_hand, &r_preset), (&r_preset, &r_testbed)] {
+            assert_eq!(a.steady_iter_time, b.steady_iter_time, "{}", s.name());
+            assert_eq!(a.total, b.total, "{}", s.name());
+            assert_eq!(a.compute_bubbles, b.compute_bubbles, "{}", s.name());
+            assert_eq!(a.update_times, b.update_times, "{}", s.name());
+            assert_eq!(a.link_busy, b.link_busy, "{}", s.name());
+            assert_eq!(a.iter_ends, b.iter_ends, "{}", s.name());
+        }
+        // Per-link busy equals the sum of legacy-priced wire times: the
+        // metric the engine reports is exactly what the old enum charged.
+        let iters = r_testbed.iter_ends.len();
+        for (link, busy) in &r_testbed.link_busy {
+            let mut expect = Micros::ZERO;
+            for t in 0..iters {
+                let plan = &schedule.cycle[t % schedule.cycle.len()];
+                for op in plan.all_ops().filter(|op| op.link == *link) {
+                    let b = &buckets[op.bucket];
+                    expect += legacy_wire(&testbed, *link, b.comm, b.params, false);
+                }
+            }
+            assert_eq!(*busy, expect, "{}: link {:?} busy", s.name(), link);
+        }
+    }
+}
+
+/// Determinism guard: scheduling twice and simulating twice must agree
+/// with itself (the registry introduced no iteration-order dependence).
+#[test]
+fn scheduling_is_deterministic_under_the_registry() {
+    let buckets = vgg19_table2_buckets();
+    let env = ClusterEnv::paper_testbed();
+    for s in schedulers() {
+        let a = s.schedule(&buckets);
+        let b = s.schedule(&buckets);
+        assert_eq!(a, b, "{} schedule nondeterministic", s.name());
+        let ra = sim(&buckets, &a, &env);
+        let rb = sim(&buckets, &b, &env);
+        assert_eq!(ra.steady_iter_time, rb.steady_iter_time);
+        assert_eq!(ra.link_busy, rb.link_busy);
+    }
+}
+
+/// The full paper pipeline (partition → schedule → simulate) still
+/// reproduces the headline orderings under the registry — a coarse but
+/// end-to-end guard that `paper-2link` behaves as the old enum did.
+#[test]
+fn pipeline_orderings_survive_the_refactor() {
+    let env = ClusterEnv::paper_testbed();
+    let w = workload_by_name("vgg19");
+    let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+    let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+    assert!(deft.sim.steady_iter_time < ddp.sim.steady_iter_time);
+    // DeFT's heterogeneous schedule uses the slow link.
+    assert!(deft
+        .schedule
+        .cycle
+        .iter()
+        .flat_map(|p| p.all_ops())
+        .any(|op| op.link == LinkId(1)));
+    // And the engine's registry-wide accounting covers both links.
+    assert_eq!(deft.sim.link_busy.len(), 2);
+    assert_eq!(deft.sim.link_names, vec!["nccl".to_string(), "gloo".to_string()]);
+}
+
+/// The 3-link preset runs the whole pipeline end-to-end — the scenario
+/// the enum could never express.
+#[test]
+fn nvlink_ib_tcp_runs_end_to_end() {
+    let env = LinkPreset::NvlinkIbTcp.env();
+    assert_eq!(env.n_links(), 3);
+    let buckets = vgg19_table2_buckets();
+    let deft = Deft::for_env(&env, false);
+    let schedule = deft.schedule(&buckets);
+    schedule.validate().unwrap();
+    let r = sim(&buckets, &schedule, &env);
+    assert_eq!(r.link_busy.len(), 3);
+    assert!(r.steady_iter_time.as_us() > 0);
+    let used: usize = r
+        .link_busy
+        .iter()
+        .filter(|(_, busy)| !busy.is_zero())
+        .count();
+    assert!(used >= 2, "3-link DeFT schedule used only {used} link(s)");
+}

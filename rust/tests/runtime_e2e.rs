@@ -175,10 +175,11 @@ fn trainer_end_to_end_short_run() {
         log_every: 2,
         env: ClusterEnv::paper_testbed().with_workers(2),
     };
+    let env = opts.env.clone();
     let mut trainer = Trainer::new(opts).unwrap();
     let profiles = trainer.profile_buckets(1).unwrap();
     assert_eq!(profiles.len(), trainer.n_buckets());
-    let scheduler = deft::bench::scheduler_for(Scheme::Deft, false);
+    let scheduler = deft::bench::scheduler_for(Scheme::Deft, false, &env);
     let schedule = scheduler.schedule(&profiles);
     let report = trainer.run(&schedule, &profiles).unwrap();
     assert!(report.updates > 0, "no updates fired");

@@ -3,7 +3,7 @@
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{ClusterEnv, LinkKind};
+use deft::links::{ClusterEnv, LinkId};
 use deft::models::{vgg19_table2_buckets, BucketProfile};
 use deft::sched::{Bytescheduler, Deft, DeftOptions, Scheduler, UsByte, Wfbp};
 use deft::sim::{simulate, SimOptions, StreamId};
@@ -121,7 +121,7 @@ fn simulator_conserves_time() {
     let compute_busy = r.timeline.busy(StreamId::Compute);
     let per_iter: Micros = buckets.iter().map(|b| b.fwd + b.bwd).sum();
     assert_eq!(compute_busy, per_iter * iters as u64);
-    let nccl_busy = r.timeline.busy(StreamId::Link(LinkKind::Nccl));
+    let nccl_busy = r.timeline.busy(StreamId::Link(LinkId::REFERENCE));
     let comm_per_iter: Micros = buckets.iter().map(|b| b.comm).sum();
     assert_eq!(nccl_busy, comm_per_iter * iters as u64);
 }
