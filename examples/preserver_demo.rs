@@ -59,7 +59,8 @@ fn main() {
                     partition_size: PAPER_PARTITION,
                 },
                 &env,
-            );
+            )
+            .expect("partition");
             let schedule = Deft::new(DeftOptions {
                 preserver: false,
                 ..DeftOptions::default()

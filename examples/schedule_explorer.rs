@@ -3,28 +3,38 @@
 //! profiler round-trip (raw operator trace → bucket reconstruction →
 //! schedule) and a per-link busy/bubble table.
 //!
-//! Run: `cargo run --release --example schedule_explorer -- [workload] [--links <preset>]`
+//! Run: `cargo run --release --example schedule_explorer -- [workload]
+//!        [--links <preset>] [--ranks-per-node <n>]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
-//!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link)
+//!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
+//!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
+//!  the intra-node segment and link 1 as its cross-node fabric)
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{LinkId, LinkPreset};
-use deft::metrics::{gantt_steady, Table};
+use deft::links::{LinkId, LinkPreset, Topology};
+use deft::metrics::{gantt_steady, link_table};
 use deft::models::BucketProfile;
 use deft::profiler::{generate_trace, reconstruct, TraceOptions};
 use deft::sched::feature_matrix;
-use deft::sim::{SimResult, StreamId};
 
-fn parse_args() -> (String, LinkPreset) {
+fn parse_args() -> (String, LinkPreset, usize) {
     let mut workload = "vgg19".to_string();
     let mut preset = LinkPreset::Paper2Link;
+    let mut ranks_per_node = 1usize;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         let looked_up = if let Some(v) = a.strip_prefix("--links=") {
             Some(v.to_string())
         } else if a == "--links" {
             Some(args.next().expect("--links needs a preset name"))
+        } else if let Some(v) = a.strip_prefix("--ranks-per-node=") {
+            ranks_per_node = v.parse().expect("--ranks-per-node needs an integer");
+            None
+        } else if a == "--ranks-per-node" {
+            let v = args.next().expect("--ranks-per-node needs an integer");
+            ranks_per_node = v.parse().expect("--ranks-per-node needs an integer");
+            None
         } else {
             workload = a;
             None
@@ -42,31 +52,16 @@ fn parse_args() -> (String, LinkPreset) {
             });
         }
     }
-    (workload, preset)
-}
-
-/// Per-link busy/bubble table computed from the simulation timeline.
-fn link_table(sim: &SimResult) -> String {
-    let mut t = Table::new(&["link", "busy", "bubbles", "utilization"]);
-    for (k, name) in sim.link_names.iter().enumerate() {
-        let stream = StreamId::Link(LinkId(k));
-        let busy = sim.timeline.busy(stream);
-        let bubbles = sim.timeline.bubbles(stream);
-        let span = busy + bubbles;
-        let util = if span.is_zero() {
-            "-".to_string()
-        } else {
-            format!("{:.1}%", busy.ratio(span) * 100.0)
-        };
-        t.row(&[name.clone(), format!("{busy}"), format!("{bubbles}"), util]);
-    }
-    t.render()
+    (workload, preset, ranks_per_node)
 }
 
 fn main() {
-    let (name, preset) = parse_args();
+    let (name, preset, ranks_per_node) = parse_args();
     let workload = workload_by_name(&name);
-    let env = preset.env();
+    let mut env = preset.env();
+    if ranks_per_node > 1 {
+        env = env.with_topology(Topology::hierarchical(ranks_per_node, LinkId(0), LinkId(1)));
+    }
 
     println!("=== Table III: scheme feature matrix ===\n{}", feature_matrix());
 

@@ -43,7 +43,8 @@ fn main() {
                 partition_size: PAPER_PARTITION,
             },
             &env,
-        );
+        )
+        .expect("partition");
         let variants: Vec<(&str, Deft)> = vec![
             ("B: + delayed updates (single link)", Deft::without_multilink()),
             (

@@ -47,7 +47,8 @@ fn main() {
                 partition_size: PAPER_PARTITION,
             },
             &env,
-        );
+        )
+        .expect("partition");
         let s = deft::bench::scheduler_for(scheme, true, &env);
         let (med, _) = time_it(2, 10, || {
             std::hint::black_box(s.schedule(&buckets));

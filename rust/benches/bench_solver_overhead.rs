@@ -36,7 +36,8 @@ fn main() {
                 partition_size: PAPER_PARTITION,
             },
             &env,
-        );
+        )
+        .expect("partition");
         let deft = Deft::new(DeftOptions {
             preserver: true,
             ..DeftOptions::default()

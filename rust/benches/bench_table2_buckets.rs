@@ -43,7 +43,8 @@ fn main() {
             partition_size: PAPER_PARTITION,
         },
         &ClusterEnv::paper_testbed(),
-    );
+    )
+    .expect("partition");
     let mut t2 = Table::new(&["bucket", "params", "forward(us)", "backward(us)", "comm(us)"]);
     for b in &buckets {
         t2.row(&[

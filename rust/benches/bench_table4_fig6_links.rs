@@ -10,7 +10,7 @@
 //!   ratio stabilises at μ ≈ 1.59–1.69 (set to 1.65).
 
 use deft::bench::PAPER_PARTITION;
-use deft::links::{ClusterEnv, LinkPreset};
+use deft::links::{ClusterEnv, LinkId, LinkPreset, Topology};
 use deft::metrics::Table;
 use deft::models::vgg19;
 use deft::partition::{partition, Strategy};
@@ -108,7 +108,8 @@ fn main() {
                 partition_size: PAPER_PARTITION,
             },
             &env,
-        );
+        )
+        .expect("partition");
         let deft = Deft::for_env(&env, false);
         let schedule = deft.schedule(&buckets);
         let sim = simulate(
@@ -147,4 +148,35 @@ fn main() {
         prev_eff_cr = eff_cr;
     }
     println!("{}", t3.render());
+
+    // === Rank-level topology: the same registry, hierarchically. With
+    // NVLink as the node-local segment (intra) and IB as its cross-node
+    // fabric, growing the node moves traffic onto the fast segment: the
+    // effective path slowdown of every fabric falls below its raw μ and
+    // the 33.5M-param allreduce gets monotonically cheaper.
+    println!("\n=== Rank-level topology: hierarchical allreduce vs ranks/node ===\n");
+    let base = LinkPreset::NvlinkIbTcp.env();
+    let ib = base.link("ib").expect("ib registered");
+    let mut t4 = Table::new(&["ranks/node", "path mu(ib)", "path mu(tcp)", "ib allreduce 33.5M"]);
+    let mut prev = Micros::MAX;
+    for rpn in [1usize, 2, 4, 8] {
+        let env = if rpn == 1 {
+            base.clone()
+        } else {
+            base.clone().with_topology(Topology::hierarchical(rpn, LinkId(0), LinkId(1)))
+        };
+        let a = env.allreduce_us(ib, 33_554_432);
+        t4.row(&[
+            rpn.to_string(),
+            format!("{:.3}", env.path_mu(ib)),
+            format!("{:.3}", env.path_mu(LinkId(2))),
+            format!("{:.1}ms", a.as_ms_f64()),
+        ]);
+        assert!(
+            a <= prev,
+            "hierarchical allreduce must not slow down as the node grows: {a:?} vs {prev:?}"
+        );
+        prev = a;
+    }
+    println!("{}", t4.render());
 }

@@ -41,7 +41,9 @@ pub fn workload_by_name(name: &str) -> Workload {
 }
 
 /// Build the scheduler for a scheme; DeFT's knapsack set follows the
-/// environment's link registry (one knapsack per link).
+/// environment's link registry (one knapsack per link), each capacity
+/// derived from that link's **segment path** slowdown — under a flat
+/// topology these are the raw μs.
 pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<dyn Scheduler> {
     match scheme {
         Scheme::PytorchDdp => Box::new(Wfbp),
@@ -49,13 +51,13 @@ pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<d
         Scheme::UsByte => Box::new(UsByte),
         Scheme::Deft => Box::new(Deft::new(DeftOptions {
             preserver,
-            link_mus: env.link_mus(),
+            link_mus: env.link_path_mus(),
             ..DeftOptions::default()
         })),
         Scheme::DeftNoMultilink => Box::new(Deft::new(DeftOptions {
             heterogeneous: false,
             preserver: false,
-            link_mus: env.link_mus(),
+            link_mus: env.link_path_mus(),
             ..DeftOptions::default()
         })),
     }
@@ -87,7 +89,8 @@ pub fn run_pipeline(
         Scheme::Deft | Scheme::DeftNoMultilink => Strategy::DeftConstrained { partition_size },
     };
     // Single-link ablation still partitions with the DeFT constraint.
-    let buckets = partition(workload, strategy, env);
+    let buckets = partition(workload, strategy, env)
+        .unwrap_or_else(|e| panic!("partitioning {} failed: {e}", workload.name));
     let scheduler = scheduler_for(scheme, true, env);
     let schedule = scheduler.schedule(&buckets);
     let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;

@@ -25,6 +25,19 @@
 //! staging_ramp = 0.12
 //! ```
 //!
+//! A rank-level topology is configured with a `[topology]` table whose
+//! `intra`/`inter` keys reference registry links by name:
+//!
+//! ```toml
+//! [cluster]
+//! links_preset = "nvlink-ib-tcp"
+//!
+//! [topology]
+//! ranks_per_node = 8    # must divide `workers`; 1 (default) = flat
+//! intra = "nvlink"      # link serving node-local segments
+//! inter = "ib"          # fabric for transfers scheduled on `intra`
+//! ```
+//!
 //! The legacy knobs are kept: `multi_link = false` collapses a 2-link
 //! preset onto one NIC (the Table IV configuration) and `mu` overrides
 //! the slow link's μ of a 2-link preset.
@@ -33,7 +46,7 @@ pub mod toml_lite;
 
 pub use toml_lite::{parse, ParseError, Value};
 
-use crate::links::{ClusterEnv, LinkPreset, LinkSpec};
+use crate::links::{ClusterEnv, LinkId, LinkPreset, LinkSpec, Topology};
 use crate::partition::Strategy;
 use crate::util::Micros;
 use std::collections::BTreeMap;
@@ -101,6 +114,16 @@ pub struct ExperimentConfig {
     pub preserver: bool,
     pub epsilon: f64,
     pub seed: u64,
+    /// `[topology] ranks_per_node`: ranks sharing a node; 1 = flat
+    /// topology (the default). Must divide `workers`.
+    pub ranks_per_node: usize,
+    /// `[topology] intra`: name of the registry link serving node-local
+    /// segments (required when `ranks_per_node > 1`).
+    pub topology_intra: String,
+    /// `[topology] inter`: name of the fabric carrying the cross-node
+    /// leg of transfers scheduled on the intra link itself; defaults to
+    /// the reference link (registry index 0).
+    pub topology_inter: String,
 }
 
 impl Default for ExperimentConfig {
@@ -121,6 +144,9 @@ impl Default for ExperimentConfig {
             preserver: true,
             epsilon: crate::preserver::EPSILON,
             seed: 17,
+            ranks_per_node: 1,
+            topology_intra: String::new(),
+            topology_inter: String::new(),
         }
     }
 }
@@ -191,7 +217,64 @@ impl ExperimentConfig {
                 return Err("links[0] is the reference link and must have mu = 1.0".into());
             }
         }
+        self.validate_topology()
+    }
+
+    /// Validate the `[topology]` table against the effective registry.
+    fn validate_topology(&self) -> Result<(), String> {
+        if self.ranks_per_node == 0 {
+            return Err("ranks_per_node must be ≥ 1".into());
+        }
+        if self.workers % self.ranks_per_node != 0 {
+            return Err(format!(
+                "ranks_per_node {} must divide workers {}",
+                self.ranks_per_node, self.workers
+            ));
+        }
+        let names = self.link_names();
+        for (key, name) in [
+            ("topology.intra", &self.topology_intra),
+            ("topology.inter", &self.topology_inter),
+        ] {
+            if !name.is_empty() && !names.iter().any(|n| n == name) {
+                return Err(format!(
+                    "{key}: unknown link `{name}` (registry: {})",
+                    names.join(", ")
+                ));
+            }
+        }
+        if self.ranks_per_node > 1 {
+            if self.topology_intra.is_empty() {
+                return Err(
+                    "hierarchical topology (ranks_per_node > 1) needs topology.intra = \
+                     \"<link name>\""
+                        .into(),
+                );
+            }
+            let inter = if self.topology_inter.is_empty() {
+                &names[0]
+            } else {
+                &self.topology_inter
+            };
+            if *inter == self.topology_intra {
+                return Err(format!(
+                    "topology.intra and topology.inter must be distinct links (both `{inter}`; \
+                     inter defaults to the reference link)"
+                ));
+            }
+        }
         Ok(())
+    }
+
+    /// Link names of the effective registry (custom links, else preset).
+    fn link_names(&self) -> Vec<String> {
+        if self.custom_links.is_empty() {
+            LinkPreset::parse(&self.links_preset)
+                .map(|p| p.links().iter().map(|l| l.name.clone()).collect())
+                .unwrap_or_default()
+        } else {
+            self.custom_links.iter().map(|l| l.name.clone()).collect()
+        }
     }
 
     /// The cluster environment this config describes.
@@ -201,7 +284,7 @@ impl ExperimentConfig {
             .with_bandwidth(self.bandwidth_gbps);
         if !self.custom_links.is_empty() {
             env.links = self.custom_links.clone();
-            return env;
+            return self.apply_topology(env);
         }
         let preset = LinkPreset::parse(&self.links_preset).expect("validated preset");
         env.links = preset.links();
@@ -217,7 +300,21 @@ impl ExperimentConfig {
                 }
             }
         }
-        env
+        self.apply_topology(env)
+    }
+
+    /// Attach the `[topology]` table to a built environment.
+    fn apply_topology(&self, env: ClusterEnv) -> ClusterEnv {
+        if self.ranks_per_node <= 1 {
+            return env;
+        }
+        let intra = env.link(&self.topology_intra).expect("validated intra link");
+        let inter = if self.topology_inter.is_empty() {
+            LinkId::REFERENCE
+        } else {
+            env.link(&self.topology_inter).expect("validated inter link")
+        };
+        env.with_topology(Topology::hierarchical(self.ranks_per_node, intra, inter))
     }
 
     /// The partition strategy this config's scheme uses.
@@ -271,6 +368,11 @@ impl ExperimentConfig {
             "run.iterations" | "iterations" => self.iterations = value.as_int()? as usize,
             "run.warmup" | "warmup" => self.warmup = value.as_int()? as usize,
             "run.seed" | "seed" => self.seed = value.as_int()? as u64,
+            "topology.ranks_per_node" | "ranks_per_node" => {
+                self.ranks_per_node = value.as_int()? as usize
+            }
+            "topology.intra" => self.topology_intra = value.as_str()?.to_string(),
+            "topology.inter" => self.topology_inter = value.as_str()?.to_string(),
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
                 if let Some(rest) = other.strip_prefix("links.") {
@@ -453,6 +555,55 @@ staging_ramp = 0.05
         // Duplicate names are ambiguous for the name-keyed registry.
         let dup = "[[links]]\nname = \"nccl\"\nmu = 1.0\n[[links]]\nname = \"nccl\"\nmu = 2.0\n";
         assert!(ExperimentConfig::from_toml(dup).is_err());
+    }
+
+    #[test]
+    fn topology_table_builds_hierarchical_env() {
+        use crate::links::{LinkId, Topology};
+        let cfg = ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\nworkers = 16\n\
+             [topology]\nranks_per_node = 8\nintra = \"nvlink\"\ninter = \"ib\"\n",
+        )
+        .unwrap();
+        let env = cfg.env();
+        assert_eq!(
+            env.topology,
+            Topology::Hierarchical {
+                ranks_per_node: 8,
+                intra: LinkId(0),
+                inter: LinkId(1),
+            }
+        );
+        // The path factor of the fabric drops below its raw μ: most
+        // traffic moved onto the NVLink segment.
+        assert!(env.path_mu(LinkId(1)) < env.spec(LinkId(1)).mu);
+        // Default (no [topology] table) stays flat.
+        let flat = ExperimentConfig::default().env();
+        assert_eq!(flat.topology, Topology::Flat);
+    }
+
+    #[test]
+    fn topology_table_is_validated() {
+        // Unknown link name.
+        assert!(ExperimentConfig::from_toml(
+            "[topology]\nranks_per_node = 8\nintra = \"warp\"\n"
+        )
+        .is_err());
+        // ranks_per_node must divide workers.
+        assert!(ExperimentConfig::from_toml(
+            "[cluster]\nworkers = 16\nlinks_preset = \"nvlink-ib-tcp\"\n\
+             [topology]\nranks_per_node = 3\nintra = \"nvlink\"\ninter = \"ib\"\n"
+        )
+        .is_err());
+        // Hierarchical needs an intra link.
+        assert!(ExperimentConfig::from_toml("[topology]\nranks_per_node = 8\n").is_err());
+        // intra and inter must be distinct (inter defaults to link 0).
+        assert!(ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\n\
+             [topology]\nranks_per_node = 8\nintra = \"nvlink\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml("[topology]\nranks_per_node = 0\n").is_err());
     }
 
     #[test]

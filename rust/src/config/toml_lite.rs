@@ -5,8 +5,14 @@
 //! scalars. Sections flatten to dot-joined keys (`[cluster] workers = 8`
 //! → `cluster.workers`); array-of-tables entries gain a running index
 //! (the second `[[links]]` block flattens to `links.1.<key>`).
+//!
+//! Defining the same flattened key twice is a parse error (consistent
+//! with the duplicate-link-name rejection in the typed config layer):
+//! silently letting the last definition win hides typos and merge
+//! accidents. Repeated `[[section]]` blocks are fine — each gets a fresh
+//! index.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 /// A scalar value.
@@ -117,7 +123,7 @@ impl Document {
             .map(|(_, v)| v)
     }
 
-    /// Keys as a map (last duplicate wins).
+    /// Keys as a map (the parser rejects duplicates, so this is lossless).
     pub fn as_map(&self) -> BTreeMap<String, Value> {
         self.entries.iter().cloned().collect()
     }
@@ -128,6 +134,7 @@ pub fn parse(text: &str) -> Result<Document, ParseError> {
     let mut doc = Document::default();
     let mut section = String::new();
     let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut seen_keys: BTreeSet<String> = BTreeSet::new();
     let valid_name = |name: &str| {
         !name.is_empty()
             && name
@@ -209,6 +216,12 @@ pub fn parse(text: &str) -> Result<Document, ParseError> {
         } else {
             format!("{section}.{key}")
         };
+        if !seen_keys.insert(full.clone()) {
+            return Err(ParseError {
+                line: line_no,
+                message: format!("duplicate key `{full}`"),
+            });
+        }
         doc.entries.push((full, value));
     }
     Ok(doc)
@@ -332,10 +345,19 @@ name = "tcp"
     }
 
     #[test]
-    fn duplicate_keys_last_wins_in_get() {
-        let doc = parse("x = 1\nx = 2\n").unwrap();
-        assert_eq!(doc.get("x"), Some(&Value::Int(2)));
-        assert_eq!(doc.as_map().len(), 1);
+    fn duplicate_keys_are_rejected() {
+        let err = parse("x = 1\nx = 2\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("duplicate key `x`"), "{}", err.message);
+        // Dotted collisions across section syntaxes are duplicates too.
+        let err = parse("[a]\nb = 1\n[a]\nb = 2\n").unwrap_err();
+        assert_eq!(err.line, 4);
+        // Array-of-tables blocks index independently — no false positive.
+        let doc = parse("[[links]]\nmu = 1.0\n[[links]]\nmu = 2.0\n").unwrap();
+        assert_eq!(doc.get("links.0.mu"), Some(&Value::Float(1.0)));
+        assert_eq!(doc.get("links.1.mu"), Some(&Value::Float(2.0)));
+        // But a duplicate inside one block is caught.
+        assert!(parse("[[links]]\nmu = 1.0\nmu = 2.0\n").is_err());
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //!   config selects a [`links::LinkPreset`] (`paper-2link`, `single-nic`,
 //!   `nvlink-ib-tcp`) or declares a custom `[[links]]` array. The
 //!   `paper-2link` preset reproduces the paper's NCCL+gloo pair exactly
-//!   (`tests/link_parity.rs`).
+//!   (`tests/link_parity.rs`). A rank-level [`links::Topology`] further
+//!   maps rank pairs onto node-local vs cross-node segments whose α–β
+//!   terms compose hierarchically (`[topology]` in TOML); the flat and
+//!   1-rank-per-node cases reproduce the registry pricing bit-for-bit
+//!   (`tests/topology_parity.rs`).
 //! * **L2 — JAX model** (`python/compile/model.py`, build-time only): a
 //!   bucketed transformer whose `train_step`/`apply_update` are AOT-lowered
 //!   to HLO text and executed from Rust via PJRT.

@@ -32,6 +32,37 @@
 //! * `single-nic`    — the same pair sharing one NIC (Table IV rows).
 //! * `nvlink-ib-tcp` — a 3-link profile (intra-node NVLink-class link,
 //!   InfiniBand, TCP fallback) that the old enum could never express.
+//!
+//! ## Rank-level topology
+//!
+//! Real clusters are hierarchical: ranks on one node talk over an
+//! NVLink-class segment while cross-node traffic rides a fabric. A
+//! [`Topology`] maps rank pairs onto segments: with `ranks_per_node = n`
+//! ranks per node, node-local pairs use the designated `intra` registry
+//! link and cross-node pairs the transfer's fabric link. A collective
+//! launched on fabric `l` then decomposes into a hierarchical allreduce
+//! (node-local reduce-scatter → cross-node shard allreduce → node-local
+//! allgather) whose per-segment α–β terms compose into one bucket time:
+//! the intra leg moves `2(n−1)/n · p` bytes on `intra`, the inter leg
+//! `2(M−1)/M · p/n` bytes on `l` (`M` nodes). The traffic fractions sum
+//! to exactly the flat ring factor, so [`Topology::Flat`] — and the
+//! degenerate `ranks_per_node = 1` — reproduce the flat registry pricing
+//! bit-for-bit (see `tests/topology_parity.rs`).
+//!
+//! ## Contention: planning estimate vs execution model
+//!
+//! Shared-NIC contention is priced twice, deliberately:
+//!
+//! * **Planning estimate** ([`ClusterEnv::wire_time`], `bucket_comm`,
+//!   `allreduce_us`): the conservative static rule — every link except
+//!   its contention group's fastest member pays the full Table IV
+//!   penalty whenever a group-mate *exists*. Schedulers budget against
+//!   the worst case.
+//! * **Execution model** (the DES engine, via
+//!   [`ClusterEnv::wire_time_uncontended`] + per-link busy intervals):
+//!   the penalty is charged only for the window in which two same-group
+//!   transfers actually overlap in time — an idle group-mate no longer
+//!   inflates a single-link schedule.
 
 use crate::util::Micros;
 
@@ -216,8 +247,68 @@ impl LinkPreset {
     }
 }
 
+/// How the cluster's ranks map onto nodes, i.e. which registry link
+/// serves each rank pair (see the module docs, "Rank-level topology").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Topology {
+    /// Every link is a flat ring over all workers — the single-segment
+    /// model all earlier revisions used, and the pricing unit
+    /// (`BucketProfile::comm` is flat-reference-ring time).
+    #[default]
+    Flat,
+    /// `ranks_per_node` ranks share a node (must divide the worker
+    /// count). Node-local segments run on the `intra` registry link; the
+    /// cross-node shard allreduce runs on the transfer's own link — or on
+    /// `inter` for transfers scheduled on the intra link itself.
+    Hierarchical {
+        ranks_per_node: usize,
+        intra: LinkId,
+        inter: LinkId,
+    },
+}
+
+impl Topology {
+    /// Hierarchical topology constructor (`intra` ≠ `inter`).
+    pub fn hierarchical(ranks_per_node: usize, intra: LinkId, inter: LinkId) -> Topology {
+        assert!(ranks_per_node >= 1, "ranks_per_node must be ≥ 1");
+        assert!(intra != inter, "intra and inter segments need distinct links");
+        Topology::Hierarchical {
+            ranks_per_node,
+            intra,
+            inter,
+        }
+    }
+
+    /// Ranks per node: 1 for flat topologies.
+    pub fn ranks_per_node(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Hierarchical { ranks_per_node, .. } => *ranks_per_node,
+        }
+    }
+}
+
+/// One leg of a collective's segment path: the link that carries it, the
+/// fraction of the flat all-worker ring traffic it moves, and the tensor
+/// fraction each of its transfers sees (for the staging ramp).
+#[derive(Clone, Copy, Debug)]
+struct SegmentLeg {
+    link: LinkId,
+    traffic: f64,
+    tensor_frac: f64,
+}
+
+/// Ring-allreduce traffic factor 2(k−1)/k for `k` participants.
+fn ring_factor_of(k: usize) -> f64 {
+    if k <= 1 {
+        0.0
+    } else {
+        2.0 * (k as f64 - 1.0) / k as f64
+    }
+}
+
 /// The cluster communication environment: worker count, reference NIC
-/// bandwidth/efficiency, and the link registry.
+/// bandwidth/efficiency, the link registry, and the rank-level topology.
 #[derive(Clone, Debug)]
 pub struct ClusterEnv {
     /// Number of data-parallel workers (GPUs).
@@ -230,6 +321,8 @@ pub struct ClusterEnv {
     /// The link registry; index = [`LinkId`]. Link 0 is the reference
     /// link (μ = 1) that bucket comm times are priced on.
     pub links: Vec<LinkSpec>,
+    /// Rank-pair → segment mapping (default: flat).
+    pub topology: Topology,
 }
 
 /// Speed ratio between the paper's NCCL and gloo (1.59–1.69, set 1.65).
@@ -253,6 +346,7 @@ impl ClusterEnv {
             bandwidth_gbps: 40.0,
             efficiency: 0.469,
             links: LinkPreset::Paper2Link.links(),
+            topology: Topology::Flat,
         }
     }
 
@@ -260,6 +354,39 @@ impl ClusterEnv {
         assert!(workers >= 1);
         self.workers = workers;
         self
+    }
+
+    /// Replace the rank-level topology. Hierarchical topologies must
+    /// reference registered links and a node size dividing the worker
+    /// count.
+    pub fn with_topology(mut self, topology: Topology) -> ClusterEnv {
+        if let Topology::Hierarchical {
+            ranks_per_node,
+            intra,
+            inter,
+        } = &topology
+        {
+            assert!(*ranks_per_node >= 1, "ranks_per_node must be ≥ 1");
+            assert!(
+                self.workers % *ranks_per_node == 0,
+                "ranks_per_node {} must divide the worker count {}",
+                ranks_per_node,
+                self.workers
+            );
+            assert!(
+                intra.index() < self.links.len() && inter.index() < self.links.len(),
+                "topology references an unregistered link"
+            );
+            assert!(intra != inter, "intra and inter segments need distinct links");
+        }
+        self.topology = topology;
+        self
+    }
+
+    /// Number of nodes under the current topology (flat: one rank per
+    /// conceptual node).
+    pub fn nodes(&self) -> usize {
+        self.workers / self.topology.ranks_per_node().max(1)
     }
 
     pub fn with_bandwidth(mut self, gbps: f64) -> ClusterEnv {
@@ -314,17 +441,117 @@ impl ClusterEnv {
         self.links.iter().map(|l| l.mu).collect()
     }
 
-    /// The largest μ in the registry (the slowest link; ≥ the reference's
-    /// μ). Used by §III.D's partition constraint — a bucket must fit the
-    /// smallest knapsack, whose capacity is compute/μ_max.
+    /// The slowest **segment path** in the registry: the largest
+    /// [`ClusterEnv::path_mu`] over all links (flat topologies: the
+    /// largest raw μ, ≥ the reference's). Used by §III.D's partition
+    /// constraint — a bucket must fit the smallest knapsack, whose
+    /// capacity is compute divided by this factor.
     pub fn max_mu(&self) -> f64 {
-        self.links.iter().map(|l| l.mu).fold(0.0_f64, f64::max)
+        self.link_ids()
+            .map(|id| self.path_mu(id))
+            .fold(0.0_f64, f64::max)
     }
 
-    /// Does `id` pay the shared-NIC contention penalty? True iff another
-    /// link shares its contention group and `id` is not the group's
-    /// fastest member (smallest μ, ties to the lower index) — the paper's
-    /// observation that NCCL is unaffected while gloo degrades.
+    /// Segment path of a collective launched on `link`.
+    ///
+    /// Flat topologies (and `ranks_per_node = 1`, where every rank is its
+    /// own node) move everything on the transfer's own link. Hierarchical
+    /// topologies split into a node-local leg on the `intra` link
+    /// (reduce-scatter + allgather, `2(n−1)/n · p` bytes) and a
+    /// cross-node shard leg on the fabric — the transfer's link, or the
+    /// designated `inter` fabric when the transfer is scheduled on the
+    /// intra link itself (`2(M−1)/M · p/n` bytes over `M` nodes). The
+    /// traffic fractions sum to exactly 1, so the flat ring traffic is
+    /// conserved and per-segment μs compose as a weighted average.
+    fn segment_path(&self, link: LinkId) -> Vec<SegmentLeg> {
+        let flat = |link| {
+            vec![SegmentLeg {
+                link,
+                traffic: 1.0,
+                tensor_frac: 1.0,
+            }]
+        };
+        match self.topology {
+            Topology::Flat => flat(link),
+            Topology::Hierarchical {
+                ranks_per_node: n,
+                intra,
+                inter,
+            } => {
+                let w = self.workers;
+                if n <= 1 || w <= 1 {
+                    return flat(link);
+                }
+                assert!(
+                    w % n == 0,
+                    "ranks_per_node {n} must divide the worker count {w}"
+                );
+                let nodes = w / n;
+                let flat_ring = ring_factor_of(w);
+                let fabric = if link == intra { inter } else { link };
+                let mut path = Vec::with_capacity(2);
+                let intra_traffic = ring_factor_of(n) / flat_ring;
+                if intra_traffic > 0.0 {
+                    path.push(SegmentLeg {
+                        link: intra,
+                        traffic: intra_traffic,
+                        tensor_frac: 1.0,
+                    });
+                }
+                let inter_traffic = ring_factor_of(nodes) / (n as f64 * flat_ring);
+                if inter_traffic > 0.0 {
+                    path.push(SegmentLeg {
+                        link: fabric,
+                        traffic: inter_traffic,
+                        tensor_frac: 1.0 / n as f64,
+                    });
+                }
+                path
+            }
+        }
+    }
+
+    /// Effective slowdown — versus the flat reference-link ring — of the
+    /// full segment path of a collective launched on `link`: the
+    /// traffic-weighted sum of each leg's μ. Flat topologies: the link's
+    /// own μ. This is the factor knapsack capacities and the §III.D
+    /// partition constraint divide by.
+    pub fn path_mu(&self, link: LinkId) -> f64 {
+        match self.topology {
+            Topology::Flat => self.spec(link).mu,
+            Topology::Hierarchical { .. } => self
+                .segment_path(link)
+                .iter()
+                .map(|leg| self.spec(leg.link).mu * leg.traffic)
+                .sum(),
+        }
+    }
+
+    /// Per-link effective path slowdowns in registry order (flat
+    /// topologies: the raw μs) — what scheduler knapsack sets consume.
+    pub fn link_path_mus(&self) -> Vec<f64> {
+        self.link_ids().map(|id| self.path_mu(id)).collect()
+    }
+
+    /// Is `a` strictly faster than `b` for contention exemption? The
+    /// order is **total** over (μ, α, registry index), so the outcome
+    /// cannot depend on registry iteration order — two links with equal μ
+    /// tie-break on the smaller startup latency, then the lower index.
+    fn faster(&self, a: usize, b: usize) -> bool {
+        let (sa, sb) = (&self.links[a], &self.links[b]);
+        sa.mu
+            .total_cmp(&sb.mu)
+            .then(sa.alpha.cmp(&sb.alpha))
+            .then(a.cmp(&b))
+            .is_lt()
+    }
+
+    /// Does `id` pay the shared-NIC contention penalty under the
+    /// conservative **planning** rule? True iff another link shares its
+    /// contention group and `id` is not the group's fastest member per
+    /// [`ClusterEnv::faster`] — the paper's observation that NCCL is
+    /// unaffected while gloo degrades. The DES engine additionally scales
+    /// the penalty by the actually-overlapping window (module docs).
     pub fn contended(&self, id: LinkId) -> bool {
         let group = self.links[id.0].contention_group;
         let mut members = 0usize;
@@ -332,7 +559,7 @@ impl ClusterEnv {
         for (i, l) in self.links.iter().enumerate() {
             if l.contention_group == group {
                 members += 1;
-                if (l.mu, i) < (self.links[fastest].mu, fastest) {
+                if self.faster(i, fastest) {
                     fastest = i;
                 }
             }
@@ -340,27 +567,35 @@ impl ClusterEnv {
         members > 1 && fastest != id.0
     }
 
-    /// Ring-allreduce traffic factor 2(W−1)/W.
+    /// Ring-allreduce traffic factor 2(W−1)/W over all workers.
     pub fn ring_factor(&self) -> f64 {
-        if self.workers <= 1 {
-            0.0
-        } else {
-            2.0 * (self.workers as f64 - 1.0) / self.workers as f64
-        }
+        ring_factor_of(self.workers)
     }
 
     /// Allreduce time for `params` f32 parameters on `link`,
-    /// **microbenchmark calibration** (Table IV / Fig. 6 scale).
+    /// **microbenchmark calibration** (Table IV / Fig. 6 scale), with the
+    /// conservative static contention rule (planning estimate).
+    ///
+    /// Hierarchical topologies compose the per-segment α–β terms of the
+    /// path: each leg contributes its own startup latency plus its
+    /// traffic share of the wire time, the inter leg seeing only the
+    /// `p/n` shard for the staging ramp.
     pub fn allreduce_us(&self, link: LinkId, params: u64) -> Micros {
         if self.workers <= 1 || params == 0 {
             return Micros::ZERO;
         }
-        let spec = self.spec(link);
         let bytes = params as f64 * 4.0 * self.ring_factor();
         let wire_bytes_per_us = self.bandwidth_gbps * 1e9 / 8.0 / 1e6; // B/µs
         let base_us = bytes / (wire_bytes_per_us * self.efficiency);
-        let t = spec.alpha
-            + Micros::from_us_f64(base_us * spec.mu * self.staging_factor(spec, params));
+        let mut t = Micros::ZERO;
+        for leg in self.segment_path(link) {
+            let spec = self.spec(leg.link);
+            let leg_params = (params as f64 * leg.tensor_frac) as u64;
+            t += spec.alpha
+                + Micros::from_us_f64(
+                    base_us * leg.traffic * spec.mu * self.staging_factor(spec, leg_params),
+                );
+        }
         if self.contended(link) {
             t.scale(1.0 + self.contention_penalty(params))
         } else {
@@ -409,36 +644,74 @@ impl ClusterEnv {
         ref_time.scale(ratio)
     }
 
-    /// Workload-calibrated bucket communication time on a link.
+    /// Workload-calibrated communication time of `params` parameters on
+    /// the **flat reference ring** — the topology-independent unit all
+    /// `BucketProfile::comm` values and plan pricing are denominated in.
+    ///
+    /// `rate_ref` is the workload's µs/param at the reference point (from
+    /// [`crate::models::Workload::comm_rate_ref`]).
+    pub fn reference_comm(&self, params: u64, rate_ref: f64) -> Micros {
+        let ref_time = Micros::from_us_f64(params as f64 * rate_ref);
+        self.scale_workload_comm(ref_time)
+    }
+
+    /// Workload-calibrated bucket communication time on a link — the
+    /// planning estimate, topology- and (statically) contention-aware.
     ///
     /// `rate_ref` is the workload's µs/param at the reference point (from
     /// [`crate::models::Workload::comm_rate_ref`]).
     pub fn bucket_comm(&self, link: LinkId, params: u64, rate_ref: f64) -> Micros {
-        let ref_time = Micros::from_us_f64(params as f64 * rate_ref);
-        let scaled = self.scale_workload_comm(ref_time);
-        self.link_wire(link, scaled, params)
+        self.wire_time(link, self.reference_comm(params, rate_ref), params)
     }
 
-    /// Wire time on `link` of a transfer whose **reference-link** time is
-    /// `comm_ref` (the pricing the discrete-event engine charges per op).
+    /// Wire time on `link` of a transfer whose **flat reference-link**
+    /// time is `comm_ref` — the schedulers' conservative planning
+    /// estimate, including the static shared-NIC contention rule. The DES
+    /// engine instead starts from [`ClusterEnv::wire_time_uncontended`]
+    /// and adds contention only for actually-overlapping windows.
     pub fn wire_time(&self, link: LinkId, comm_ref: Micros, params: u64) -> Micros {
-        self.link_wire(link, comm_ref, params)
-    }
-
-    fn link_wire(&self, link: LinkId, comm_ref: Micros, params: u64) -> Micros {
-        let spec = self.spec(link);
-        // μ = 1 short-circuits so reference-link pricing is exactly the
-        // input time (no float round-trip).
-        let t = if spec.mu == 1.0 {
-            comm_ref
-        } else {
-            comm_ref.scale(spec.mu)
-        };
+        let t = self.wire_time_uncontended(link, comm_ref);
         if self.contended(link) {
             t.scale(1.0 + self.contention_penalty(params))
         } else {
             t
         }
+    }
+
+    /// Uncontended wire time of a transfer's full segment path.
+    pub fn wire_time_uncontended(&self, link: LinkId, comm_ref: Micros) -> Micros {
+        self.wire_segments(link, comm_ref)
+            .iter()
+            .map(|&(_, t)| t)
+            .sum()
+    }
+
+    /// Per-segment wire occupancy of a transfer launched on `link` whose
+    /// flat reference-link time is `comm_ref`: (segment link, time)
+    /// pairs, uncontended. Flat topologies yield one segment on the
+    /// transfer's own link; hierarchical ones an intra leg plus a fabric
+    /// leg. The DES engine charges the transfer's home stream with the
+    /// total (the home link serializes the collective even while its
+    /// intra leg runs) and records the foreign legs on their segment
+    /// streams — in the degenerate single-node cluster
+    /// (`ranks_per_node == workers`) the entire collective is one
+    /// node-local leg, so a transfer scheduled on a fabric still blocks
+    /// its home stream while all bytes move on the intra link.
+    pub fn wire_segments(&self, link: LinkId, comm_ref: Micros) -> Vec<(LinkId, Micros)> {
+        self.segment_path(link)
+            .iter()
+            .map(|leg| {
+                let factor = self.spec(leg.link).mu * leg.traffic;
+                // factor = 1 short-circuits so reference-link pricing is
+                // exactly the input time (no float round-trip).
+                let t = if factor == 1.0 {
+                    comm_ref
+                } else {
+                    comm_ref.scale(factor)
+                };
+                (leg.link, t)
+            })
+            .collect()
     }
 }
 
@@ -638,5 +911,148 @@ mod tests {
         // μ ratio dominates for large tensors.
         let r = a1.as_us() as f64 / a0.as_us() as f64;
         assert!((2.0..3.0).contains(&r), "ib/nvlink ratio {r}");
+    }
+
+    // ---- Contention tie-break (total order). ----
+
+    #[test]
+    fn contention_tiebreak_is_total_over_mu_alpha_index() {
+        // Two links with equal μ but different α sharing a NIC: exactly
+        // one (the lower-α one) is exempt, in either registry order.
+        let fwd = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("a", 1.0).with_alpha(Micros(300)).with_group(0),
+            LinkSpec::new("b", 1.0).with_alpha(Micros(100)).with_group(0),
+        ]);
+        assert!(fwd.contended(LinkId(0)), "higher-α link must pay");
+        assert!(!fwd.contended(LinkId(1)), "lower-α link is the group's fastest");
+        let rev = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("b", 1.0).with_alpha(Micros(100)).with_group(0),
+            LinkSpec::new("a", 1.0).with_alpha(Micros(300)).with_group(0),
+        ]);
+        assert!(!rev.contended(LinkId(0)));
+        assert!(rev.contended(LinkId(1)));
+        // Fully identical specs: the index makes the order total — the
+        // first registered link is exempt, every clone pays.
+        let twin = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("x", 1.0).with_group(0),
+            LinkSpec::new("y", 1.0).with_group(0),
+            LinkSpec::new("z", 1.0).with_group(0),
+        ]);
+        assert!(!twin.contended(LinkId(0)));
+        assert!(twin.contended(LinkId(1)));
+        assert!(twin.contended(LinkId(2)));
+    }
+
+    // ---- Rank-level topology. ----
+
+    fn hier(env: &ClusterEnv, ranks_per_node: usize) -> ClusterEnv {
+        env.clone()
+            .with_topology(Topology::hierarchical(ranks_per_node, LinkId(0), LinkId(1)))
+    }
+
+    #[test]
+    fn topology_defaults_flat_and_degenerates_at_one_rank_per_node() {
+        let flat = LinkPreset::NvlinkIbTcp.env();
+        assert_eq!(flat.topology, Topology::Flat);
+        // ranks_per_node = 1 ⇒ every rank its own node ⇒ bit-for-bit the
+        // flat registry pricing on every link, both pricing paths.
+        let one = hier(&flat, 1);
+        for id in flat.link_ids() {
+            for params in [0u64, 1_000_000, 8_388_608, 67_108_864] {
+                assert_eq!(
+                    flat.allreduce_us(id, params),
+                    one.allreduce_us(id, params),
+                    "{id:?} @ {params}"
+                );
+                let comm = Micros(params / 100 + 7);
+                assert_eq!(
+                    flat.wire_time(id, comm, params),
+                    one.wire_time(id, comm, params),
+                    "{id:?} wire @ {params}"
+                );
+            }
+            assert!((flat.path_mu(id) - one.path_mu(id)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn hierarchical_path_conserves_traffic_and_prices_segments() {
+        // 16 ranks, 8/node: intra moves 2·7/8 of p on nvlink, inter
+        // 2·1/2 of p/8 on the fabric; fractions sum to the flat factor.
+        let env = hier(&LinkPreset::NvlinkIbTcp.env(), 8);
+        let ib = env.link("ib").unwrap();
+        // path_mu is the traffic-weighted μ average: h·1 + g·μ_ib with
+        // h = (2·7/8)/(2·15/16) = 14/15 and g = 1/15.
+        let h = 14.0 / 15.0;
+        let g = 1.0 / 15.0;
+        assert!((env.path_mu(ib) - (h + g * 2.5)).abs() < 1e-12);
+        // Moving most traffic onto NVLink beats the flat fabric ring.
+        assert!(env.path_mu(ib) < 2.5);
+        let comm = Micros(100_000);
+        let segs = env.wire_segments(ib, comm);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].0, LinkId(0), "intra leg on nvlink");
+        assert_eq!(segs[1].0, ib, "inter leg on the fabric itself");
+        let total: Micros = segs.iter().map(|&(_, t)| t).sum();
+        assert_eq!(total, env.wire_time_uncontended(ib, comm));
+        // A transfer scheduled on the intra link routes its cross-node
+        // shard over the designated inter fabric.
+        let segs0 = env.wire_segments(LinkId(0), comm);
+        assert_eq!(segs0.len(), 2);
+        assert_eq!(segs0[0].0, LinkId(0));
+        assert_eq!(segs0[1].0, LinkId(1));
+        // max_mu follows the slowest segment path, not the raw μ.
+        let expect_max = env
+            .link_ids()
+            .map(|id| env.path_mu(id))
+            .fold(0.0_f64, f64::max);
+        assert!((env.max_mu() - expect_max).abs() < 1e-15);
+        assert!(env.max_mu() < 6.0, "tcp's path must be cheaper than its flat ring");
+    }
+
+    #[test]
+    fn prop_hierarchical_time_monotone_in_ranks_per_node() {
+        use crate::util::prop::check;
+        // With the intra link strictly faster than the fabric, growing the
+        // node (moving traffic onto the fast segment) must never slow an
+        // allreduce down; at n = 1 the model degenerates to flat pricing.
+        check("hierarchical monotone in ranks/node", 40, |g| {
+            let mu_fabric = 1.2 + g.f64_in(0.0, 6.0);
+            let params = g.u64_in(16_000_000..=200_000_000);
+            let flat = ClusterEnv::paper_testbed().with_links(vec![
+                LinkSpec::new("fast", 1.0).with_alpha(Micros(150)).with_group(0),
+                LinkSpec::new("fabric", mu_fabric).with_alpha(Micros(600)).with_group(1),
+            ]);
+            let fabric = LinkId(1);
+            let comm = Micros(params / 50);
+            let mut prev_allreduce = Micros::MAX;
+            let mut prev_wire = Micros::MAX;
+            for rpn in [1usize, 2, 4, 8, 16] {
+                let env = hier(&flat, rpn);
+                let a = env.allreduce_us(fabric, params);
+                let wt = env.wire_time(fabric, comm, params);
+                if rpn == 1 {
+                    if a != flat.allreduce_us(fabric, params) {
+                        return Err("rpn=1 allreduce differs from flat".into());
+                    }
+                    if wt != flat.wire_time(fabric, comm, params) {
+                        return Err("rpn=1 wire differs from flat".into());
+                    }
+                }
+                if a > prev_allreduce {
+                    return Err(format!(
+                        "allreduce not monotone at rpn={rpn}: {a:?} > {prev_allreduce:?}"
+                    ));
+                }
+                if wt > prev_wire {
+                    return Err(format!(
+                        "wire not monotone at rpn={rpn}: {wt:?} > {prev_wire:?}"
+                    ));
+                }
+                prev_allreduce = a;
+                prev_wire = wt;
+            }
+            Ok(())
+        });
     }
 }

@@ -23,6 +23,8 @@ fn usage() -> &'static str {
      keys: workload scheme workers bandwidth_gbps multi_link links_preset\n\
            partition_size ddp_bucket_mb iterations warmup mu preserver\n\
            epsilon seed   (links_preset: paper-2link | single-nic | nvlink-ib-tcp)\n\
+     topology: ranks_per_node topology.intra topology.inter\n\
+           (hierarchical rank-level topology; intra/inter name registry links)\n\
      train-only: --manifest=PATH --lr=F --momentum=F --log-every=N"
 }
 

@@ -140,6 +140,27 @@ pub fn timeline_csv(timeline: &Timeline, link_names: &[String]) -> String {
     out
 }
 
+/// Per-link busy/bubble/utilization table computed from a simulation
+/// result's timeline. Under a hierarchical topology the shared intra
+/// link's row also accumulates the node-local legs of transfers homed on
+/// other links, so its utilization reads as segment pressure.
+pub fn link_table(result: &SimResult) -> String {
+    let mut t = Table::new(&["link", "busy", "bubbles", "utilization"]);
+    for (k, name) in result.link_names.iter().enumerate() {
+        let stream = StreamId::Link(LinkId(k));
+        let busy = result.timeline.busy(stream);
+        let bubbles = result.timeline.bubbles(stream);
+        let span = busy + bubbles;
+        let util = if span.is_zero() {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", busy.ratio(span) * 100.0)
+        };
+        t.row(&[name.clone(), format!("{busy}"), format!("{bubbles}"), util]);
+    }
+    t.render()
+}
+
 /// A fixed-width table printer for bench outputs.
 pub struct Table {
     header: Vec<String>,

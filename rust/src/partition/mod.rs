@@ -12,14 +12,17 @@
 //!   available to overlap it, reducing startup-overhead waste.
 //! * [`Strategy::DeftConstrained`] — DeFT (§III.D): start from the US-Byte
 //!   partition, then re-partition any bucket whose communication time
-//!   exceeds the smallest knapsack capacity (forward time ÷ μ), so every
-//!   bucket fits the multi-knapsack as an item.
+//!   exceeds the smallest knapsack capacity (forward time divided by the
+//!   slowest segment-path factor), so every bucket fits the
+//!   multi-knapsack as an item.
 //!
-//! Output is a `Vec<BucketProfile>` priced on the reference (NCCL) link
-//! via the workload's calibrated rate and a [`ClusterEnv`].
+//! Output is a `Vec<BucketProfile>` priced in the flat reference-ring
+//! unit via the workload's calibrated rate and a [`ClusterEnv`];
+//! degenerate workloads yield a typed [`crate::util::error::Error`].
 
-use crate::links::{ClusterEnv, LinkId};
+use crate::links::ClusterEnv;
 use crate::models::{BucketProfile, Workload};
+use crate::util::error::Result;
 use crate::util::Micros;
 
 /// Partitioning strategy selector.
@@ -51,7 +54,25 @@ impl Strategy {
 ///
 /// Buckets are returned in **forward order** (bucket 0 nearest the input),
 /// matching the paper's numbering.
-pub fn partition(workload: &Workload, strategy: Strategy, env: &ClusterEnv) -> Vec<BucketProfile> {
+///
+/// Degenerate workloads — no layers, or zero total parameters (e.g. a
+/// model whose zero-param layers were filtered out) — return a typed
+/// error instead of producing an empty partition that downstream
+/// `.max()`/`.min()` consumers would panic on.
+pub fn partition(
+    workload: &Workload,
+    strategy: Strategy,
+    env: &ClusterEnv,
+) -> Result<Vec<BucketProfile>> {
+    if workload.layers.is_empty() {
+        crate::bail!("cannot partition `{}`: workload has no layers", workload.name);
+    }
+    if workload.total_params() == 0 {
+        crate::bail!(
+            "cannot partition `{}`: workload has zero parameters (all layers empty?)",
+            workload.name
+        );
+    }
     let segs = match strategy {
         Strategy::DdpFixed { bucket_size_mb } => {
             let cap_params = (bucket_size_mb * 1024.0 * 1024.0 / 4.0) as u64;
@@ -64,7 +85,14 @@ pub fn partition(workload: &Workload, strategy: Strategy, env: &ClusterEnv) -> V
             deft_constrain(workload, base, env)
         }
     };
-    price(workload, env, segs)
+    if segs.is_empty() {
+        crate::bail!(
+            "partitioning `{}` with {} produced no buckets",
+            workload.name,
+            strategy.name()
+        );
+    }
+    Ok(price(workload, env, segs))
 }
 
 /// A partition segment: a contiguous span of (possibly fractional) layers.
@@ -84,7 +112,9 @@ fn price(workload: &Workload, env: &ClusterEnv, segs: Vec<Segment>) -> Vec<Bucke
             params: s.params,
             fwd: s.fwd,
             bwd: s.bwd,
-            comm: env.bucket_comm(LinkId::REFERENCE, s.params, workload.comm_rate_ref),
+            // The flat reference-ring unit: per-link (and per-segment)
+            // factors are applied by schedulers and the engine.
+            comm: env.reference_comm(s.params, workload.comm_rate_ref),
         })
         .collect()
 }
@@ -206,10 +236,11 @@ fn usbyte_fuse(workload: &Workload, partition_size: u64) -> Vec<Segment> {
 }
 
 /// DeFT §III.D constraint: each bucket's *communication time* must be at
-/// most the smallest knapsack capacity — the forward time ÷ μ of the
-/// slowest registry link — otherwise it can never be packed. Oversized
-/// buckets are split into equal parts just small enough to satisfy the
-/// constraint.
+/// most the smallest knapsack capacity — the forward time divided by the
+/// slowest **segment path** factor ([`ClusterEnv::max_mu`]; the raw μ of
+/// the slowest link under a flat topology) — otherwise it can never be
+/// packed. Oversized buckets are split into equal parts just small
+/// enough to satisfy the constraint.
 fn deft_constrain(workload: &Workload, base: Vec<Segment>, env: &ClusterEnv) -> Vec<Segment> {
     let total_fwd = workload.total_fwd();
     let cap = total_fwd.scale(1.0 / env.max_mu());
@@ -218,7 +249,7 @@ fn deft_constrain(workload: &Workload, base: Vec<Segment>, env: &ClusterEnv) -> 
     }
     let mut out = Vec::new();
     for seg in base {
-        let comm = env.bucket_comm(LinkId::REFERENCE, seg.params, workload.comm_rate_ref);
+        let comm = env.reference_comm(seg.params, workload.comm_rate_ref);
         if comm <= cap || seg.params <= 1 {
             out.push(seg);
             continue;
@@ -278,7 +309,7 @@ mod tests {
     fn ddp_25mb_vgg_bucket_count() {
         // 25 MB = 6.55M params; VGG-19's 143.65M params with fc6 (102.8M)
         // as one giant bucket → expect ~6–8 buckets.
-        let b = partition(&vgg19(), Strategy::DdpFixed { bucket_size_mb: 25.0 }, &env());
+        let b = partition(&vgg19(), Strategy::DdpFixed { bucket_size_mb: 25.0 }, &env()).unwrap();
         conserved(&vgg19(), &b);
         assert!((4..=8).contains(&b.len()), "got {} buckets", b.len());
         // One bucket should dominate (fc6).
@@ -292,7 +323,8 @@ mod tests {
             &vgg19(),
             Strategy::Uniform { partition_size: 6_500_000 },
             &env(),
-        );
+        )
+        .unwrap();
         conserved(&vgg19(), &b);
         // 143.65M / 6.5M → 23 buckets, every one ≤ 6.5M.
         assert_eq!(b.len(), 23);
@@ -305,7 +337,8 @@ mod tests {
             &vgg19(),
             Strategy::UsByte { partition_size: 6_500_000 },
             &env(),
-        );
+        )
+        .unwrap();
         conserved(&vgg19(), &b);
         // Whole-layer fusion keeps fc6 as a giant singleton.
         let max = b.iter().map(|x| x.params).max().unwrap();
@@ -319,7 +352,8 @@ mod tests {
     fn deft_constraint_bounds_every_bucket() {
         let w = vgg19();
         let e = env();
-        let b = partition(&w, Strategy::DeftConstrained { partition_size: 6_500_000 }, &e);
+        let b =
+            partition(&w, Strategy::DeftConstrained { partition_size: 6_500_000 }, &e).unwrap();
         conserved(&w, &b);
         let cap = w.total_fwd().scale(1.0 / e.max_mu());
         for bucket in &b {
@@ -338,7 +372,8 @@ mod tests {
             &gpt2(),
             Strategy::DeftConstrained { partition_size: 6_500_000 },
             &env(),
-        );
+        )
+        .unwrap();
         // Paper mentions bucket #13 for GPT-2 at this partition size (so
         // ≥ 13 buckets); whole-layer fusion of 2.36M/4.72M-param blocks
         // under a 6.5M cap yields up to 22.
@@ -351,7 +386,8 @@ mod tests {
             &gpt2(),
             Strategy::UsByte { partition_size: 6_500_000 },
             &env(),
-        );
+        )
+        .unwrap();
         for (i, bucket) in b.iter().enumerate() {
             assert_eq!(bucket.id, i);
         }
@@ -371,7 +407,10 @@ mod tests {
                 Strategy::UsByte { partition_size: ps },
                 Strategy::DeftConstrained { partition_size: ps },
             ] {
-                let b = partition(&w, strat, &env());
+                let b = match partition(&w, strat, &env()) {
+                    Ok(b) => b,
+                    Err(e) => return Err(format!("{}: {e}", strat.name())),
+                };
                 let total: u64 = b.iter().map(|x| x.params).sum();
                 if total != w.total_params() {
                     return Err(format!(
@@ -386,5 +425,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn degenerate_workloads_yield_typed_errors_not_panics() {
+        use crate::models::{Layer, TargetMetric};
+        let no_layers = Workload {
+            name: "empty".into(),
+            layers: Vec::new(),
+            comm_rate_ref: 1.8e-3,
+            batch_size: 1,
+            target: TargetMetric::Loss(1.0),
+        };
+        let zero_params = Workload {
+            name: "zero".into(),
+            layers: vec![Layer {
+                name: "frozen".into(),
+                params: 0,
+                fwd: Micros(100),
+                bwd: Micros(200),
+            }],
+            comm_rate_ref: 1.8e-3,
+            batch_size: 1,
+            target: TargetMetric::Loss(1.0),
+        };
+        for strat in [
+            Strategy::DdpFixed { bucket_size_mb: 25.0 },
+            Strategy::Uniform { partition_size: 1_000 },
+            Strategy::UsByte { partition_size: 1_000 },
+            Strategy::DeftConstrained { partition_size: 1_000 },
+        ] {
+            let e = partition(&no_layers, strat, &env()).unwrap_err();
+            assert!(e.to_string().contains("no layers"), "{}: {e}", strat.name());
+            let e = partition(&zero_params, strat, &env()).unwrap_err();
+            assert!(
+                e.to_string().contains("zero parameters"),
+                "{}: {e}",
+                strat.name()
+            );
+        }
     }
 }

@@ -38,9 +38,12 @@ use crate::util::Micros;
 /// DeFT configuration.
 #[derive(Clone, Debug)]
 pub struct DeftOptions {
-    /// Per-link slowdown factors μ, in registry order (index = `LinkId`;
-    /// paper default: `[1.0, 1.65]` for NCCL + gloo). Build from an
-    /// environment via [`Deft::for_env`] / `ClusterEnv::link_mus`.
+    /// Per-link effective slowdown factors in registry order (index =
+    /// `LinkId`; paper default: `[1.0, 1.65]` for NCCL + gloo). Under a
+    /// hierarchical topology these are the **segment-path** factors, not
+    /// the raw μs — build from an environment via [`Deft::for_env`] /
+    /// `ClusterEnv::link_path_mus`, so every knapsack capacity is
+    /// compute time divided by its link's slowest-path slowdown.
     pub link_mus: Vec<f64>,
     /// Use every registry link (true) or only the reference link (false —
     /// the paper's §V.B.4 single-link ablation).
@@ -94,10 +97,11 @@ impl Deft {
     }
 
     /// DeFT for a concrete cluster environment: the knapsack set follows
-    /// the environment's link registry (one knapsack per link).
+    /// the environment's link registry (one knapsack per link), each
+    /// capacity derived from the link's segment-path slowdown.
     pub fn for_env(env: &ClusterEnv, preserver: bool) -> Deft {
         Deft::new(DeftOptions {
-            link_mus: env.link_mus(),
+            link_mus: env.link_path_mus(),
             preserver,
             ..DeftOptions::default()
         })

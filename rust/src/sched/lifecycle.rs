@@ -94,13 +94,10 @@ pub fn run_lifecycle(
             params,
             fwd: r.fwd,
             bwd: r.bwd,
-            // Price on the reference link for the *target* environment
-            // (the trace's comm column is from the profiling run).
-            comm: env.bucket_comm(
-                crate::links::LinkId::REFERENCE,
-                params,
-                workload.comm_rate_ref,
-            ),
+            // Price in the flat reference-ring unit for the *target*
+            // environment (the trace's comm column is from the profiling
+            // run); link/segment factors apply downstream.
+            comm: env.reference_comm(params, workload.comm_rate_ref),
         });
     }
 
@@ -113,8 +110,9 @@ pub fn run_lifecycle(
             capacity_scale: scale,
             preserver: false,
             // The knapsack set always follows the target environment's
-            // link registry (one knapsack per link).
-            link_mus: env.link_mus(),
+            // link registry (one knapsack per link, capacities from the
+            // segment-path slowdowns).
+            link_mus: env.link_path_mus(),
             ..opts.deft.clone()
         });
         let schedule = deft.schedule(&profile);

@@ -1,4 +1,29 @@
 //! The discrete-event engine executing schedules under WFBP rules.
+//!
+//! ## Contention: execution model
+//!
+//! Transfers are priced **uncontended** ([`ClusterEnv::wire_time_uncontended`])
+//! and the Table IV shared-NIC penalty is charged only for the window in
+//! which a transfer actually overlaps an in-flight transfer of another
+//! link in the same contention group — the planner's static rule
+//! ([`ClusterEnv::wire_time`]) is a conservative estimate, not what
+//! execution charges. A fully-overlapped transfer degrades exactly as the
+//! static rule predicts; an idle group-mate costs nothing. The charge is
+//! symmetric in dispatch order: a paying transfer that starts second pays
+//! for the window it shares with transfers already in flight, and a
+//! paying transfer already in flight is *extended* when a group-mate
+//! starts alongside it — only the group's fastest member is never slowed
+//! (the paper's NCCL observation). Home-link spans are therefore recorded
+//! at completion, once the end time is final.
+//!
+//! ## Per-segment streams
+//!
+//! Under a hierarchical [`crate::links::Topology`] a transfer's
+//! node-local legs run on the designated intra link. The transfer's home
+//! link stream serializes the whole collective; the foreign legs are
+//! recorded as spans on their segment's stream and accounted into that
+//! link's busy time, so Gantt rows and the per-link busy table show the
+//! shared segment's occupancy.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -44,7 +69,9 @@ pub struct SimResult {
     pub compute_bubbles: Micros,
     /// Average steady-state iteration time (excluding warm-up).
     pub steady_iter_time: Micros,
-    /// Per-link busy time, in registry order.
+    /// Per-link busy time (segment occupancy), in registry order. Under
+    /// a hierarchical topology a shared intra link also accumulates the
+    /// node-local legs of transfers homed on other links.
     pub link_busy: Vec<(LinkId, Micros)>,
     /// Link names in registry order (for timeline/metric rendering).
     pub link_names: Vec<String>,
@@ -82,10 +109,17 @@ struct OpInst {
     merged: usize,
     /// Global update index this op's gradients feed.
     update_idx: usize,
-    /// Wire time on its link.
+    /// Uncontended wire time of the full segment path on its home link.
     wire: Micros,
+    /// Foreign segment leg (hierarchical topologies): the intra/inter
+    /// link that also carries part of this transfer, and for how long.
+    seg_extra: Option<(LinkId, Micros)>,
     /// Resolved readiness (None until known).
     ready: Option<Micros>,
+    /// Finalized completion time, set at the completion event. None while
+    /// queued or in flight — an in-flight transfer's *tentative* end
+    /// lives in the engine's span table, where overlap contention may
+    /// still extend it, so nothing may gate on it before completion.
     done: Option<Micros>,
 }
 
@@ -139,7 +173,11 @@ pub fn simulate(
                 "op targets link {:?} but the environment registers only {n_links} links",
                 op.link
             );
-            let wire = env.wire_time(op.link, buckets[op.bucket].comm, buckets[op.bucket].params);
+            // Uncontended segment-path pricing; the dispatch loop adds
+            // the contention penalty for actually-overlapping windows.
+            let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
+            let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
+            let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
             ops.push(OpInst {
                 bucket: op.bucket,
                 link: op.link,
@@ -150,6 +188,7 @@ pub fn simulate(
                 merged: op.merged,
                 update_idx: updates_before[t] + op.update_offset,
                 wire,
+                seg_extra,
                 ready: None,
                 done: None,
             });
@@ -208,6 +247,17 @@ pub fn simulate(
     // Link busy-until and in-flight op, indexed by LinkId.
     let mut link_free: Vec<Micros> = vec![Micros::ZERO; n_links];
     let mut in_flight: Vec<Option<usize>> = vec![None; n_links];
+    // Busy interval of the in-flight op (valid while in_flight is Some).
+    let mut in_flight_span: Vec<(Micros, Micros)> = vec![(Micros::ZERO, Micros::ZERO); n_links];
+    // Contention bookkeeping: group per link, and whether the link pays
+    // the shared-NIC penalty at all (the non-fastest-group-member rule).
+    let group_of: Vec<usize> = (0..n_links)
+        .map(|k| env.spec(LinkId(k)).contention_group)
+        .collect();
+    let pays: Vec<bool> = (0..n_links).map(|k| env.contended(LinkId(k))).collect();
+    // Per-link segment occupancy (wire time carried by each link,
+    // including foreign legs of hierarchical transfers + contention).
+    let mut seg_busy: Vec<Micros> = vec![Micros::ZERO; n_links];
 
     // Staleness-bound bookkeeping (incremental — a linear scan of all ops
     // per dispatch made the engine quadratic in iterations):
@@ -300,27 +350,81 @@ pub fn simulate(
             if let Some(key) = candidate {
                 let oi = key.3;
                 pool[k].remove(&key);
-                let start = ops[oi].ready.unwrap().max(link_free[k]).max(
-                    // Links are causal: cannot start in the past.
-                    Micros::ZERO,
-                );
-                let end = start + ops[oi].wire;
-                ops[oi].done = Some(end);
+                let start = ops[oi].ready.unwrap().max(link_free[k]);
+                let mut end = start + ops[oi].wire;
+                // Overlap-aware contention: a paying link is slowed only
+                // for the window it shares with an in-flight transfer of
+                // a same-group link (see the module docs).
+                if pays[k] && !ops[oi].wire.is_zero() {
+                    let mut overlap = Micros::ZERO;
+                    for (j, span) in in_flight_span.iter().enumerate() {
+                        if j == k || group_of[j] != group_of[k] || in_flight[j].is_none() {
+                            continue;
+                        }
+                        let lo = start.max(span.0);
+                        let hi = end.min(span.1);
+                        if hi > lo {
+                            overlap += hi - lo;
+                        }
+                    }
+                    if !overlap.is_zero() {
+                        let params = buckets[ops[oi].bucket].params;
+                        end += overlap.scale(env.contention_penalty(params));
+                    }
+                }
+                // `done` stays None until the completion event; while in
+                // flight the tentative end lives in `in_flight_span` and
+                // `link_free`, where the extension below may move it.
                 link_free[k] = end;
                 in_flight[k] = Some(oi);
-                record(
-                    &mut timeline,
-                    Span {
-                        stream: StreamId::Link(LinkId(k)),
-                        kind: SpanKind::Comm {
-                            iter: ops[oi].iter,
-                            bucket: ops[oi].bucket,
-                            merged: ops[oi].merged,
+                in_flight_span[k] = (start, end);
+                seg_busy[k] += end - start;
+                // Symmetry: this transfer also slows down any *paying*
+                // group-mate already in flight — extend it by the penalty
+                // on the newly shared window (the fastest member never
+                // pays, mirroring the dispatch-time charge above). Both
+                // directions measure the window against the spans as
+                // known at this dispatch, so the charge is symmetric to
+                // first order; the extra overlap an extension itself
+                // creates is deliberately not re-charged.
+                for j in 0..n_links {
+                    if j == k || group_of[j] != group_of[k] || !pays[j] {
+                        continue;
+                    }
+                    let Some(oj) = in_flight[j] else { continue };
+                    let (s2, e2) = in_flight_span[j];
+                    let lo = start.max(s2);
+                    let hi = end.min(e2);
+                    if hi > lo {
+                        let params = buckets[ops[oj].bucket].params;
+                        let extra = (hi - lo).scale(env.contention_penalty(params));
+                        if !extra.is_zero() {
+                            link_free[j] = e2 + extra;
+                            in_flight_span[j].1 = e2 + extra;
+                            seg_busy[j] += extra;
+                        }
+                    }
+                }
+                // Foreign segment leg: record its occupancy on the
+                // segment's own stream (hierarchical topologies). The
+                // home-link span is recorded at completion, once the end
+                // can no longer be extended by contention.
+                if let Some((seg_link, seg_t)) = ops[oi].seg_extra {
+                    seg_busy[seg_link.index()] += seg_t;
+                    record(
+                        &mut timeline,
+                        Span {
+                            stream: StreamId::Link(seg_link),
+                            kind: SpanKind::Comm {
+                                iter: ops[oi].iter,
+                                bucket: ops[oi].bucket,
+                                merged: ops[oi].merged,
+                            },
+                            start,
+                            end: start + seg_t,
                         },
-                        start,
-                        end,
-                    },
-                );
+                    );
+                }
                 progressed = true;
             }
         }
@@ -369,6 +473,11 @@ pub fn simulate(
                                         iter - 1
                                     )
                                 });
+                                // `done` is final only after the
+                                // completion event — an in-flight op's
+                                // tentative end may still be extended by
+                                // contention, so wait rather than gate on
+                                // it (same wall-clock start either way).
                                 match ops[oi].done {
                                     Some(t) => dep_time = dep_time.map(|d| d.max(t)),
                                     None => dep_time = None,
@@ -451,11 +560,27 @@ pub fn simulate(
         // Link completions.
         for k in 0..n_links {
             if let Some(oi) = in_flight[k] {
-                if ops[oi].done.unwrap() <= now {
+                let done_t = in_flight_span[k].1;
+                if done_t <= now {
+                    // Finalize: contention from group-mates starting
+                    // mid-flight can no longer extend this transfer.
+                    ops[oi].done = Some(done_t);
                     in_flight[k] = None;
+                    record(
+                        &mut timeline,
+                        Span {
+                            stream: StreamId::Link(LinkId(k)),
+                            kind: SpanKind::Comm {
+                                iter: ops[oi].iter,
+                                bucket: ops[oi].bucket,
+                                merged: ops[oi].merged,
+                            },
+                            start: in_flight_span[k].0,
+                            end: done_t,
+                        },
+                    );
                     // Advance the staleness watermark.
                     let op_iter = ops[oi].iter;
-                    let done_t = ops[oi].done.unwrap();
                     iter_ops_remaining[op_iter] -= 1;
                     iter_max_done[op_iter] = iter_max_done[op_iter].max(done_t);
                     while watermark < iters && iter_ops_remaining[watermark] == 0 {
@@ -472,7 +597,7 @@ pub fn simulate(
                         update_outstanding[u] -= 1;
                         if update_outstanding[u] == 0 {
                             if let Some(iter_end) = update_pending_end[u] {
-                                update_times[u] = Some(iter_end.max(ops[oi].done.unwrap()));
+                                update_times[u] = Some(iter_end.max(done_t));
                             }
                         }
                     }
@@ -576,16 +701,13 @@ pub fn simulate(
     let compute_span_start = first_comp_start.unwrap_or(Micros::ZERO);
     let compute_bubbles = (compute_span_end - compute_span_start).saturating_sub(compute_busy);
 
-    let link_busy = (0..n_links)
-        .map(|k| {
-            (
-                LinkId(k),
-                ops.iter()
-                    .filter(|o| o.link.index() == k)
-                    .map(|o| o.wire)
-                    .sum::<Micros>(),
-            )
-        })
+    // Per-link busy = segment occupancy charged during dispatch: home
+    // durations (incl. overlap contention) plus foreign hierarchical
+    // legs. Flat topologies reduce to the sum of executed wire times.
+    let link_busy = seg_busy
+        .into_iter()
+        .enumerate()
+        .map(|(k, busy)| (LinkId(k), busy))
         .collect();
 
     SimResult {

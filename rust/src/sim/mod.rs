@@ -9,7 +9,11 @@
 //! * one serial **communication stream per registry link** (the paper's
 //!   NCCL + gloo pair, or any N-link topology from
 //!   [`crate::links::ClusterEnv`]), served by op priority among *ready*
-//!   ops (non-preemptive);
+//!   ops (non-preemptive); under a hierarchical
+//!   [`crate::links::Topology`] a transfer's node-local segment legs are
+//!   additionally recorded on the shared intra link's stream, and
+//!   shared-NIC contention is charged only for windows where same-group
+//!   transfers actually overlap (see `engine` docs);
 //! * a gradient's communication may not start before its producing
 //!   backward finishes (unless it carries an older iteration's gradient —
 //!   DeFT's delayed updates);

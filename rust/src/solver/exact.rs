@@ -255,6 +255,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_greedy_never_exceeds_exact_on_segment_derived_capacities() {
+        use crate::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+        // Capacities as the schedulers now derive them: one knapsack per
+        // registry link, capacity = compute window ÷ the link's
+        // **segment-path** slowdown under a hierarchical topology (not a
+        // global μ). Greedy must stay within the exact optimum and every
+        // capacity must be respected.
+        check("greedy <= exact (segment-derived caps)", 30, |g| {
+            let rpn = [2usize, 4, 8][g.usize_in(0..=2)];
+            let env: ClusterEnv = LinkPreset::NvlinkIbTcp
+                .env()
+                .with_topology(Topology::hierarchical(rpn, LinkId(0), LinkId(1)));
+            let compute = Micros(g.u64_in(1_000..=100_000));
+            let caps: Vec<Micros> = env
+                .link_path_mus()
+                .iter()
+                .map(|&mu| compute.scale(1.0 / mu))
+                .collect();
+            let comms = g.vec_u64(0..=9, 0..=60_000);
+            let its = mk(&comms);
+            let (assign, e_total) = multi_knapsack_exact(&its, &caps);
+            let gr = multi_knapsack_greedy(&its, &caps);
+            if gr.total > e_total {
+                return Err(format!(
+                    "rpn={rpn}: greedy {:?} beats exact {e_total:?}",
+                    gr.total
+                ));
+            }
+            for (k, sack) in assign.iter().enumerate() {
+                let used: Micros = sack.iter().map(|&id| its[id].comm).sum();
+                if used > caps[k] {
+                    return Err(format!("rpn={rpn}: exact sack {k} over capacity"));
+                }
+            }
+            for (k, sack) in gr.assignments.iter().enumerate() {
+                let used: Micros = sack.iter().map(|&id| its[id].comm).sum();
+                if used > caps[k] {
+                    return Err(format!("rpn={rpn}: greedy sack {k} over capacity"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn greedy_single_within_half_of_optimal() {
         // Classic bound: profit=weight greedy (longest-first) achieves
         // >= 1/2 of optimal. Verify on random instances.

@@ -1,0 +1,245 @@
+//! Rank-level topology parity and overlap-aware contention regressions.
+//!
+//! 1. A flat [`Topology`] (the default) and the degenerate hierarchical
+//!    topology with one rank per node must reproduce the flat registry
+//!    pricing **bit-for-bit** — same schedules, same `SimResult` metrics
+//!    — for every preset and all four schemes (plus the no-multilink
+//!    ablation), in the same spirit as `tests/link_parity.rs`.
+//! 2. The phantom shared-NIC contention bug: a `single-nic` environment
+//!    running a schedule that only ever uses the slow link must price
+//!    identically to the same schedule on `paper-2link` — an idle
+//!    group-mate costs nothing at execution time. The static planner
+//!    estimate stays conservative (that split is deliberate).
+//! 3. When same-group transfers *do* overlap, the engine charges the
+//!    Table IV penalty exactly for the shared window.
+
+use deft::bench::{run_pipeline, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+use deft::models::{vgg19_table2_buckets, BucketProfile};
+use deft::sched::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage, Wfbp};
+use deft::sim::{simulate, SimOptions, SimResult};
+use deft::util::Micros;
+
+fn sim(buckets: &[BucketProfile], schedule: &Schedule, env: &ClusterEnv) -> SimResult {
+    simulate(
+        buckets,
+        schedule,
+        env,
+        &SimOptions {
+            iterations: (schedule.cycle.len() * 4).max(24),
+            warmup: schedule.cycle.len().max(4),
+            record_timeline: true,
+        },
+    )
+}
+
+fn assert_same_metrics(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.steady_iter_time, b.steady_iter_time, "{what}: steady");
+    assert_eq!(a.total, b.total, "{what}: total");
+    assert_eq!(a.compute_bubbles, b.compute_bubbles, "{what}: bubbles");
+    assert_eq!(a.update_times, b.update_times, "{what}: updates");
+    assert_eq!(a.link_busy, b.link_busy, "{what}: link busy");
+    assert_eq!(a.iter_ends, b.iter_ends, "{what}: iter ends");
+}
+
+/// One rank per node ⇒ no intra segment exists ⇒ the hierarchical model
+/// must collapse to flat registry pricing bit-for-bit, for every preset
+/// and every scheme.
+#[test]
+fn one_rank_per_node_reproduces_flat_pricing_everywhere() {
+    let buckets = vgg19_table2_buckets();
+    for preset in LinkPreset::ALL {
+        let flat = preset.env();
+        let one = preset.env().with_topology(Topology::hierarchical(1, LinkId(1), LinkId(0)));
+        // Identical knapsack factors ⇒ identical schedules.
+        assert_eq!(flat.link_path_mus(), one.link_path_mus(), "{}", preset.name());
+        assert!((flat.max_mu() - one.max_mu()).abs() < 1e-15);
+        let mut schemes = Scheme::ALL.to_vec();
+        schemes.push(Scheme::DeftNoMultilink);
+        for scheme in schemes {
+            let s_flat = scheduler_for(scheme, false, &flat).schedule(&buckets);
+            let s_one = scheduler_for(scheme, false, &one).schedule(&buckets);
+            assert_eq!(s_flat, s_one, "{}/{:?}: schedule", preset.name(), scheme);
+            let r_flat = sim(&buckets, &s_flat, &flat);
+            let r_one = sim(&buckets, &s_one, &one);
+            assert_same_metrics(&r_flat, &r_one, &format!("{}/{:?}", preset.name(), scheme));
+        }
+    }
+}
+
+/// Regression for the phantom contention bug: a single-NIC environment
+/// whose schedule only ever touches the slow link must execute exactly
+/// like the dual-NIC testbed — the fast link is idle, so nothing
+/// contends. (The old engine statically inflated every slow-link op
+/// whenever a faster group-mate merely *existed*.)
+#[test]
+fn idle_group_mate_no_longer_inflates_single_link_schedules() {
+    let buckets = vgg19_table2_buckets();
+    let mut schedule = Wfbp.schedule(&buckets);
+    for op in &mut schedule.cycle[0].bwd_ops {
+        op.link = LinkId(1); // everything on the slow (gloo) link
+    }
+    schedule.validate().unwrap();
+    let multi = LinkPreset::Paper2Link.env();
+    let single = LinkPreset::SingleNic.env();
+    let r_multi = sim(&buckets, &schedule, &multi);
+    let r_single = sim(&buckets, &schedule, &single);
+    assert_same_metrics(&r_multi, &r_single, "slow-link-only schedule");
+
+    // The schedulers' static planning estimate deliberately stays
+    // conservative: on the shared NIC the slow link still budgets the
+    // full Table IV penalty.
+    let comm = Micros(100_000);
+    let p = 33_554_432u64;
+    assert!(
+        single.wire_time(LinkId(1), comm, p) > multi.wire_time(LinkId(1), comm, p),
+        "planning estimate must keep the static contention rule"
+    );
+    assert_eq!(
+        single.wire_time_uncontended(LinkId(1), comm),
+        multi.wire_time_uncontended(LinkId(1), comm),
+        "execution pricing is contention-free until transfers overlap"
+    );
+}
+
+/// When same-group transfers genuinely overlap, the engine charges the
+/// penalty for exactly the shared window — deterministic arithmetic.
+fn pair_schedule(first: LinkId, second: LinkId) -> (Vec<BucketProfile>, Schedule) {
+    // Two buckets, 10 ms fwd/bwd each, 50 ms reference comm each, both
+    // far above the contention knee. Backward runs bucket 1 then bucket
+    // 0, so bucket 1's transfer (on `first`) dispatches at 30 ms and
+    // bucket 0's (on `second`) at 40 ms.
+    let bucket = |id: usize| BucketProfile {
+        id,
+        params: 40_000_000,
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm: Micros(50_000),
+    };
+    let op = |bucket: usize, link: LinkId| CommOp {
+        bucket,
+        link,
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age: 0,
+        merged: 1,
+        update_offset: 0,
+    };
+    let schedule = Schedule {
+        scheme: "pair".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops: vec![op(1, first), op(0, second)],
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+    };
+    schedule.validate().unwrap();
+    (vec![bucket(0), bucket(1)], schedule)
+}
+
+const PAIR_OPTS: SimOptions = SimOptions {
+    iterations: 1,
+    warmup: 0,
+    record_timeline: false,
+};
+
+#[test]
+fn overlapping_same_group_transfers_pay_for_the_shared_window() {
+    // NCCL first: its transfer [30 ms, 80 ms) is in flight when the gloo
+    // transfer starts at 40 ms (base wire 82.5 ms) ⇒ 40 ms of overlap.
+    let (buckets, schedule) = pair_schedule(LinkId(0), LinkId(1));
+    let multi = LinkPreset::Paper2Link.env();
+    let single = LinkPreset::SingleNic.env();
+    let r_multi = simulate(&buckets, &schedule, &multi, &PAIR_OPTS);
+    let r_single = simulate(&buckets, &schedule, &single, &PAIR_OPTS);
+    // Dual NICs: gloo finishes at 40 ms + 82.5 ms.
+    assert_eq!(r_multi.total, Micros(122_500));
+    // Shared NIC: + 21% of the 40 ms overlap window = 8.4 ms.
+    assert_eq!(r_single.total, Micros(130_900));
+    let gloo_busy = |r: &SimResult| r.link_busy[1].1;
+    assert_eq!(gloo_busy(&r_multi), Micros(82_500));
+    assert_eq!(gloo_busy(&r_single), Micros(90_900));
+    // The fast group member is never slowed (the paper's observation).
+    assert_eq!(r_multi.link_busy[0], r_single.link_busy[0]);
+}
+
+#[test]
+fn paying_transfer_in_flight_is_extended_when_group_mate_starts() {
+    // Reversed dispatch order: gloo starts first [30 ms, 112.5 ms) and
+    // NCCL joins at 40 ms for [40 ms, 90 ms). The charge must be
+    // symmetric in dispatch order — the already-in-flight paying
+    // transfer is extended by 21% of the shared 50 ms window (10.5 ms),
+    // while the exempt NCCL transfer is untouched.
+    let (buckets, schedule) = pair_schedule(LinkId(1), LinkId(0));
+    let multi = LinkPreset::Paper2Link.env();
+    let single = LinkPreset::SingleNic.env();
+    let r_multi = simulate(&buckets, &schedule, &multi, &PAIR_OPTS);
+    let r_single = simulate(&buckets, &schedule, &single, &PAIR_OPTS);
+    assert_eq!(r_multi.total, Micros(112_500));
+    assert_eq!(r_single.total, Micros(123_000));
+    let gloo_busy = |r: &SimResult| r.link_busy[1].1;
+    assert_eq!(gloo_busy(&r_multi), Micros(82_500));
+    assert_eq!(gloo_busy(&r_single), Micros(93_000));
+    assert_eq!(r_multi.link_busy[0], r_single.link_busy[0]);
+}
+
+/// Hierarchical topology end-to-end: DeFT runs on a 2-node NVLink+IB+TCP
+/// cluster, knapsack capacities follow the segment paths, the §III.D
+/// partition constraint uses the slowest path, and per-link busy
+/// accounting includes the shared intra segment's foreign legs.
+#[test]
+fn hierarchical_topology_runs_the_full_pipeline() {
+    let env = LinkPreset::NvlinkIbTcp
+        .env()
+        .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
+    let w = workload_by_name("vgg19");
+    let r = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+    r.schedule.validate().unwrap();
+    assert!(r.sim.steady_iter_time.as_us() > 0);
+
+    // §III.D constraint against the slowest segment path (1.33 here,
+    // not the raw μ = 6 of the TCP link).
+    assert!(env.max_mu() < 1.5, "slowest path {}", env.max_mu());
+    let cap = w.total_fwd().scale(1.0 / env.max_mu());
+    for b in &r.buckets {
+        assert!(
+            b.comm <= cap + Micros(1),
+            "bucket {} comm {:?} exceeds path-derived cap {cap:?}",
+            b.id,
+            b.comm
+        );
+    }
+
+    // Busy accounting: home totals plus foreign segment legs, per link.
+    let iters = r.sim.iter_ends.len();
+    let mut expect = vec![Micros::ZERO; env.n_links()];
+    let mut foreign_legs = 0usize;
+    for t in 0..iters {
+        let plan = &r.schedule.cycle[t % r.schedule.cycle.len()];
+        for op in plan.all_ops() {
+            let segs = env.wire_segments(op.link, r.buckets[op.bucket].comm);
+            let total: Micros = segs.iter().map(|&(_, x)| x).sum();
+            expect[op.link.index()] += total;
+            for &(l, x) in &segs {
+                if l != op.link {
+                    expect[l.index()] += x;
+                    foreign_legs += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        foreign_legs > 0,
+        "hierarchical schedule produced no shared-segment legs"
+    );
+    for (k, (id, busy)) in r.sim.link_busy.iter().enumerate() {
+        assert_eq!(id.index(), k);
+        assert_eq!(*busy, expect[k], "link {k} segment busy");
+    }
+}
