@@ -7,9 +7,10 @@
 use deft::bench::{PAPER_DDP_MB, PAPER_PARTITION};
 use deft::bench::{run_pipeline, workload_by_name};
 use deft::config::Scheme;
-use deft::links::ClusterEnv;
+use deft::links::{ClusterEnv, Codec, LinkId};
 use deft::metrics::Table;
-use deft::preserver::{acceptable, quantify, table5_setting, EPSILON};
+use deft::preserver::{acceptable, quantify, quantify_with_error, table5_setting, EPSILON};
+use deft::sched::{run_lifecycle, LifecycleOptions};
 
 fn main() {
     let (walk, base_batch) = table5_setting();
@@ -92,4 +93,36 @@ fn main() {
         );
     }
     println!("\nThe feedback mechanism raises knapsack capacity until the walk\nratio re-enters [1-eps, 1+eps], trading a little overlap for accuracy.");
+
+    // === Codec error gate: lossy links must clear the same walk. ===
+    println!("\n=== codec error gate (k = [2, 1, 1]) ===");
+    let mut ct = Table::new(&["codec", "gradient error", "walk ratio", "acceptable(eps=0.01)"]);
+    for codec in [
+        Codec::Raw,
+        Codec::Fp16,
+        Codec::RankK { k: 16 },
+        Codec::RankK { k: 4 },
+        Codec::RankK { k: 1 },
+    ] {
+        let rep = quantify_with_error(&walk, base_batch, &[2, 1, 1], codec.error());
+        ct.row(&[
+            codec.name(),
+            format!("{:.3}", codec.error()),
+            format!("{:.4}", rep.ratio),
+            acceptable(&rep, EPSILON).to_string(),
+        ]);
+    }
+    println!("{}", ct.render());
+
+    // A rejected codec forces the lifecycle back onto raw links.
+    let lossy = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
+    let rep = run_lifecycle(&w, &lossy, &LifecycleOptions::default());
+    println!(
+        "lifecycle on rank1-gloo: codec_fallback = {} (attempts: {:?})",
+        rep.codec_fallback,
+        rep.attempts
+            .iter()
+            .map(|(s, r)| format!("scale {s:.2} ratio {r:.4}"))
+            .collect::<Vec<_>>()
+    );
 }

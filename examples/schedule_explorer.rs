@@ -4,24 +4,27 @@
 //! schedule) and a per-link busy/bubble table.
 //!
 //! Run: `cargo run --release --example schedule_explorer -- [workload]
-//!        [--links <preset>] [--ranks-per-node <n>]`
+//!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
 //!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
 //!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
-//!  the intra-node segment and link 1 as its cross-node fabric)
+//!  the intra-node segment and link 1 as its cross-node fabric;
+//!  --codec attaches a compression codec — raw | fp16 | rank<k> — to a
+//!  registry link by name, e.g. `--codec tcp=fp16`; repeatable)
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{LinkId, LinkPreset, Topology};
+use deft::links::{Codec, LinkId, LinkPreset, Topology};
 use deft::metrics::{gantt_steady, link_table};
 use deft::models::BucketProfile;
 use deft::profiler::{generate_trace, reconstruct, TraceOptions};
 use deft::sched::feature_matrix;
 
-fn parse_args() -> (String, LinkPreset, usize) {
+fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>) {
     let mut workload = "vgg19".to_string();
     let mut preset = LinkPreset::Paper2Link;
     let mut ranks_per_node = 1usize;
+    let mut codecs: Vec<(String, Codec)> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         let looked_up = if let Some(v) = a.strip_prefix("--links=") {
@@ -34,6 +37,13 @@ fn parse_args() -> (String, LinkPreset, usize) {
         } else if a == "--ranks-per-node" {
             let v = args.next().expect("--ranks-per-node needs an integer");
             ranks_per_node = v.parse().expect("--ranks-per-node needs an integer");
+            None
+        } else if let Some(v) = a.strip_prefix("--codec=") {
+            codecs.push(parse_codec_arg(v));
+            None
+        } else if a == "--codec" {
+            let v = args.next().expect("--codec needs <link>=<codec>");
+            codecs.push(parse_codec_arg(&v));
             None
         } else {
             workload = a;
@@ -52,15 +62,43 @@ fn parse_args() -> (String, LinkPreset, usize) {
             });
         }
     }
-    (workload, preset, ranks_per_node)
+    (workload, preset, ranks_per_node, codecs)
+}
+
+fn parse_codec_arg(spec: &str) -> (String, Codec) {
+    let (link, codec) = spec
+        .split_once('=')
+        .unwrap_or_else(|| panic!("--codec needs <link>=<codec>, got `{spec}`"));
+    let codec = Codec::parse(codec)
+        .unwrap_or_else(|| panic!("unknown codec `{codec}` (known: raw | fp16 | rank<k>)"));
+    (link.to_string(), codec)
 }
 
 fn main() {
-    let (name, preset, ranks_per_node) = parse_args();
+    let (name, preset, ranks_per_node, codecs) = parse_args();
     let workload = workload_by_name(&name);
     let mut env = preset.env();
     if ranks_per_node > 1 {
         env = env.with_topology(Topology::hierarchical(ranks_per_node, LinkId(0), LinkId(1)));
+    }
+    for (link_name, codec) in &codecs {
+        let id = env.link(link_name).unwrap_or_else(|| {
+            panic!(
+                "--codec: unknown link `{link_name}` (registry: {})",
+                env.link_names().join(", ")
+            )
+        });
+        env = env.with_codec(id, *codec);
+    }
+    if env.has_lossy_codec() {
+        println!(
+            "codecs: {}\n",
+            env.links
+                .iter()
+                .map(|l| format!("{}={}", l.name, l.codec.name()))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
     }
 
     println!("=== Table III: scheme feature matrix ===\n{}", feature_matrix());

@@ -10,10 +10,11 @@
 //!   ratio stabilises at μ ≈ 1.59–1.69 (set to 1.65).
 
 use deft::bench::PAPER_PARTITION;
-use deft::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+use deft::links::{ClusterEnv, Codec, LinkId, LinkPreset, Topology};
 use deft::metrics::Table;
 use deft::models::vgg19;
 use deft::partition::{partition, Strategy};
+use deft::preserver::{acceptable, quantify_with_error, table5_setting, EPSILON};
 use deft::sched::{Deft, Scheduler};
 use deft::sim::{simulate, SimOptions};
 use deft::util::Micros;
@@ -179,4 +180,92 @@ fn main() {
         prev = a;
     }
     println!("{}", t4.render());
+
+    // === Codec ablation: compression on the slowest link. Attaching a
+    // codec to tcp scales its per-byte cost (codec-effective μ), so the
+    // effective coverage rate CR_eff = comm / (compute · Σ 1/μ_eff)
+    // falls — fp16 without tripping the Preserver's `acceptable` gate;
+    // the aggressive rank-1 codec buys the most coverage but its
+    // truncation error is rejected (the lifecycle would fall back to
+    // raw links).
+    println!("\n=== Codec ablation: DeFT with compression on tcp (VGG-19) ===\n");
+    let (walk, base_batch) = table5_setting();
+    let mut t5 = Table::new(&[
+        "tcp codec",
+        "path mu(tcp)",
+        "effective CR",
+        "updates/iter",
+        "steady iter",
+        "tcp wire/raw (MB)",
+        "walk ratio",
+        "preserver ok",
+    ]);
+    let mut raw_eff_cr = None;
+    let mut fp16_row: Option<(f64, bool)> = None;
+    for codec in [Codec::Raw, Codec::Fp16, Codec::RankK { k: 4 }, Codec::RankK { k: 1 }] {
+        let env = ClusterEnv::paper_testbed()
+            .with_links(all_links.clone())
+            .with_codec(LinkId(2), codec);
+        let buckets = partition(
+            &workload,
+            Strategy::DeftConstrained {
+                partition_size: PAPER_PARTITION,
+            },
+            &env,
+        )
+        .expect("partition");
+        // Preserver ON: fp16's negligible error clears the gate through
+        // the normal capacity feedback; rank-1's irreducible error makes
+        // the loop stop early and the gate reject the route.
+        let deft = Deft::for_env(&env, true);
+        let schedule = deft.schedule(&buckets);
+        let sim = simulate(
+            &buckets,
+            &schedule,
+            &env,
+            &SimOptions {
+                iterations: (schedule.cycle.len() * 4).max(24),
+                warmup: schedule.cycle.len().max(4),
+                record_timeline: false,
+            },
+        );
+        let comm: Micros = buckets.iter().map(|b| b.comm).sum();
+        let compute: Micros = buckets.iter().map(|b| b.fwd + b.bwd).sum();
+        let cap_factor: f64 = env.link_path_mus().iter().map(|mu| 1.0 / mu).sum();
+        let eff_cr = comm.ratio(compute) / cap_factor;
+        // The Preserver gate: the worst codec error among links the
+        // schedule actually routes over, injected into the walk.
+        let err = schedule.worst_codec_error(&env.link_path_codec_errors());
+        let rep = quantify_with_error(&walk, base_batch, &schedule.batch_multipliers, err);
+        let ok = acceptable(&rep, EPSILON);
+        let tcp = &sim.link_traffic[2];
+        t5.row(&[
+            codec.name(),
+            format!("{:.3}", env.path_mu(LinkId(2))),
+            format!("{eff_cr:.2}"),
+            format!("{:.2}", schedule.update_frequency()),
+            format!("{}", sim.steady_iter_time),
+            format!("{:.0}/{:.0}", tcp.wire_bytes as f64 / 1e6, tcp.raw_bytes as f64 / 1e6),
+            format!("{:.4}", rep.ratio),
+            ok.to_string(),
+        ]);
+        match codec {
+            Codec::Raw => raw_eff_cr = Some(eff_cr),
+            Codec::Fp16 => fp16_row = Some((eff_cr, ok)),
+            Codec::RankK { k: 1 } => assert!(
+                !ok,
+                "rank-1 truncation error must trip the Preserver gate (ratio {})",
+                rep.ratio
+            ),
+            _ => {}
+        }
+    }
+    println!("{}", t5.render());
+    let (fp16_cr, fp16_ok) = fp16_row.expect("fp16 row ran");
+    let raw_cr_eff = raw_eff_cr.expect("raw row ran");
+    assert!(
+        fp16_cr < raw_cr_eff,
+        "fp16 on the slowest link must lower the effective CR: {fp16_cr} vs {raw_cr_eff}"
+    );
+    assert!(fp16_ok, "fp16's rounding error must not trip the Preserver gate");
 }

@@ -42,8 +42,9 @@ pub fn workload_by_name(name: &str) -> Workload {
 
 /// Build the scheduler for a scheme; DeFT's knapsack set follows the
 /// environment's link registry (one knapsack per link), each capacity
-/// derived from that link's **segment path** slowdown — under a flat
-/// topology these are the raw μs.
+/// derived from that link's **codec-effective segment path** slowdown —
+/// under a flat topology with raw codecs these are the raw μs. Per-link
+/// codec errors feed DeFT's Preserver gate.
 pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<dyn Scheduler> {
     match scheme {
         Scheme::PytorchDdp => Box::new(Wfbp),
@@ -52,12 +53,14 @@ pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<d
         Scheme::Deft => Box::new(Deft::new(DeftOptions {
             preserver,
             link_mus: env.link_path_mus(),
+            link_errors: env.link_path_codec_errors(),
             ..DeftOptions::default()
         })),
         Scheme::DeftNoMultilink => Box::new(Deft::new(DeftOptions {
             heterogeneous: false,
             preserver: false,
             link_mus: env.link_path_mus(),
+            link_errors: env.link_path_codec_errors(),
             ..DeftOptions::default()
         })),
     }

@@ -23,6 +23,7 @@
 //! alpha_us = 900
 //! contention_group = 1
 //! staging_ramp = 0.12
+//! codec = "fp16"        # per-link gradient compression: raw | fp16 | rank<k>
 //! ```
 //!
 //! A rank-level topology is configured with a `[topology]` table whose
@@ -36,6 +37,7 @@
 //! ranks_per_node = 8    # must divide `workers`; 1 (default) = flat
 //! intra = "nvlink"      # link serving node-local segments
 //! inter = "ib"          # fabric for transfers scheduled on `intra`
+//! codec = "fp16"        # compress the cross-node fabric (the inter link)
 //! ```
 //!
 //! The legacy knobs are kept: `multi_link = false` collapses a 2-link
@@ -46,7 +48,7 @@ pub mod toml_lite;
 
 pub use toml_lite::{parse, ParseError, Value};
 
-use crate::links::{ClusterEnv, LinkId, LinkPreset, LinkSpec, Topology};
+use crate::links::{ClusterEnv, Codec, LinkId, LinkPreset, LinkSpec, Topology};
 use crate::partition::Strategy;
 use crate::util::Micros;
 use std::collections::BTreeMap;
@@ -124,6 +126,10 @@ pub struct ExperimentConfig {
     /// leg of transfers scheduled on the intra link itself; defaults to
     /// the reference link (registry index 0).
     pub topology_inter: String,
+    /// `[topology] codec`: compression codec attached to the `inter`
+    /// fabric link (`raw` | `fp16` | `rank<k>`; empty = leave the link's
+    /// own codec). Requires a hierarchical topology.
+    pub topology_codec: String,
 }
 
 impl Default for ExperimentConfig {
@@ -147,6 +153,7 @@ impl Default for ExperimentConfig {
             ranks_per_node: 1,
             topology_intra: String::new(),
             topology_inter: String::new(),
+            topology_codec: String::new(),
         }
     }
 }
@@ -243,6 +250,15 @@ impl ExperimentConfig {
                 ));
             }
         }
+        if self.ranks_per_node <= 1
+            && (!self.topology_intra.is_empty() || !self.topology_inter.is_empty())
+        {
+            return Err(
+                "[topology] intra/inter take effect only with ranks_per_node > 1 — set it, \
+                 or drop the keys for a flat topology"
+                    .into(),
+            );
+        }
         if self.ranks_per_node > 1 {
             if self.topology_intra.is_empty() {
                 return Err(
@@ -261,6 +277,21 @@ impl ExperimentConfig {
                     "topology.intra and topology.inter must be distinct links (both `{inter}`; \
                      inter defaults to the reference link)"
                 ));
+            }
+        }
+        if !self.topology_codec.is_empty() {
+            if Codec::parse(&self.topology_codec).is_none() {
+                return Err(format!(
+                    "topology.codec: unknown codec `{}` (known: raw | fp16 | rank<k>)",
+                    self.topology_codec
+                ));
+            }
+            if self.ranks_per_node <= 1 {
+                return Err(
+                    "topology.codec compresses the inter fabric and needs a hierarchical \
+                     topology (ranks_per_node > 1); use a [[links]] codec for flat registries"
+                        .into(),
+                );
             }
         }
         Ok(())
@@ -314,7 +345,13 @@ impl ExperimentConfig {
         } else {
             env.link(&self.topology_inter).expect("validated inter link")
         };
-        env.with_topology(Topology::hierarchical(self.ranks_per_node, intra, inter))
+        let mut env =
+            env.with_topology(Topology::hierarchical(self.ranks_per_node, intra, inter));
+        if !self.topology_codec.is_empty() {
+            let codec = Codec::parse(&self.topology_codec).expect("validated codec");
+            env = env.with_codec(inter, codec);
+        }
+        env
     }
 
     /// The partition strategy this config's scheme uses.
@@ -373,6 +410,7 @@ impl ExperimentConfig {
             }
             "topology.intra" => self.topology_intra = value.as_str()?.to_string(),
             "topology.inter" => self.topology_inter = value.as_str()?.to_string(),
+            "topology.codec" => self.topology_codec = value.as_str()?.to_string(),
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
                 if let Some(rest) = other.strip_prefix("links.") {
@@ -408,6 +446,12 @@ impl ExperimentConfig {
             "bandwidth_gbps" => link.bandwidth_gbps = value.as_float()?,
             "contention_group" => link.contention_group = value.as_int()? as usize,
             "staging_ramp" => link.staging_ramp = value.as_float()?,
+            "codec" => {
+                let name = value.as_str()?;
+                link.codec = Codec::parse(name).ok_or_else(|| {
+                    format!("links[{idx}]: unknown codec `{name}` (known: raw | fp16 | rank<k>)")
+                })?;
+            }
             other => return Err(format!("unknown link field `{other}`")),
         }
         Ok(())
@@ -604,6 +648,64 @@ staging_ramp = 0.05
         )
         .is_err());
         assert!(ExperimentConfig::from_toml("[topology]\nranks_per_node = 0\n").is_err());
+    }
+
+    #[test]
+    fn links_codec_key_attaches_a_codec() {
+        use crate::links::Codec;
+        let text = r#"
+[[links]]
+name = "nccl"
+mu = 1.0
+
+[[links]]
+name = "tcp"
+mu = 6.0
+codec = "fp16"
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let env = cfg.env();
+        assert_eq!(env.links[0].codec, Codec::Raw);
+        assert_eq!(env.links[1].codec, Codec::Fp16);
+        // Codec-effective μ follows (§III.D / knapsack capacities).
+        assert!((env.path_mu(crate::links::LinkId(1)) - 3.0).abs() < 1e-12);
+
+        let rank = "[[links]]\nname = \"n\"\nmu = 1.0\ncodec = \"rank4\"\n";
+        let cfg = ExperimentConfig::from_toml(rank).unwrap();
+        assert_eq!(cfg.env().links[0].codec, Codec::RankK { k: 4 });
+        // Unknown codec names are rejected.
+        let bad = "[[links]]\nname = \"n\"\nmu = 1.0\ncodec = \"zfp\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn topology_codec_compresses_the_inter_fabric() {
+        use crate::links::Codec;
+        let cfg = ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\nworkers = 16\n\
+             [topology]\nranks_per_node = 8\nintra = \"nvlink\"\ninter = \"ib\"\n\
+             codec = \"fp16\"\n",
+        )
+        .unwrap();
+        let env = cfg.env();
+        assert_eq!(env.links[1].codec, Codec::Fp16, "inter fabric carries the codec");
+        assert_eq!(env.links[0].codec, Codec::Raw);
+        // The fabric's path factor shrinks further than codec-free.
+        let free = ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\nworkers = 16\n\
+             [topology]\nranks_per_node = 8\nintra = \"nvlink\"\ninter = \"ib\"\n",
+        )
+        .unwrap()
+        .env();
+        assert!(env.path_mu(LinkId(1)) < free.path_mu(LinkId(1)));
+        // topology.codec needs a hierarchical topology and a known name.
+        assert!(ExperimentConfig::from_toml("[topology]\ncodec = \"fp16\"\n").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[cluster]\nlinks_preset = \"nvlink-ib-tcp\"\nworkers = 16\n\
+             [topology]\nranks_per_node = 8\nintra = \"nvlink\"\ninter = \"ib\"\n\
+             codec = \"zfp\"\n"
+        )
+        .is_err());
     }
 
     #[test]

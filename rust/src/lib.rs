@@ -24,6 +24,19 @@
 //!   terms compose hierarchically (`[topology]` in TOML); the flat and
 //!   1-rank-per-node cases reproduce the registry pricing bit-for-bit
 //!   (`tests/topology_parity.rs`).
+//!
+//!   **Codecs**: every link can carry a gradient compression
+//!   [`links::Codec`] (`fp16`, PowerSGD-style `rank<k>`; TOML
+//!   `codec = "fp16"` in `[[links]]` / `[topology]`, explorer
+//!   `--codec link=name`). A codec scales the link's bytes on the wire
+//!   (and therefore its codec-effective μ, which knapsack capacities and
+//!   the §III.D partition constraint divide by), charges an encode
+//!   overhead on the simulator's compute stream, and injects a gradient
+//!   error into the Preserver's walk — `quantify`/`acceptable` gate
+//!   whether a schedule may route over a lossy link, and the lifecycle
+//!   falls back to raw links on rejection. `Codec::Raw` is the identity:
+//!   pre-codec pricing is reproduced bit-for-bit
+//!   (`tests/codec_parity.rs`).
 //! * **L2 — JAX model** (`python/compile/model.py`, build-time only): a
 //!   bucketed transformer whose `train_step`/`apply_update` are AOT-lowered
 //!   to HLO text and executed from Rust via PJRT.

@@ -49,6 +49,31 @@
 //! degenerate `ranks_per_node = 1` — reproduce the flat registry pricing
 //! bit-for-bit (see `tests/topology_parity.rs`).
 //!
+//! ## Per-link gradient compression codecs
+//!
+//! Every link can carry a [`Codec`] (default [`Codec::Raw`]): slow links
+//! (the `tcp` preset link, hierarchical `inter` fabrics) trade gradient
+//! precision for coverage. A codec contributes three terms:
+//!
+//! * a **bytes-on-wire ratio** ([`Codec::wire_ratio`]) scaling every wire
+//!   time and the codec-effective μ ([`ClusterEnv::path_mu`] multiplies
+//!   each leg's μ by its link's ratio, so knapsack capacities and the
+//!   §III.D partition constraint see the compressed per-byte cost);
+//! * an **encode/decode compute overhead** ([`Codec::encode_overhead`],
+//!   µs per MB of raw gradient) charged on the compute stream by the DES
+//!   engine — *not* folded into [`ClusterEnv::wire_time`], which prices
+//!   link occupancy only (calibrating the overlap cost of encode kernels
+//!   is an open ROADMAP sub-item);
+//! * a **relative gradient error** ([`Codec::error`]) injected into the
+//!   Preserver's Gaussian walk
+//!   ([`crate::preserver::WalkParams::with_gradient_error`]) so
+//!   `quantify`/`acceptable` gate whether a schedule may route a bucket
+//!   over a lossy link at all (the lifecycle falls back to raw links on
+//!   rejection).
+//!
+//! `Codec::Raw` is the identity on all three terms, so a registry without
+//! codecs prices **bit-for-bit** as before (`tests/codec_parity.rs`).
+//!
 //! ## Contention: planning estimate vs execution model
 //!
 //! Shared-NIC contention is priced twice, deliberately:
@@ -80,6 +105,128 @@ impl LinkId {
     }
 }
 
+/// Gradient compression codec attached to a link (module docs,
+/// "Per-link gradient compression codecs").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Uncompressed f32 gradients — the identity codec every link
+    /// defaults to. Zero overhead, zero error, ratio 1.
+    #[default]
+    Raw,
+    /// Half-precision cast: half the bytes on the wire, a cheap cast
+    /// kernel, and a rounding error far below the Preserver's ε band.
+    Fp16,
+    /// PowerSGD-style low-rank factorization (Vogels et al.): a gradient
+    /// matrix ships as two rank-`k` factors. Calibrated at a reference
+    /// factor dimension [`RANKK_REF_DIM`]; higher rank means more bytes,
+    /// more encode work, and less truncation error. `k` must be ≥ 1 —
+    /// [`Codec::parse`] rejects `rank0` and the `with_codec` builders
+    /// assert it (a rank-0 codec would zero the wire and blow up the
+    /// error term).
+    RankK { k: u32 },
+}
+
+/// Reference gradient-matrix factor dimension for [`Codec::RankK`]: a
+/// rank-`k` factorization of an n×n matrix ships `2kn` of `n²` entries,
+/// so the wire ratio is `2k / n` at `n = RANKK_REF_DIM`.
+pub const RANKK_REF_DIM: f64 = 1024.0;
+
+/// fp16 cast cost on the compute stream, µs per MB of raw gradient.
+pub const FP16_ENCODE_US_PER_MB: f64 = 2.0;
+
+/// Rank-k encode cost, µs per MB: a fixed orthogonalization part plus a
+/// per-rank GEMM part (cost grows with the factor width).
+pub const RANKK_ENCODE_BASE_US_PER_MB: f64 = 24.0;
+pub const RANKK_ENCODE_US_PER_MB_PER_RANK: f64 = 6.0;
+
+/// fp16 relative gradient error (rounding): negligible next to the
+/// Preserver's default ε band.
+pub const FP16_ERROR: f64 = 1e-3;
+
+/// Rank-k truncation error at rank 1; decays as `1/√k`.
+pub const RANKK_ERROR_BASE: f64 = 0.5;
+
+impl Codec {
+    /// Parse a codec name: `raw`, `fp16`, or `rank<k>` (e.g. `rank4`).
+    /// The rank suffix must be canonical decimal digits — `rank+4`,
+    /// `rank007`, and `rank0` are rejected, so `parse` and [`Codec::name`]
+    /// round-trip exactly.
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "raw" | "f32" | "none" => Some(Codec::Raw),
+            "fp16" | "f16" | "half" => Some(Codec::Fp16),
+            other => {
+                let digits = other.strip_prefix("rank")?;
+                let canonical = !digits.is_empty()
+                    && digits.bytes().all(|b| b.is_ascii_digit())
+                    && !digits.starts_with('0');
+                if !canonical {
+                    return None;
+                }
+                let k = digits.parse::<u32>().ok()?;
+                Some(Codec::RankK { k })
+            }
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Codec::Raw => "raw".into(),
+            Codec::Fp16 => "fp16".into(),
+            Codec::RankK { k } => format!("rank{k}"),
+        }
+    }
+
+    /// Bytes-on-wire ratio relative to raw f32 (1.0 for [`Codec::Raw`],
+    /// monotone non-decreasing in `k` for [`Codec::RankK`], never > 1).
+    pub fn wire_ratio(self) -> f64 {
+        match self {
+            Codec::Raw => 1.0,
+            Codec::Fp16 => 0.5,
+            Codec::RankK { k } => (2.0 * k as f64 / RANKK_REF_DIM).min(1.0),
+        }
+    }
+
+    /// Encode + decode compute overhead for a transfer of `params` f32
+    /// parameters, charged on the compute stream by the DES engine.
+    pub fn encode_overhead(self, params: u64) -> Micros {
+        let per_mb = match self {
+            Codec::Raw => return Micros::ZERO,
+            Codec::Fp16 => FP16_ENCODE_US_PER_MB,
+            Codec::RankK { k } => {
+                RANKK_ENCODE_BASE_US_PER_MB + RANKK_ENCODE_US_PER_MB_PER_RANK * k as f64
+            }
+        };
+        let mb = params as f64 * 4.0 / 1e6;
+        Micros::from_us_f64(mb * per_mb)
+    }
+
+    /// Relative gradient error fed to the Preserver's Gaussian walk
+    /// ([`crate::preserver::WalkParams::with_gradient_error`]).
+    pub fn error(self) -> f64 {
+        match self {
+            Codec::Raw => 0.0,
+            Codec::Fp16 => FP16_ERROR,
+            Codec::RankK { k } => RANKK_ERROR_BASE / (k as f64).sqrt(),
+        }
+    }
+
+    /// Does this codec lose information at all (error > 0)?
+    pub fn is_lossy(self) -> bool {
+        self.error() > 0.0
+    }
+
+    /// Panic on the degenerate `RankK { k: 0 }` (zero wire bytes,
+    /// infinite error) — called by the `with_codec` builders so the
+    /// invariant [`Codec::parse`] enforces holds for programmatic
+    /// construction too.
+    fn assert_valid(self) {
+        if let Codec::RankK { k } = self {
+            assert!(k >= 1, "RankK codec needs k >= 1");
+        }
+    }
+}
+
 /// One communication link of the cluster.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LinkSpec {
@@ -103,6 +250,12 @@ pub struct LinkSpec {
     /// params). Ramp coefficient applied beyond `STAGING_KNEE` params;
     /// 0.0 disables the ramp.
     pub staging_ramp: f64,
+    /// Gradient compression codec applied to the bytes this link
+    /// carries — its leg of every segment path, so under a hierarchical
+    /// topology a coded intra link compresses the node-local leg of
+    /// transfers homed elsewhere too (default [`Codec::Raw`] — no
+    /// compression).
+    pub codec: Codec,
 }
 
 impl LinkSpec {
@@ -120,6 +273,7 @@ impl LinkSpec {
             bandwidth_gbps: 40.0,
             contention_group: 0,
             staging_ramp: 0.0,
+            codec: Codec::Raw,
         }
     }
 
@@ -140,6 +294,12 @@ impl LinkSpec {
 
     pub fn with_staging_ramp(mut self, ramp: f64) -> LinkSpec {
         self.staging_ramp = ramp;
+        self
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> LinkSpec {
+        codec.assert_valid();
+        self.codec = codec;
         self
     }
 }
@@ -193,6 +353,7 @@ impl LinkPreset {
                     bandwidth_gbps: 40.0,
                     contention_group: 0,
                     staging_ramp: 0.0,
+                    codec: Codec::Raw,
                 },
                 LinkSpec {
                     name: "gloo".into(),
@@ -201,6 +362,7 @@ impl LinkPreset {
                     bandwidth_gbps: 40.0,
                     contention_group: 1,
                     staging_ramp: 0.12,
+                    codec: Codec::Raw,
                 },
             ],
             LinkPreset::SingleNic => {
@@ -218,6 +380,7 @@ impl LinkPreset {
                     bandwidth_gbps: 40.0,
                     contention_group: 0,
                     staging_ramp: 0.0,
+                    codec: Codec::Raw,
                 },
                 LinkSpec {
                     name: "ib".into(),
@@ -226,6 +389,7 @@ impl LinkPreset {
                     bandwidth_gbps: 16.0,
                     contention_group: 1,
                     staging_ramp: 0.0,
+                    codec: Codec::Raw,
                 },
                 LinkSpec {
                     name: "tcp".into(),
@@ -234,6 +398,7 @@ impl LinkPreset {
                     bandwidth_gbps: 6.7,
                     contention_group: 2,
                     staging_ramp: 0.12,
+                    codec: Codec::Raw,
                 },
             ],
         }
@@ -411,6 +576,77 @@ impl ClusterEnv {
         self
     }
 
+    /// Attach a compression codec to one registered link.
+    pub fn with_codec(mut self, link: LinkId, codec: Codec) -> ClusterEnv {
+        assert!(
+            link.index() < self.links.len(),
+            "codec targets an unregistered link {link:?}"
+        );
+        codec.assert_valid();
+        self.links[link.0].codec = codec;
+        self
+    }
+
+    /// Strip every codec back to [`Codec::Raw`] — the lifecycle's
+    /// fallback registry when the Preserver rejects a lossy route.
+    pub fn with_raw_codecs(mut self) -> ClusterEnv {
+        for l in &mut self.links {
+            l.codec = Codec::Raw;
+        }
+        self
+    }
+
+    /// Does any registered link carry a lossy codec?
+    pub fn has_lossy_codec(&self) -> bool {
+        self.links.iter().any(|l| l.codec.is_lossy())
+    }
+
+    /// Per-link codec names in registry order (metric/CSV labels).
+    pub fn link_codec_names(&self) -> Vec<String> {
+        self.links.iter().map(|l| l.codec.name()).collect()
+    }
+
+    /// Per-link codec gradient errors in registry order (each link's own
+    /// codec, ignoring topology).
+    pub fn link_codec_errors(&self) -> Vec<f64> {
+        self.links.iter().map(|l| l.codec.error()).collect()
+    }
+
+    /// Codec gradient error of the full **segment path** of a transfer
+    /// homed on `link`: the worst codec error among the legs it rides
+    /// (flat topologies: the link's own codec error). This is what the
+    /// Preserver gate must consume — under a hierarchical topology a
+    /// lossy codec on the shared intra link corrupts every transfer's
+    /// node-local leg, even for transfers homed elsewhere.
+    pub fn path_codec_error(&self, link: LinkId) -> f64 {
+        self.segment_path(link)
+            .iter()
+            .map(|leg| self.spec(leg.link).codec.error())
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-link segment-path codec errors in registry order — what
+    /// [`crate::sched::DeftOptions::link_errors`] and the lifecycle gate
+    /// consume.
+    pub fn link_path_codec_errors(&self) -> Vec<f64> {
+        self.link_ids().map(|id| self.path_codec_error(id)).collect()
+    }
+
+    /// Encode/decode compute overhead of a transfer of `params` f32
+    /// parameters homed on `link`: each segment leg's codec charges for
+    /// the tensor fraction that leg actually ships (flat topologies: the
+    /// home codec on the full tensor; a hierarchical fabric leg encodes
+    /// only its `p/n` shard). Zero when every leg is raw.
+    pub fn encode_overhead_us(&self, link: LinkId, params: u64) -> Micros {
+        self.segment_path(link)
+            .iter()
+            .map(|leg| {
+                let leg_params = (params as f64 * leg.tensor_frac) as u64;
+                self.spec(leg.link).codec.encode_overhead(leg_params)
+            })
+            .sum()
+    }
+
     /// Number of links in the registry.
     pub fn n_links(&self) -> usize {
         self.links.len()
@@ -511,18 +747,29 @@ impl ClusterEnv {
         }
     }
 
+    /// Codec-effective slowdown of one link: its μ scaled by its codec's
+    /// bytes-on-wire ratio (identical to the raw μ for [`Codec::Raw`]).
+    fn effective_mu(&self, link: LinkId) -> f64 {
+        let spec = self.spec(link);
+        match spec.codec {
+            Codec::Raw => spec.mu,
+            codec => spec.mu * codec.wire_ratio(),
+        }
+    }
+
     /// Effective slowdown — versus the flat reference-link ring — of the
     /// full segment path of a collective launched on `link`: the
-    /// traffic-weighted sum of each leg's μ. Flat topologies: the link's
-    /// own μ. This is the factor knapsack capacities and the §III.D
-    /// partition constraint divide by.
+    /// traffic-weighted sum of each leg's **codec-effective** μ
+    /// (μ · codec wire ratio; raw codecs leave μ untouched). Flat
+    /// topologies: the link's own codec-effective μ. This is the factor
+    /// knapsack capacities and the §III.D partition constraint divide by.
     pub fn path_mu(&self, link: LinkId) -> f64 {
         match self.topology {
-            Topology::Flat => self.spec(link).mu,
+            Topology::Flat => self.effective_mu(link),
             Topology::Hierarchical { .. } => self
                 .segment_path(link)
                 .iter()
-                .map(|leg| self.spec(leg.link).mu * leg.traffic)
+                .map(|leg| self.effective_mu(leg.link) * leg.traffic)
                 .sum(),
         }
     }
@@ -534,13 +781,17 @@ impl ClusterEnv {
     }
 
     /// Is `a` strictly faster than `b` for contention exemption? The
-    /// order is **total** over (μ, α, registry index), so the outcome
-    /// cannot depend on registry iteration order — two links with equal μ
-    /// tie-break on the smaller startup latency, then the lower index.
+    /// order is **total** over (codec-effective μ, α, registry index),
+    /// so the outcome cannot depend on registry iteration order — two
+    /// links with equal effective μ tie-break on the smaller startup
+    /// latency, then the lower index. Codec-effective (not raw) μ keeps
+    /// the exemption consistent with the wire pricing: an fp16-coded
+    /// link that outships a raw group-mate is the one that escapes the
+    /// Table IV penalty.
     fn faster(&self, a: usize, b: usize) -> bool {
         let (sa, sb) = (&self.links[a], &self.links[b]);
-        sa.mu
-            .total_cmp(&sb.mu)
+        self.effective_mu(LinkId(a))
+            .total_cmp(&self.effective_mu(LinkId(b)))
             .then(sa.alpha.cmp(&sb.alpha))
             .then(a.cmp(&b))
             .is_lt()
@@ -593,14 +844,24 @@ impl ClusterEnv {
             let leg_params = (params as f64 * leg.tensor_frac) as u64;
             t += spec.alpha
                 + Micros::from_us_f64(
-                    base_us * leg.traffic * spec.mu * self.staging_factor(spec, leg_params),
+                    base_us
+                        * leg.traffic
+                        * spec.mu
+                        * spec.codec.wire_ratio()
+                        * self.staging_factor(spec, leg_params),
                 );
         }
-        if self.contended(link) {
+        let t = if self.contended(link) {
             t.scale(1.0 + self.contention_penalty(params))
         } else {
             t
-        }
+        };
+        // End-to-end collective latency includes the encode/decode
+        // kernels of every coded segment leg (zero on all-raw paths).
+        // The scheduling-unit pricing (`wire_time`) deliberately
+        // excludes it: encode runs on the compute stream, where the DES
+        // engine charges it.
+        t + self.encode_overhead_us(link, params)
     }
 
     /// Staging degradation factor: +`staging_ramp` beyond the knee
@@ -701,7 +962,7 @@ impl ClusterEnv {
         self.segment_path(link)
             .iter()
             .map(|leg| {
-                let factor = self.spec(leg.link).mu * leg.traffic;
+                let factor = self.effective_mu(leg.link) * leg.traffic;
                 // factor = 1 short-circuits so reference-link pricing is
                 // exactly the input time (no float round-trip).
                 let t = if factor == 1.0 {
@@ -1008,6 +1269,170 @@ mod tests {
             .fold(0.0_f64, f64::max);
         assert!((env.max_mu() - expect_max).abs() < 1e-15);
         assert!(env.max_mu() < 6.0, "tcp's path must be cheaper than its flat ring");
+    }
+
+    // ---- Per-link compression codecs. ----
+
+    #[test]
+    fn codec_parse_and_name_roundtrip() {
+        for codec in [Codec::Raw, Codec::Fp16, Codec::RankK { k: 1 }, Codec::RankK { k: 64 }] {
+            assert_eq!(Codec::parse(&codec.name()), Some(codec));
+        }
+        assert_eq!(Codec::parse("half"), Some(Codec::Fp16));
+        assert_eq!(Codec::parse("none"), Some(Codec::Raw));
+        assert_eq!(Codec::parse("rank0"), None);
+        assert_eq!(Codec::parse("rank-4"), None);
+        assert_eq!(Codec::parse("rank+4"), None, "non-canonical sign");
+        assert_eq!(Codec::parse("rank007"), None, "leading zeros");
+        assert_eq!(Codec::parse("rank"), None);
+        assert_eq!(Codec::parse("zfp"), None);
+    }
+
+    #[test]
+    fn codec_terms_are_sane() {
+        assert_eq!(Codec::Raw.wire_ratio(), 1.0);
+        assert_eq!(Codec::Raw.encode_overhead(100_000_000), Micros::ZERO);
+        assert_eq!(Codec::Raw.error(), 0.0);
+        assert!(!Codec::Raw.is_lossy());
+
+        assert_eq!(Codec::Fp16.wire_ratio(), 0.5);
+        assert!(Codec::Fp16.is_lossy());
+        // 1M params = 4 MB → 8 µs at 2 µs/MB.
+        assert_eq!(Codec::Fp16.encode_overhead(1_000_000), Micros(8));
+
+        // Rank-k: ratio monotone in k, capped at 1; error decays in k.
+        let mut prev_ratio = 0.0;
+        let mut prev_err = f64::INFINITY;
+        for k in [1u32, 2, 4, 16, 64, 512, 2048] {
+            let c = Codec::RankK { k };
+            assert!(c.wire_ratio() >= prev_ratio && c.wire_ratio() <= 1.0, "k={k}");
+            assert!(c.error() < prev_err, "k={k}");
+            prev_ratio = c.wire_ratio();
+            prev_err = c.error();
+        }
+        assert_eq!(Codec::RankK { k: 512 }.wire_ratio(), 1.0);
+    }
+
+    #[test]
+    fn codec_scales_wire_and_path_mu() {
+        let env = LinkPreset::NvlinkIbTcp.env();
+        let tcp = env.link("tcp").unwrap();
+        let fp16 = env.clone().with_codec(tcp, Codec::Fp16);
+        let comm = Micros(10_000);
+        // fp16 halves the wire time of the coded link only.
+        assert_eq!(
+            fp16.wire_time(tcp, comm, 1_000_000),
+            env.wire_time(tcp, comm, 1_000_000).scale(0.5)
+        );
+        assert_eq!(fp16.wire_time(LinkId(0), comm, 1_000_000), comm);
+        // Codec-effective μ feeds path_mu and max_mu (§III.D).
+        assert!((fp16.path_mu(tcp) - 3.0).abs() < 1e-12);
+        assert!((fp16.max_mu() - 3.0).abs() < 1e-12, "max_mu {}", fp16.max_mu());
+        // Raw registry is untouched by the round-trip helpers.
+        assert_eq!(fp16.with_raw_codecs().links, env.links);
+        assert!(!env.has_lossy_codec());
+        assert!(env.clone().with_codec(tcp, Codec::RankK { k: 4 }).has_lossy_codec());
+        assert_eq!(env.link_codec_errors(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn codec_allreduce_includes_encode_overhead() {
+        let env = ClusterEnv::paper_testbed();
+        let gloo = env.link("gloo").unwrap();
+        let fp16 = env.clone().with_codec(gloo, Codec::Fp16);
+        let p = 16_777_216u64;
+        let raw = env.allreduce_us(gloo, p);
+        let coded = fp16.allreduce_us(gloo, p);
+        // α + wire/2 + encode: the wire part halves exactly.
+        let alpha = env.spec(gloo).alpha;
+        let wire = raw - alpha;
+        let expect = alpha + wire.scale(0.5) + Codec::Fp16.encode_overhead(p);
+        // Wire halving happens pre-rounding; allow 1 µs of rounding slack.
+        let got = coded.as_us() as i64;
+        let want = expect.as_us() as i64;
+        assert!((got - want).abs() <= 1, "got {got}, want {want}");
+        // Large tensors: compression wins despite the encode cost.
+        assert!(coded < raw);
+    }
+
+    #[test]
+    fn codec_on_hierarchical_fabric_compresses_only_its_leg() {
+        // fp16 on the ib fabric of a hierarchical cluster: the intra leg
+        // ships raw, the inter leg at half time.
+        let env = hier(&LinkPreset::NvlinkIbTcp.env(), 8);
+        let ib = env.link("ib").unwrap();
+        let coded = env.clone().with_codec(ib, Codec::Fp16);
+        let comm = Micros(100_000);
+        let raw_segs = env.wire_segments(ib, comm);
+        let segs = coded.wire_segments(ib, comm);
+        assert_eq!(segs[0], raw_segs[0], "intra leg must stay raw");
+        // The halving applies pre-rounding; allow 1 µs of rounding slack.
+        let (got, want) = (
+            segs[1].1.as_us() as i64,
+            raw_segs[1].1.scale(0.5).as_us() as i64,
+        );
+        assert!((got - want).abs() <= 1, "inter leg {got} vs {want}");
+        let h = 14.0 / 15.0;
+        let g = 1.0 / 15.0;
+        assert!((coded.path_mu(ib) - (h + g * 2.5 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contention_exemption_ranks_by_codec_effective_mu() {
+        // Shared NIC, A raw at μ = 1.5, B at μ = 2.0: raw registries
+        // exempt A; an fp16 codec on B (effective μ = 1.0) makes B the
+        // group's effectively fastest member, flipping the exemption to
+        // match the wire pricing.
+        let raw = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("a", 1.5).with_group(0),
+            LinkSpec::new("b", 2.0).with_group(0),
+        ]);
+        assert!(!raw.contended(LinkId(0)));
+        assert!(raw.contended(LinkId(1)));
+        let coded = raw.clone().with_codec(LinkId(1), Codec::Fp16);
+        assert!(coded.contended(LinkId(0)));
+        assert!(!coded.contended(LinkId(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "k >= 1")]
+    fn rank_zero_codec_is_rejected_by_the_builder() {
+        let _ = ClusterEnv::paper_testbed().with_codec(LinkId(0), Codec::RankK { k: 0 });
+    }
+
+    #[test]
+    fn coded_intra_link_taints_every_path() {
+        // A lossy codec on the shared intra link compresses the
+        // node-local leg of *every* transfer, so the path-level error
+        // and encode overhead of fabric-homed transfers must see it —
+        // the Preserver gate consumes these path-level terms.
+        let env = hier(&LinkPreset::NvlinkIbTcp.env(), 8)
+            .with_codec(LinkId(0), Codec::RankK { k: 1 });
+        let ib = env.link("ib").unwrap();
+        let tcp = env.link("tcp").unwrap();
+        let rank1_err = Codec::RankK { k: 1 }.error();
+        for link in [ib, tcp] {
+            assert_eq!(env.path_codec_error(link), rank1_err, "{link:?}");
+            // The intra leg ships the full tensor through the rank-1
+            // encoder; the raw fabric leg adds nothing.
+            assert_eq!(
+                env.encode_overhead_us(link, 1_000_000),
+                Codec::RankK { k: 1 }.encode_overhead(1_000_000),
+                "{link:?}"
+            );
+        }
+        assert_eq!(env.link_path_codec_errors(), vec![rank1_err; 3]);
+        // Flat topologies degenerate to the link's own codec terms.
+        let flat = LinkPreset::NvlinkIbTcp
+            .env()
+            .with_codec(LinkId(2), Codec::Fp16);
+        assert_eq!(flat.path_codec_error(LinkId(2)), Codec::Fp16.error());
+        assert_eq!(flat.path_codec_error(LinkId(0)), 0.0);
+        assert_eq!(
+            flat.encode_overhead_us(LinkId(2), 1_000_000),
+            Codec::Fp16.encode_overhead(1_000_000)
+        );
+        assert_eq!(flat.encode_overhead_us(LinkId(0), 1_000_000), Micros::ZERO);
     }
 
     #[test]

@@ -23,8 +23,12 @@ fn usage() -> &'static str {
      keys: workload scheme workers bandwidth_gbps multi_link links_preset\n\
            partition_size ddp_bucket_mb iterations warmup mu preserver\n\
            epsilon seed   (links_preset: paper-2link | single-nic | nvlink-ib-tcp)\n\
-     topology: ranks_per_node topology.intra topology.inter\n\
-           (hierarchical rank-level topology; intra/inter name registry links)\n\
+     topology: ranks_per_node topology.intra topology.inter topology.codec\n\
+           (hierarchical rank-level topology; intra/inter name registry links;\n\
+            codec compresses the inter fabric: raw | fp16 | rank<k>)\n\
+     codecs: per-link compression via [[links]] codec entries in a config\n\
+           file (fp16 halves wire bytes; rank<k> is PowerSGD-style low-rank;\n\
+           lossy codecs are gated by the Preserver)\n\
      train-only: --manifest=PATH --lr=F --momentum=F --log-every=N"
 }
 

@@ -141,11 +141,21 @@ pub fn timeline_csv(timeline: &Timeline, link_names: &[String]) -> String {
 }
 
 /// Per-link busy/bubble/utilization table computed from a simulation
-/// result's timeline. Under a hierarchical topology the shared intra
-/// link's row also accumulates the node-local legs of transfers homed on
-/// other links, so its utilization reads as segment pressure.
+/// result's timeline, plus the link's codec and its compressed-vs-raw
+/// traffic. Under a hierarchical topology the shared intra link's row
+/// also accumulates the node-local legs of transfers homed on other
+/// links, so its utilization reads as segment pressure.
 pub fn link_table(result: &SimResult) -> String {
-    let mut t = Table::new(&["link", "busy", "bubbles", "utilization"]);
+    let mut t = Table::new(&[
+        "link",
+        "codec",
+        "busy",
+        "bubbles",
+        "utilization",
+        "raw MB",
+        "wire MB",
+        "encode",
+    ]);
     for (k, name) in result.link_names.iter().enumerate() {
         let stream = StreamId::Link(LinkId(k));
         let busy = result.timeline.busy(stream);
@@ -156,9 +166,51 @@ pub fn link_table(result: &SimResult) -> String {
         } else {
             format!("{:.1}%", busy.ratio(span) * 100.0)
         };
-        t.row(&[name.clone(), format!("{busy}"), format!("{bubbles}"), util]);
+        let codec = result
+            .link_codecs
+            .get(k)
+            .cloned()
+            .unwrap_or_else(|| "raw".to_string());
+        let traffic = result.link_traffic.get(k).copied().unwrap_or_default();
+        t.row(&[
+            name.clone(),
+            codec,
+            format!("{busy}"),
+            format!("{bubbles}"),
+            util,
+            format!("{:.1}", traffic.raw_bytes as f64 / 1e6),
+            format!("{:.1}", traffic.wire_bytes as f64 / 1e6),
+            format!("{}", traffic.encode),
+        ]);
     }
     t.render()
+}
+
+/// CSV export of the per-link codec traffic accounting
+/// (link,codec,raw_bytes,wire_bytes,encode_us,busy_us).
+pub fn link_traffic_csv(result: &SimResult) -> String {
+    let mut out = String::from("link,codec,raw_bytes,wire_bytes,encode_us,busy_us\n");
+    for (k, name) in result.link_names.iter().enumerate() {
+        let codec = result
+            .link_codecs
+            .get(k)
+            .cloned()
+            .unwrap_or_else(|| "raw".to_string());
+        let traffic = result.link_traffic.get(k).copied().unwrap_or_default();
+        let busy = result
+            .link_busy
+            .get(k)
+            .map(|&(_, b)| b)
+            .unwrap_or(Micros::ZERO);
+        out.push_str(&format!(
+            "{name},{codec},{},{},{},{}\n",
+            traffic.raw_bytes,
+            traffic.wire_bytes,
+            traffic.encode.as_us(),
+            busy.as_us()
+        ));
+    }
+    out
 }
 
 /// A fixed-width table printer for bench outputs.
@@ -293,6 +345,41 @@ mod tests {
         let csv = timeline_csv(&tl, &names(&["nccl", "gloo"]));
         assert!(csv.contains("compute,bwd,3,7,1,10,30"));
         assert!(csv.contains("gloo,comm,3,7,2,30,60"));
+    }
+
+    #[test]
+    fn link_table_and_traffic_csv_show_codec_columns() {
+        use crate::sim::{LinkTraffic, SimResult};
+        let result = SimResult {
+            scheme: "t".into(),
+            iter_ends: vec![Micros(100)],
+            update_times: vec![Micros(100)],
+            total: Micros(100),
+            compute_bubbles: Micros::ZERO,
+            steady_iter_time: Micros(100),
+            link_busy: vec![(LinkId(0), Micros(50)), (LinkId(1), Micros(30))],
+            link_names: names(&["nccl", "gloo"]),
+            link_codecs: vec!["raw".into(), "fp16".into()],
+            link_traffic: vec![
+                LinkTraffic {
+                    raw_bytes: 4_000_000,
+                    wire_bytes: 4_000_000,
+                    encode: Micros::ZERO,
+                },
+                LinkTraffic {
+                    raw_bytes: 4_000_000,
+                    wire_bytes: 2_000_000,
+                    encode: Micros(8),
+                },
+            ],
+            timeline: Timeline::default(),
+        };
+        let table = link_table(&result);
+        assert!(table.contains("fp16"), "{table}");
+        assert!(table.contains("wire MB"), "{table}");
+        let csv = link_traffic_csv(&result);
+        assert!(csv.contains("nccl,raw,4000000,4000000,0,50"), "{csv}");
+        assert!(csv.contains("gloo,fp16,4000000,2000000,8,30"), "{csv}");
     }
 
     #[test]

@@ -29,6 +29,20 @@ pub struct WalkParams {
     pub sigma_t: f64,
 }
 
+impl WalkParams {
+    /// Inject a lossy gradient codec's relative error `e ∈ [0, 1)` (see
+    /// [`crate::links::Codec::error`]): the compressed gradient's useful
+    /// drift shrinks to `μ_t · (1 − e)` while its noise grows to
+    /// `σ_t · (1 + e)`. `e = 0` is the exact identity, so raw codecs
+    /// change nothing bit-for-bit.
+    pub fn with_gradient_error(mut self, e: f64) -> WalkParams {
+        assert!((0.0..1.0).contains(&e), "gradient error {e} must be in [0, 1)");
+        self.mu_t *= 1.0 - e;
+        self.sigma_t *= 1.0 + e;
+        self
+    }
+}
+
 /// Expected next state `E_B^{s_t}(s_{t+1})` for batch size `b` — the
 /// paper's Equation (1):
 ///
@@ -104,6 +118,22 @@ pub struct ConvergenceReport {
 /// `multipliers` is the k-sequence of one steady-state cycle; `n` = cycle
 /// length in iterations (= Σk). Both orders start from the same state.
 pub fn quantify(start: &WalkParams, base_batch: f64, multipliers: &[u64]) -> ConvergenceReport {
+    quantify_with_error(start, base_batch, multipliers, 0.0)
+}
+
+/// [`quantify`], with a lossy-codec gradient error injected into DeFT's
+/// walk only (the baseline always ships raw f32): the deft sequence
+/// evolves from [`WalkParams::with_gradient_error`]. This is how the
+/// Preserver gates lossy links — a codec whose error pushes the ratio
+/// out of `[1−ε, 1+ε]` makes [`acceptable`] reject the route, and the
+/// lifecycle falls back to the raw registry. `gradient_error = 0` is
+/// bit-for-bit [`quantify`].
+pub fn quantify_with_error(
+    start: &WalkParams,
+    base_batch: f64,
+    multipliers: &[u64],
+    gradient_error: f64,
+) -> ConvergenceReport {
     let n: u64 = multipliers.iter().sum();
     assert!(n > 0, "empty multiplier sequence");
     let baseline = evolve_sequence(start, &vec![base_batch; n as usize]);
@@ -111,7 +141,8 @@ pub fn quantify(start: &WalkParams, base_batch: f64, multipliers: &[u64]) -> Con
         .iter()
         .map(|&k| k as f64 * base_batch)
         .collect();
-    let deft = evolve_sequence(start, &deft_batches);
+    let lossy = start.with_gradient_error(gradient_error);
+    let deft = evolve_sequence(&lossy, &deft_batches);
     let eb = *baseline.last().expect("n > 0");
     let ed = *deft.last().expect("non-empty");
     let ratio = if (ed - start.s_star).abs() < f64::EPSILON {
@@ -227,6 +258,50 @@ mod tests {
         let (p, b) = table5_setting();
         let rep = quantify(&p, b, &[64]);
         assert!(!acceptable(&rep, EPSILON), "ratio {} unexpectedly ok", rep.ratio);
+    }
+
+    #[test]
+    fn zero_gradient_error_is_bit_for_bit_quantify() {
+        let (p, b) = table5_setting();
+        let ks = [2u64, 1, 1];
+        let a = quantify(&p, b, &ks);
+        let z = quantify_with_error(&p, b, &ks, 0.0);
+        assert_eq!(a.baseline, z.baseline);
+        assert_eq!(a.deft, z.deft);
+        assert!(a.ratio == z.ratio, "{} vs {}", a.ratio, z.ratio);
+    }
+
+    #[test]
+    fn gradient_error_degrades_the_ratio_monotonically() {
+        // Injected codec error slows DeFT's walk: the ratio E_OB/E_OD
+        // falls below 1 and keeps falling as the error grows, until the
+        // acceptance gate trips.
+        let (p, b) = table5_setting();
+        let ks = [1u64, 1, 1, 1];
+        let mut prev = quantify_with_error(&p, b, &ks, 0.0).ratio;
+        assert!((prev - 1.0).abs() < 1e-12, "identical sequences, e = 0");
+        for e in [0.001, 0.05, 0.2, 0.5, 0.8] {
+            let r = quantify_with_error(&p, b, &ks, e).ratio;
+            assert!(r < prev, "ratio not decreasing at e={e}: {r} vs {prev}");
+            prev = r;
+        }
+        // fp16-scale error passes the gate; rank-1-scale error trips it.
+        let fp16 = quantify_with_error(&p, b, &ks, crate::links::Codec::Fp16.error());
+        assert!(acceptable(&fp16, EPSILON), "fp16 ratio {}", fp16.ratio);
+        let rank1 = quantify_with_error(&p, b, &ks, crate::links::Codec::RankK { k: 1 }.error());
+        assert!(!acceptable(&rank1, EPSILON), "rank1 ratio {}", rank1.ratio);
+        // Even the shortest possible sequence trips on a rank-1 error —
+        // the lifecycle fallback cannot be dodged by a 1-cycle schedule.
+        let rank1_short =
+            quantify_with_error(&p, b, &[1], crate::links::Codec::RankK { k: 1 }.error());
+        assert!(!acceptable(&rank1_short, EPSILON), "ratio {}", rank1_short.ratio);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient error")]
+    fn gradient_error_out_of_range_panics() {
+        let (p, _) = table5_setting();
+        let _ = p.with_gradient_error(1.0);
     }
 
     #[test]

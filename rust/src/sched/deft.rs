@@ -45,6 +45,16 @@ pub struct DeftOptions {
     /// `ClusterEnv::link_path_mus`, so every knapsack capacity is
     /// compute time divided by its link's slowest-path slowdown.
     pub link_mus: Vec<f64>,
+    /// Per-link codec gradient errors in registry order (index =
+    /// `LinkId`; see [`crate::links::Codec::error`]). Empty — the default
+    /// — means every link ships raw f32. The Preserver feedback loop
+    /// injects the largest error among links the candidate schedule
+    /// actually uses into its Gaussian walk, so a lossy route must clear
+    /// `acceptable` like any other schedule. Build from an environment
+    /// via [`Deft::for_env`] / `ClusterEnv::link_path_codec_errors`
+    /// (segment-path errors, so a coded intra link gates fabric-homed
+    /// transfers too).
+    pub link_errors: Vec<f64>,
     /// Use every registry link (true) or only the reference link (false —
     /// the paper's §V.B.4 single-link ablation).
     pub heterogeneous: bool,
@@ -69,6 +79,7 @@ impl Default for DeftOptions {
         let (walk, base_batch) = preserver::table5_setting();
         DeftOptions {
             link_mus: vec![1.0, crate::links::PAPER_MU],
+            link_errors: Vec::new(),
             heterogeneous: true,
             preserver: true,
             epsilon: preserver::EPSILON,
@@ -102,6 +113,7 @@ impl Deft {
     pub fn for_env(env: &ClusterEnv, preserver: bool) -> Deft {
         Deft::new(DeftOptions {
             link_mus: env.link_path_mus(),
+            link_errors: env.link_path_codec_errors(),
             preserver,
             ..DeftOptions::default()
         })
@@ -127,6 +139,12 @@ impl Deft {
         } else {
             &self.opts.link_mus[..1]
         }
+    }
+
+    /// Largest codec gradient error among the links `schedule` routes
+    /// over (0 when no errors were configured or only raw links are hit).
+    fn codec_error_of(&self, schedule: &Schedule) -> f64 {
+        schedule.worst_codec_error(&self.opts.link_errors)
     }
 }
 
@@ -550,11 +568,33 @@ impl Scheduler for Deft {
         }
         // Preserver feedback loop (§IV.C.3): enlarge capacities until the
         // expected-state ratio is inside [1−ε, 1+ε] or retries exhaust.
+        // Lossy-codec schedules additionally inject the largest gradient
+        // error among the links they use into DeFT's walk.
         for _ in 0..preserver::MAX_RETRIES {
-            let report =
-                preserver::quantify(&self.opts.walk, self.opts.base_batch, &best.batch_multipliers);
+            let err = self.codec_error_of(&best);
+            let report = preserver::quantify_with_error(
+                &self.opts.walk,
+                self.opts.base_batch,
+                &best.batch_multipliers,
+                err,
+            );
             if preserver::acceptable(&report, self.opts.epsilon) {
                 break;
+            }
+            // A codec error that fails even the all-ones sequence is
+            // irreducible: no knapsack capacity can fix it. Stop here —
+            // routing off the lossy link entirely is the lifecycle
+            // driver's fallback, not a capacity decision.
+            if err > 0.0 {
+                let floor = preserver::quantify_with_error(
+                    &self.opts.walk,
+                    self.opts.base_batch,
+                    &[1],
+                    err,
+                );
+                if !preserver::acceptable(&floor, self.opts.epsilon) {
+                    break;
+                }
             }
             scale *= 1.15;
             best = self.solve_with_scale(buckets, scale);
@@ -733,6 +773,28 @@ mod tests {
             "freq = {}",
             s.update_frequency()
         );
+    }
+
+    #[test]
+    fn irreducible_codec_error_breaks_preserver_loop_immediately() {
+        // A rank-1-scale error on the slow link fails ε even for the
+        // all-ones sequence, so no capacity enlargement can help: the
+        // loop must return the first solve — byte-identical to the
+        // preserver-off schedule — instead of burning all ten retries.
+        let lossy = Deft::new(DeftOptions {
+            link_errors: vec![0.0, crate::links::Codec::RankK { k: 1 }.error()],
+            ..DeftOptions::default()
+        });
+        let off = Deft::new(DeftOptions {
+            preserver: false,
+            ..DeftOptions::default()
+        });
+        let s = lossy.schedule(&vgg());
+        assert!(
+            s.links_used().iter().any(|l| l.index() == 1),
+            "premise: the schedule must route over the lossy link"
+        );
+        assert_eq!(s, off.schedule(&vgg()));
     }
 
     #[test]

@@ -5,9 +5,14 @@
 //!    at bucket level;
 //! 2. the **Solver** produces a scheduling result, which DeFT
 //!    *temporarily applies* for several trial iterations;
-//! 3. the **Preserver** quantifies the expected convergence difference;
-//!    if it exceeds ε the Solver's knapsack capacity is enlarged and the
-//!    schedule re-solved (≤ 10 retries);
+//! 3. the **Preserver** quantifies the expected convergence difference —
+//!    including, for links carrying a lossy [`crate::links::Codec`], the
+//!    codec's gradient error injected into DeFT's walk; if it exceeds ε
+//!    and the schedule routes over a lossy link, the registry **falls
+//!    back to raw codecs** and re-solves at the same capacity (the lossy
+//!    route was the problem, not the overlap budget); otherwise the
+//!    Solver's knapsack capacity is enlarged and the schedule re-solved
+//!    (≤ 10 retries);
 //! 4. the accepted schedule is applied to the rest of training.
 //!
 //! This module wires those stages together over the simulator (or, via
@@ -32,6 +37,10 @@ pub struct LifecycleReport {
     pub attempts: Vec<(f64, f64)>,
     /// Trial simulation of the accepted schedule.
     pub trial: SimResult,
+    /// True when the Preserver rejected a lossy-codec route and the
+    /// Solver fell back to the raw (codec-stripped) registry — the
+    /// accepted schedule is then byte-identical to the no-codec plan.
+    pub codec_fallback: bool,
 }
 
 /// Options for the lifecycle driver.
@@ -102,36 +111,82 @@ pub fn run_lifecycle(
     }
 
     // --- 2+3. Solve → trial → preserve, with capacity feedback. ---
+    // Lossy codecs are tried first (their codec-effective μ enlarges
+    // capacities); if the Preserver rejects a route over a lossy link,
+    // the registry falls back to raw codecs and the loop continues at
+    // the same capacity scale.
+    let raw_env = env.clone().with_raw_codecs();
+    // Segment-path errors: a lossy codec on a shared intra link must
+    // gate transfers homed on other links too.
+    let codec_errors = env.link_path_codec_errors();
+    let mut use_codecs = env.has_lossy_codec();
+    let mut codec_fallback = false;
     let mut scale = opts.deft.capacity_scale;
     let mut attempts = Vec::new();
     let mut accepted: Option<Schedule> = None;
-    for _ in 0..=preserver::MAX_RETRIES {
+    let mut retry = 0usize;
+    while retry <= preserver::MAX_RETRIES {
+        let solve_env = if use_codecs { env } else { &raw_env };
         let deft = Deft::new(DeftOptions {
             capacity_scale: scale,
             preserver: false,
             // The knapsack set always follows the target environment's
             // link registry (one knapsack per link, capacities from the
-            // segment-path slowdowns).
-            link_mus: env.link_path_mus(),
+            // codec-effective segment-path slowdowns).
+            link_mus: solve_env.link_path_mus(),
             ..opts.deft.clone()
         });
         let schedule = deft.schedule(&profile);
-        let report = preserver::quantify(&opts.walk, opts.base_batch, &schedule.batch_multipliers);
+        // Gradient error of the worst lossy link the schedule routes
+        // over (zero on the raw registry).
+        let err = if use_codecs {
+            schedule.worst_codec_error(&codec_errors)
+        } else {
+            0.0
+        };
+        let report = preserver::quantify_with_error(
+            &opts.walk,
+            opts.base_batch,
+            &schedule.batch_multipliers,
+            err,
+        );
         attempts.push((scale, report.ratio));
         if preserver::acceptable(&report, opts.epsilon) {
             accepted = Some(schedule);
             break;
         }
-        accepted = Some(schedule); // keep the closest so far
+        accepted = Some(schedule.clone()); // keep the closest so far
+        if use_codecs && err > 0.0 {
+            // Codec-driven rejection (the same k-sequence passes with a
+            // clean walk): fall back to the raw registry at the same
+            // capacity and re-solve. A rejection the clean walk shares
+            // is a capacity problem — grow capacity, keep the codecs.
+            let clean =
+                preserver::quantify(&opts.walk, opts.base_batch, &schedule.batch_multipliers);
+            if preserver::acceptable(&clean, opts.epsilon) {
+                use_codecs = false;
+                codec_fallback = true;
+                // The raw re-solve is free (same capacity, and it can
+                // happen at most once): not counting it as a retry
+                // guarantees the accepted schedule really is a raw-plan
+                // re-solve even when the rejection lands on the last
+                // retry.
+                continue;
+            }
+        }
         scale *= 1.15;
+        retry += 1;
     }
     let schedule = accepted.expect("at least one attempt");
 
     // --- 4. Trial application (simulated). ---
+    // After a codec fallback the accepted schedule assumes raw links, so
+    // the trial prices raw wires too.
+    let trial_env = if codec_fallback { &raw_env } else { env };
     let trial = simulate(
         &profile,
         &schedule,
-        env,
+        trial_env,
         &SimOptions {
             iterations: opts.trial_iters.max(schedule.cycle.len() * 3),
             warmup: schedule.cycle.len().max(2),
@@ -144,6 +199,7 @@ pub fn run_lifecycle(
         schedule,
         attempts,
         trial,
+        codec_fallback,
     }
 }
 
@@ -186,6 +242,41 @@ mod tests {
             assert!(w[1].0 > w[0].0);
         }
         rep.schedule.validate().unwrap();
+    }
+
+    #[test]
+    fn lossy_codec_forces_fallback_to_the_raw_plan() {
+        use crate::links::{Codec, LinkId};
+        // A rank-1 codec on gloo injects a gradient error far outside ε:
+        // the Preserver must reject the lossy route, fall back to raw
+        // links, and accept a plan byte-identical to the no-codec run.
+        let raw = ClusterEnv::paper_testbed();
+        let lossy = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
+        let opts = LifecycleOptions::default();
+        let w = vgg19();
+        let r_raw = run_lifecycle(&w, &raw, &opts);
+        let r_lossy = run_lifecycle(&w, &lossy, &opts);
+        assert!(!r_raw.codec_fallback);
+        assert!(r_lossy.codec_fallback, "rank-1 error must trip the gate");
+        assert_eq!(r_lossy.schedule, r_raw.schedule, "fallback plan must be the raw plan");
+        assert_eq!(r_lossy.trial.steady_iter_time, r_raw.trial.steady_iter_time);
+        assert_eq!(r_lossy.trial.iter_ends, r_raw.trial.iter_ends);
+        // Exactly one extra (rejected) lossy attempt precedes the raw
+        // replay.
+        assert_eq!(r_lossy.attempts.len(), r_raw.attempts.len() + 1);
+        assert!((r_lossy.attempts[0].1 - 1.0).abs() > opts.epsilon);
+    }
+
+    #[test]
+    fn fp16_codec_passes_the_gate_without_fallback() {
+        use crate::links::{Codec, LinkId};
+        // fp16's rounding error sits far below ε: the lossy route is
+        // accepted and no fallback happens.
+        let env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
+        let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default());
+        assert!(!rep.codec_fallback);
+        rep.schedule.validate().unwrap();
+        assert!(rep.trial.steady_iter_time.as_us() > 0);
     }
 
     #[test]

@@ -141,6 +141,33 @@ impl Schedule {
         Ok(())
     }
 
+    /// The set of registry links this schedule actually routes over, in
+    /// registry order — what the Preserver's codec gate inspects (only
+    /// the codecs of *used* links can hurt convergence).
+    pub fn links_used(&self) -> Vec<LinkId> {
+        let mut links: Vec<LinkId> = self
+            .cycle
+            .iter()
+            .flat_map(|p| p.all_ops())
+            .map(|op| op.link)
+            .collect();
+        links.sort();
+        links.dedup();
+        links
+    }
+
+    /// Largest codec gradient error among the links this schedule routes
+    /// over, given per-link errors in registry order (see
+    /// `ClusterEnv::link_codec_errors`; links beyond the slice — or an
+    /// empty slice — count as raw). This is the single error the
+    /// Preserver gate injects into DeFT's walk.
+    pub fn worst_codec_error(&self, link_errors: &[f64]) -> f64 {
+        self.links_used()
+            .iter()
+            .map(|l| link_errors.get(l.index()).copied().unwrap_or(0.0))
+            .fold(0.0, f64::max)
+    }
+
     /// Total reference-link communication time launched per cycle, given
     /// per-bucket comm times (diagnostics; gloo ops are still counted in
     /// reference units).
@@ -217,6 +244,12 @@ mod tests {
         };
         assert!((s.update_frequency() - 0.5).abs() < 1e-12);
         assert_eq!(s.ops_per_cycle(), 4);
+        assert_eq!(s.links_used(), vec![LinkId::REFERENCE]);
+        // Only the codecs of *used* links matter; missing entries and
+        // empty slices read as raw.
+        assert_eq!(s.worst_codec_error(&[0.0, 0.5]), 0.0);
+        assert_eq!(s.worst_codec_error(&[0.25, 0.5]), 0.25);
+        assert_eq!(s.worst_codec_error(&[]), 0.0);
         assert!(s.validate().is_ok());
         let comm = vec![Micros(10), Micros(20), Micros(30)];
         assert_eq!(s.comm_per_cycle(&comm), Micros(10 + 20 + 30 + 10));

@@ -24,6 +24,25 @@
 //! recorded as spans on their segment's stream and accounted into that
 //! link's busy time, so Gantt rows and the per-link busy table show the
 //! shared segment's occupancy.
+//!
+//! ## Codec encode overhead
+//!
+//! A link carrying a lossy [`crate::links::Codec`] already ships fewer
+//! bytes through the (codec-aware) wire pricing; its encode/decode
+//! kernels are charged **on the compute stream** here via
+//! `ClusterEnv::encode_overhead_us` (every coded segment leg pays for
+//! the tensor fraction it ships). Data-ready ops
+//! (`grad_age == 0`) extend their producing bucket's backward task, so
+//! their wire cannot start before the encode finished. Window ops
+//! (delayed gradients, already encoded in spirit before their window
+//! opens) charge their encode as aggregate compute at the window's head
+//! — backward-window ops extend the iteration's first backward task,
+//! forward-window ops the iteration's first forward task — **without**
+//! delaying their own wire start: a planning-level approximation
+//! (calibrating encode/compute overlap is an open ROADMAP sub-item).
+//! Raw codecs charge nothing, keeping pre-codec schedules bit-for-bit
+//! (`tests/codec_parity.rs`). Per-link raw-vs-wire byte counters and the
+//! encode totals land in [`SimResult::link_traffic`].
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -55,6 +74,21 @@ impl Default for SimOptions {
     }
 }
 
+/// Per-link compression traffic accounting (registry order in
+/// [`SimResult::link_traffic`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkTraffic {
+    /// Raw (uncompressed f32) gradient bytes offered to the link.
+    pub raw_bytes: u64,
+    /// Bytes actually on the wire after the link's own codec
+    /// (home-link accounting; a hierarchical transfer's foreign legs are
+    /// priced in wire time but not re-counted here).
+    pub wire_bytes: u64,
+    /// Encode/decode overhead charged on the compute stream for
+    /// transfers homed on this link.
+    pub encode: Micros,
+}
+
 /// Simulation outputs.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -75,6 +109,12 @@ pub struct SimResult {
     pub link_busy: Vec<(LinkId, Micros)>,
     /// Link names in registry order (for timeline/metric rendering).
     pub link_names: Vec<String>,
+    /// Codec names in registry order.
+    pub link_codecs: Vec<String>,
+    /// Per-link compressed-vs-raw bytes and encode overhead, in registry
+    /// order (home-link accounting: a transfer's bytes count on the link
+    /// it was scheduled on).
+    pub link_traffic: Vec<LinkTraffic>,
     pub timeline: Timeline,
 }
 
@@ -161,6 +201,12 @@ pub fn simulate(
     let total_updates = updates_before[iters];
 
     let mut ops: Vec<OpInst> = Vec::new();
+    // Codec bookkeeping: encode overhead charged on the compute stream —
+    // keyed to the compute task whose end launches the op (see the
+    // module docs) — plus per-link byte/overhead counters.
+    let mut enc_fwd: Vec<Micros> = vec![Micros::ZERO; iters];
+    let mut enc_bwd: BTreeMap<(usize, usize), Micros> = BTreeMap::new();
+    let mut link_traffic: Vec<LinkTraffic> = vec![LinkTraffic::default(); n_links];
     for t in 0..iters {
         let plan = &schedule.cycle[t % cycle_len];
         for op in plan.all_ops() {
@@ -173,6 +219,22 @@ pub fn simulate(
                 "op targets link {:?} but the environment registers only {n_links} links",
                 op.link
             );
+            let codec = env.spec(op.link).codec;
+            let enc = env.encode_overhead_us(op.link, buckets[op.bucket].params);
+            if !enc.is_zero() {
+                if op.grad_age == 0 {
+                    *enc_bwd.entry((t, op.bucket)).or_insert(Micros::ZERO) += enc;
+                } else if op.stage == Stage::Backward {
+                    *enc_bwd.entry((t, n - 1)).or_insert(Micros::ZERO) += enc;
+                } else {
+                    enc_fwd[t] += enc;
+                }
+            }
+            let raw_bytes = buckets[op.bucket].params.saturating_mul(4);
+            let traffic = &mut link_traffic[op.link.index()];
+            traffic.raw_bytes += raw_bytes;
+            traffic.wire_bytes += (raw_bytes as f64 * codec.wire_ratio()).round() as u64;
+            traffic.encode += enc;
             // Uncontended segment-path pricing; the dispatch loop adds
             // the contention penalty for actually-overlapping windows.
             let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
@@ -488,9 +550,16 @@ pub fn simulate(
                     }
                     if let Some(dep) = dep_time {
                         let start = now.max(dep).max(comp_busy_until);
-                        let end = start + buckets[bucket].fwd;
+                        // Forward-window encode kernels run at the head
+                        // of the iteration's compute (zero without
+                        // lossy codecs).
+                        let mut dur = buckets[bucket].fwd;
+                        if bucket == 0 {
+                            dur += enc_fwd[iter];
+                        }
+                        let end = start + dur;
                         first_comp_start.get_or_insert(start);
-                        compute_busy += buckets[bucket].fwd;
+                        compute_busy += dur;
                         record(
                             &mut timeline,
                             Span {
@@ -507,8 +576,13 @@ pub fn simulate(
                 }
                 CompTask::Bwd { iter, bucket } => {
                     let start = now.max(comp_busy_until);
-                    let end = start + buckets[bucket].bwd;
-                    compute_busy += buckets[bucket].bwd;
+                    // Encode kernels of ops this backward task launches
+                    // extend it — the wire cannot start before its
+                    // gradient is compressed.
+                    let dur = buckets[bucket].bwd
+                        + enc_bwd.get(&(iter, bucket)).copied().unwrap_or(Micros::ZERO);
+                    let end = start + dur;
+                    compute_busy += dur;
                     record(
                         &mut timeline,
                         Span {
@@ -719,6 +793,8 @@ pub fn simulate(
         steady_iter_time,
         link_busy,
         link_names: env.link_names(),
+        link_codecs: env.link_codec_names(),
+        link_traffic,
         timeline,
     }
 }

@@ -28,7 +28,7 @@ mod convergence;
 mod engine;
 
 pub use convergence::{training_curve, ConvergenceModel, TrainingCurve};
-pub use engine::{simulate, SimOptions, SimResult};
+pub use engine::{simulate, LinkTraffic, SimOptions, SimResult};
 
 use crate::links::LinkId;
 use crate::util::Micros;

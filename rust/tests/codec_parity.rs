@@ -1,0 +1,477 @@
+//! Codec parity & property suite (mirrors `link_parity.rs` /
+//! `topology_parity.rs` for the compression layer).
+//!
+//! 1. **Raw parity**: `Codec::Raw` — the default on every link — must
+//!    reproduce the pre-codec pricing **bit-for-bit** on all three
+//!    presets, flat and hierarchical: the pre-codec flat closed forms
+//!    and the PR-2 segment-path arithmetic are reimplemented below as
+//!    oracles, and full pipelines (schedule + `SimResult` metrics) are
+//!    compared across raw-codec constructions for all four schemes plus
+//!    the no-multilink ablation.
+//! 2. **Properties** (`util::prop` style): codec-effective knapsack
+//!    capacities keep the paper's greedy within the exact optimum; fp16
+//!    wire time never exceeds raw wire time; rank-k wire time is
+//!    monotone in `k` and saturates at raw.
+//! 3. **Preserver regression**: a lossy codec whose injected gradient
+//!    error fails `acceptable(report, eps)` forces the lifecycle to fall
+//!    back to the raw link, and the resulting plan is byte-identical to
+//!    the no-codec plan.
+//! 4. **Engine**: encode overhead is charged on the compute stream and
+//!    the per-link compressed-vs-raw byte counters are exact.
+
+use deft::bench::scheduler_for;
+use deft::config::Scheme;
+use deft::links::{ClusterEnv, Codec, LinkId, LinkPreset, LinkSpec, Topology};
+use deft::models::{vgg19, vgg19_table2_buckets, BucketProfile};
+use deft::sched::{
+    run_lifecycle, CommOp, FwdDependency, IterPlan, LifecycleOptions, Schedule, Stage,
+};
+use deft::sim::{simulate, LinkTraffic, SimOptions, SimResult, StreamId};
+use deft::solver::{multi_knapsack_exact, multi_knapsack_greedy, Item};
+use deft::util::prop::check;
+use deft::util::Micros;
+
+const PARAM_SWEEP: [u64; 8] = [
+    0,
+    1_048_576,
+    4_194_304,
+    8_388_608,
+    16_777_216,
+    33_554_432,
+    67_108_864,
+    134_217_728,
+];
+
+fn sim(buckets: &[BucketProfile], schedule: &Schedule, env: &ClusterEnv) -> SimResult {
+    simulate(
+        buckets,
+        schedule,
+        env,
+        &SimOptions {
+            iterations: (schedule.cycle.len() * 4).max(24),
+            warmup: schedule.cycle.len().max(4),
+            record_timeline: true,
+        },
+    )
+}
+
+// ---- Pre-codec oracles, reimplemented verbatim. ----
+
+/// Flat wire-time rule as it stood before codecs: `comm · μ` (exact for
+/// μ = 1) with the static Table IV contention scaling.
+fn legacy_flat_wire(env: &ClusterEnv, link: LinkId, comm: Micros, params: u64) -> Micros {
+    let mu = env.spec(link).mu;
+    let t = if mu == 1.0 { comm } else { comm.scale(mu) };
+    if env.contended(link) {
+        t.scale(1.0 + env.contention_penalty(params))
+    } else {
+        t
+    }
+}
+
+/// Flat `allreduce_us` closed form as it stood before codecs.
+fn legacy_flat_allreduce(env: &ClusterEnv, link: LinkId, params: u64) -> Micros {
+    if env.workers <= 1 || params == 0 {
+        return Micros::ZERO;
+    }
+    let ring = 2.0 * (env.workers as f64 - 1.0) / env.workers as f64;
+    let bytes = params as f64 * 4.0 * ring;
+    let wire_bytes_per_us = env.bandwidth_gbps * 1e9 / 8.0 / 1e6;
+    let base_us = bytes / (wire_bytes_per_us * env.efficiency);
+    let spec = env.spec(link);
+    let knee = 33.6e6;
+    let p = params as f64;
+    let staging = if spec.staging_ramp == 0.0 || p <= knee {
+        1.0
+    } else {
+        1.0 + spec.staging_ramp * ((p - knee) / knee).min(1.0)
+    };
+    let t = spec.alpha + Micros::from_us_f64(base_us * 1.0 * spec.mu * staging);
+    if env.contended(link) {
+        t.scale(1.0 + env.contention_penalty(params))
+    } else {
+        t
+    }
+}
+
+fn ring(k: usize) -> f64 {
+    if k <= 1 {
+        0.0
+    } else {
+        2.0 * (k as f64 - 1.0) / k as f64
+    }
+}
+
+/// PR-2 hierarchical segment decomposition (intra = link 0, inter =
+/// link 1) as it stood before codecs.
+fn legacy_hier_segments(
+    env: &ClusterEnv,
+    link: LinkId,
+    comm: Micros,
+    rpn: usize,
+) -> Vec<(LinkId, Micros)> {
+    let price = |l: LinkId, factor: f64| {
+        if factor == 1.0 {
+            comm
+        } else {
+            comm.scale(factor)
+        }
+    };
+    let w = env.workers;
+    if rpn <= 1 || w <= 1 {
+        return vec![(link, price(link, env.spec(link).mu * 1.0))];
+    }
+    let (intra, inter) = (LinkId(0), LinkId(1));
+    let nodes = w / rpn;
+    let flat_ring = ring(w);
+    let fabric = if link == intra { inter } else { link };
+    let mut out = Vec::new();
+    let intra_traffic = ring(rpn) / flat_ring;
+    if intra_traffic > 0.0 {
+        out.push((intra, price(intra, env.spec(intra).mu * intra_traffic)));
+    }
+    let inter_traffic = ring(nodes) / (rpn as f64 * flat_ring);
+    if inter_traffic > 0.0 {
+        out.push((fabric, price(fabric, env.spec(fabric).mu * inter_traffic)));
+    }
+    out
+}
+
+// ---- 1. Raw parity. ----
+
+/// Every preset link (plus the single-NIC contention variants) prices
+/// exactly as the pre-codec flat closed forms across the Table IV sweep.
+#[test]
+fn raw_flat_pricing_matches_the_pre_codec_closed_forms() {
+    let mut envs: Vec<ClusterEnv> = LinkPreset::ALL.iter().map(|p| p.env()).collect();
+    envs.push(LinkPreset::NvlinkIbTcp.env().with_single_link());
+    for env in &envs {
+        for link in env.link_ids() {
+            for params in PARAM_SWEEP {
+                let comm = Micros(params / 37 + 11);
+                assert_eq!(
+                    env.wire_time(link, comm, params),
+                    legacy_flat_wire(env, link, comm, params),
+                    "{:?} wire @ {params}",
+                    link
+                );
+                assert_eq!(
+                    env.allreduce_us(link, params),
+                    legacy_flat_allreduce(env, link, params),
+                    "{:?} allreduce @ {params}",
+                    link
+                );
+            }
+            // Codec-effective μ degenerates to the raw μ.
+            assert!((env.path_mu(link) - env.spec(link).mu).abs() < 1e-15);
+        }
+    }
+}
+
+/// Hierarchical segment pricing with raw codecs matches the PR-2
+/// arithmetic bit-for-bit for every preset and node size.
+#[test]
+fn raw_hierarchical_pricing_matches_the_pre_codec_segments() {
+    for preset in LinkPreset::ALL {
+        for rpn in [1usize, 2, 8] {
+            let env = preset
+                .env()
+                .with_topology(Topology::hierarchical(rpn, LinkId(0), LinkId(1)));
+            for link in env.link_ids() {
+                for params in PARAM_SWEEP {
+                    let comm = Micros(params / 53 + 7);
+                    let want = legacy_hier_segments(&env, link, comm, rpn);
+                    assert_eq!(
+                        env.wire_segments(link, comm),
+                        want,
+                        "{}/rpn {rpn}/{:?} segments",
+                        preset.name(),
+                        link
+                    );
+                    let total: Micros = want.iter().map(|&(_, t)| t).sum();
+                    assert_eq!(env.wire_time_uncontended(link, comm), total);
+                }
+            }
+        }
+    }
+}
+
+/// Full pipeline parity: the default registry, an explicitly
+/// `with_codec(Raw)` registry, and a `with_raw_codecs()` round-trip must
+/// yield identical schedules and identical `SimResult` metrics for all
+/// four schemes (plus the no-multilink ablation), flat and hierarchical
+/// — and the engine's codec accounting must be the identity.
+#[test]
+fn raw_codec_pipelines_are_bit_for_bit_identical() {
+    let buckets = vgg19_table2_buckets();
+    for preset in LinkPreset::ALL {
+        for hier in [false, true] {
+            let mut base = preset.env();
+            if hier {
+                base = base.with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
+            }
+            let mut explicit = base.clone().with_raw_codecs();
+            for id in base.link_ids().collect::<Vec<_>>() {
+                explicit = explicit.with_codec(id, Codec::Raw);
+            }
+            assert_eq!(base.links, explicit.links, "{}", preset.name());
+            let mut schemes = Scheme::ALL.to_vec();
+            schemes.push(Scheme::DeftNoMultilink);
+            for scheme in schemes {
+                let s_base = scheduler_for(scheme, false, &base).schedule(&buckets);
+                let s_explicit = scheduler_for(scheme, false, &explicit).schedule(&buckets);
+                assert_eq!(s_base, s_explicit, "{}/{:?}", preset.name(), scheme);
+                let r_base = sim(&buckets, &s_base, &base);
+                let r_explicit = sim(&buckets, &s_explicit, &explicit);
+                let what = format!("{}/{:?}/hier={hier}", preset.name(), scheme);
+                assert_eq!(r_base.steady_iter_time, r_explicit.steady_iter_time, "{what}");
+                assert_eq!(r_base.total, r_explicit.total, "{what}");
+                assert_eq!(r_base.compute_bubbles, r_explicit.compute_bubbles, "{what}");
+                assert_eq!(r_base.update_times, r_explicit.update_times, "{what}");
+                assert_eq!(r_base.link_busy, r_explicit.link_busy, "{what}");
+                assert_eq!(r_base.iter_ends, r_explicit.iter_ends, "{what}");
+                assert_eq!(r_base.link_traffic, r_explicit.link_traffic, "{what}");
+                // Raw codecs are the identity in the engine accounting.
+                assert!(r_base.link_codecs.iter().all(|c| c == "raw"), "{what}");
+                for tr in &r_base.link_traffic {
+                    assert_eq!(tr.raw_bytes, tr.wire_bytes, "{what}");
+                    assert!(tr.encode.is_zero(), "{what}");
+                }
+            }
+        }
+    }
+}
+
+// ---- 2. Properties. ----
+
+/// Codec-effective knapsack capacities (compute ÷ codec-effective path
+/// μ, exactly as the schedulers derive them) keep the paper's greedy
+/// within the exact multi-knapsack optimum, and both stay within every
+/// capacity.
+#[test]
+fn prop_codec_effective_capacities_keep_greedy_within_exact() {
+    check("greedy <= exact (codec-effective caps)", 40, |g| {
+        let n_links = g.usize_in(2..=4);
+        let mut links = Vec::with_capacity(n_links);
+        for i in 0..n_links {
+            let mu = if i == 0 { 1.0 } else { 1.0 + g.f64_in(0.0, 6.0) };
+            let codec = match g.usize_in(0..=2) {
+                0 => Codec::Raw,
+                1 => Codec::Fp16,
+                _ => Codec::RankK {
+                    k: g.u64_in(1..=64) as u32,
+                },
+            };
+            links.push(LinkSpec::new(&format!("l{i}"), mu).with_group(i).with_codec(codec));
+        }
+        let env = ClusterEnv::paper_testbed().with_links(links);
+        let compute = Micros(g.u64_in(1_000..=100_000));
+        let caps: Vec<Micros> = env
+            .link_path_mus()
+            .iter()
+            .map(|&mu| compute.scale(1.0 / mu))
+            .collect();
+        let comms = g.vec_u64(0..=9, 0..=60_000);
+        let its: Vec<Item> = comms
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Item::new(i, Micros(c)))
+            .collect();
+        let (assign, e_total) = multi_knapsack_exact(&its, &caps);
+        let gr = multi_knapsack_greedy(&its, &caps);
+        if gr.total > e_total {
+            return Err(format!("greedy {:?} beats exact {e_total:?}", gr.total));
+        }
+        for (k, sack) in assign.iter().chain(gr.assignments.iter()).enumerate() {
+            let cap = caps[k % caps.len()];
+            let used: Micros = sack.iter().map(|&id| its[id].comm).sum();
+            if used > cap {
+                return Err(format!("sack {k} over codec-effective capacity"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// fp16 wire time never exceeds raw wire time — for all parameter
+/// sizes, μs, contention configurations, and topologies.
+#[test]
+fn prop_fp16_wire_time_never_exceeds_raw() {
+    check("fp16 wire <= raw wire", 120, |g| {
+        let mu = 1.0 + g.f64_in(0.0, 8.0);
+        let shared_nic = g.usize_in(0..=1) == 1;
+        let mk = |codec: Codec| {
+            let slow_group = if shared_nic { 0 } else { 1 };
+            ClusterEnv::paper_testbed().with_links(vec![
+                LinkSpec::new("ref", 1.0).with_group(0),
+                LinkSpec::new("slow", mu).with_group(slow_group).with_codec(codec),
+            ])
+        };
+        let raw = mk(Codec::Raw);
+        let fp16 = mk(Codec::Fp16);
+        let params = g.u64_in(0..=200_000_000);
+        let comm = Micros(g.u64_in(0..=10_000_000));
+        let slow = LinkId(1);
+        if fp16.wire_time(slow, comm, params) > raw.wire_time(slow, comm, params) {
+            return Err(format!("flat wire: fp16 beats raw at {params} params"));
+        }
+        if fp16.wire_time_uncontended(slow, comm) > raw.wire_time_uncontended(slow, comm) {
+            return Err("flat uncontended wire: fp16 beats raw".into());
+        }
+        // Hierarchical: fp16 on the fabric must stay ≤ raw.
+        let rpn = [2usize, 4, 8][g.usize_in(0..=2)];
+        let topo = Topology::hierarchical(rpn, LinkId(0), LinkId(1));
+        let raw_h = raw.clone().with_topology(topo);
+        let fp16_h = fp16.clone().with_topology(topo);
+        if fp16_h.wire_time(slow, comm, params) > raw_h.wire_time(slow, comm, params) {
+            return Err(format!("hierarchical wire: fp16 beats raw at rpn {rpn}"));
+        }
+        Ok(())
+    });
+}
+
+/// Rank-k wire time is monotone non-decreasing in `k` (more rank = more
+/// bytes) and saturates exactly at the raw wire time at
+/// `k ≥ RANKK_REF_DIM / 2`.
+#[test]
+fn prop_rankk_wire_time_monotone_in_k() {
+    check("rank-k wire monotone in k", 80, |g| {
+        let mu = 1.0 + g.f64_in(0.0, 8.0);
+        let base = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("ref", 1.0).with_group(0),
+            LinkSpec::new("slow", mu).with_group(1),
+        ]);
+        let params = g.u64_in(1..=100_000_000);
+        let comm = Micros(g.u64_in(1..=5_000_000));
+        let slow = LinkId(1);
+        let mut prev = Micros::ZERO;
+        for k in [1u32, 2, 4, 8, 16, 64, 256, 512, 1024] {
+            let env = base.clone().with_codec(slow, Codec::RankK { k });
+            let t = env.wire_time(slow, comm, params);
+            if t < prev {
+                return Err(format!("wire not monotone at k={k}: {t:?} < {prev:?}"));
+            }
+            prev = t;
+        }
+        let raw = base.wire_time(slow, comm, params);
+        if prev != raw {
+            return Err(format!("saturated rank-k {prev:?} != raw {raw:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. Preserver regression. ----
+
+/// A lossy codec whose injected error makes `acceptable(report, eps)`
+/// false forces the lifecycle to fall back to the raw link, and the
+/// resulting plan is byte-identical to the no-codec plan.
+#[test]
+fn preserver_rejection_forces_fallback_to_the_no_codec_plan() {
+    let raw_env = ClusterEnv::paper_testbed();
+    let lossy_env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
+    let opts = LifecycleOptions::default();
+    let w = vgg19();
+    let r_raw = run_lifecycle(&w, &raw_env, &opts);
+    let r_lossy = run_lifecycle(&w, &lossy_env, &opts);
+    assert!(!r_raw.codec_fallback);
+    assert!(r_lossy.codec_fallback, "rank-1 error must be rejected");
+    assert!(
+        (r_lossy.attempts[0].1 - 1.0).abs() > opts.epsilon,
+        "first (lossy) attempt must fail eps: ratio {}",
+        r_lossy.attempts[0].1
+    );
+    assert_eq!(
+        r_lossy.schedule, r_raw.schedule,
+        "fallback plan must be byte-identical to the no-codec plan"
+    );
+    assert_eq!(r_lossy.trial.iter_ends, r_raw.trial.iter_ends);
+    assert_eq!(r_lossy.trial.update_times, r_raw.trial.update_times);
+
+    // fp16's error is inside ε: the lossy route is kept.
+    let fp16_env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
+    let r_fp16 = run_lifecycle(&w, &fp16_env, &opts);
+    assert!(!r_fp16.codec_fallback, "fp16 must pass the gate");
+}
+
+// ---- 4. Engine: encode on the compute stream, byte counters. ----
+
+fn two_bucket_schedule() -> (Vec<BucketProfile>, Schedule) {
+    let bucket = |id: usize| BucketProfile {
+        id,
+        params: 1_000_000, // 4 MB raw → 8 µs fp16 encode
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm: Micros(5_000),
+    };
+    let op = |bucket: usize| CommOp {
+        bucket,
+        link: LinkId(0),
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age: 0,
+        merged: 1,
+        update_offset: 0,
+    };
+    let schedule = Schedule {
+        scheme: "codec-probe".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops: vec![op(1), op(0)],
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+    };
+    schedule.validate().unwrap();
+    (vec![bucket(0), bucket(1)], schedule)
+}
+
+#[test]
+fn engine_charges_encode_on_the_compute_stream_and_counts_bytes() {
+    let (buckets, schedule) = two_bucket_schedule();
+    let opts = SimOptions {
+        iterations: 1,
+        warmup: 0,
+        record_timeline: true,
+    };
+    let raw_env = ClusterEnv::paper_testbed();
+    let fp16_env = ClusterEnv::paper_testbed().with_codec(LinkId(0), Codec::Fp16);
+    let r_raw = simulate(&buckets, &schedule, &raw_env, &opts);
+    let r_fp16 = simulate(&buckets, &schedule, &fp16_env, &opts);
+
+    // Raw: fwd 20 ms, bwd1 ends 30 ms → wire [30, 35), bwd0 ends 40 ms
+    // → wire [40, 45); update at 45 ms.
+    assert_eq!(r_raw.total, Micros(45_000));
+    assert_eq!(r_raw.timeline.busy(StreamId::Compute), Micros(40_000));
+    assert_eq!(
+        r_raw.link_traffic[0],
+        LinkTraffic {
+            raw_bytes: 8_000_000,
+            wire_bytes: 8_000_000,
+            encode: Micros::ZERO,
+        }
+    );
+
+    // fp16: each backward task stretches by its op's 8 µs encode (the
+    // wire cannot start before the gradient is compressed), and each
+    // wire halves: bwd1 [20, 30.008) → wire [30.008, 32.508),
+    // bwd0 [30.008, 40.016) → wire [40.016, 42.516).
+    assert_eq!(r_fp16.total, Micros(42_516));
+    assert_eq!(r_fp16.timeline.busy(StreamId::Compute), Micros(40_016));
+    assert_eq!(r_fp16.iter_ends, vec![Micros(40_016)]);
+    assert_eq!(r_fp16.update_times, vec![Micros(42_516)]);
+    assert_eq!(r_fp16.link_busy[0].1, Micros(5_000), "wire time halves");
+    assert_eq!(
+        r_fp16.link_traffic[0],
+        LinkTraffic {
+            raw_bytes: 8_000_000,
+            wire_bytes: 4_000_000,
+            encode: Micros(16),
+        }
+    );
+    assert_eq!(r_fp16.link_codecs, vec!["fp16".to_string(), "raw".to_string()]);
+}
