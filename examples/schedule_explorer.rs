@@ -4,27 +4,31 @@
 //! schedule) and a per-link busy/bubble table.
 //!
 //! Run: `cargo run --release --example schedule_explorer -- [workload]
-//!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]`
+//!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]
+//!        [--contention-model <pairwise|kway>]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
 //!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
 //!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
 //!  the intra-node segment and link 1 as its cross-node fabric;
 //!  --codec attaches a compression codec — raw | fp16 | rank<k> — to a
-//!  registry link by name, e.g. `--codec tcp=fp16`; repeatable)
+//!  registry link by name, e.g. `--codec tcp=fp16`; repeatable;
+//!  --contention-model selects how shared-NIC contention is priced —
+//!  aggregate k-way sharing (default) or the legacy pairwise rule)
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{Codec, LinkId, LinkPreset, Topology};
+use deft::links::{Codec, ContentionModel, LinkId, LinkPreset, Topology};
 use deft::metrics::{gantt_steady, link_table};
 use deft::models::BucketProfile;
 use deft::profiler::{generate_trace, reconstruct, TraceOptions};
 use deft::sched::feature_matrix;
 
-fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>) {
+fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>, ContentionModel) {
     let mut workload = "vgg19".to_string();
     let mut preset = LinkPreset::Paper2Link;
     let mut ranks_per_node = 1usize;
     let mut codecs: Vec<(String, Codec)> = Vec::new();
+    let mut contention = ContentionModel::default();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         let looked_up = if let Some(v) = a.strip_prefix("--links=") {
@@ -45,6 +49,13 @@ fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>) {
             let v = args.next().expect("--codec needs <link>=<codec>");
             codecs.push(parse_codec_arg(&v));
             None
+        } else if let Some(v) = a.strip_prefix("--contention-model=") {
+            contention = parse_contention_arg(v);
+            None
+        } else if a == "--contention-model" {
+            let v = args.next().expect("--contention-model needs pairwise|kway");
+            contention = parse_contention_arg(&v);
+            None
         } else {
             workload = a;
             None
@@ -62,7 +73,7 @@ fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>) {
             });
         }
     }
-    (workload, preset, ranks_per_node, codecs)
+    (workload, preset, ranks_per_node, codecs, contention)
 }
 
 fn parse_codec_arg(spec: &str) -> (String, Codec) {
@@ -74,10 +85,15 @@ fn parse_codec_arg(spec: &str) -> (String, Codec) {
     (link.to_string(), codec)
 }
 
+fn parse_contention_arg(name: &str) -> ContentionModel {
+    ContentionModel::parse(name)
+        .unwrap_or_else(|| panic!("unknown contention model `{name}` (known: pairwise | kway)"))
+}
+
 fn main() {
-    let (name, preset, ranks_per_node, codecs) = parse_args();
+    let (name, preset, ranks_per_node, codecs, contention) = parse_args();
     let workload = workload_by_name(&name);
-    let mut env = preset.env();
+    let mut env = preset.env().with_contention_model(contention);
     if ranks_per_node > 1 {
         env = env.with_topology(Topology::hierarchical(ranks_per_node, LinkId(0), LinkId(1)));
     }
@@ -140,10 +156,11 @@ fn main() {
     let _ = buckets; // (the pipeline below re-partitions per scheme)
 
     println!(
-        "\n=== Scheduling orders (paper Figs. 11-13) for {} on {} ({}) ===",
+        "\n=== Scheduling orders (paper Figs. 11-13) for {} on {} ({}; contention: {}) ===",
         workload.name,
         preset.name(),
-        env.link_names().join("+")
+        env.link_names().join("+"),
+        env.contention.name()
     );
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);

@@ -42,24 +42,27 @@ pub fn workload_by_name(name: &str) -> Workload {
 
 /// Build the scheduler for a scheme; DeFT's knapsack set follows the
 /// environment's link registry (one knapsack per link), each capacity
-/// derived from that link's **codec-effective segment path** slowdown —
-/// under a flat topology with raw codecs these are the raw μs. Per-link
-/// codec errors feed DeFT's Preserver gate.
+/// derived from that link's **planning** slowdown — the codec-effective
+/// segment-path μ times the static shared-NIC contention factor of the
+/// environment's contention model; under a flat topology with raw codecs
+/// and unshared NICs these are the raw μs. The single-queue baselines
+/// ride the planning-fastest link (the reference link on every preset).
+/// Per-link codec errors feed DeFT's Preserver gate.
 pub fn scheduler_for(scheme: Scheme, preserver: bool, env: &ClusterEnv) -> Box<dyn Scheduler> {
     match scheme {
         Scheme::PytorchDdp => Box::new(Wfbp),
-        Scheme::Bytescheduler => Box::new(Bytescheduler),
-        Scheme::UsByte => Box::new(UsByte),
+        Scheme::Bytescheduler => Box::new(Bytescheduler::for_env(env)),
+        Scheme::UsByte => Box::new(UsByte::for_env(env)),
         Scheme::Deft => Box::new(Deft::new(DeftOptions {
             preserver,
-            link_mus: env.link_path_mus(),
+            link_mus: env.link_planning_mus(),
             link_errors: env.link_path_codec_errors(),
             ..DeftOptions::default()
         })),
         Scheme::DeftNoMultilink => Box::new(Deft::new(DeftOptions {
             heterogeneous: false,
             preserver: false,
-            link_mus: env.link_path_mus(),
+            link_mus: env.link_planning_mus(),
             link_errors: env.link_path_codec_errors(),
             ..DeftOptions::default()
         })),

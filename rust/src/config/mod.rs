@@ -40,6 +40,14 @@
 //! codec = "fp16"        # compress the cross-node fabric (the inter link)
 //! ```
 //!
+//! How shared-NIC contention is priced (planning estimate and DES
+//! execution alike) is selected with a `[contention]` table:
+//!
+//! ```toml
+//! [contention]
+//! model = "kway"        # aggregate k-way sharing (default) | "pairwise"
+//! ```
+//!
 //! The legacy knobs are kept: `multi_link = false` collapses a 2-link
 //! preset onto one NIC (the Table IV configuration) and `mu` overrides
 //! the slow link's μ of a 2-link preset.
@@ -48,7 +56,7 @@ pub mod toml_lite;
 
 pub use toml_lite::{parse, ParseError, Value};
 
-use crate::links::{ClusterEnv, Codec, LinkId, LinkPreset, LinkSpec, Topology};
+use crate::links::{ClusterEnv, Codec, ContentionModel, LinkId, LinkPreset, LinkSpec, Topology};
 use crate::partition::Strategy;
 use crate::util::Micros;
 use std::collections::BTreeMap;
@@ -130,6 +138,10 @@ pub struct ExperimentConfig {
     /// fabric link (`raw` | `fp16` | `rank<k>`; empty = leave the link's
     /// own codec). Requires a hierarchical topology.
     pub topology_codec: String,
+    /// `[contention] model`: how shared-NIC contention is priced —
+    /// `"kway"` (aggregate k-way sharing, the default) or `"pairwise"`
+    /// (the legacy Table IV rule). See [`ContentionModel`].
+    pub contention_model: String,
 }
 
 impl Default for ExperimentConfig {
@@ -154,6 +166,7 @@ impl Default for ExperimentConfig {
             topology_intra: String::new(),
             topology_inter: String::new(),
             topology_codec: String::new(),
+            contention_model: ContentionModel::default().name().to_string(),
         }
     }
 }
@@ -189,6 +202,17 @@ impl ExperimentConfig {
         }
         if self.mu <= 0.0 {
             return Err("mu must be positive".into());
+        }
+        if ContentionModel::parse(&self.contention_model).is_none() {
+            return Err(format!(
+                "contention.model: unknown model `{}` (known: {})",
+                self.contention_model,
+                ContentionModel::ALL
+                    .iter()
+                    .map(|m| m.name())
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            ));
         }
         if self.custom_links.is_empty() {
             if LinkPreset::parse(&self.links_preset).is_none() {
@@ -312,7 +336,10 @@ impl ExperimentConfig {
     pub fn env(&self) -> ClusterEnv {
         let mut env = ClusterEnv::paper_testbed()
             .with_workers(self.workers)
-            .with_bandwidth(self.bandwidth_gbps);
+            .with_bandwidth(self.bandwidth_gbps)
+            .with_contention_model(
+                ContentionModel::parse(&self.contention_model).expect("validated model"),
+            );
         if !self.custom_links.is_empty() {
             env.links = self.custom_links.clone();
             return self.apply_topology(env);
@@ -411,6 +438,9 @@ impl ExperimentConfig {
             "topology.intra" => self.topology_intra = value.as_str()?.to_string(),
             "topology.inter" => self.topology_inter = value.as_str()?.to_string(),
             "topology.codec" => self.topology_codec = value.as_str()?.to_string(),
+            "contention.model" | "contention_model" => {
+                self.contention_model = value.as_str()?.to_string()
+            }
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
                 if let Some(rest) = other.strip_prefix("links.") {
@@ -706,6 +736,27 @@ codec = "fp16"
              codec = \"zfp\"\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn contention_model_key_selects_the_pricing_model() {
+        use crate::links::ContentionModel;
+        // Default: aggregate k-way sharing.
+        assert_eq!(
+            ExperimentConfig::default().env().contention,
+            ContentionModel::Kway
+        );
+        let cfg =
+            ExperimentConfig::from_toml("[contention]\nmodel = \"pairwise\"\n").unwrap();
+        assert_eq!(cfg.env().contention, ContentionModel::Pairwise);
+        // Bare-key override form.
+        let mut cfg = ExperimentConfig::default();
+        let mut ov = BTreeMap::new();
+        ov.insert("contention_model".to_string(), "pairwise".to_string());
+        cfg.apply_overrides(&ov).unwrap();
+        assert_eq!(cfg.env().contention, ContentionModel::Pairwise);
+        // Unknown models are rejected.
+        assert!(ExperimentConfig::from_toml("[contention]\nmodel = \"freeway\"\n").is_err());
     }
 
     #[test]

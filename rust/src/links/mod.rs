@@ -74,20 +74,58 @@
 //! `Codec::Raw` is the identity on all three terms, so a registry without
 //! codecs prices **bit-for-bit** as before (`tests/codec_parity.rs`).
 //!
-//! ## Contention: planning estimate vs execution model
+//! ## Contention: pairwise vs aggregate k-way sharing
 //!
-//! Shared-NIC contention is priced twice, deliberately:
+//! Links in one contention group share a NIC. Two models price that
+//! sharing, selectable per environment via [`ContentionModel`]
+//! (TOML `[contention] model = "pairwise" | "kway"`, explorer
+//! `--contention-model`):
+//!
+//! * **Pairwise** — the legacy Table IV rule: a paying transfer that
+//!   overlaps *any* in-flight group-mate degrades by the fixed pairwise
+//!   penalty ([`ClusterEnv::contention_penalty`]), no matter how many
+//!   mates are in flight. Cheap, and exact for the paper's two-link
+//!   testbed, but it underprices three-plus concurrent transfers.
+//! * **K-way** (the default) — aggregate bandwidth sharing: with `k`
+//!   group members concurrently in flight, every paying member is slowed
+//!   by [`ClusterEnv::contention_factor`]`(k, params)`. The curve is the
+//!   capacity story behind Table IV: the measured single-NIC pair serves
+//!   the exempt (fastest) member at full rate plus one payer at
+//!   `1/(1+penalty)` of its uncontended rate, so the NIC's calibrated
+//!   spare capacity beyond the exempt member is exactly `1/(1+penalty)`
+//!   of one transfer — and `k−1` payers split it evenly:
+//!
+//!   ```text
+//!   contention_factor(1, p) = 1                       (uncontended)
+//!   contention_factor(k, p) = (k−1) · (1 + penalty(p))  for k ≥ 2
+//!   ```
+//!
+//!   At `k = 2` this is **bit-for-bit** the pairwise penalty (so the
+//!   Table IV single-NIC rows are reproduced unchanged — see
+//!   `tests/contention_model.rs`) and it is monotone in `k`. Throughput
+//!   caps: with the exempt member among the `k` in-flight transfers, the
+//!   paying cohort's aggregate `(k−1)/factor = 1/(1+penalty)` never
+//!   exceeds one uncontended transfer's bandwidth share; and in **every**
+//!   composition — exempt riding along or idle — the group's aggregate
+//!   stays within the NIC's calibrated capacity `1 + 1/(1+penalty)`
+//!   (payers-only concurrency: `k/factor(k) ≤ 2/(1+penalty) ≤` capacity).
+//!
+//! Either model is applied at two distinct layers:
 //!
 //! * **Planning estimate** ([`ClusterEnv::wire_time`], `bucket_comm`,
-//!   `allreduce_us`): the conservative static rule — every link except
-//!   its contention group's fastest member pays the full Table IV
-//!   penalty whenever a group-mate *exists*. Schedulers budget against
-//!   the worst case.
+//!   `allreduce_us`, and the schedulers' knapsack capacities via
+//!   [`ClusterEnv::link_planning_mus`]): the conservative static rule —
+//!   every link except its group's fastest member pays the full
+//!   contention factor whenever group-mates merely *exist* (pairwise:
+//!   factor at `k = 2`; k-way: factor at `k =` group size, i.e. all
+//!   members presumed concurrently active).
 //! * **Execution model** (the DES engine, via
-//!   [`ClusterEnv::wire_time_uncontended`] + per-link busy intervals):
-//!   the penalty is charged only for the window in which two same-group
-//!   transfers actually overlap in time — an idle group-mate no longer
-//!   inflates a single-link schedule.
+//!   [`ClusterEnv::wire_time_uncontended`] + per-link flight tracking):
+//!   contention is charged only while same-group transfers actually
+//!   overlap — pairwise as a one-shot penalty on the overlap window,
+//!   k-way as a piecewise re-pricing at every dispatch/finalize event
+//!   (see `sim::engine` docs). An idle group-mate costs nothing in
+//!   either model.
 
 use crate::util::Micros;
 
@@ -242,8 +280,9 @@ pub struct LinkSpec {
     /// what the schedulers and the simulator consume).
     pub bandwidth_gbps: f64,
     /// Links in the same contention group share a NIC: every link except
-    /// the group's fastest pays [`ClusterEnv::contention_penalty`] on
-    /// large tensors.
+    /// the group's fastest pays [`ClusterEnv::contention_factor`] on
+    /// large tensors (pairwise penalty at k = 2, aggregate k-way split
+    /// beyond — see the module docs).
     pub contention_group: usize,
     /// CPU-staged transports degrade superlinearly on very large tensors
     /// (Table IV: the NCCL:gloo ratio climbs from ~1.65 to ~1.85 at 67M
@@ -412,6 +451,39 @@ impl LinkPreset {
     }
 }
 
+/// How concurrent same-group (shared-NIC) transfers are priced — see the
+/// module docs, "Contention: pairwise vs aggregate k-way sharing".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ContentionModel {
+    /// Legacy Table IV rule: any overlap costs the fixed pairwise
+    /// penalty, regardless of how many group-mates are in flight.
+    Pairwise,
+    /// Aggregate k-way bandwidth sharing: `k` concurrent group members
+    /// slow every paying member by [`ClusterEnv::contention_factor`],
+    /// re-priced piecewise as membership changes (the default).
+    #[default]
+    Kway,
+}
+
+impl ContentionModel {
+    pub const ALL: [ContentionModel; 2] = [ContentionModel::Pairwise, ContentionModel::Kway];
+
+    pub fn parse(s: &str) -> Option<ContentionModel> {
+        match s {
+            "pairwise" => Some(ContentionModel::Pairwise),
+            "kway" | "k-way" => Some(ContentionModel::Kway),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ContentionModel::Pairwise => "pairwise",
+            ContentionModel::Kway => "kway",
+        }
+    }
+}
+
 /// How the cluster's ranks map onto nodes, i.e. which registry link
 /// serves each rank pair (see the module docs, "Rank-level topology").
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -488,10 +560,17 @@ pub struct ClusterEnv {
     pub links: Vec<LinkSpec>,
     /// Rank-pair → segment mapping (default: flat).
     pub topology: Topology,
+    /// How shared-NIC contention is priced (default: aggregate k-way).
+    pub contention: ContentionModel,
 }
 
 /// Speed ratio between the paper's NCCL and gloo (1.59–1.69, set 1.65).
 pub const PAPER_MU: f64 = 1.65;
+
+/// Plateau of the Table IV shared-NIC degradation ramp (+21% for paying
+/// transfers ≥ 8.4M params) — the pairwise calibration point of
+/// [`ClusterEnv::contention_factor`].
+pub const CONTENTION_PEAK: f64 = 0.21;
 
 /// Params beyond which CPU-staged transports start their degradation ramp.
 const STAGING_KNEE: f64 = 33.6e6;
@@ -512,7 +591,15 @@ impl ClusterEnv {
             efficiency: 0.469,
             links: LinkPreset::Paper2Link.links(),
             topology: Topology::Flat,
+            contention: ContentionModel::default(),
         }
+    }
+
+    /// Select how shared-NIC contention is priced (planning estimate and
+    /// DES execution alike).
+    pub fn with_contention_model(mut self, model: ContentionModel) -> ClusterEnv {
+        self.contention = model;
+        self
     }
 
     pub fn with_workers(mut self, workers: usize) -> ClusterEnv {
@@ -818,6 +905,17 @@ impl ClusterEnv {
         members > 1 && fastest != id.0
     }
 
+    /// Number of registry links sharing `id`'s contention group (its NIC),
+    /// including `id` itself — the `k` the conservative k-way planning
+    /// rule presumes concurrently active.
+    pub fn group_size(&self, id: LinkId) -> usize {
+        let group = self.links[id.0].contention_group;
+        self.links
+            .iter()
+            .filter(|l| l.contention_group == group)
+            .count()
+    }
+
     /// Ring-allreduce traffic factor 2(W−1)/W over all workers.
     pub fn ring_factor(&self) -> f64 {
         ring_factor_of(self.workers)
@@ -851,11 +949,8 @@ impl ClusterEnv {
                         * self.staging_factor(spec, leg_params),
                 );
         }
-        let t = if self.contended(link) {
-            t.scale(1.0 + self.contention_penalty(params))
-        } else {
-            t
-        };
+        let f = self.static_contention_factor(link, params);
+        let t = if f == 1.0 { t } else { t.scale(f) };
         // End-to-end collective latency includes the encode/decode
         // kernels of every coded segment leg (zero on all-raw paths).
         // The scheduling-unit pricing (`wire_time`) deliberately
@@ -877,19 +972,117 @@ impl ClusterEnv {
     }
 
     /// Contention penalty for a slow link sharing a NIC with a faster one
-    /// (Table IV: +0% at 4.2M params, ramping to ~+20% at ≥8.4M).
+    /// (Table IV: +0% at 4.2M params, ramping to ~+20% at ≥8.4M). This is
+    /// the pairwise (k = 2) calibration point of
+    /// [`ClusterEnv::contention_factor`].
     pub fn contention_penalty(&self, params: u64) -> f64 {
         const LO: f64 = 5.0e6;
         const HI: f64 = 8.4e6;
-        const PEAK: f64 = 0.21;
         let p = params as f64;
         if p <= LO {
             0.0
         } else if p >= HI {
-            PEAK
+            CONTENTION_PEAK
         } else {
-            PEAK * (p - LO) / (HI - LO)
+            CONTENTION_PEAK * (p - LO) / (HI - LO)
         }
+    }
+
+    /// Aggregate k-way degradation of one **paying** transfer when `k`
+    /// members of its contention group are concurrently in flight
+    /// (module docs, "Contention: pairwise vs aggregate k-way sharing"):
+    ///
+    /// * `k ≤ 1` ⇒ exactly `1.0` (uncontended pricing);
+    /// * `k = 2` ⇒ exactly `1 + contention_penalty(params)` — bit-for-bit
+    ///   the pairwise Table IV calibration;
+    /// * `k ≥ 3` ⇒ `(k−1) · (1 + penalty)`: the NIC's calibrated spare
+    ///   capacity beyond the exempt member (`1/(1+penalty)` of one
+    ///   transfer) is split evenly among `k−1` paying members, and the
+    ///   factor is monotone in `k`.
+    ///
+    /// `k` is the number of concurrently in-flight group members,
+    /// whatever their composition; the curve's derivation presumes the
+    /// exempt member is one of them, so when it rides along the paying
+    /// cohort's aggregate is capped at one uncontended transfer's share
+    /// (`(k−1)/factor = 1/(1+penalty)`). When only payers are in flight
+    /// they price slightly generously (each still pays `factor(k)`, so
+    /// the aggregate is `k/factor(k)`), but every composition stays
+    /// within the NIC's calibrated capacity `1 + 1/(1+penalty)` — see
+    /// `prop_group_throughput_never_exceeds_link_bandwidth`.
+    pub fn contention_factor(&self, k: usize, params: u64) -> f64 {
+        if k <= 1 {
+            return 1.0;
+        }
+        (k - 1) as f64 * (1.0 + self.contention_penalty(params))
+    }
+
+    /// The conservative **static** contention factor of a link under the
+    /// environment's [`ContentionModel`]: 1 when the link is exempt (or
+    /// alone on its NIC); otherwise the model's factor with every
+    /// group-mate presumed in flight — pairwise at `k = 2`, k-way at
+    /// `k =` the group size. For two-member groups the models agree
+    /// bit-for-bit.
+    pub fn static_contention_factor(&self, link: LinkId, params: u64) -> f64 {
+        if !self.contended(link) {
+            return 1.0;
+        }
+        let k = match self.contention {
+            ContentionModel::Pairwise => 2,
+            ContentionModel::Kway => self.group_size(link),
+        };
+        self.contention_factor(k, params)
+    }
+
+    /// [`ClusterEnv::static_contention_factor`] at the Table IV plateau
+    /// (params-independent worst case: any tensor size lands at
+    /// [`CONTENTION_PEAK`]) — what per-link planning capacities budget
+    /// against.
+    fn static_contention_factor_peak(&self, link: LinkId) -> f64 {
+        self.static_contention_factor(link, u64::MAX)
+    }
+
+    /// Conservative planning slowdown of a link: its codec-effective
+    /// segment-path μ ([`ClusterEnv::path_mu`]) times the static
+    /// contention factor at the Table IV plateau. This is what scheduler
+    /// knapsack capacities divide by — a link that will pay shared-NIC
+    /// contention holds proportionally less reference-time communication
+    /// per compute window. Registries without shared NICs (every preset's
+    /// default grouping) reduce to `path_mu` exactly.
+    pub fn planning_mu(&self, link: LinkId) -> f64 {
+        let f = self.static_contention_factor_peak(link);
+        if f == 1.0 {
+            self.path_mu(link)
+        } else {
+            self.path_mu(link) * f
+        }
+    }
+
+    /// Per-link planning slowdowns in registry order — the
+    /// contention-aware counterpart of [`ClusterEnv::link_path_mus`] that
+    /// [`crate::sched::Deft::for_env`] and the lifecycle feed to the
+    /// knapsack set.
+    pub fn link_planning_mus(&self) -> Vec<f64> {
+        self.link_ids().map(|id| self.planning_mu(id)).collect()
+    }
+
+    /// The link a single-queue baseline should ride: smallest planning
+    /// slowdown, tie-broken by (α, registry index) so the choice is
+    /// total. Presets always resolve to the reference link.
+    pub fn planning_fastest_link(&self) -> LinkId {
+        let mut best = 0usize;
+        for i in 1..self.links.len() {
+            let a = self.planning_mu(LinkId(i));
+            let b = self.planning_mu(LinkId(best));
+            if a
+                .total_cmp(&b)
+                .then(self.links[i].alpha.cmp(&self.links[best].alpha))
+                .then(i.cmp(&best))
+                .is_lt()
+            {
+                best = i;
+            }
+        }
+        LinkId(best)
     }
 
     /// Scale a *workload-calibrated* reference comm time (measured at the
@@ -927,15 +1120,18 @@ impl ClusterEnv {
 
     /// Wire time on `link` of a transfer whose **flat reference-link**
     /// time is `comm_ref` — the schedulers' conservative planning
-    /// estimate, including the static shared-NIC contention rule. The DES
-    /// engine instead starts from [`ClusterEnv::wire_time_uncontended`]
-    /// and adds contention only for actually-overlapping windows.
+    /// estimate, including the static shared-NIC contention rule of the
+    /// environment's [`ContentionModel`] (every group-mate presumed in
+    /// flight). The DES engine instead starts from
+    /// [`ClusterEnv::wire_time_uncontended`] and charges contention only
+    /// while same-group transfers actually overlap.
     pub fn wire_time(&self, link: LinkId, comm_ref: Micros, params: u64) -> Micros {
         let t = self.wire_time_uncontended(link, comm_ref);
-        if self.contended(link) {
-            t.scale(1.0 + self.contention_penalty(params))
-        } else {
+        let f = self.static_contention_factor(link, params);
+        if f == 1.0 {
             t
+        } else {
+            t.scale(f)
         }
     }
 
@@ -1433,6 +1629,93 @@ mod tests {
             Codec::Fp16.encode_overhead(1_000_000)
         );
         assert_eq!(flat.encode_overhead_us(LinkId(0), 1_000_000), Micros::ZERO);
+    }
+
+    // ---- Aggregate k-way contention. ----
+
+    #[test]
+    fn contention_factor_pins_k1_uncontended_and_k2_pairwise() {
+        let env = ClusterEnv::paper_testbed();
+        for params in [
+            0u64,
+            1_000_000,
+            5_000_000,
+            6_000_000,
+            8_400_000,
+            33_554_432,
+            134_217_728,
+        ] {
+            assert_eq!(env.contention_factor(0, params), 1.0);
+            assert_eq!(env.contention_factor(1, params), 1.0);
+            // Bit-for-bit the pairwise Table IV calibration at k = 2.
+            assert_eq!(
+                env.contention_factor(2, params),
+                1.0 + env.contention_penalty(params)
+            );
+            // Monotone non-decreasing in k; with the exempt member among
+            // the k in-flight transfers, the paying cohort's aggregate
+            // bandwidth share (k−1)/factor never exceeds one uncontended
+            // transfer's.
+            let mut prev = 1.0;
+            for k in 2..=8usize {
+                let f = env.contention_factor(k, params);
+                assert!(f >= prev, "factor not monotone at k={k}");
+                assert!((k - 1) as f64 / f <= 1.0 + 1e-12, "payers outship the NIC at k={k}");
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn contention_model_parse_roundtrip() {
+        for model in ContentionModel::ALL {
+            assert_eq!(ContentionModel::parse(model.name()), Some(model));
+        }
+        assert_eq!(ContentionModel::parse("k-way"), Some(ContentionModel::Kway));
+        assert_eq!(ContentionModel::parse("freeway"), None);
+        assert_eq!(ContentionModel::default(), ContentionModel::Kway);
+    }
+
+    #[test]
+    fn static_factor_and_planning_mus_follow_the_model() {
+        // No shared NICs: planning μ degenerates to the path μ.
+        for preset in [LinkPreset::Paper2Link, LinkPreset::NvlinkIbTcp] {
+            let env = preset.env();
+            assert_eq!(env.link_planning_mus(), env.link_path_mus(), "{}", preset.name());
+            assert_eq!(env.planning_fastest_link(), LinkId(0));
+        }
+        // 2-member shared group: both models agree bit-for-bit.
+        let p = 33_554_432u64;
+        let comm = Micros(100_000);
+        let single = LinkPreset::SingleNic.env();
+        let pair = single.clone().with_contention_model(ContentionModel::Pairwise);
+        assert_eq!(
+            single.static_contention_factor(LinkId(1), p),
+            pair.static_contention_factor(LinkId(1), p)
+        );
+        assert_eq!(single.wire_time(LinkId(1), comm, p), pair.wire_time(LinkId(1), comm, p));
+        assert_eq!(single.link_planning_mus(), pair.link_planning_mus());
+        assert!(
+            (single.planning_mu(LinkId(1)) - PAPER_MU * (1.0 + CONTENTION_PEAK)).abs() < 1e-12
+        );
+        assert_eq!(single.planning_fastest_link(), LinkId(0));
+        // 3-member shared group: the k-way static rule budgets
+        // (k−1)·(1+peak), strictly more conservative than pairwise.
+        let shared3 = LinkPreset::NvlinkIbTcp.env().with_single_link();
+        let pair3 = shared3.clone().with_contention_model(ContentionModel::Pairwise);
+        assert_eq!(shared3.group_size(LinkId(2)), 3);
+        assert_eq!(
+            shared3.static_contention_factor(LinkId(2), p),
+            2.0 * (1.0 + CONTENTION_PEAK)
+        );
+        assert_eq!(
+            pair3.static_contention_factor(LinkId(2), p),
+            1.0 + CONTENTION_PEAK
+        );
+        assert!(shared3.wire_time(LinkId(2), comm, p) > pair3.wire_time(LinkId(2), comm, p));
+        // The exempt (fastest) group member never pays under either model.
+        assert_eq!(shared3.static_contention_factor(LinkId(0), p), 1.0);
+        assert_eq!(shared3.planning_mu(LinkId(0)), 1.0);
     }
 
     #[test]

@@ -144,7 +144,9 @@ pub fn timeline_csv(timeline: &Timeline, link_names: &[String]) -> String {
 /// result's timeline, plus the link's codec and its compressed-vs-raw
 /// traffic. Under a hierarchical topology the shared intra link's row
 /// also accumulates the node-local legs of transfers homed on other
-/// links, so its utilization reads as segment pressure.
+/// links, so its utilization reads as segment pressure; busy times
+/// include shared-NIC contention as the execution's contention model
+/// priced it (the trailer names the model).
 pub fn link_table(result: &SimResult) -> String {
     let mut t = Table::new(&[
         "link",
@@ -183,7 +185,9 @@ pub fn link_table(result: &SimResult) -> String {
             format!("{}", traffic.encode),
         ]);
     }
-    t.render()
+    let mut out = t.render();
+    out.push_str(&format!("(contention model: {})\n", result.contention));
+    out
 }
 
 /// CSV export of the per-link codec traffic accounting
@@ -360,6 +364,7 @@ mod tests {
             link_busy: vec![(LinkId(0), Micros(50)), (LinkId(1), Micros(30))],
             link_names: names(&["nccl", "gloo"]),
             link_codecs: vec!["raw".into(), "fp16".into()],
+            contention: "kway".into(),
             link_traffic: vec![
                 LinkTraffic {
                     raw_bytes: 4_000_000,
@@ -377,6 +382,7 @@ mod tests {
         let table = link_table(&result);
         assert!(table.contains("fp16"), "{table}");
         assert!(table.contains("wire MB"), "{table}");
+        assert!(table.contains("contention model: kway"), "{table}");
         let csv = link_traffic_csv(&result);
         assert!(csv.contains("nccl,raw,4000000,4000000,0,50"), "{csv}");
         assert!(csv.contains("gloo,fp16,4000000,2000000,8,30"), "{csv}");

@@ -9,12 +9,40 @@
 //! forward window (overlapping forward compute).
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkId;
+use crate::links::{ClusterEnv, LinkId};
 use crate::models::BucketProfile;
 
 /// Priority / sequential scheduler à la Bytescheduler & P3.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct Bytescheduler;
+///
+/// Bytescheduler drives a single priority queue; which registry link
+/// carries it comes from the environment's conservative static estimate
+/// ([`Bytescheduler::for_env`] picks the planning-fastest link —
+/// `ClusterEnv::planning_mu`, i.e. path μ × static shared-NIC contention
+/// factor of the configured contention model). The default is the
+/// reference link, which every preset resolves to.
+#[derive(Clone, Copy, Debug)]
+pub struct Bytescheduler {
+    /// Registry link the priority queue rides.
+    pub link: LinkId,
+}
+
+impl Default for Bytescheduler {
+    fn default() -> Self {
+        Bytescheduler {
+            link: LinkId::REFERENCE,
+        }
+    }
+}
+
+impl Bytescheduler {
+    /// Bytescheduler for a concrete environment: ride the
+    /// planning-fastest link.
+    pub fn for_env(env: &ClusterEnv) -> Bytescheduler {
+        Bytescheduler {
+            link: env.planning_fastest_link(),
+        }
+    }
+}
 
 impl Scheduler for Bytescheduler {
     fn name(&self) -> &'static str {
@@ -31,7 +59,7 @@ impl Scheduler for Bytescheduler {
         let bwd_ops = (0..n)
             .map(|bucket| CommOp {
                 bucket,
-                link: LinkId::REFERENCE,
+                link: self.link,
                 stage: Stage::Backward,
                 priority: bucket as i64, // input-side first
                 grad_age: 0,
@@ -63,12 +91,21 @@ mod tests {
     #[test]
     fn priorities_follow_layer_order() {
         let buckets = vgg19_table2_buckets();
-        let s = Bytescheduler.schedule(&buckets);
+        let s = Bytescheduler::default().schedule(&buckets);
         s.validate().unwrap();
         assert_eq!(s.fwd_dependency, FwdDependency::PerBucket);
         for (i, op) in s.cycle[0].bwd_ops.iter().enumerate() {
             assert_eq!(op.bucket, i);
             assert_eq!(op.priority, i as i64);
+        }
+    }
+
+    #[test]
+    fn for_env_resolves_presets_to_the_reference_link() {
+        use crate::links::LinkPreset;
+        for preset in LinkPreset::ALL {
+            let s = Bytescheduler::for_env(&preset.env());
+            assert_eq!(s.link, LinkId::REFERENCE, "{}", preset.name());
         }
     }
 }

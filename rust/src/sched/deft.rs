@@ -41,9 +41,13 @@ pub struct DeftOptions {
     /// Per-link effective slowdown factors in registry order (index =
     /// `LinkId`; paper default: `[1.0, 1.65]` for NCCL + gloo). Under a
     /// hierarchical topology these are the **segment-path** factors, not
-    /// the raw μs — build from an environment via [`Deft::for_env`] /
-    /// `ClusterEnv::link_path_mus`, so every knapsack capacity is
-    /// compute time divided by its link's slowest-path slowdown.
+    /// the raw μs, and links sharing a NIC additionally budget the
+    /// conservative static contention factor of the environment's
+    /// [`crate::links::ContentionModel`] (k-way: every group-mate
+    /// presumed concurrently in flight) — build from an environment via
+    /// [`Deft::for_env`] / `ClusterEnv::link_planning_mus`, so every
+    /// knapsack capacity is compute time divided by its link's planning
+    /// slowdown. Registries without shared NICs reduce to the path μs.
     pub link_mus: Vec<f64>,
     /// Per-link codec gradient errors in registry order (index =
     /// `LinkId`; see [`crate::links::Codec::error`]). Empty — the default
@@ -109,10 +113,12 @@ impl Deft {
 
     /// DeFT for a concrete cluster environment: the knapsack set follows
     /// the environment's link registry (one knapsack per link), each
-    /// capacity derived from the link's segment-path slowdown.
+    /// capacity derived from the link's **planning** slowdown — the
+    /// codec-effective segment-path μ times the static shared-NIC
+    /// contention factor of the environment's contention model.
     pub fn for_env(env: &ClusterEnv, preserver: bool) -> Deft {
         Deft::new(DeftOptions {
-            link_mus: env.link_path_mus(),
+            link_mus: env.link_planning_mus(),
             link_errors: env.link_path_codec_errors(),
             preserver,
             ..DeftOptions::default()

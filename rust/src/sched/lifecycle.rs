@@ -132,8 +132,9 @@ pub fn run_lifecycle(
             preserver: false,
             // The knapsack set always follows the target environment's
             // link registry (one knapsack per link, capacities from the
-            // codec-effective segment-path slowdowns).
-            link_mus: solve_env.link_path_mus(),
+            // codec-effective segment-path slowdowns times the static
+            // shared-NIC contention factor of the contention model).
+            link_mus: solve_env.link_planning_mus(),
             ..opts.deft.clone()
         });
         let schedule = deft.schedule(&profile);

@@ -11,21 +11,64 @@
 //! once per schedule.
 
 use super::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage};
-use crate::links::LinkId;
+use crate::links::{ClusterEnv, LinkId};
 use crate::models::BucketProfile;
 use crate::util::Micros;
 
 /// Non-sequential greedy scheduler à la US-Byte.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct UsByte;
+///
+/// US-Byte drives a single communication queue; which link carries it —
+/// and how expensive the greedy lookahead should assume its wires are —
+/// comes from the environment's conservative static estimate
+/// ([`UsByte::for_env`]): the planning-fastest registry link, with
+/// projected wire times scaled by that link's planning slowdown
+/// (`ClusterEnv::planning_mu` — path μ × static shared-NIC contention
+/// factor of the configured contention model). The default is the
+/// reference link at scale 1, which every preset resolves to.
+#[derive(Clone, Copy, Debug)]
+pub struct UsByte {
+    /// Registry link the single comm queue rides.
+    pub link: LinkId,
+    /// Static planning slowdown of that link, applied to the greedy
+    /// lookahead's projected wire times (1.0 = reference pricing).
+    pub comm_scale: f64,
+}
+
+impl Default for UsByte {
+    fn default() -> Self {
+        UsByte {
+            link: LinkId::REFERENCE,
+            comm_scale: 1.0,
+        }
+    }
+}
 
 impl UsByte {
+    /// US-Byte for a concrete environment: ride the planning-fastest
+    /// link and project its wires at that link's planning slowdown.
+    pub fn for_env(env: &ClusterEnv) -> UsByte {
+        let link = env.planning_fastest_link();
+        UsByte {
+            link,
+            comm_scale: env.planning_mu(link),
+        }
+    }
+
+    /// Projected wire time of a bucket under the planning estimate.
+    fn wire(&self, comm: Micros) -> Micros {
+        if self.comm_scale == 1.0 {
+            comm
+        } else {
+            comm.scale(self.comm_scale)
+        }
+    }
+
     /// Compute the transmission order for one steady-state iteration.
     ///
     /// Inputs are the steady-state readiness times of each bucket's
     /// gradient (relative to backward start) and the forward/comm times;
     /// output is the bucket order the link should follow.
-    fn greedy_order(buckets: &[BucketProfile]) -> Vec<usize> {
+    fn greedy_order(&self, buckets: &[BucketProfile]) -> Vec<usize> {
         let n = buckets.len();
         // Gradient readiness: backward runs n-1 .. 0.
         let mut ready = vec![Micros::ZERO; n];
@@ -42,7 +85,7 @@ impl UsByte {
             let mut link_t = Micros::ZERO;
             let mut done = vec![Micros::ZERO; n];
             for &b in order {
-                link_t = link_t.max(ready[b]) + buckets[b].comm;
+                link_t = link_t.max(ready[b]) + self.wire(buckets[b].comm);
                 done[b] = link_t;
             }
             let mut fwd_cursor = bwd_total; // forward starts after backward
@@ -81,7 +124,7 @@ impl UsByte {
                 }
             }
             let (_, chosen) = best.expect("candidates nonempty");
-            link_t = link_t.max(ready[chosen]) + buckets[chosen].comm;
+            link_t = link_t.max(ready[chosen]) + self.wire(buckets[chosen].comm);
             order.push(chosen);
             remaining.retain(|&b| b != chosen);
         }
@@ -97,13 +140,13 @@ impl Scheduler for UsByte {
     fn schedule(&self, buckets: &[BucketProfile]) -> Schedule {
         let n = buckets.len();
         assert!(n > 0);
-        let order = Self::greedy_order(buckets);
+        let order = self.greedy_order(buckets);
         let bwd_ops = order
             .iter()
             .enumerate()
             .map(|(pos, &bucket)| CommOp {
                 bucket,
-                link: LinkId::REFERENCE,
+                link: self.link,
                 stage: Stage::Backward,
                 priority: pos as i64,
                 grad_age: 0,
@@ -135,7 +178,7 @@ mod tests {
     #[test]
     fn order_is_a_permutation() {
         let buckets = vgg19_table2_buckets();
-        let order = UsByte::greedy_order(&buckets);
+        let order = UsByte::default().greedy_order(&buckets);
         let mut sorted = order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..buckets.len()).collect::<Vec<_>>());
@@ -143,9 +186,32 @@ mod tests {
 
     #[test]
     fn schedule_validates() {
-        let s = UsByte.schedule(&vgg19_table2_buckets());
+        let s = UsByte::default().schedule(&vgg19_table2_buckets());
         s.validate().unwrap();
         assert_eq!(s.ops_per_cycle(), 6);
+    }
+
+    #[test]
+    fn for_env_rides_the_planning_fastest_link() {
+        use crate::links::{ClusterEnv, LinkPreset, LinkSpec};
+        // Every preset resolves to the reference link at scale 1 — the
+        // historical behaviour, bit-for-bit.
+        for preset in LinkPreset::ALL {
+            let s = UsByte::for_env(&preset.env());
+            assert_eq!(s.link, LinkId::REFERENCE, "{}", preset.name());
+            assert!((s.comm_scale - 1.0).abs() < 1e-12, "{}", preset.name());
+        }
+        // A registry whose reference link pays shared-NIC contention:
+        // the static estimate routes the queue onto the exempt peer.
+        let env = ClusterEnv::paper_testbed().with_links(vec![
+            LinkSpec::new("ref", 1.0).with_alpha(Micros(300)).with_group(0),
+            LinkSpec::new("peer", 1.0).with_alpha(Micros(100)).with_group(0),
+        ]);
+        let s = UsByte::for_env(&env);
+        assert_eq!(s.link, LinkId(1), "exempt peer must win the planning order");
+        assert!((s.comm_scale - 1.0).abs() < 1e-12);
+        let schedule = s.schedule(&vgg19_table2_buckets());
+        assert!(schedule.cycle[0].bwd_ops.iter().all(|op| op.link == LinkId(1)));
     }
 
     #[test]
@@ -170,7 +236,7 @@ mod tests {
                 comm: Micros(200),
             },
         ];
-        let order = UsByte::greedy_order(&buckets);
+        let order = UsByte::default().greedy_order(&buckets);
         assert_eq!(order[0], 1, "greedy should ship the ready bucket first");
     }
 }

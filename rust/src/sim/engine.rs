@@ -3,18 +3,38 @@
 //! ## Contention: execution model
 //!
 //! Transfers are priced **uncontended** ([`ClusterEnv::wire_time_uncontended`])
-//! and the Table IV shared-NIC penalty is charged only for the window in
-//! which a transfer actually overlaps an in-flight transfer of another
-//! link in the same contention group — the planner's static rule
-//! ([`ClusterEnv::wire_time`]) is a conservative estimate, not what
-//! execution charges. A fully-overlapped transfer degrades exactly as the
-//! static rule predicts; an idle group-mate costs nothing. The charge is
-//! symmetric in dispatch order: a paying transfer that starts second pays
-//! for the window it shares with transfers already in flight, and a
-//! paying transfer already in flight is *extended* when a group-mate
-//! starts alongside it — only the group's fastest member is never slowed
-//! (the paper's NCCL observation). Home-link spans are therefore recorded
-//! at completion, once the end time is final.
+//! and shared-NIC contention is charged only while a transfer actually
+//! overlaps in-flight transfers of other links in the same contention
+//! group — the planner's static rule ([`ClusterEnv::wire_time`]) is a
+//! conservative estimate, not what execution charges. An idle group-mate
+//! costs nothing, and only the group's fastest member is never slowed
+//! (the paper's NCCL observation). Two execution models exist, selected
+//! by [`crate::links::ContentionModel`] on the environment:
+//!
+//! * **Aggregate k-way sharing** (the default): every in-flight transfer
+//!   carries its remaining uncontended wire time, and a paying transfer
+//!   progresses at `1 / contention_factor(k, params)` of its uncontended
+//!   rate while `k` group members are concurrently in flight
+//!   ([`ClusterEnv::contention_factor`] — bit-for-bit the pairwise
+//!   Table IV penalty at `k = 2`). The pricing is **piecewise**: at every
+//!   membership change — a group member dispatching *or finalizing* —
+//!   each member banks the progress made at its old rate and its
+//!   projected end is re-derived from the remainder at the new `k`. A
+//!   survivor therefore speeds back up the moment a group-mate finishes —
+//!   the finalize-path re-check the old one-shot extension lacked.
+//! * **Pairwise** (legacy): a paying transfer is slowed by the fixed
+//!   pairwise penalty on the overlap window as known at dispatch time — a
+//!   transfer starting second pays for the window it shares with flights
+//!   already in progress, and a paying flight is one-shot *extended* when
+//!   a group-mate starts alongside it. The charge is symmetric to first
+//!   order only: it is never revisited when a mate finishes, and three
+//!   concurrent transfers still pay the two-transfer penalty — which is
+//!   why k-way replaced it as the default (`tests/contention_model.rs`
+//!   pins both models).
+//!
+//! A fully-overlapped pair degrades identically under both models —
+//! exactly as the static rule predicts. Home-link spans are recorded at
+//! completion, once the end time is final.
 //!
 //! ## Per-segment streams
 //!
@@ -47,7 +67,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::{Span, SpanKind, StreamId, Timeline};
-use crate::links::{ClusterEnv, LinkId};
+use crate::links::{ClusterEnv, ContentionModel, LinkId};
 use crate::models::BucketProfile;
 use crate::sched::{FwdDependency, Schedule, Stage};
 use crate::util::Micros;
@@ -111,6 +131,9 @@ pub struct SimResult {
     pub link_names: Vec<String>,
     /// Codec names in registry order.
     pub link_codecs: Vec<String>,
+    /// Contention model the execution priced shared NICs under
+    /// (`"pairwise"` | `"kway"`, from the environment).
+    pub contention: String,
     /// Per-link compressed-vs-raw bytes and encode overhead, in registry
     /// order (home-link accounting: a transfer's bytes count on the link
     /// it was scheduled on).
@@ -158,9 +181,84 @@ struct OpInst {
     ready: Option<Micros>,
     /// Finalized completion time, set at the completion event. None while
     /// queued or in flight — an in-flight transfer's *tentative* end
-    /// lives in the engine's span table, where overlap contention may
-    /// still extend it, so nothing may gate on it before completion.
+    /// lives in the engine's flight table, where overlap contention may
+    /// still move it (later at a group-mate's dispatch, earlier at a
+    /// group-mate's finalize under k-way), so nothing may gate on it
+    /// before completion.
     done: Option<Micros>,
+}
+
+/// One in-flight transfer on a link. Under the k-way contention model the
+/// flight is re-priced piecewise at every group membership change; under
+/// the pairwise model `rem`/`factor` stay at their dispatch values and
+/// only `end` is one-shot extended.
+#[derive(Clone, Copy, Debug)]
+struct Flight {
+    /// Index into `ops`.
+    oi: usize,
+    /// Wire start (the home-link span is recorded at completion).
+    start: Micros,
+    /// Time of the last re-pricing event (dispatch, or any k-way
+    /// membership change since).
+    at: Micros,
+    /// Uncontended wire time still owed as of `at`.
+    rem: Micros,
+    /// Current slowdown factor (1.0 = uncontended rate).
+    factor: f64,
+    /// Projected completion: `at + rem · factor`; final once it fires.
+    end: Micros,
+}
+
+/// Re-price every in-flight member of `group` at event time `t` (k-way
+/// model): bank the progress made at the old rate over `[at, t)`, then
+/// project the remainder at the factor for the group's new concurrency
+/// `k`. Exempt (non-paying) members always run at rate 1 —
+/// `contention_factor(k ≤ 1, ·) = 1` covers a payer flying alone.
+#[allow(clippy::too_many_arguments)]
+fn reprice_group(
+    env: &ClusterEnv,
+    buckets: &[BucketProfile],
+    ops: &[OpInst],
+    group_of: &[usize],
+    pays: &[bool],
+    flights: &mut [Option<Flight>],
+    link_free: &mut [Micros],
+    group: usize,
+    t: Micros,
+) {
+    let k = flights
+        .iter()
+        .enumerate()
+        .filter(|(j, f)| group_of[*j] == group && f.is_some())
+        .count();
+    for j in 0..flights.len() {
+        if group_of[j] != group {
+            continue;
+        }
+        let Some(f) = flights[j].as_mut() else { continue };
+        let elapsed = t.saturating_sub(f.at);
+        if !elapsed.is_zero() {
+            let done = if f.factor == 1.0 {
+                elapsed
+            } else {
+                elapsed.scale(1.0 / f.factor)
+            };
+            f.rem = f.rem.saturating_sub(done);
+        }
+        f.at = f.at.max(t);
+        f.factor = if pays[j] {
+            env.contention_factor(k, buckets[ops[f.oi].bucket].params)
+        } else {
+            1.0
+        };
+        f.end = f.at
+            + if f.factor == 1.0 {
+                f.rem
+            } else {
+                f.rem.scale(f.factor)
+            };
+        link_free[j] = f.end;
+    }
 }
 
 /// Compute-task cursor: which task the compute stream runs next.
@@ -306,13 +404,12 @@ pub fn simulate(
     // Per-link ready pools (indexed by LinkId), ordered by
     // (priority, iter, bucket, op idx).
     let mut pool: Vec<BTreeSet<(i64, usize, usize, usize)>> = vec![BTreeSet::new(); n_links];
-    // Link busy-until and in-flight op, indexed by LinkId.
+    // Link busy-until (= the in-flight projection's end) and the
+    // in-flight transfer itself, indexed by LinkId.
     let mut link_free: Vec<Micros> = vec![Micros::ZERO; n_links];
-    let mut in_flight: Vec<Option<usize>> = vec![None; n_links];
-    // Busy interval of the in-flight op (valid while in_flight is Some).
-    let mut in_flight_span: Vec<(Micros, Micros)> = vec![(Micros::ZERO, Micros::ZERO); n_links];
+    let mut in_flight: Vec<Option<Flight>> = vec![None; n_links];
     // Contention bookkeeping: group per link, and whether the link pays
-    // the shared-NIC penalty at all (the non-fastest-group-member rule).
+    // shared-NIC contention at all (the non-fastest-group-member rule).
     let group_of: Vec<usize> = (0..n_links)
         .map(|k| env.spec(LinkId(k)).contention_group)
         .collect();
@@ -413,64 +510,102 @@ pub fn simulate(
                 let oi = key.3;
                 pool[k].remove(&key);
                 let start = ops[oi].ready.unwrap().max(link_free[k]);
-                let mut end = start + ops[oi].wire;
-                // Overlap-aware contention: a paying link is slowed only
-                // for the window it shares with an in-flight transfer of
-                // a same-group link (see the module docs).
-                if pays[k] && !ops[oi].wire.is_zero() {
-                    let mut overlap = Micros::ZERO;
-                    for (j, span) in in_flight_span.iter().enumerate() {
-                        if j == k || group_of[j] != group_of[k] || in_flight[j].is_none() {
-                            continue;
-                        }
-                        let lo = start.max(span.0);
-                        let hi = end.min(span.1);
-                        if hi > lo {
-                            overlap += hi - lo;
-                        }
-                    }
-                    if !overlap.is_zero() {
-                        let params = buckets[ops[oi].bucket].params;
-                        end += overlap.scale(env.contention_penalty(params));
-                    }
-                }
+                let wire = ops[oi].wire;
                 // `done` stays None until the completion event; while in
-                // flight the tentative end lives in `in_flight_span` and
-                // `link_free`, where the extension below may move it.
-                link_free[k] = end;
-                in_flight[k] = Some(oi);
-                in_flight_span[k] = (start, end);
-                seg_busy[k] += end - start;
-                // Symmetry: this transfer also slows down any *paying*
-                // group-mate already in flight — extend it by the penalty
-                // on the newly shared window (the fastest member never
-                // pays, mirroring the dispatch-time charge above). Both
-                // directions measure the window against the spans as
-                // known at this dispatch, so the charge is symmetric to
-                // first order; the extra overlap an extension itself
-                // creates is deliberately not re-charged.
-                for j in 0..n_links {
-                    if j == k || group_of[j] != group_of[k] || !pays[j] {
-                        continue;
+                // flight the tentative end lives in the flight table and
+                // `link_free`, where contention may still move it.
+                match env.contention {
+                    ContentionModel::Kway => {
+                        in_flight[k] = Some(Flight {
+                            oi,
+                            start,
+                            at: start,
+                            rem: wire,
+                            factor: 1.0,
+                            end: start + wire,
+                        });
+                        link_free[k] = start + wire;
+                        // Aggregate sharing: this dispatch changes the
+                        // group's concurrency, so the whole group is
+                        // re-priced — the new transfer picks up the
+                        // factor for the current k, and every paying
+                        // group-mate banks its progress so far and slows
+                        // down for the larger k.
+                        reprice_group(
+                            env,
+                            buckets,
+                            &ops,
+                            &group_of,
+                            &pays,
+                            &mut in_flight,
+                            &mut link_free,
+                            group_of[k],
+                            start,
+                        );
                     }
-                    let Some(oj) = in_flight[j] else { continue };
-                    let (s2, e2) = in_flight_span[j];
-                    let lo = start.max(s2);
-                    let hi = end.min(e2);
-                    if hi > lo {
-                        let params = buckets[ops[oj].bucket].params;
-                        let extra = (hi - lo).scale(env.contention_penalty(params));
-                        if !extra.is_zero() {
-                            link_free[j] = e2 + extra;
-                            in_flight_span[j].1 = e2 + extra;
-                            seg_busy[j] += extra;
+                    ContentionModel::Pairwise => {
+                        let mut end = start + wire;
+                        // One-shot overlap charge: a paying link is
+                        // slowed by the pairwise penalty for the window
+                        // it shares with in-flight same-group transfers.
+                        if pays[k] && !wire.is_zero() {
+                            let mut overlap = Micros::ZERO;
+                            for (j, f) in in_flight.iter().enumerate() {
+                                if j == k || group_of[j] != group_of[k] {
+                                    continue;
+                                }
+                                let Some(f) = f else { continue };
+                                let lo = start.max(f.start);
+                                let hi = end.min(f.end);
+                                if hi > lo {
+                                    overlap += hi - lo;
+                                }
+                            }
+                            if !overlap.is_zero() {
+                                let params = buckets[ops[oi].bucket].params;
+                                end += overlap.scale(env.contention_penalty(params));
+                            }
+                        }
+                        link_free[k] = end;
+                        in_flight[k] = Some(Flight {
+                            oi,
+                            start,
+                            at: start,
+                            rem: wire,
+                            factor: 1.0,
+                            end,
+                        });
+                        // Symmetry: this transfer also slows down any
+                        // *paying* group-mate already in flight — extend
+                        // it by the penalty on the newly shared window
+                        // (the fastest member never pays, mirroring the
+                        // dispatch-time charge above). Both directions
+                        // measure the window against the ends as known at
+                        // this dispatch, so the charge is symmetric to
+                        // first order only; the k-way model re-prices
+                        // these windows exactly instead.
+                        for j in 0..n_links {
+                            if j == k || group_of[j] != group_of[k] || !pays[j] {
+                                continue;
+                            }
+                            let Some(fj) = in_flight[j] else { continue };
+                            let lo = start.max(fj.start);
+                            let hi = end.min(fj.end);
+                            if hi > lo {
+                                let params = buckets[ops[fj.oi].bucket].params;
+                                let extra = (hi - lo).scale(env.contention_penalty(params));
+                                if !extra.is_zero() {
+                                    link_free[j] = fj.end + extra;
+                                    in_flight[j].as_mut().unwrap().end = fj.end + extra;
+                                }
+                            }
                         }
                     }
                 }
                 // Foreign segment leg: record its occupancy on the
                 // segment's own stream (hierarchical topologies). The
                 // home-link span is recorded at completion, once the end
-                // can no longer be extended by contention.
+                // can no longer move.
                 if let Some((seg_link, seg_t)) = ops[oi].seg_extra {
                     seg_busy[seg_link.index()] += seg_t;
                     record(
@@ -631,51 +766,77 @@ pub fn simulate(
         }
 
         // --- 4. Fire completions at `now`. ---
-        // Link completions.
-        for k in 0..n_links {
-            if let Some(oi) = in_flight[k] {
-                let done_t = in_flight_span[k].1;
-                if done_t <= now {
-                    // Finalize: contention from group-mates starting
-                    // mid-flight can no longer extend this transfer.
-                    ops[oi].done = Some(done_t);
-                    in_flight[k] = None;
-                    record(
-                        &mut timeline,
-                        Span {
-                            stream: StreamId::Link(LinkId(k)),
-                            kind: SpanKind::Comm {
-                                iter: ops[oi].iter,
-                                bucket: ops[oi].bucket,
-                                merged: ops[oi].merged,
-                            },
-                            start: in_flight_span[k].0,
-                            end: done_t,
-                        },
-                    );
-                    // Advance the staleness watermark.
-                    let op_iter = ops[oi].iter;
-                    iter_ops_remaining[op_iter] -= 1;
-                    iter_max_done[op_iter] = iter_max_done[op_iter].max(done_t);
-                    while watermark < iters && iter_ops_remaining[watermark] == 0 {
-                        let prev = if watermark == 0 {
-                            Micros::ZERO
-                        } else {
-                            cum_max_done[watermark - 1]
-                        };
-                        cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
-                        watermark += 1;
-                    }
-                    let u = ops[oi].update_idx;
-                    if u < total_updates {
-                        update_outstanding[u] -= 1;
-                        if update_outstanding[u] == 0 {
-                            if let Some(iter_end) = update_pending_end[u] {
-                                update_times[u] = Some(iter_end.max(done_t));
-                            }
-                        }
+        // Link completions — chronologically (earliest projected end
+        // first), because under the k-way model every finalize re-prices
+        // the survivors of its contention group: they speed back up from
+        // the departure instant, and their shortened projections may
+        // themselves fall due within this same round.
+        loop {
+            let mut due: Option<(Micros, usize)> = None;
+            for k in 0..n_links {
+                if let Some(f) = &in_flight[k] {
+                    if f.end <= now && due.map_or(true, |(e, j)| (f.end, k) < (e, j)) {
+                        due = Some((f.end, k));
                     }
                 }
+            }
+            let Some((done_t, k)) = due else { break };
+            let f = in_flight[k].take().expect("due flight exists");
+            let oi = f.oi;
+            // Finalize: contention can no longer move this transfer.
+            ops[oi].done = Some(done_t);
+            seg_busy[k] += done_t - f.start;
+            record(
+                &mut timeline,
+                Span {
+                    stream: StreamId::Link(LinkId(k)),
+                    kind: SpanKind::Comm {
+                        iter: ops[oi].iter,
+                        bucket: ops[oi].bucket,
+                        merged: ops[oi].merged,
+                    },
+                    start: f.start,
+                    end: done_t,
+                },
+            );
+            // Advance the staleness watermark.
+            let op_iter = ops[oi].iter;
+            iter_ops_remaining[op_iter] -= 1;
+            iter_max_done[op_iter] = iter_max_done[op_iter].max(done_t);
+            while watermark < iters && iter_ops_remaining[watermark] == 0 {
+                let prev = if watermark == 0 {
+                    Micros::ZERO
+                } else {
+                    cum_max_done[watermark - 1]
+                };
+                cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
+                watermark += 1;
+            }
+            let u = ops[oi].update_idx;
+            if u < total_updates {
+                update_outstanding[u] -= 1;
+                if update_outstanding[u] == 0 {
+                    if let Some(iter_end) = update_pending_end[u] {
+                        update_times[u] = Some(iter_end.max(done_t));
+                    }
+                }
+            }
+            // Finalize-path re-pricing: the departure shrinks the
+            // group's concurrency, so surviving paying members speed
+            // back up from `done_t` (k-way only — the pairwise model
+            // deliberately never revisits its one-shot charge).
+            if env.contention == ContentionModel::Kway {
+                reprice_group(
+                    env,
+                    buckets,
+                    &ops,
+                    &group_of,
+                    &pays,
+                    &mut in_flight,
+                    &mut link_free,
+                    group_of[k],
+                    done_t,
+                );
             }
         }
         // Compute completion.
@@ -775,9 +936,10 @@ pub fn simulate(
     let compute_span_start = first_comp_start.unwrap_or(Micros::ZERO);
     let compute_bubbles = (compute_span_end - compute_span_start).saturating_sub(compute_busy);
 
-    // Per-link busy = segment occupancy charged during dispatch: home
-    // durations (incl. overlap contention) plus foreign hierarchical
-    // legs. Flat topologies reduce to the sum of executed wire times.
+    // Per-link busy = segment occupancy: home span durations finalized
+    // at completion (incl. overlap contention under either model) plus
+    // foreign hierarchical legs charged at dispatch. Uncontended flat
+    // topologies reduce to the sum of executed wire times.
     let link_busy = seg_busy
         .into_iter()
         .enumerate()
@@ -794,6 +956,7 @@ pub fn simulate(
         link_busy,
         link_names: env.link_names(),
         link_codecs: env.link_codec_names(),
+        contention: env.contention.name().to_string(),
         link_traffic,
         timeline,
     }

@@ -12,8 +12,11 @@
 //!   ops (non-preemptive); under a hierarchical
 //!   [`crate::links::Topology`] a transfer's node-local segment legs are
 //!   additionally recorded on the shared intra link's stream, and
-//!   shared-NIC contention is charged only for windows where same-group
-//!   transfers actually overlap (see `engine` docs);
+//!   shared-NIC contention is charged only while same-group transfers
+//!   actually overlap — by default as an aggregate k-way bandwidth split
+//!   re-priced at every dispatch/finalize event, or as the legacy
+//!   pairwise one-shot penalty
+//!   ([`crate::links::ContentionModel`]; see `engine` docs);
 //! * a gradient's communication may not start before its producing
 //!   backward finishes (unless it carries an older iteration's gradient —
 //!   DeFT's delayed updates);

@@ -144,7 +144,17 @@ fn legacy_hier_segments(
 #[test]
 fn raw_flat_pricing_matches_the_pre_codec_closed_forms() {
     let mut envs: Vec<ClusterEnv> = LinkPreset::ALL.iter().map(|p| p.env()).collect();
-    envs.push(LinkPreset::NvlinkIbTcp.env().with_single_link());
+    // The pre-codec closed forms priced shared NICs with the pairwise
+    // Table IV rule; the collapsed 3-link registry therefore pins the
+    // pairwise model explicitly (for 2-member groups — every preset —
+    // the default k-way model is bit-for-bit identical, which
+    // `tests/contention_model.rs` pins separately).
+    envs.push(
+        LinkPreset::NvlinkIbTcp
+            .env()
+            .with_single_link()
+            .with_contention_model(deft::links::ContentionModel::Pairwise),
+    );
     for env in &envs {
         for link in env.link_ids() {
             for params in PARAM_SWEEP {

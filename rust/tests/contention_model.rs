@@ -1,0 +1,513 @@
+//! Contention-model suite: closed-form oracles, the Table IV golden fit,
+//! and property tests for the aggregate k-way sharing model
+//! (`ClusterEnv::contention_factor` + the DES engine's piecewise
+//! re-pricing), pinned against the legacy pairwise model.
+//!
+//! 1. **k = 1** — a transfer with no in-flight group-mate prices exactly
+//!    as `wire_time_uncontended`, on every preset, flat and hierarchical.
+//! 2. **k = 2** — a payer fully overlapped by the group's exempt member
+//!    prices exactly `uncontended · contention_factor(2, params)` —
+//!    bit-for-bit the pairwise Table IV penalty — on every collapsed
+//!    preset, flat and hierarchical.
+//! 3. A 3-transfer **staircase** whose group membership changes at five
+//!    distinct events, checked µs-for-µs against a hand-computed
+//!    piecewise timeline, and strictly slower than the pairwise model.
+//! 4. **Finalize-path regression**: a paying transfer extended by a
+//!    late-starting group-mate speeds back up when the mate finishes
+//!    early — the re-check the pairwise one-shot extension lacks.
+//! 5. **Golden Table IV fit** under the k-way model (promoted from
+//!    `bench_table4_fig6_links` so tier-1 catches drift).
+//! 6. Properties: group throughput caps, completion monotone in k,
+//!    greedy ≤ exact on k-way planning capacities.
+
+use deft::links::{
+    ClusterEnv, ContentionModel, LinkId, LinkPreset, LinkSpec, Topology, CONTENTION_PEAK,
+};
+use deft::models::BucketProfile;
+use deft::sched::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
+use deft::sim::{simulate, SimOptions, SimResult, SpanKind, StreamId};
+use deft::solver::{multi_knapsack_exact, multi_knapsack_greedy, Item};
+use deft::util::prop::check;
+use deft::util::Micros;
+
+/// All scenario tensors sit on the Table IV plateau: penalty = 0.21.
+const PARAMS: u64 = 33_554_432;
+
+fn bucket(id: usize, comm: Micros) -> BucketProfile {
+    BucketProfile {
+        id,
+        params: PARAMS,
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm,
+    }
+}
+
+fn op(bucket: usize, link: LinkId, grad_age: usize) -> CommOp {
+    CommOp {
+        bucket,
+        link,
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age,
+        merged: 1,
+        update_offset: 0,
+    }
+}
+
+fn schedule_of(bwd_ops: Vec<CommOp>) -> Schedule {
+    let s = Schedule {
+        scheme: "contention-probe".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops,
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+    };
+    s.validate().unwrap();
+    s
+}
+
+fn run(buckets: &[BucketProfile], schedule: &Schedule, env: &ClusterEnv) -> SimResult {
+    simulate(
+        buckets,
+        schedule,
+        env,
+        &SimOptions {
+            iterations: 1,
+            warmup: 0,
+            record_timeline: true,
+        },
+    )
+}
+
+/// Completion time of `bucket`'s transfer on its home stream `link`
+/// (home spans are recorded at completion; foreign hierarchical legs of
+/// other transfers are filtered out by the bucket id).
+fn comm_end(r: &SimResult, link: LinkId, bucket: usize) -> Micros {
+    r.timeline
+        .spans
+        .iter()
+        .filter(|s| {
+            s.stream == StreamId::Link(link)
+                && matches!(s.kind, SpanKind::Comm { bucket: b, .. } if b == bucket)
+        })
+        .map(|s| s.end)
+        .max()
+        .unwrap_or_else(|| panic!("no comm span for bucket {bucket} on {link:?}"))
+}
+
+/// The flat presets plus their hierarchical (8 ranks/node) variants.
+fn preset_envs(preset: LinkPreset) -> Vec<ClusterEnv> {
+    vec![
+        preset.env(),
+        preset
+            .env()
+            .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1))),
+    ]
+}
+
+// ---- 1. k = 1: uncontended pricing, bit-for-bit. ----
+
+/// A transfer flying alone prices exactly `wire_time_uncontended` under
+/// the k-way model, on every preset link, flat and hierarchical — even
+/// when the registry shares a NIC (an idle group-mate costs nothing).
+#[test]
+fn k1_matches_uncontended_pricing_on_all_presets() {
+    for preset in LinkPreset::ALL {
+        for base in preset_envs(preset) {
+            for env in [base.clone(), base.clone().with_single_link()] {
+                assert_eq!(env.contention, ContentionModel::Kway);
+                for link in env.link_ids() {
+                    let comm = Micros(50_000);
+                    let buckets = vec![bucket(0, comm)];
+                    let schedule = schedule_of(vec![op(0, link, 0)]);
+                    let r = run(&buckets, &schedule, &env);
+                    // Gradient ready at fwd (10 ms) + bwd (10 ms).
+                    let want = Micros(20_000) + env.wire_time_uncontended(link, comm);
+                    assert_eq!(
+                        comm_end(&r, link, 0),
+                        want,
+                        "{}/{:?} hier={}",
+                        preset.name(),
+                        link,
+                        env.topology != Topology::Flat
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- 2. k = 2: the pairwise Table IV penalty, bit-for-bit. ----
+
+/// A payer whose flight is fully covered by the group's exempt member
+/// prices exactly `uncontended · contention_factor(2, params)` — the
+/// pairwise Table IV penalty — under the k-way engine, on every
+/// collapsed preset, flat and hierarchical. For two-member groups this
+/// equals the static planning estimate `wire_time` bit-for-bit, and the
+/// legacy pairwise engine agrees on the same scenario.
+#[test]
+fn k2_full_overlap_matches_the_pairwise_penalty_bit_for_bit() {
+    for preset in LinkPreset::ALL {
+        for base in preset_envs(preset) {
+            let env = base.with_single_link();
+            let exempt = LinkId(0);
+            assert!(!env.contended(exempt), "{}: link 0 must be exempt", preset.name());
+            for payer in env.link_ids().filter(|&l| env.contended(l)) {
+                // Long exempt transfer dispatched first (ready 30 ms),
+                // short payer second (ready 40 ms), fully inside it.
+                let comm1 = Micros(400_000);
+                let comm2 = Micros(50_000);
+                let buckets = vec![bucket(0, comm2), bucket(1, comm1)];
+                let schedule = schedule_of(vec![op(1, exempt, 0), op(0, payer, 0)]);
+                let r = run(&buckets, &schedule, &env);
+                let uncontended = env.wire_time_uncontended(payer, comm2);
+                let factor = env.contention_factor(2, PARAMS);
+                let want = Micros(40_000) + uncontended.scale(factor);
+                let got = comm_end(&r, payer, 0);
+                assert_eq!(got, want, "{}/{:?}", preset.name(), payer);
+                // Premise: the payer really was covered end to end.
+                assert!(comm_end(&r, exempt, 1) >= got, "{}: not fully overlapped", preset.name());
+                // The exempt member is never slowed.
+                assert_eq!(
+                    comm_end(&r, exempt, 1),
+                    Micros(30_000) + env.wire_time_uncontended(exempt, comm1)
+                );
+                // Two-member groups: execution == static planning rule.
+                if env.group_size(payer) == 2 {
+                    assert_eq!(got, Micros(40_000) + env.wire_time(payer, comm2, PARAMS));
+                }
+                // The legacy pairwise engine prices this scenario the
+                // same way (full overlap is the calibration point the
+                // two models share).
+                let pair_env = env.clone().with_contention_model(ContentionModel::Pairwise);
+                let r_pair = run(&buckets, &schedule, &pair_env);
+                assert_eq!(comm_end(&r_pair, payer, 0), got, "{}/{:?}", preset.name(), payer);
+            }
+        }
+    }
+}
+
+// ---- 3. The 3-transfer staircase, hand-computed. ----
+
+/// Three links on one NIC: a (μ1, exempt), b (μ2), c (μ4).
+fn staircase_env() -> ClusterEnv {
+    ClusterEnv::paper_testbed().with_links(vec![
+        LinkSpec::new("a", 1.0).with_group(0),
+        LinkSpec::new("b", 2.0).with_group(0),
+        LinkSpec::new("c", 4.0).with_group(0),
+    ])
+}
+
+/// Backward runs buckets 2→1→0, so c's transfer dispatches at 40 ms,
+/// b's at 50 ms, a's at 60 ms: membership walks 1 → 2 → 3 → 2 → 1.
+fn staircase_case() -> (Vec<BucketProfile>, Schedule) {
+    let buckets = vec![
+        bucket(0, Micros(50_000)),  // on a: wire 50 ms
+        bucket(1, Micros(30_000)),  // on b: wire 60 ms
+        bucket(2, Micros(30_000)),  // on c: wire 120 ms
+    ];
+    let schedule = schedule_of(vec![
+        op(2, LinkId(2), 0),
+        op(1, LinkId(1), 0),
+        op(0, LinkId(0), 0),
+    ]);
+    (buckets, schedule)
+}
+
+/// The piecewise re-pricing, µs for µs against a hand-computed timeline
+/// (penalty 0.21 ⇒ factor(2) = 1.21, factor(3) = 2.42; `scale` rounds to
+/// the nearest µs at each membership event):
+///
+/// * 40 ms — c dispatches alone: rem 120 000, rate 1 ⇒ end 160 000.
+/// * 50 ms — b dispatches (k = 2): c banked 10 000 (rem 110 000) and
+///   slows to 1.21 ⇒ end 183 100; b: 60 000 · 1.21 ⇒ end 122 600.
+/// * 60 ms — a dispatches (k = 3, exempt): b and c each banked
+///   ⌊10 000/1.21⌉ = 8 264 ⇒ rems 51 736 / 101 736 at factor 2.42 ⇒
+///   ends 185 201 / 306 201; a ends 110 000 at rate 1.
+/// * 110 000 — a finalizes (k = 2): b and c each banked
+///   ⌊50 000/2.42⌉ = 20 661 ⇒ rems 31 075 / 81 075 at 1.21 ⇒ ends
+///   147 601 / 208 101.
+/// * 147 601 — b finalizes (k = 1): c banked ⌊37 601/1.21⌉ = 31 075 ⇒
+///   rem 50 000 at rate 1 ⇒ end **197 601**.
+#[test]
+fn three_transfer_staircase_is_repriced_piecewise() {
+    let (buckets, schedule) = staircase_case();
+    let env = staircase_env();
+    assert_eq!(env.contention, ContentionModel::Kway);
+    assert!(!env.contended(LinkId(0)));
+    assert!(env.contended(LinkId(1)) && env.contended(LinkId(2)));
+    let r = run(&buckets, &schedule, &env);
+    assert_eq!(comm_end(&r, LinkId(0), 0), Micros(110_000), "exempt a");
+    assert_eq!(comm_end(&r, LinkId(1), 1), Micros(147_601), "payer b");
+    assert_eq!(comm_end(&r, LinkId(2), 2), Micros(197_601), "payer c");
+    assert_eq!(r.iter_ends, vec![Micros(60_000)]);
+    assert_eq!(r.update_times, vec![Micros(197_601)]);
+    assert_eq!(r.total, Micros(197_601));
+    // Busy = actual occupancy including the contention stretch.
+    assert_eq!(r.link_busy[0].1, Micros(50_000));
+    assert_eq!(r.link_busy[1].1, Micros(97_601));
+    assert_eq!(r.link_busy[2].1, Micros(157_601));
+    assert_eq!(r.contention, "kway");
+}
+
+/// The same staircase under the pairwise model prices strictly faster —
+/// three concurrent transfers are exactly the regime the pairwise rule
+/// underprices (the acceptance criterion for replacing it).
+#[test]
+fn staircase_prices_strictly_slower_than_the_pairwise_model() {
+    let (buckets, schedule) = staircase_case();
+    let kway = run(&buckets, &schedule, &staircase_env());
+    let pair = run(
+        &buckets,
+        &schedule,
+        &staircase_env().with_contention_model(ContentionModel::Pairwise),
+    );
+    assert_eq!(pair.contention, "pairwise");
+    // Pairwise hand-compute: b charges 60 000 · 0.21 = 12 600 at its own
+    // dispatch (end 122 600) and is extended 10 500 by a (end 133 100);
+    // c is extended 15 246 by b and 10 500 by a (end 185 746).
+    assert_eq!(comm_end(&pair, LinkId(1), 1), Micros(133_100));
+    assert_eq!(comm_end(&pair, LinkId(2), 2), Micros(185_746));
+    assert_eq!(pair.total, Micros(185_746));
+    assert!(
+        kway.total > pair.total,
+        "3-way contention must price slower under k-way: {:?} vs {:?}",
+        kway.total,
+        pair.total
+    );
+    // The exempt member is identical under both models.
+    assert_eq!(comm_end(&kway, LinkId(0), 0), comm_end(&pair, LinkId(0), 0));
+}
+
+// ---- 4. Finalize-path regression. ----
+
+/// A paying transfer slowed by a late-starting group-mate must speed
+/// back up when the mate finishes early. The pairwise engine charges the
+/// whole projected window at the mate's dispatch and never re-checks at
+/// its finalize; the k-way engine re-prices there — the regression this
+/// PR fixes.
+#[test]
+fn payer_speeds_back_up_when_its_group_mate_finishes_early() {
+    // Single-NIC paper pair: gloo (payer) flies [30 ms, …) with wire
+    // 99 000; nccl (exempt) joins [40 ms, 60 ms) and finishes early.
+    let buckets = vec![bucket(0, Micros(20_000)), bucket(1, Micros(60_000))];
+    let schedule = schedule_of(vec![op(1, LinkId(1), 0), op(0, LinkId(0), 0)]);
+    let kway_env = LinkPreset::SingleNic.env();
+    let pair_env = LinkPreset::SingleNic
+        .env()
+        .with_contention_model(ContentionModel::Pairwise);
+    let r_kway = run(&buckets, &schedule, &kway_env);
+    let r_pair = run(&buckets, &schedule, &pair_env);
+    let uncontended = Micros(30_000 + 99_000);
+    // k-way hand-compute: gloo banks 10 000 before nccl joins
+    // (rem 89 000 at 1.21), then banks ⌊20 000/1.21⌉ = 16 529 over the
+    // shared window; at nccl's finalize (60 ms) the remaining 72 471
+    // runs at rate 1 again ⇒ end 132 471.
+    assert_eq!(comm_end(&r_kway, LinkId(1), 1), Micros(132_471));
+    // Pairwise: one-shot extension of 20 000 · 0.21 = 4 200 at nccl's
+    // dispatch, never revisited ⇒ end 133 200.
+    assert_eq!(comm_end(&r_pair, LinkId(1), 1), Micros(133_200));
+    assert!(Micros(132_471) > uncontended && Micros(132_471) < Micros(133_200));
+    // The exempt mate is untouched either way.
+    assert_eq!(comm_end(&r_kway, LinkId(0), 0), Micros(60_000));
+    assert_eq!(comm_end(&r_pair, LinkId(0), 0), Micros(60_000));
+}
+
+// ---- 5. Golden Table IV fit under the k-way model. ----
+
+/// Promoted from `bench_table4_fig6_links`: the k-way model's k = 2
+/// calibration must keep reproducing the paper's Table IV single-NIC
+/// gloo column (within the α–β fit's 15% band), leave NCCL untouched by
+/// NIC sharing, and keep the multi-link NCCL:gloo ratio inside the
+/// paper's 1.57–1.85 corridor (±5% fit slack).
+#[test]
+fn table4_single_nic_rows_hold_under_the_kway_model() {
+    let multi = ClusterEnv::paper_testbed();
+    let single = ClusterEnv::paper_testbed().with_single_link();
+    assert_eq!(single.contention, ContentionModel::Kway);
+    let nccl = multi.link("nccl").unwrap();
+    let gloo = multi.link("gloo").unwrap();
+    // Paper Table IV, single-link gloo column (ms → µs).
+    let rows: [(u64, f64); 5] = [
+        (4_194_304, 22_000.0),
+        (8_388_608, 50_000.0),
+        (16_777_216, 96_000.0),
+        (33_554_432, 204_000.0),
+        (67_108_864, 534_000.0),
+    ];
+    for (params, want_us) in rows {
+        let got = single.allreduce_us(gloo, params).as_us() as f64;
+        let err = (got - want_us).abs() / want_us;
+        assert!(err < 0.15, "single-NIC gloo {params}: got {got}, want {want_us}");
+        assert_eq!(
+            single.allreduce_us(nccl, params),
+            multi.allreduce_us(nccl, params),
+            "NCCL must be unaffected by NIC sharing @ {params}"
+        );
+        let ratio = multi.allreduce_us(gloo, params).as_us() as f64
+            / multi.allreduce_us(nccl, params).as_us() as f64;
+        assert!(
+            (1.5..=1.9).contains(&ratio),
+            "multi-link gloo/nccl ratio {ratio} @ {params} outside the 1.57–1.85 band"
+        );
+    }
+    // And the plateau degradation itself stays at the calibrated +21%.
+    assert!((CONTENTION_PEAK - 0.21).abs() < 1e-12);
+}
+
+// ---- 6. Properties. ----
+
+/// Throughput caps of the degradation curve, for **both** group
+/// compositions: with the exempt member among the k in-flight transfers,
+/// the paying cohort `(k−1)/factor` never exceeds one uncontended
+/// transfer's bandwidth share and the whole group sits exactly at the
+/// NIC's calibrated capacity `1 + 1/(1+penalty)`; with only payers in
+/// flight, the aggregate `k/factor(k)` still never exceeds that
+/// capacity.
+#[test]
+fn prop_group_throughput_never_exceeds_link_bandwidth() {
+    check("k-way group throughput cap", 200, |g| {
+        let env = ClusterEnv::paper_testbed();
+        let params = g.u64_in(0..=200_000_000);
+        let cap = 1.0 + 1.0 / (1.0 + env.contention_penalty(params));
+        let mut prev = 1.0;
+        for k in 1..=10usize {
+            let f = env.contention_factor(k, params);
+            if f < prev {
+                return Err(format!("factor not monotone at k={k}: {f} < {prev}"));
+            }
+            prev = f;
+            if k < 2 {
+                continue;
+            }
+            // Exempt + (k−1) payers in flight.
+            let payers = (k - 1) as f64 / f;
+            if payers > 1.0 + 1e-12 {
+                return Err(format!("payer cohort outships the link at k={k}: {payers}"));
+            }
+            if 1.0 + payers > cap + 1e-12 {
+                return Err(format!(
+                    "group throughput {} exceeds calibrated capacity {cap} at k={k}",
+                    1.0 + payers
+                ));
+            }
+            // Payers-only in flight (the exempt member idle): each of
+            // the k payers runs at 1/factor(k).
+            let payers_only = k as f64 / f;
+            if payers_only > cap + 1e-12 {
+                return Err(format!(
+                    "payers-only throughput {payers_only} exceeds capacity {cap} at k={k}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Per-transfer completion time is monotone non-decreasing in the
+/// concurrency k, for any wire time and tensor size.
+#[test]
+fn prop_completion_time_monotone_in_k() {
+    check("completion monotone in k", 200, |g| {
+        let env = ClusterEnv::paper_testbed();
+        let wire = Micros(g.u64_in(0..=10_000_000));
+        let params = g.u64_in(0..=200_000_000);
+        let mut prev = Micros::ZERO;
+        for k in 1..=8usize {
+            let t = wire.scale(env.contention_factor(k, params));
+            if t < prev {
+                return Err(format!("completion shrank at k={k}: {t:?} < {prev:?}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+/// Engine-level monotonicity: adding concurrent group-mates never
+/// finishes the observed payer earlier (and strictly later once any
+/// mate exists). Buckets 1..=m carry the mates; all ops launch together
+/// at the backward-window open (delayed gradients).
+#[test]
+fn engine_payer_completion_monotone_in_concurrency() {
+    let env = ClusterEnv::paper_testbed().with_links(vec![
+        LinkSpec::new("f0", 1.0).with_group(0),
+        LinkSpec::new("f1", 1.5).with_group(0),
+        LinkSpec::new("f2", 1.5).with_group(0),
+        LinkSpec::new("x", 2.0).with_group(0),
+    ]);
+    let x = LinkId(3);
+    let buckets = vec![
+        bucket(0, Micros(50_000)),
+        bucket(1, Micros(100_000)),
+        bucket(2, Micros(100_000)),
+        bucket(3, Micros(100_000)),
+    ];
+    let mut prev = Micros::ZERO;
+    for m in 0..=3usize {
+        let mut ops = vec![op(0, x, 1)];
+        for mate in 1..=m {
+            ops.push(op(mate, LinkId(mate - 1), 1));
+        }
+        let r = run(&buckets, &schedule_of(ops), &env);
+        let end = comm_end(&r, x, 0);
+        if m == 0 {
+            // Alone: uncontended.
+            assert_eq!(end, Micros(40_000) + env.wire_time_uncontended(x, Micros(50_000)));
+            prev = end;
+        } else {
+            assert!(end > prev, "m={m}: {end:?} not later than {prev:?}");
+            prev = end;
+        }
+    }
+}
+
+/// Greedy ≤ exact multi-knapsack still holds when capacities derive from
+/// the k-way planning slowdowns (path μ × static contention factor) of
+/// randomly shared registries.
+#[test]
+fn prop_greedy_within_exact_on_kway_planning_capacities() {
+    check("greedy <= exact (k-way planning caps)", 40, |g| {
+        let n_links = g.usize_in(2..=4);
+        let n_groups = g.usize_in(1..=2);
+        let mut links = Vec::with_capacity(n_links);
+        for i in 0..n_links {
+            let mu = if i == 0 { 1.0 } else { 1.0 + g.f64_in(0.0, 6.0) };
+            let group = g.usize_in(0..=n_groups - 1);
+            links.push(LinkSpec::new(&format!("l{i}"), mu).with_group(group));
+        }
+        let env = ClusterEnv::paper_testbed().with_links(links);
+        let compute = Micros(g.u64_in(1_000..=100_000));
+        let caps: Vec<Micros> = env
+            .link_planning_mus()
+            .iter()
+            .map(|&mu| compute.scale(1.0 / mu))
+            .collect();
+        let comms = g.vec_u64(0..=9, 0..=60_000);
+        let its: Vec<Item> = comms
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Item::new(i, Micros(c)))
+            .collect();
+        let (assign, e_total) = multi_knapsack_exact(&its, &caps);
+        let gr = multi_knapsack_greedy(&its, &caps);
+        if gr.total > e_total {
+            return Err(format!("greedy {:?} beats exact {e_total:?}", gr.total));
+        }
+        for (k, sack) in assign.iter().chain(gr.assignments.iter()).enumerate() {
+            let cap = caps[k % caps.len()];
+            let used: Micros = sack.iter().map(|&id| its[id].comm).sum();
+            if used > cap {
+                return Err(format!("sack {k} over k-way planning capacity"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -35,8 +35,8 @@ fn legacy_wire(env: &ClusterEnv, link: LinkId, comm: Micros, params: u64, single
 fn schedulers() -> Vec<Box<dyn Scheduler>> {
     vec![
         Box::new(Wfbp),
-        Box::new(Bytescheduler),
-        Box::new(UsByte),
+        Box::new(Bytescheduler::default()),
+        Box::new(UsByte::default()),
         Box::new(Deft::new(DeftOptions {
             preserver: false,
             ..DeftOptions::default()

@@ -35,8 +35,8 @@ fn gen_buckets(g: &mut Gen) -> Vec<BucketProfile> {
 fn schedulers() -> Vec<(&'static str, Box<dyn Scheduler>)> {
     vec![
         ("wfbp", Box::new(Wfbp)),
-        ("bytescheduler", Box::new(Bytescheduler)),
-        ("us-byte", Box::new(UsByte)),
+        ("bytescheduler", Box::new(Bytescheduler::default())),
+        ("us-byte", Box::new(UsByte::default())),
         (
             "deft",
             Box::new(Deft::new(DeftOptions {

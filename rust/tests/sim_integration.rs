@@ -3,9 +3,12 @@
 
 use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{ClusterEnv, LinkId};
+use deft::links::{ClusterEnv, LinkId, LinkSpec};
 use deft::models::{vgg19_table2_buckets, BucketProfile};
-use deft::sched::{Bytescheduler, Deft, DeftOptions, Scheduler, UsByte, Wfbp};
+use deft::sched::{
+    Bytescheduler, CommOp, Deft, DeftOptions, FwdDependency, IterPlan, Schedule, Scheduler,
+    Stage, UsByte, Wfbp,
+};
 use deft::sim::{simulate, SimOptions, StreamId};
 use deft::util::Micros;
 
@@ -126,6 +129,94 @@ fn simulator_conserves_time() {
     assert_eq!(nccl_busy, comm_per_iter * iters as u64);
 }
 
+/// Time conservation under forced 3-way shared-NIC contention (the k-way
+/// execution model): compute busy is untouched, per-link busy equals the
+/// timeline's span occupancy, the exempt group member moves exactly its
+/// uncontended wire time, and every paying member's occupancy is bounded
+/// by its uncontended wire below and the full k-way factor above.
+#[test]
+fn simulator_conserves_time_under_forced_3way_contention() {
+    // Three links on one NIC (a exempt; b, c pay); backward order makes
+    // the three transfers overlap 3-deep mid-iteration.
+    let env = ClusterEnv::paper_testbed().with_links(vec![
+        LinkSpec::new("a", 1.0).with_group(0),
+        LinkSpec::new("b", 2.0).with_group(0),
+        LinkSpec::new("c", 4.0).with_group(0),
+    ]);
+    let params = 33_554_432u64; // penalty plateau: factor(3) = 2.42
+    let bucket = |id: usize, comm: u64| BucketProfile {
+        id,
+        params,
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm: Micros(comm),
+    };
+    let buckets = vec![bucket(0, 50_000), bucket(1, 30_000), bucket(2, 30_000)];
+    let op = |bucket: usize, link: LinkId| CommOp {
+        bucket,
+        link,
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age: 0,
+        merged: 1,
+        update_offset: 0,
+    };
+    let schedule = Schedule {
+        scheme: "forced-3way".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops: vec![op(2, LinkId(2)), op(1, LinkId(1)), op(0, LinkId(0))],
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+    };
+    schedule.validate().unwrap();
+    let iters = 3usize;
+    let r = simulate(
+        &buckets,
+        &schedule,
+        &env,
+        &SimOptions {
+            iterations: iters,
+            warmup: 1,
+            record_timeline: true,
+        },
+    );
+    assert_eq!(r.contention, "kway");
+    // Compute conservation is unaffected by wire contention.
+    let per_iter: Micros = buckets.iter().map(|b| b.fwd + b.bwd).sum();
+    assert_eq!(r.timeline.busy(StreamId::Compute), per_iter * iters as u64);
+    // Per-link busy equals the recorded span occupancy, sits at exactly
+    // the uncontended wire for the exempt member, and within
+    // [uncontended, uncontended × factor(3)] for the payers.
+    let wires = [Micros(50_000), Micros(60_000), Micros(120_000)];
+    let f3 = env.contention_factor(3, params);
+    for (k, &wire) in wires.iter().enumerate() {
+        let link = LinkId(k);
+        let (id, busy) = r.link_busy[k];
+        assert_eq!(id, link);
+        assert_eq!(busy, r.timeline.busy(StreamId::Link(link)), "link {k} spans");
+        let floor = wire * iters as u64;
+        if k == 0 {
+            assert_eq!(busy, floor, "exempt member must move at its full rate");
+        } else {
+            assert!(busy >= floor, "link {k}: busy {busy:?} below uncontended {floor:?}");
+            assert!(
+                busy <= floor.scale(f3),
+                "link {k}: busy {busy:?} above the k-way ceiling"
+            );
+        }
+    }
+    // Updates gate each iteration (Barrier), so no transfer leaks across
+    // iteration boundaries and the wall clock ends with the last update.
+    assert_eq!(r.update_times.len(), iters);
+    assert_eq!(r.total, *r.update_times.last().unwrap());
+}
+
 /// DDP iteration time bounds for Table II VGG-19: between compute-only
 /// and fully-serial, and visibly better than fully-serial (WFBP overlaps
 /// the backward window).
@@ -153,8 +244,8 @@ fn single_bucket_degenerate_profiles() {
     }];
     for s in [
         Wfbp.schedule(&buckets),
-        Bytescheduler.schedule(&buckets),
-        UsByte.schedule(&buckets),
+        Bytescheduler::default().schedule(&buckets),
+        UsByte::default().schedule(&buckets),
         Deft::new(DeftOptions {
             preserver: false,
             ..DeftOptions::default()

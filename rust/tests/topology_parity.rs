@@ -10,12 +10,15 @@
 //!    identically to the same schedule on `paper-2link` — an idle
 //!    group-mate costs nothing at execution time. The static planner
 //!    estimate stays conservative (that split is deliberate).
-//! 3. When same-group transfers *do* overlap, the engine charges the
-//!    Table IV penalty exactly for the shared window.
+//! 3. When same-group transfers *do* overlap, the **pairwise** execution
+//!    model charges the Table IV penalty exactly for the shared window —
+//!    these are regression pins for the legacy one-shot charge, so they
+//!    select `ContentionModel::Pairwise` explicitly (the default is the
+//!    aggregate k-way model, pinned in `tests/contention_model.rs`).
 
 use deft::bench::{run_pipeline, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
-use deft::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+use deft::links::{ClusterEnv, ContentionModel, LinkId, LinkPreset, Topology};
 use deft::models::{vgg19_table2_buckets, BucketProfile};
 use deft::sched::{CommOp, FwdDependency, IterPlan, Schedule, Scheduler, Stage, Wfbp};
 use deft::sim::{simulate, SimOptions, SimResult};
@@ -154,8 +157,12 @@ fn overlapping_same_group_transfers_pay_for_the_shared_window() {
     // NCCL first: its transfer [30 ms, 80 ms) is in flight when the gloo
     // transfer starts at 40 ms (base wire 82.5 ms) ⇒ 40 ms of overlap.
     let (buckets, schedule) = pair_schedule(LinkId(0), LinkId(1));
-    let multi = LinkPreset::Paper2Link.env();
-    let single = LinkPreset::SingleNic.env();
+    let multi = LinkPreset::Paper2Link
+        .env()
+        .with_contention_model(ContentionModel::Pairwise);
+    let single = LinkPreset::SingleNic
+        .env()
+        .with_contention_model(ContentionModel::Pairwise);
     let r_multi = simulate(&buckets, &schedule, &multi, &PAIR_OPTS);
     let r_single = simulate(&buckets, &schedule, &single, &PAIR_OPTS);
     // Dual NICs: gloo finishes at 40 ms + 82.5 ms.
@@ -177,8 +184,12 @@ fn paying_transfer_in_flight_is_extended_when_group_mate_starts() {
     // transfer is extended by 21% of the shared 50 ms window (10.5 ms),
     // while the exempt NCCL transfer is untouched.
     let (buckets, schedule) = pair_schedule(LinkId(1), LinkId(0));
-    let multi = LinkPreset::Paper2Link.env();
-    let single = LinkPreset::SingleNic.env();
+    let multi = LinkPreset::Paper2Link
+        .env()
+        .with_contention_model(ContentionModel::Pairwise);
+    let single = LinkPreset::SingleNic
+        .env()
+        .with_contention_model(ContentionModel::Pairwise);
     let r_multi = simulate(&buckets, &schedule, &multi, &PAIR_OPTS);
     let r_single = simulate(&buckets, &schedule, &single, &PAIR_OPTS);
     assert_eq!(r_multi.total, Micros(112_500));
