@@ -42,12 +42,12 @@ fn main() {
     println!("{}", t.render());
 
     println!("=== feedback loop in action (VGG-19) ===");
-    let w = workload_by_name("vgg19");
+    let w = workload_by_name("vgg19").expect("workload");
     let env = ClusterEnv::paper_testbed();
     for (label, preserver) in [("preserver OFF", false), ("preserver ON", true)] {
         let scheme = Scheme::Deft;
         let r = if preserver {
-            run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+            run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).expect("pipeline")
         } else {
             // The pipeline always builds DeFT with the preserver on; build
             // the raw scheduler by hand for the OFF row.

@@ -10,7 +10,7 @@ use deft::links::{ClusterEnv, Codec, LinkId};
 use deft::metrics::{gantt_steady, Table};
 
 fn main() {
-    let workload = workload_by_name("vgg19");
+    let workload = workload_by_name("vgg19").expect("workload");
     let env = ClusterEnv::paper_testbed();
     println!(
         "workload = {} ({} params, CR = {:.2} at 16 GPUs / 40 Gbps)\n",
@@ -32,7 +32,8 @@ fn main() {
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
     for scheme in schemes {
-        let r = run_pipeline(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 50);
+        let r = run_pipeline(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 50)
+            .expect("pipeline");
         let t = r.sim.steady_iter_time;
         if scheme == Scheme::PytorchDdp {
             ddp = Some(t);
@@ -65,7 +66,8 @@ fn main() {
     // an fp16 codec to the slow gloo link — half the bytes on the wire,
     // a rounding error far inside the Preserver's ε band.
     let fp16_env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
-    let fp16 = run_pipeline(&workload, Scheme::Deft, &fp16_env, PAPER_PARTITION, PAPER_DDP_MB, 50);
+    let fp16 = run_pipeline(&workload, Scheme::Deft, &fp16_env, PAPER_PARTITION, PAPER_DDP_MB, 50)
+        .expect("pipeline");
     let gloo = &fp16.sim.link_traffic[1];
     println!(
         "With fp16 on gloo: iter {} (raw links {}), gloo ships {:.0} MB of {:.0} MB raw, \

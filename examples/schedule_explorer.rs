@@ -92,7 +92,7 @@ fn parse_contention_arg(name: &str) -> ContentionModel {
 
 fn main() {
     let (name, preset, ranks_per_node, codecs, contention) = parse_args();
-    let workload = workload_by_name(&name);
+    let workload = workload_by_name(&name).unwrap_or_else(|e| panic!("{e:#}"));
     let mut env = preset.env().with_contention_model(contention);
     if ranks_per_node > 1 {
         env = env.with_topology(Topology::hierarchical(ranks_per_node, LinkId(0), LinkId(1)));
@@ -165,7 +165,8 @@ fn main() {
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
     for scheme in schemes {
-        let r = run_pipeline(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        let r = run_pipeline(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+            .expect("pipeline");
         println!(
             "\n--- {} ({} buckets, iter {} | bubbles {:.1}%) ---",
             scheme.name(),

@@ -23,11 +23,12 @@ use deft::util::Micros;
 fn main() {
     let env = ClusterEnv::paper_testbed();
     for wname in ["resnet101", "vgg19", "gpt2"] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         println!("=== DeFT mechanism ablation, {} ===\n", w.name);
         let mut t = Table::new(&["variant", "iter time", "bubble %", "upd/iter", "vs us-byte"]);
 
-        let base = run_pipeline(&w, Scheme::UsByte, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        let base = run_pipeline(&w, Scheme::UsByte, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+            .expect("pipeline");
         let base_t = base.sim.steady_iter_time;
         t.row(&[
             "A: us-byte (no dependency relaxing)".into(),

@@ -1,0 +1,118 @@
+//! DES hot-path perf trajectory runner and CI regression gate.
+//!
+//! Runs the pinned scenarios from `deft::bench::trajectory` through both
+//! engines (scan reference with timeline vs indexed without), prints the
+//! points, optionally writes them as `BENCH_*.json`, and optionally
+//! gates them against a committed trajectory file.
+//!
+//! ```text
+//! cargo bench --bench bench_des_trajectory -- --smoke \
+//!     --check ../BENCH_des_hotpath.json --band 0.25 --out fresh.json
+//! ```
+//!
+//! Flags: `--smoke` (default) | `--full` grid selection; `--reps N`
+//! timed repetitions per engine (default 3); `--out FILE` write fresh
+//! points; `--check FILE` gate against a committed file; `--band F`
+//! allowed fractional regression (default 0.25); `--absolute` also gate
+//! raw events/sec (same-host runs only). Exits non-zero when the gate
+//! fails. See BENCHMARKS.md for the workflow.
+
+use deft::bench::trajectory::{
+    check_against, full_scenarios, parse_points, run, smoke_scenarios, to_json,
+};
+use deft::metrics::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut full = false;
+    let mut reps = 3usize;
+    let mut out: Option<String> = None;
+    let mut check: Option<String> = None;
+    let mut band = 0.25f64;
+    let mut absolute = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--full" => full = true,
+            "--smoke" => full = false,
+            "--absolute" => absolute = true,
+            "--reps" => reps = take(&mut it, a).parse().expect("--reps takes an integer"),
+            "--out" => out = Some(take(&mut it, a)),
+            "--check" => check = Some(take(&mut it, a)),
+            "--band" => band = take(&mut it, a).parse().expect("--band takes a float"),
+            other => {
+                eprintln!(
+                    "unknown flag `{other}` (expected --smoke | --full | --reps N | \
+                     --out FILE | --check FILE | --band F | --absolute)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let scenarios = if full { full_scenarios() } else { smoke_scenarios() };
+    eprintln!(
+        "running {} scenarios ({}), {reps} reps per engine...",
+        scenarios.len(),
+        if full { "full grid" } else { "smoke" }
+    );
+    let points = run(&scenarios, reps).expect("trajectory run failed");
+
+    let mut t = Table::new(&["scenario", "engine", "wall", "events/s", "speedup"]);
+    for p in &points {
+        let speedup = if p.engine == "indexed" {
+            points
+                .iter()
+                .find(|q| q.engine == "scan" && q.scenario == p.scenario)
+                .map(|q| format!("{:.2}x", p.events_per_sec / q.events_per_sec))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        t.row(&[
+            p.scenario.clone(),
+            p.engine.clone(),
+            format!("{:.2} ms", p.wall_s * 1e3),
+            format!("{:.2} M", p.events_per_sec / 1e6),
+            speedup,
+        ]);
+    }
+    println!("=== DES hot-path trajectory ===\n\n{}", t.render());
+
+    if let Some(path) = out {
+        let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown-host".to_string());
+        std::fs::write(&path, to_json("des_hotpath", &host, &points)).expect("write --out file");
+        eprintln!("wrote {} points to {path}", points.len());
+    }
+
+    if let Some(path) = check {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read --check file {path}: {e}"));
+        let committed = parse_points(&text)
+            .unwrap_or_else(|e| panic!("cannot parse --check file {path}: {e}"));
+        let outcome = check_against(&committed, &points, band, absolute);
+        if outcome.compared == 0 {
+            eprintln!("gate: WARNING — no scenarios in common with {path}");
+            std::process::exit(1);
+        }
+        if outcome.passed() {
+            eprintln!(
+                "gate: OK — {} scenarios within {:.0}% of {path}",
+                outcome.compared,
+                band * 100.0
+            );
+        } else {
+            eprintln!("gate: FAILED against {path}:");
+            for f in &outcome.failures {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+fn take<'a>(it: &mut impl Iterator<Item = &'a String>, flag: &str) -> String {
+    it.next()
+        .unwrap_or_else(|| panic!("{flag} needs a value"))
+        .clone()
+}

@@ -17,7 +17,7 @@ use deft::sim::{training_curve, ConvergenceModel};
 fn main() {
     let env = ClusterEnv::paper_testbed();
     for wname in ["resnet101", "vgg19", "gpt2"] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         let model = ConvergenceModel::for_workload(wname);
         // Realistic training lengths: ImageNet 90 epochs at global batch
         // 4096 is ~28k iterations; VGG at 1024 ~25k; GPT-2 ~15k.
@@ -42,7 +42,8 @@ fn main() {
         // final metric).
         let mut rows = Vec::new();
         for scheme in schemes {
-            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+                .expect("pipeline");
             let cycle_time = r.sim.steady_iter_time * r.schedule.cycle.len() as u64;
             let curve = training_curve(
                 &model,
@@ -96,9 +97,11 @@ fn main() {
         println!("{}", t.render());
     }
     // §VI negative result appendix row.
-    let w = workload_by_name("llama2");
-    let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 20);
-    let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 20);
+    let w = workload_by_name("llama2").expect("workload");
+    let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 20)
+        .expect("pipeline");
+    let deft =
+        run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 20).expect("pipeline");
     println!(
         "=== §VI check: llama2-like (CR = {:.3}) — ddp {} vs deft {} ({:.2}x: no gain) ===",
         w.coverage_rate_ref(),

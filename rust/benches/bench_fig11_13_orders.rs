@@ -20,12 +20,13 @@ fn main() {
     println!("=== Table III (feature matrix) ===\n{}", feature_matrix());
     let env = ClusterEnv::paper_testbed();
     for (fig, wname) in [("Fig. 11", "resnet101"), ("Fig. 12", "vgg19"), ("Fig. 13", "gpt2")] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         println!("\n=== {fig}: bucket scheduling orders, {} ===", w.name);
         let mut schemes = Scheme::ALL.to_vec();
         schemes.push(Scheme::DeftNoMultilink);
         for scheme in schemes {
-            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+                .expect("pipeline");
             println!(
                 "\n--- {} | buckets {} | iter {} | bubbles {:.1}% | upd/iter {:.2} ---",
                 scheme.name(),

@@ -12,7 +12,7 @@ use deft::metrics::Table;
 fn main() {
     let gpu_counts = [2usize, 4, 8, 16];
     for wname in ["resnet101", "vgg19", "gpt2"] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         // 1-GPU reference: no communication; iteration = compute.
         let single_iter = w.total_compute();
         println!("=== Fig. 14: speedup vs #GPUs, {} (linear = N) ===\n", w.name);
@@ -22,7 +22,8 @@ fn main() {
             let mut speedups = Vec::new();
             for &n in &gpu_counts {
                 let env = ClusterEnv::paper_testbed().with_workers(n);
-                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30);
+                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30)
+                    .expect("pipeline");
                 // Relative speedup = N-GPU throughput / 1-GPU throughput
                 //                  = N * t_single / t_N.
                 let s = n as f64 * single_iter.ratio(r.sim.steady_iter_time).min(1.0);

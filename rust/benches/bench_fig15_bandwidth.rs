@@ -14,7 +14,7 @@ use deft::metrics::Table;
 fn main() {
     let bandwidths = [10.0f64, 20.0, 30.0, 40.0];
     for wname in ["resnet101", "vgg19", "gpt2"] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         println!(
             "=== Fig. 15: throughput (samples/s) vs bandwidth, {} ===\n",
             w.name
@@ -25,7 +25,8 @@ fn main() {
             let mut tp = Vec::new();
             for &bw in &bandwidths {
                 let env = ClusterEnv::paper_testbed().with_bandwidth(bw);
-                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30);
+                let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 30)
+                    .expect("pipeline");
                 tp.push(r.sim.throughput(w.batch_size, env.workers));
             }
             rows.push((scheme.name().into(), tp));

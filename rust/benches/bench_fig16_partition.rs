@@ -13,7 +13,7 @@ use deft::links::ClusterEnv;
 use deft::metrics::{gantt_steady, Table};
 
 fn main() {
-    let w = workload_by_name("vgg19");
+    let w = workload_by_name("vgg19").expect("workload");
     let env = ClusterEnv::paper_testbed();
     let settings: [(u64, f64); 5] = [
         (3_000_000, 10.0),
@@ -36,7 +36,7 @@ fn main() {
         ]);
         let mut ddp_time = None;
         for scheme in Scheme::ALL {
-            let r = run_pipeline(&w, scheme, &env, psize, ddp_mb, 30);
+            let r = run_pipeline(&w, scheme, &env, psize, ddp_mb, 30).expect("pipeline");
             if scheme == Scheme::PytorchDdp {
                 ddp_time = Some(r.sim.steady_iter_time);
             }
@@ -54,7 +54,7 @@ fn main() {
         println!("{}", t.render());
     }
     // One detailed schedule rendering at 8e6 (the paper's Fig. 16(c)).
-    let r = run_pipeline(&w, Scheme::Deft, &env, 8_000_000, 30.0, 30);
+    let r = run_pipeline(&w, Scheme::Deft, &env, 8_000_000, 30.0, 30).expect("pipeline");
     println!("--- DeFT schedule at partition 8e6 (cf. Fig. 16c) ---");
     println!("{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 112));
 }

@@ -5,7 +5,7 @@
 //! These are the §Perf numbers recorded in EXPERIMENTS.md. The PJRT rows
 //! self-skip when artifacts are missing.
 
-use deft::bench::{run_pipeline, time_it, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::bench::{run_pipeline_opts, time_it, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use deft::config::Scheme;
 use deft::links::ClusterEnv;
 use deft::metrics::Table;
@@ -15,27 +15,38 @@ fn main() {
     let env = ClusterEnv::paper_testbed();
     let mut t = Table::new(&["benchmark", "median", "derived"]);
 
-    // --- DES throughput ---
-    let w = workload_by_name("gpt2");
+    // --- DES throughput (metric-only path: no span recording) ---
+    let w = workload_by_name("gpt2").expect("gpt2 workload");
     for (label, iters) in [("sim 100 iters (gpt2/deft)", 100usize), ("sim 400 iters", 400)] {
         let (med, _) = time_it(1, 5, || {
-            std::hint::black_box(run_pipeline(
-                &w,
-                Scheme::Deft,
-                &env,
-                PAPER_PARTITION,
-                PAPER_DDP_MB,
-                iters,
-            ));
+            std::hint::black_box(
+                run_pipeline_opts(
+                    &w,
+                    Scheme::Deft,
+                    &env,
+                    PAPER_PARTITION,
+                    PAPER_DDP_MB,
+                    iters,
+                    false,
+                )
+                .expect("pipeline"),
+            );
         });
-        // Rough event count: per iteration 2 compute tasks per bucket +
-        // ~1.2 ops; use spans as proxy.
-        let r = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, iters);
-        let events = r.sim.timeline.spans.len();
+        let r = run_pipeline_opts(
+            &w,
+            Scheme::Deft,
+            &env,
+            PAPER_PARTITION,
+            PAPER_DDP_MB,
+            iters,
+            false,
+        )
+        .expect("pipeline");
+        let events = r.sim.events_processed;
         t.row(&[
             label.into(),
             format!("{:.2} ms", med * 1e3),
-            format!("{:.2} M spans/s", events as f64 / med / 1e6),
+            format!("{:.2} M events/s", events as f64 / med / 1e6),
         ]);
     }
 

@@ -29,7 +29,7 @@ fn main() {
 
     // Full DeFT schedule solve (queues + knapsacks + cycle detection).
     for wname in ["resnet101", "vgg19", "gpt2"] {
-        let w = workload_by_name(wname);
+        let w = workload_by_name(wname).expect("workload");
         let buckets = partition(
             &w,
             Strategy::DeftConstrained {

@@ -25,7 +25,7 @@ fn main() {
         ("llama2", "(section VI: CR < 0.1)"),
     ];
     for (name, paper_row) in paper {
-        let w = workload_by_name(name);
+        let w = workload_by_name(name).expect("workload");
         t.row(&[
             w.name.clone(),
             format!("{:.1}ms", w.total_fwd().as_ms_f64()),

@@ -3,6 +3,8 @@
 //! helpers that assemble the standard experiment pipeline
 //! (workload → partition → schedule → simulate).
 
+pub mod trajectory;
+
 use std::time::Instant;
 
 use crate::config::Scheme;
@@ -11,6 +13,7 @@ use crate::models::{self, BucketProfile, Workload};
 use crate::partition::{partition, Strategy};
 use crate::sched::{Bytescheduler, Deft, DeftOptions, Schedule, Scheduler, UsByte, Wfbp};
 use crate::sim::{simulate, SimOptions, SimResult};
+use crate::util::error::{Context, Result};
 use crate::util::stats;
 
 /// Time `f` with `warmup` unmeasured and `reps` measured runs; returns
@@ -28,16 +31,19 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
     (stats::median(&samples), stats::stddev(&samples))
 }
 
-/// Resolve a workload by name.
-pub fn workload_by_name(name: &str) -> Workload {
-    match name {
+/// Resolve a workload by name. Unknown names are a typed error so
+/// sweep-style callers can skip bad combos instead of aborting.
+pub fn workload_by_name(name: &str) -> Result<Workload> {
+    Ok(match name {
         "resnet101" => models::resnet101(),
         "vgg19" => models::vgg19(),
         "gpt2" => models::gpt2(),
         "llama2" | "llama2_7b_like" => models::llama2_7b_like(),
         "small" => models::small_transformer(4, 256, 2048, 128),
-        other => panic!("unknown workload `{other}`"),
-    }
+        other => crate::bail!(
+            "unknown workload `{other}` (expected resnet101, vgg19, gpt2, llama2, or small)"
+        ),
+    })
 }
 
 /// Build the scheduler for a scheme; DeFT's knapsack set follows the
@@ -77,7 +83,10 @@ pub struct PipelineResult {
     pub sim: SimResult,
 }
 
-/// Run workload × scheme × env through partition → schedule → simulate.
+/// Run workload × scheme × env through partition → schedule → simulate,
+/// with the span timeline recorded (most benches render Gantt rows or
+/// read spans). Equivalent to [`run_pipeline_opts`] with
+/// `record_timeline = true`.
 pub fn run_pipeline(
     workload: &Workload,
     scheme: Scheme,
@@ -85,18 +94,33 @@ pub fn run_pipeline(
     partition_size: u64,
     ddp_bucket_mb: f64,
     iterations: usize,
-) -> PipelineResult {
-    let strategy = match scheme {
-        Scheme::PytorchDdp => Strategy::DdpFixed {
-            bucket_size_mb: ddp_bucket_mb,
-        },
-        Scheme::Bytescheduler => Strategy::Uniform { partition_size },
-        Scheme::UsByte => Strategy::UsByte { partition_size },
-        Scheme::Deft | Scheme::DeftNoMultilink => Strategy::DeftConstrained { partition_size },
-    };
-    // Single-link ablation still partitions with the DeFT constraint.
-    let buckets = partition(workload, strategy, env)
-        .unwrap_or_else(|e| panic!("partitioning {} failed: {e}", workload.name));
+) -> Result<PipelineResult> {
+    run_pipeline_opts(
+        workload,
+        scheme,
+        env,
+        partition_size,
+        ddp_bucket_mb,
+        iterations,
+        true,
+    )
+}
+
+/// [`run_pipeline`] with span recording under caller control: throughput
+/// benches pass `record_timeline = false` so they stop paying span
+/// allocation costs they never measure. Partition failures surface as
+/// typed errors (sweep callers skip the combo; tests `.expect`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline_opts(
+    workload: &Workload,
+    scheme: Scheme,
+    env: &ClusterEnv,
+    partition_size: u64,
+    ddp_bucket_mb: f64,
+    iterations: usize,
+    record_timeline: bool,
+) -> Result<PipelineResult> {
+    let buckets = partition_for(workload, scheme, env, partition_size, ddp_bucket_mb)?;
     let scheduler = scheduler_for(scheme, true, env);
     let schedule = scheduler.schedule(&buckets);
     let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
@@ -108,14 +132,36 @@ pub fn run_pipeline(
         &SimOptions {
             iterations,
             warmup,
-            record_timeline: true,
+            record_timeline,
         },
     );
-    PipelineResult {
+    Ok(PipelineResult {
         buckets,
         schedule,
         sim,
-    }
+    })
+}
+
+/// Partition `workload` with the scheme's canonical strategy (DDP fixed
+/// buckets; uniform / us-byte / DeFT-constrained partitions). The
+/// single-link DeFT ablation still partitions with the DeFT constraint.
+pub fn partition_for(
+    workload: &Workload,
+    scheme: Scheme,
+    env: &ClusterEnv,
+    partition_size: u64,
+    ddp_bucket_mb: f64,
+) -> Result<Vec<BucketProfile>> {
+    let strategy = match scheme {
+        Scheme::PytorchDdp => Strategy::DdpFixed {
+            bucket_size_mb: ddp_bucket_mb,
+        },
+        Scheme::Bytescheduler => Strategy::Uniform { partition_size },
+        Scheme::UsByte => Strategy::UsByte { partition_size },
+        Scheme::Deft | Scheme::DeftNoMultilink => Strategy::DeftConstrained { partition_size },
+    };
+    partition(workload, strategy, env)
+        .with_context(|| format!("partitioning {} failed", workload.name))
 }
 
 /// Convenience: paper-default partition sizes.
@@ -128,22 +174,51 @@ mod tests {
 
     #[test]
     fn pipeline_runs_all_schemes_on_gpt2() {
-        let w = workload_by_name("gpt2");
+        let w = workload_by_name("gpt2").unwrap();
         let env = ClusterEnv::paper_testbed();
         for scheme in Scheme::ALL {
-            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+            let r = run_pipeline(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
             assert!(r.sim.steady_iter_time.as_us() > 0, "{scheme:?}");
             assert!(!r.buckets.is_empty());
         }
     }
 
     #[test]
+    fn unknown_workload_is_a_typed_error() {
+        let e = workload_by_name("no-such-model").unwrap_err();
+        assert!(e.to_string().contains("no-such-model"), "{e}");
+    }
+
+    #[test]
+    fn no_timeline_pipeline_matches_metrics_and_skips_spans() {
+        let w = workload_by_name("small").unwrap();
+        let env = ClusterEnv::paper_testbed();
+        let with = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 24).unwrap();
+        let without = run_pipeline_opts(
+            &w,
+            Scheme::Deft,
+            &env,
+            PAPER_PARTITION,
+            PAPER_DDP_MB,
+            24,
+            false,
+        )
+        .unwrap();
+        assert!(without.sim.timeline.spans.is_empty());
+        assert!(!with.sim.timeline.spans.is_empty());
+        assert_eq!(with.sim.steady_iter_time, without.sim.steady_iter_time);
+        assert_eq!(with.sim.events_processed, without.sim.events_processed);
+        assert_eq!(with.sim.iter_ends, without.sim.iter_ends);
+    }
+
+    #[test]
     fn deft_beats_ddp_on_vgg19() {
         // The paper's headline: DeFT speedup on the CR≈2 workload.
-        let w = workload_by_name("vgg19");
+        let w = workload_by_name("vgg19").unwrap();
         let env = ClusterEnv::paper_testbed();
-        let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
-        let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+        let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40)
+            .unwrap();
+        let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
         // Compare per-sample time: DeFT updates less often but each
         // iteration still consumes one batch per worker, so iteration
         // time is the right unit.

@@ -1,0 +1,743 @@
+//! The DES perf trajectory: pinned scenarios, the `BENCH_des_hotpath.json`
+//! point format, and the CI regression gate.
+//!
+//! Every point times one engine on one pinned scenario and reports
+//! events/sec from [`crate::sim::SimResult::events_processed`]. Two
+//! engines are recorded per scenario:
+//!
+//! * `scan` — the golden reference loop ([`crate::sim::simulate_scan`])
+//!   with the span timeline on: the exact configuration every bench paid
+//!   before the indexed engine landed (the "before" point);
+//! * `indexed` — the event-queue engine ([`crate::sim::simulate`]) with
+//!   the timeline off: the metric-only path throughput benches use now
+//!   (the "after" point).
+//!
+//! Absolute events/sec is host-specific, so the default CI gate compares
+//! the **indexed/scan speedup ratio** per scenario — a hardware-
+//! independent measure of the hot path itself — against the committed
+//! file within a band, failing only on regression below it. Absolute
+//! throughput gating is available behind a flag for same-host
+//! comparisons. See `BENCHMARKS.md` for the schema and workflow.
+
+use std::hint::black_box;
+
+use super::{partition_for, scheduler_for, time_it, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use crate::config::Scheme;
+use crate::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+use crate::sim::{simulate, simulate_scan, SimOptions};
+use crate::util::error::Result;
+
+/// One pinned benchmark scenario. Scenarios are identified by `name` in
+/// the JSON file; the gate matches committed and fresh points on it, so
+/// the definition behind a name must never change silently — add a new
+/// scenario instead.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub workload: &'static str,
+    pub preset: LinkPreset,
+    /// `Some(rpn)` = hierarchical topology with `rpn` ranks per node
+    /// (intra = link 0, inter = link 1); `None` = flat.
+    pub ranks_per_node: Option<usize>,
+    pub workers: usize,
+    pub scheme: Scheme,
+    /// Simulated training iterations (floor; the pipeline may raise it
+    /// to cover scheduler warm-up).
+    pub iterations: usize,
+}
+
+impl Scenario {
+    fn new(
+        workload: &'static str,
+        preset: LinkPreset,
+        ranks_per_node: Option<usize>,
+        workers: usize,
+        scheme: Scheme,
+    ) -> Scenario {
+        let topo = match ranks_per_node {
+            Some(rpn) => format!("hier{rpn}"),
+            None => "flat".to_string(),
+        };
+        Scenario {
+            name: format!(
+                "{workload}-{}-{topo}-w{workers}-{}",
+                preset.name(),
+                scheme.name()
+            ),
+            workload,
+            preset,
+            ranks_per_node,
+            workers,
+            scheme,
+            iterations: 120,
+        }
+    }
+
+    /// Topology label used in the JSON point (`flat` / `hier<rpn>`).
+    pub fn topology_label(&self) -> String {
+        match self.ranks_per_node {
+            Some(rpn) => format!("hier{rpn}"),
+            None => "flat".to_string(),
+        }
+    }
+
+    /// Build the cluster environment this scenario pins.
+    pub fn env(&self) -> ClusterEnv {
+        let mut env = self.preset.env().with_workers(self.workers);
+        if let Some(rpn) = self.ranks_per_node {
+            env = env.with_topology(Topology::hierarchical(rpn, LinkId(0), LinkId(1)));
+        }
+        env
+    }
+}
+
+/// The four pinned cluster shapes of the full grid: the paper testbed
+/// and the 3-link modern preset, each flat at 16 ranks and hierarchical
+/// (8 ranks/node) at 10240 ranks.
+fn grid_envs() -> [(LinkPreset, Option<usize>, usize); 4] {
+    [
+        (LinkPreset::Paper2Link, None, 16),
+        (LinkPreset::Paper2Link, Some(8), 10_240),
+        (LinkPreset::NvlinkIbTcp, None, 16),
+        (LinkPreset::NvlinkIbTcp, Some(8), 10_240),
+    ]
+}
+
+/// Full pinned grid: gpt2/vgg19/llama2 × the four cluster shapes × all
+/// four schemes (48 scenarios, 96 points).
+pub fn full_scenarios() -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for workload in ["gpt2", "vgg19", "llama2"] {
+        for (preset, rpn, workers) in grid_envs() {
+            for scheme in Scheme::ALL {
+                v.push(Scenario::new(workload, preset, rpn, workers, scheme));
+            }
+        }
+    }
+    v
+}
+
+/// Per-PR CI smoke subset (must stay a subset of [`full_scenarios`] so
+/// the committed full file always carries the rows the gate matches):
+/// the DDP barrier path on the flat paper testbed, and the 10k-rank
+/// hierarchical headline scenario.
+pub fn smoke_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp),
+        Scenario::new(
+            "gpt2",
+            LinkPreset::NvlinkIbTcp,
+            Some(8),
+            10_240,
+            Scheme::PytorchDdp,
+        ),
+    ]
+}
+
+/// One recorded measurement: engine × scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point {
+    pub scenario: String,
+    /// `"scan"` or `"indexed"`.
+    pub engine: String,
+    pub workload: String,
+    pub preset: String,
+    pub topology: String,
+    pub workers: u64,
+    pub scheme: String,
+    pub contention: String,
+    pub iterations: u64,
+    pub record_timeline: bool,
+    /// Median wall time of one simulation run, seconds.
+    pub wall_s: f64,
+    /// Discrete events executed per run ([`crate::sim::SimResult::events_processed`]).
+    pub events: u64,
+    pub events_per_sec: f64,
+    pub peak_in_flight: u64,
+    /// Documented greedy placement bound for the scenario's scheduler:
+    /// buckets × links for the multi-knapsack schemes, buckets for the
+    /// single-queue baselines.
+    pub solver_iterations: u64,
+}
+
+/// Run one scenario: golden-equivalence check, then time both engines.
+/// `reps` timed repetitions (one warm-up) per engine.
+pub fn run_scenario(s: &Scenario, reps: usize) -> Result<Vec<Point>> {
+    let w = workload_by_name(s.workload)?;
+    let env = s.env();
+    let buckets = partition_for(&w, s.scheme, &env, PAPER_PARTITION, PAPER_DDP_MB)?;
+    let scheduler = scheduler_for(s.scheme, true, &env);
+    let schedule = scheduler.schedule(&buckets);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let iterations = s.iterations.max(warmup * 3 + 4);
+    // "Before" = the scan engine in the configuration every bench paid
+    // pre-indexed-engine (timeline on); "after" = the indexed engine on
+    // the metric-only path (timeline off).
+    let scan_opts = SimOptions {
+        iterations,
+        warmup,
+        record_timeline: true,
+    };
+    let indexed_opts = SimOptions {
+        iterations,
+        warmup,
+        record_timeline: false,
+    };
+
+    // Insurance on every trajectory run: the engines must agree
+    // bit-for-bit before their timings mean anything.
+    let reference = simulate_scan(&buckets, &schedule, &env, &indexed_opts);
+    let indexed = simulate(&buckets, &schedule, &env, &indexed_opts);
+    assert_eq!(
+        reference, indexed,
+        "indexed engine diverged from the scan reference on `{}`",
+        s.name
+    );
+
+    let (scan_s, _) = time_it(1, reps, || {
+        black_box(simulate_scan(&buckets, &schedule, &env, &scan_opts));
+    });
+    let (indexed_s, _) = time_it(1, reps, || {
+        black_box(simulate(&buckets, &schedule, &env, &indexed_opts));
+    });
+
+    let solver_iterations = match s.scheme {
+        Scheme::Deft | Scheme::DeftNoMultilink => buckets.len() * env.n_links(),
+        _ => buckets.len(),
+    } as u64;
+    let mk = |engine: &str, wall_s: f64, record_timeline: bool| Point {
+        scenario: s.name.clone(),
+        engine: engine.to_string(),
+        workload: s.workload.to_string(),
+        preset: s.preset.name().to_string(),
+        topology: s.topology_label(),
+        workers: s.workers as u64,
+        scheme: s.scheme.name().to_string(),
+        contention: reference.contention.clone(),
+        iterations: iterations as u64,
+        record_timeline,
+        wall_s,
+        events: reference.events_processed,
+        events_per_sec: reference.events_processed as f64 / wall_s.max(1e-12),
+        peak_in_flight: reference.peak_in_flight as u64,
+        solver_iterations,
+    };
+    Ok(vec![
+        mk("scan", scan_s, true),
+        mk("indexed", indexed_s, false),
+    ])
+}
+
+/// Run a scenario list, collecting both engines' points per scenario.
+pub fn run(scenarios: &[Scenario], reps: usize) -> Result<Vec<Point>> {
+    let mut points = Vec::with_capacity(scenarios.len() * 2);
+    for s in scenarios {
+        points.extend(run_scenario(s, reps)?);
+    }
+    Ok(points)
+}
+
+// ---- BENCH_*.json writing (no serde in the offline build). ----
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize points into the committed `BENCH_des_hotpath.json` format
+/// (schema documented in `BENCHMARKS.md`).
+pub fn to_json(bench: &str, host: &str, points: &[Point]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench)));
+    out.push_str("  \"schema_version\": 1,\n");
+    out.push_str(&format!("  \"host\": \"{}\",\n", esc(host)));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"scenario\": \"{}\", ", esc(&p.scenario)));
+        out.push_str(&format!("\"engine\": \"{}\", ", esc(&p.engine)));
+        out.push_str(&format!("\"workload\": \"{}\", ", esc(&p.workload)));
+        out.push_str(&format!("\"preset\": \"{}\", ", esc(&p.preset)));
+        out.push_str(&format!("\"topology\": \"{}\", ", esc(&p.topology)));
+        out.push_str(&format!("\"workers\": {}, ", p.workers));
+        out.push_str(&format!("\"scheme\": \"{}\", ", esc(&p.scheme)));
+        out.push_str(&format!("\"contention\": \"{}\", ", esc(&p.contention)));
+        out.push_str(&format!("\"iterations\": {}, ", p.iterations));
+        out.push_str(&format!("\"record_timeline\": {}, ", p.record_timeline));
+        out.push_str(&format!("\"wall_s\": {:.6}, ", p.wall_s));
+        out.push_str(&format!("\"events\": {}, ", p.events));
+        out.push_str(&format!("\"events_per_sec\": {:.1}, ", p.events_per_sec));
+        out.push_str(&format!("\"peak_in_flight\": {}, ", p.peak_in_flight));
+        out.push_str(&format!("\"solver_iterations\": {}", p.solver_iterations));
+        out.push_str(if i + 1 < points.len() { "},\n" } else { "}\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+// ---- Minimal JSON reader (enough for the schema above). ----
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| crate::err!("unexpected end of JSON at byte {}", self.pos))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != c {
+            crate::bail!(
+                "expected `{}` at byte {}, found `{}`",
+                c as char,
+                self.pos,
+                got as char
+            );
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            crate::bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|e| crate::err!("non-utf8 number: {e}"))?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| crate::err!("bad number `{s}` at byte {start}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                crate::bail!("unterminated string at byte {}", self.pos);
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.bytes.get(self.pos) else {
+                        crate::bail!("dangling escape at byte {}", self.pos);
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| crate::err!("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| crate::err!("bad \\u escape `{hex}`: {e}"))?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => crate::bail!("unknown escape `\\{}`", other as char),
+                    }
+                }
+                b => {
+                    // Re-join multi-byte UTF-8 sequences.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    let end = (start + len).min(self.bytes.len());
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|e| crate::err!("non-utf8 string: {e}"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => crate::bail!("expected `,` or `]` at byte {}, found `{}`", self.pos, c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => crate::bail!("expected `,` or `}}` at byte {}, found `{}`", self.pos, c as char),
+            }
+        }
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        crate::bail!("trailing data after JSON document at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+/// Parse a `BENCH_*.json` document back into points.
+pub fn parse_points(text: &str) -> Result<Vec<Point>> {
+    let doc = parse_json(text)?;
+    let points = doc
+        .get("points")
+        .ok_or_else(|| crate::err!("missing `points` array"))?;
+    let Json::Arr(items) = points else {
+        crate::bail!("`points` is not an array");
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let f = |key: &str| -> Result<f64> {
+            item.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::err!("point {i}: missing numeric `{key}`"))
+        };
+        let s = |key: &str| -> Result<String> {
+            item.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| crate::err!("point {i}: missing string `{key}`"))
+        };
+        out.push(Point {
+            scenario: s("scenario")?,
+            engine: s("engine")?,
+            workload: s("workload")?,
+            preset: s("preset")?,
+            topology: s("topology")?,
+            workers: f("workers")? as u64,
+            scheme: s("scheme")?,
+            contention: s("contention")?,
+            iterations: f("iterations")? as u64,
+            record_timeline: item
+                .get("record_timeline")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| crate::err!("point {i}: missing bool `record_timeline`"))?,
+            wall_s: f("wall_s")?,
+            events: f("events")? as u64,
+            events_per_sec: f("events_per_sec")?,
+            peak_in_flight: f("peak_in_flight")? as u64,
+            solver_iterations: f("solver_iterations")? as u64,
+        });
+    }
+    Ok(out)
+}
+
+// ---- The regression gate. ----
+
+/// Indexed/scan events-per-sec ratio per scenario (both engines needed).
+fn speedups(points: &[Point]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for p in points.iter().filter(|p| p.engine == "indexed") {
+        let Some(scan) = points
+            .iter()
+            .find(|q| q.engine == "scan" && q.scenario == p.scenario)
+        else {
+            continue;
+        };
+        if scan.events_per_sec > 0.0 {
+            out.push((p.scenario.clone(), p.events_per_sec / scan.events_per_sec));
+        }
+    }
+    out
+}
+
+/// Gate outcome: scenarios compared and human-readable failures.
+#[derive(Clone, Debug, Default)]
+pub struct GateOutcome {
+    pub compared: usize,
+    pub failures: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare fresh points against the committed trajectory within `band`
+/// (e.g. 0.25 = ±25%). Default mode gates the hardware-independent
+/// indexed/scan speedup ratio and fails **only on regression** below
+/// `committed × (1 − band)` — improvements always pass, so the committed
+/// file ratchets forward, never blocks progress. With `absolute`, fresh
+/// indexed events/sec must additionally stay above
+/// `committed × (1 − band)` (same-host comparisons only).
+pub fn check_against(
+    committed: &[Point],
+    fresh: &[Point],
+    band: f64,
+    absolute: bool,
+) -> GateOutcome {
+    let mut outcome = GateOutcome::default();
+    let committed_ratio = speedups(committed);
+    for (scenario, fresh_ratio) in speedups(fresh) {
+        let Some((_, want)) = committed_ratio.iter().find(|(s, _)| *s == scenario) else {
+            continue; // new scenario: nothing committed to regress from
+        };
+        outcome.compared += 1;
+        let floor = want * (1.0 - band);
+        if fresh_ratio < floor {
+            outcome.failures.push(format!(
+                "{scenario}: indexed/scan speedup {fresh_ratio:.2}x regressed below \
+                 {floor:.2}x (committed {want:.2}x, band {:.0}%)",
+                band * 100.0
+            ));
+        }
+    }
+    if absolute {
+        for p in fresh.iter().filter(|p| p.engine == "indexed") {
+            let Some(c) = committed
+                .iter()
+                .find(|q| q.engine == "indexed" && q.scenario == p.scenario)
+            else {
+                continue;
+            };
+            let floor = c.events_per_sec * (1.0 - band);
+            if p.events_per_sec < floor {
+                outcome.failures.push(format!(
+                    "{}: indexed {:.0} events/s below absolute floor {:.0} \
+                     (committed {:.0}, band {:.0}%)",
+                    p.scenario,
+                    p.events_per_sec,
+                    floor,
+                    c.events_per_sec,
+                    band * 100.0
+                ));
+            }
+        }
+    }
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(scenario: &str, engine: &str, eps: f64) -> Point {
+        Point {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            workload: "gpt2".to_string(),
+            preset: "paper-2link".to_string(),
+            topology: "flat".to_string(),
+            workers: 16,
+            scheme: "pytorch-ddp".to_string(),
+            contention: "kway".to_string(),
+            iterations: 120,
+            record_timeline: engine == "scan",
+            wall_s: 0.01,
+            events: 10_000,
+            events_per_sec: eps,
+            peak_in_flight: 2,
+            solver_iterations: 19,
+        }
+    }
+
+    #[test]
+    fn smoke_is_subset_of_full() {
+        let full: Vec<String> = full_scenarios().into_iter().map(|s| s.name).collect();
+        for s in smoke_scenarios() {
+            assert!(full.contains(&s.name), "smoke scenario `{}` not in full grid", s.name);
+        }
+    }
+
+    #[test]
+    fn scenario_names_are_unique() {
+        let mut names: Vec<String> = full_scenarios().into_iter().map(|s| s.name).collect();
+        let before = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let pts = vec![point("a", "scan", 1.0e6), point("a", "indexed", 2.5e6)];
+        let text = to_json("des_hotpath", "test-host", &pts);
+        let back = parse_points(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].scenario, "a");
+        assert_eq!(back[1].engine, "indexed");
+        assert!((back[1].events_per_sec - 2.5e6).abs() < 1.0);
+        assert_eq!(back[0].events, 10_000);
+        assert!(back[0].record_timeline && !back[1].record_timeline);
+    }
+
+    #[test]
+    fn gate_fails_on_ratio_regression_only() {
+        let committed = vec![point("a", "scan", 1.0e6), point("a", "indexed", 2.0e6)];
+        // Fresh ratio 1.2x vs committed 2.0x: outside the 25% band.
+        let slow = vec![point("a", "scan", 1.0e6), point("a", "indexed", 1.2e6)];
+        let out = check_against(&committed, &slow, 0.25, false);
+        assert_eq!(out.compared, 1);
+        assert!(!out.passed(), "{:?}", out.failures);
+        // Fresh ratio 3.0x (improvement) passes.
+        let fast = vec![point("a", "scan", 1.0e6), point("a", "indexed", 3.0e6)];
+        assert!(check_against(&committed, &fast, 0.25, false).passed());
+        // Within-band wobble (1.6x vs 2.0x at 25%) passes.
+        let wobble = vec![point("a", "scan", 1.0e6), point("a", "indexed", 1.6e6)];
+        assert!(check_against(&committed, &wobble, 0.25, false).passed());
+    }
+
+    #[test]
+    fn gate_absolute_mode_checks_indexed_throughput() {
+        let committed = vec![point("a", "scan", 1.0e6), point("a", "indexed", 2.0e6)];
+        // Ratio preserved (2x) but everything absolutely slower by 2.5x.
+        let slow_host = vec![point("a", "scan", 0.4e6), point("a", "indexed", 0.8e6)];
+        assert!(check_against(&committed, &slow_host, 0.25, false).passed());
+        assert!(!check_against(&committed, &slow_host, 0.25, true).passed());
+    }
+
+    #[test]
+    fn unknown_committed_scenarios_are_ignored() {
+        let committed = vec![point("other", "scan", 1.0e6), point("other", "indexed", 2.0e6)];
+        let fresh = vec![point("a", "scan", 1.0e6), point("a", "indexed", 1.1e6)];
+        let out = check_against(&committed, &fresh, 0.25, false);
+        assert_eq!(out.compared, 0);
+        assert!(out.passed());
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_points("{").is_err());
+        assert!(parse_points("{\"points\": 3}").is_err());
+        assert!(parse_points("{\"points\": []} trailing").is_err());
+        assert!(parse_points("{\"points\": []}").unwrap().is_empty());
+    }
+}

@@ -451,6 +451,29 @@ impl LinkPreset {
     }
 }
 
+/// Precomputed [`ClusterEnv::contention_factor`] staircase for one
+/// transfer size (see [`ClusterEnv::contention_staircase`]): index `k` is
+/// the group's in-flight concurrency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ContentionStaircase {
+    factors: Vec<f64>,
+}
+
+impl ContentionStaircase {
+    /// The degradation factor at concurrency `k`. Panics beyond the
+    /// `max_k` the staircase was built for — the engine builds it for the
+    /// registry size, which bounds any group's concurrency.
+    #[inline]
+    pub fn factor(&self, k: usize) -> f64 {
+        self.factors[k]
+    }
+
+    /// Largest concurrency this staircase covers.
+    pub fn max_k(&self) -> usize {
+        self.factors.len() - 1
+    }
+}
+
 /// How concurrent same-group (shared-NIC) transfers are priced — see the
 /// module docs, "Contention: pairwise vs aggregate k-way sharing".
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -1014,6 +1037,18 @@ impl ClusterEnv {
             return 1.0;
         }
         (k - 1) as f64 * (1.0 + self.contention_penalty(params))
+    }
+
+    /// Memoized [`ClusterEnv::contention_factor`] staircase for one
+    /// transfer size: `factor(k)` for every concurrency `0 ..= max_k`,
+    /// precomputed so the DES engine's piecewise re-pricing does not
+    /// re-evaluate the penalty ramp at every membership change. Entries
+    /// are bit-for-bit the values `contention_factor` returns
+    /// (`tests/engine_equivalence.rs` pins this).
+    pub fn contention_staircase(&self, max_k: usize, params: u64) -> ContentionStaircase {
+        ContentionStaircase {
+            factors: (0..=max_k).map(|k| self.contention_factor(k, params)).collect(),
+        }
     }
 
     /// The conservative **static** contention factor of a link under the

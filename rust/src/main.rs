@@ -72,7 +72,7 @@ fn load_config(
 }
 
 fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
-    let w = workload_by_name(&cfg.workload);
+    let w = workload_by_name(&cfg.workload).map_err(|e| format!("{e:#}"))?;
     let env = cfg.env();
     let r = run_pipeline(
         &w,
@@ -81,7 +81,8 @@ fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
         cfg.partition_size,
         cfg.ddp_bucket_mb,
         cfg.iterations,
-    );
+    )
+    .map_err(|e| format!("{e:#}"))?;
     println!(
         "workload={} scheme={} workers={} bw={}Gbps links={}",
         w.name,
@@ -108,7 +109,7 @@ fn cmd_simulate(cfg: &ExperimentConfig) -> Result<(), String> {
 }
 
 fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
-    let w = workload_by_name(&cfg.workload);
+    let w = workload_by_name(&cfg.workload).map_err(|e| format!("{e:#}"))?;
     let env = cfg.env();
     let mut table = Table::new(&[
         "scheme",
@@ -129,7 +130,8 @@ fn cmd_compare(cfg: &ExperimentConfig) -> Result<(), String> {
             cfg.partition_size,
             cfg.ddp_bucket_mb,
             cfg.iterations,
-        );
+        )
+        .map_err(|e| format!("{e:#}"))?;
         let t = r.sim.steady_iter_time;
         if scheme == Scheme::PytorchDdp {
             ddp_time = Some(t);

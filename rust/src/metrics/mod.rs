@@ -377,6 +377,8 @@ mod tests {
                     encode: Micros(8),
                 },
             ],
+            events_processed: 4,
+            peak_in_flight: 2,
             timeline: Timeline::default(),
         };
         let table = link_table(&result);

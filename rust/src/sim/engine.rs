@@ -1,5 +1,26 @@
 //! The discrete-event engine executing schedules under WFBP rules.
 //!
+//! ## Indexed event queue
+//!
+//! The main loop is event-indexed: link completions live in a
+//! `BinaryHeap` keyed on `(end, link, generation)` with lazy
+//! invalidation — every time contention re-pricing moves a flight's
+//! projected end, the link's generation is bumped and a fresh entry
+//! pushed; stale entries are discarded at pop time. The heap's
+//! `(end, link)` ordering reproduces the scan engine's chronological
+//! completion order bit-for-bit, and `tests/engine_equivalence.rs` pins
+//! [`simulate`] against the original scan loop
+//! ([`super::reference::simulate_scan`]) on every preset × scheme ×
+//! contention-model combination. Around the heap, the hot path is
+//! arena-indexed: k-way re-pricing walks precomputed contention-group
+//! member lists against a memoized [`ContentionStaircase`] instead of
+//! re-deriving the penalty ramp per membership change, forward
+//! dependency gates read flat arenas instead of `BTreeMap`s, the DDP
+//! barrier gate tracks an incremental all-updates-fired prefix instead
+//! of rescanning every earlier update per dispatch attempt, and span
+//! recording is skipped entirely (no allocation, no construction) when
+//! [`SimOptions::record_timeline`] is off.
+//!
 //! ## Contention: execution model
 //!
 //! Transfers are priced **uncontended** ([`ClusterEnv::wire_time_uncontended`])
@@ -64,10 +85,11 @@
 //! (`tests/codec_parity.rs`). Per-link raw-vs-wire byte counters and the
 //! encode totals land in [`SimResult::link_traffic`].
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use super::{Span, SpanKind, StreamId, Timeline};
-use crate::links::{ClusterEnv, ContentionModel, LinkId};
+use crate::links::{ClusterEnv, ContentionModel, ContentionStaircase, LinkId};
 use crate::models::BucketProfile;
 use crate::sched::{FwdDependency, Schedule, Stage};
 use crate::util::Micros;
@@ -109,8 +131,10 @@ pub struct LinkTraffic {
     pub encode: Micros,
 }
 
-/// Simulation outputs.
-#[derive(Clone, Debug)]
+/// Simulation outputs. All fields are integer/fixed-point, so `==`
+/// compares two runs bit-for-bit — the equivalence suite and the bench
+/// gate rely on this.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SimResult {
     pub scheme: String,
     /// Wall-clock end of each iteration's *compute* (monotone).
@@ -138,6 +162,14 @@ pub struct SimResult {
     /// order (home-link accounting: a transfer's bytes count on the link
     /// it was scheduled on).
     pub link_traffic: Vec<LinkTraffic>,
+    /// Discrete events executed: link dispatches + link completions +
+    /// compute-task dispatches + compute-task completions. The
+    /// denominator-free workload measure the trajectory bench divides
+    /// wall time by (events/sec), replacing the old spans-as-proxy count.
+    pub events_processed: u64,
+    /// Maximum number of transfers simultaneously in flight across all
+    /// links (event-queue pressure indicator).
+    pub peak_in_flight: usize,
     pub timeline: Timeline,
 }
 
@@ -209,32 +241,33 @@ struct Flight {
     end: Micros,
 }
 
-/// Re-price every in-flight member of `group` at event time `t` (k-way
-/// model): bank the progress made at the old rate over `[at, t)`, then
-/// project the remainder at the factor for the group's new concurrency
-/// `k`. Exempt (non-paying) members always run at rate 1 —
-/// `contention_factor(k ≤ 1, ·) = 1` covers a payer flying alone.
+/// Completion-event queue: min-heap on `(projected end, link, generation)`
+/// with lazy invalidation. An entry is live iff the link still has a
+/// flight and the generation matches the link's current one; re-pricing
+/// bumps the generation and pushes a fresh entry, leaving the stale one
+/// to be discarded at pop time.
+type EventHeap = BinaryHeap<Reverse<(Micros, usize, u64)>>;
+
+/// Re-price every in-flight member of a contention group at event time
+/// `t` (k-way model): bank the progress made at the old rate over
+/// `[at, t)`, then project the remainder at the staircase factor for the
+/// group's new concurrency `k`. Exempt (non-paying) members always run
+/// at rate 1 — `factor(k ≤ 1) = 1` covers a payer flying alone. Only
+/// members whose projected end actually moved get a fresh heap entry.
 #[allow(clippy::too_many_arguments)]
 fn reprice_group(
-    env: &ClusterEnv,
-    buckets: &[BucketProfile],
+    stair: &[ContentionStaircase],
     ops: &[OpInst],
-    group_of: &[usize],
+    members: &[usize],
+    k: usize,
     pays: &[bool],
     flights: &mut [Option<Flight>],
     link_free: &mut [Micros],
-    group: usize,
+    events: &mut EventHeap,
+    event_gen: &mut [u64],
     t: Micros,
 ) {
-    let k = flights
-        .iter()
-        .enumerate()
-        .filter(|(j, f)| group_of[*j] == group && f.is_some())
-        .count();
-    for j in 0..flights.len() {
-        if group_of[j] != group {
-            continue;
-        }
+    for &j in members {
         let Some(f) = flights[j].as_mut() else { continue };
         let elapsed = t.saturating_sub(f.at);
         if !elapsed.is_zero() {
@@ -247,17 +280,22 @@ fn reprice_group(
         }
         f.at = f.at.max(t);
         f.factor = if pays[j] {
-            env.contention_factor(k, buckets[ops[f.oi].bucket].params)
+            stair[ops[f.oi].bucket].factor(k)
         } else {
             1.0
         };
-        f.end = f.at
+        let end = f.at
             + if f.factor == 1.0 {
                 f.rem
             } else {
                 f.rem.scale(f.factor)
             };
-        link_free[j] = f.end;
+        if end != f.end {
+            f.end = end;
+            link_free[j] = end;
+            event_gen[j] += 1;
+            events.push(Reverse((end, j, event_gen[j])));
+        }
     }
 }
 
@@ -301,10 +339,20 @@ pub fn simulate(
     let mut ops: Vec<OpInst> = Vec::new();
     // Codec bookkeeping: encode overhead charged on the compute stream —
     // keyed to the compute task whose end launches the op (see the
-    // module docs) — plus per-link byte/overhead counters.
+    // module docs) — plus per-link byte/overhead counters. Flat arenas
+    // indexed `iter * n + bucket`.
     let mut enc_fwd: Vec<Micros> = vec![Micros::ZERO; iters];
-    let mut enc_bwd: BTreeMap<(usize, usize), Micros> = BTreeMap::new();
+    let mut enc_bwd: Vec<Micros> = vec![Micros::ZERO; iters * n];
     let mut link_traffic: Vec<LinkTraffic> = vec![LinkTraffic::default(); n_links];
+    // Wire pricing and encode overhead only depend on (bucket, link) —
+    // memoized so the per-iteration materialization loop stops paying a
+    // segment-path walk (and its Vec allocation) per op instance.
+    type SegPricing = (Micros, Option<(LinkId, Micros)>);
+    let mut seg_memo: Vec<Option<SegPricing>> = vec![None; n * n_links];
+    let mut enc_memo: Vec<Option<Micros>> = vec![None; n * n_links];
+    let wire_ratio: Vec<f64> = (0..n_links)
+        .map(|k| env.spec(LinkId(k)).codec.wire_ratio())
+        .collect();
     for t in 0..iters {
         let plan = &schedule.cycle[t % cycle_len];
         for op in plan.all_ops() {
@@ -317,13 +365,14 @@ pub fn simulate(
                 "op targets link {:?} but the environment registers only {n_links} links",
                 op.link
             );
-            let codec = env.spec(op.link).codec;
-            let enc = env.encode_overhead_us(op.link, buckets[op.bucket].params);
+            let mi = op.bucket * n_links + op.link.index();
+            let enc = *enc_memo[mi]
+                .get_or_insert_with(|| env.encode_overhead_us(op.link, buckets[op.bucket].params));
             if !enc.is_zero() {
                 if op.grad_age == 0 {
-                    *enc_bwd.entry((t, op.bucket)).or_insert(Micros::ZERO) += enc;
+                    enc_bwd[t * n + op.bucket] += enc;
                 } else if op.stage == Stage::Backward {
-                    *enc_bwd.entry((t, n - 1)).or_insert(Micros::ZERO) += enc;
+                    enc_bwd[t * n + (n - 1)] += enc;
                 } else {
                     enc_fwd[t] += enc;
                 }
@@ -331,13 +380,16 @@ pub fn simulate(
             let raw_bytes = buckets[op.bucket].params.saturating_mul(4);
             let traffic = &mut link_traffic[op.link.index()];
             traffic.raw_bytes += raw_bytes;
-            traffic.wire_bytes += (raw_bytes as f64 * codec.wire_ratio()).round() as u64;
+            traffic.wire_bytes += (raw_bytes as f64 * wire_ratio[op.link.index()]).round() as u64;
             traffic.encode += enc;
             // Uncontended segment-path pricing; the dispatch loop adds
             // the contention penalty for actually-overlapping windows.
-            let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
-            let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
-            let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
+            let (wire, seg_extra) = *seg_memo[mi].get_or_insert_with(|| {
+                let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
+                let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
+                let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
+                (wire, seg_extra)
+            });
             ops.push(OpInst {
                 bucket: op.bucket,
                 link: op.link,
@@ -355,18 +407,7 @@ pub fn simulate(
         }
     }
 
-    // Update bookkeeping: iteration whose end carries update u, and the
-    // set of ops feeding u.
-    let mut update_iter = vec![usize::MAX; total_updates.max(1)];
-    {
-        let mut u = 0;
-        for t in 0..iters {
-            if schedule.cycle[t % cycle_len].update_at_end {
-                update_iter[u] = t;
-                u += 1;
-            }
-        }
-    }
+    // Update bookkeeping: outstanding op count per update.
     let mut update_outstanding = vec![0usize; total_updates];
     for op in &ops {
         if op.update_idx < total_updates {
@@ -375,17 +416,18 @@ pub fn simulate(
         // Ops whose update lies beyond the horizon never gate anything.
     }
 
-    // Coverage map for PerBucket forward dependencies:
-    // covered[(iter, bucket)] -> op index whose transfer includes that
-    // iteration's gradient of that bucket.
-    let mut covers: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    // Coverage arena for PerBucket forward dependencies:
+    // covers[iter * n + bucket] -> op index whose transfer includes that
+    // iteration's gradient of that bucket (u32::MAX = uncovered).
+    let mut covers: Vec<u32> = Vec::new();
     if schedule.fwd_dependency == FwdDependency::PerBucket {
+        covers = vec![u32::MAX; iters * n];
         for (oi, op) in ops.iter().enumerate() {
             let newest = op.iter as i64 - op.grad_age as i64;
             for k in 0..op.merged {
                 let covered_iter = newest - k as i64;
                 if covered_iter >= 0 {
-                    covers.insert((covered_iter as usize, op.bucket), oi);
+                    covers[covered_iter as usize * n + op.bucket] = oi as u32;
                 }
             }
         }
@@ -395,28 +437,80 @@ pub fn simulate(
     // Resources: compute stream cursor + one server per registry link.
     let mut now = Micros::ZERO;
     let mut timeline = Timeline::default();
-    let record = |tl: &mut Timeline, span: Span| {
-        if opts.record_timeline {
-            tl.spans.push(span);
-        }
-    };
+    if opts.record_timeline {
+        // Exact span census: one home span per op, one per foreign
+        // segment leg, fwd + bwd compute per (iter, bucket).
+        let seg_spans = ops.iter().filter(|o| o.seg_extra.is_some()).count();
+        timeline.spans.reserve(ops.len() + seg_spans + 2 * n * iters);
+    }
 
-    // Per-link ready pools (indexed by LinkId), ordered by
-    // (priority, iter, bucket, op idx).
-    let mut pool: Vec<BTreeSet<(i64, usize, usize, usize)>> = vec![BTreeSet::new(); n_links];
+    // Per-link ready pools (indexed by LinkId), min-heaps on
+    // (priority, iter, bucket, op idx). Ops only leave a pool by being
+    // dispatched, so no lazy deletion is needed.
+    type ReadyPool = BinaryHeap<Reverse<(i64, usize, usize, usize)>>;
+    let mut pool: Vec<ReadyPool> = vec![ReadyPool::new(); n_links];
     // Link busy-until (= the in-flight projection's end) and the
     // in-flight transfer itself, indexed by LinkId.
     let mut link_free: Vec<Micros> = vec![Micros::ZERO; n_links];
     let mut in_flight: Vec<Option<Flight>> = vec![None; n_links];
-    // Contention bookkeeping: group per link, and whether the link pays
-    // shared-NIC contention at all (the non-fastest-group-member rule).
-    let group_of: Vec<usize> = (0..n_links)
-        .map(|k| env.spec(LinkId(k)).contention_group)
-        .collect();
+    // Contention bookkeeping: dense group ids, per-group member lists in
+    // ascending link order (re-pricing and pairwise overlap walk only
+    // the group), live in-flight counts per group, and whether each link
+    // pays shared-NIC contention (the non-fastest-group-member rule).
+    let mut group_ids: Vec<usize> = vec![0; n_links];
+    let mut group_members: Vec<Vec<usize>> = Vec::new();
+    {
+        let mut dense: BTreeMap<usize, usize> = BTreeMap::new();
+        for k in 0..n_links {
+            let raw = env.spec(LinkId(k)).contention_group;
+            let gid = *dense.entry(raw).or_insert_with(|| {
+                group_members.push(Vec::new());
+                group_members.len() - 1
+            });
+            group_ids[k] = gid;
+            group_members[gid].push(k);
+        }
+    }
+    let mut group_inflight: Vec<usize> = vec![0; group_members.len()];
+    let max_group = group_members.iter().map(|m| m.len()).max().unwrap_or(1);
     let pays: Vec<bool> = (0..n_links).map(|k| env.contended(LinkId(k))).collect();
+    // Per-bucket pricing memos: the k-way staircase is bit-for-bit
+    // `contention_factor(k, params)` for every k up to the largest
+    // group's size; the pairwise penalty is memoized separately because
+    // recovering it as `staircase(2) − 1` would not round-trip in f64.
+    let stair: Vec<ContentionStaircase> = if env.contention == ContentionModel::Kway {
+        buckets
+            .iter()
+            .map(|b| env.contention_staircase(max_group, b.params))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let penalty: Vec<f64> = if env.contention == ContentionModel::Pairwise {
+        buckets
+            .iter()
+            .map(|b| env.contention_penalty(b.params))
+            .collect()
+    } else {
+        Vec::new()
+    };
     // Per-link segment occupancy (wire time carried by each link,
     // including foreign legs of hierarchical transfers + contention).
     let mut seg_busy: Vec<Micros> = vec![Micros::ZERO; n_links];
+
+    // The completion-event queue (see `EventHeap`).
+    let mut events: EventHeap = BinaryHeap::new();
+    let mut event_gen: Vec<u64> = vec![0; n_links];
+    // Scratch for the next-event search: live entries due at or before
+    // `now` (zero-remainder flights) must not advance time — the scan
+    // engine only ever advanced to strictly-future events — so they are
+    // parked here and re-pushed.
+    let mut held: Vec<(Micros, usize, u64)> = Vec::new();
+
+    // Event accounting (identical counting points in the scan engine).
+    let mut events_processed = 0u64;
+    let mut cur_in_flight = 0usize;
+    let mut peak_in_flight = 0usize;
 
     // Staleness-bound bookkeeping (incremental — a linear scan of all ops
     // per dispatch made the engine quadratic in iterations):
@@ -449,40 +543,61 @@ pub fn simulate(
     let mut iter_ends: Vec<Micros> = Vec::with_capacity(iters);
     // Compute end of iteration t (backward fully done).
     let mut comp_iter_end: Vec<Option<Micros>> = vec![None; iters];
-    // Fwd window open time per iteration (= compute end of previous iter).
     let mut update_times: Vec<Option<Micros>> = vec![None; total_updates];
     let mut update_pending_end: Vec<Option<Micros>> = vec![None; total_updates];
+    // Incremental DDP-barrier gate: `upd_prefix` = length of the maximal
+    // prefix of `update_times` that has fired; `prefix_max[u]` = latest
+    // fire time among updates 0..=u (valid for u < upd_prefix). The gate
+    // on "all updates of iterations < t" becomes two array reads instead
+    // of a walk over every earlier update per dispatch attempt.
+    let mut upd_prefix = 0usize;
+    let mut prefix_max: Vec<Micros> = vec![Micros::ZERO; total_updates];
+    macro_rules! advance_upd_prefix {
+        () => {
+            while upd_prefix < total_updates {
+                let Some(t) = update_times[upd_prefix] else { break };
+                let prev = if upd_prefix == 0 {
+                    Micros::ZERO
+                } else {
+                    prefix_max[upd_prefix - 1]
+                };
+                prefix_max[upd_prefix] = prev.max(t);
+                upd_prefix += 1;
+            }
+        };
+    }
 
-    // Index ops by (iter, stage) for window-open insertion and by
-    // (iter, bucket) for data-ready insertion.
-    let mut by_window: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
-    let mut by_data: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    // Window-open / data-ready arenas (consumed exactly once each, so the
+    // op lists are moved out instead of cloned): fwd/bwd window per iter,
+    // data-ready per (iter, bucket).
+    let mut fwd_open: Vec<Vec<u32>> = vec![Vec::new(); iters];
+    let mut bwd_open: Vec<Vec<u32>> = vec![Vec::new(); iters];
+    let mut data_ready: Vec<Vec<u32>> = vec![Vec::new(); iters * n];
     for (oi, op) in ops.iter().enumerate() {
         if op.grad_age == 0 {
-            by_data.entry((op.iter, op.bucket)).or_default().push(oi);
+            data_ready[op.iter * n + op.bucket].push(oi as u32);
+        } else if op.stage == Stage::Forward {
+            fwd_open[op.iter].push(oi as u32);
         } else {
-            let stage_key = if op.stage == Stage::Forward { 0 } else { 1 };
-            by_window.entry((op.iter, stage_key)).or_default().push(oi);
+            bwd_open[op.iter].push(oi as u32);
         }
     }
 
     // Helper: make ops ready and insert into pools.
     macro_rules! make_ready {
         ($indices:expr, $time:expr) => {
-            for &oi in $indices.iter() {
+            for oi in $indices {
+                let oi = oi as usize;
                 let op = &mut ops[oi];
                 debug_assert!(op.ready.is_none());
                 op.ready = Some($time);
-                pool[op.link.index()].insert((op.priority, op.iter, op.bucket, oi));
+                pool[op.link.index()].push(Reverse((op.priority, op.iter, op.bucket, oi)));
             }
         };
     }
 
     // Iteration 0 forward window opens at t=0.
-    if let Some(is) = by_window.get(&(0usize, 0u8)) {
-        let is = is.clone();
-        make_ready!(is, Micros::ZERO);
-    }
+    make_ready!(std::mem::take(&mut fwd_open[0]), Micros::ZERO);
 
     let mut safety = 0u64;
     let safety_cap = 10_000_000u64 + ops.len() as u64 * 16;
@@ -491,142 +606,148 @@ pub fn simulate(
         safety += 1;
         assert!(safety < safety_cap, "simulator livelock — scheduler bug?");
 
-        let mut progressed = false;
-
         // --- 1. Dispatch links: serve best ready op if free. ---
+        // Ascending link order — under the pairwise model the dispatch
+        // order determines which overlap windows each charge sees.
         for k in 0..n_links {
-            if in_flight[k].is_some() {
+            if in_flight[k].is_some() || pool[k].is_empty() {
                 continue;
             }
-            let free_at = link_free[k].max(Micros::ZERO);
             // Ops are inserted into the pool at the very event that made
             // them ready (ready ≤ now always), so the best candidate is
-            // simply the first element in (priority, iter, bucket) order.
-            let candidate = pool[k]
-                .first()
-                .filter(|&&(_, _, _, oi)| ops[oi].ready.unwrap() <= now.max(free_at))
-                .copied();
-            if let Some(key) = candidate {
-                let oi = key.3;
-                pool[k].remove(&key);
-                let start = ops[oi].ready.unwrap().max(link_free[k]);
-                let wire = ops[oi].wire;
-                // `done` stays None until the completion event; while in
-                // flight the tentative end lives in the flight table and
-                // `link_free`, where contention may still move it.
-                match env.contention {
-                    ContentionModel::Kway => {
-                        in_flight[k] = Some(Flight {
-                            oi,
-                            start,
-                            at: start,
-                            rem: wire,
-                            factor: 1.0,
-                            end: start + wire,
-                        });
-                        link_free[k] = start + wire;
-                        // Aggregate sharing: this dispatch changes the
-                        // group's concurrency, so the whole group is
-                        // re-priced — the new transfer picks up the
-                        // factor for the current k, and every paying
-                        // group-mate banks its progress so far and slows
-                        // down for the larger k.
-                        reprice_group(
-                            env,
-                            buckets,
-                            &ops,
-                            &group_of,
-                            &pays,
-                            &mut in_flight,
-                            &mut link_free,
-                            group_of[k],
-                            start,
-                        );
-                    }
-                    ContentionModel::Pairwise => {
-                        let mut end = start + wire;
-                        // One-shot overlap charge: a paying link is
-                        // slowed by the pairwise penalty for the window
-                        // it shares with in-flight same-group transfers.
-                        if pays[k] && !wire.is_zero() {
-                            let mut overlap = Micros::ZERO;
-                            for (j, f) in in_flight.iter().enumerate() {
-                                if j == k || group_of[j] != group_of[k] {
-                                    continue;
-                                }
-                                let Some(f) = f else { continue };
-                                let lo = start.max(f.start);
-                                let hi = end.min(f.end);
-                                if hi > lo {
-                                    overlap += hi - lo;
-                                }
-                            }
-                            if !overlap.is_zero() {
-                                let params = buckets[ops[oi].bucket].params;
-                                end += overlap.scale(env.contention_penalty(params));
-                            }
-                        }
-                        link_free[k] = end;
-                        in_flight[k] = Some(Flight {
-                            oi,
-                            start,
-                            at: start,
-                            rem: wire,
-                            factor: 1.0,
-                            end,
-                        });
-                        // Symmetry: this transfer also slows down any
-                        // *paying* group-mate already in flight — extend
-                        // it by the penalty on the newly shared window
-                        // (the fastest member never pays, mirroring the
-                        // dispatch-time charge above). Both directions
-                        // measure the window against the ends as known at
-                        // this dispatch, so the charge is symmetric to
-                        // first order only; the k-way model re-prices
-                        // these windows exactly instead.
-                        for j in 0..n_links {
-                            if j == k || group_of[j] != group_of[k] || !pays[j] {
-                                continue;
-                            }
-                            let Some(fj) = in_flight[j] else { continue };
-                            let lo = start.max(fj.start);
-                            let hi = end.min(fj.end);
-                            if hi > lo {
-                                let params = buckets[ops[fj.oi].bucket].params;
-                                let extra = (hi - lo).scale(env.contention_penalty(params));
-                                if !extra.is_zero() {
-                                    link_free[j] = fj.end + extra;
-                                    in_flight[j].as_mut().unwrap().end = fj.end + extra;
-                                }
-                            }
-                        }
-                    }
-                }
-                // Foreign segment leg: record its occupancy on the
-                // segment's own stream (hierarchical topologies). The
-                // home-link span is recorded at completion, once the end
-                // can no longer move.
-                if let Some((seg_link, seg_t)) = ops[oi].seg_extra {
-                    seg_busy[seg_link.index()] += seg_t;
-                    record(
-                        &mut timeline,
-                        Span {
-                            stream: StreamId::Link(seg_link),
-                            kind: SpanKind::Comm {
-                                iter: ops[oi].iter,
-                                bucket: ops[oi].bucket,
-                                merged: ops[oi].merged,
-                            },
-                            start,
-                            end: start + seg_t,
-                        },
+            // simply the heap minimum in (priority, iter, bucket) order.
+            let Reverse((_, _, _, oi)) = pool[k].pop().expect("non-empty pool");
+            debug_assert!(ops[oi].ready.unwrap() <= now);
+            let start = ops[oi].ready.unwrap().max(link_free[k]);
+            let wire = ops[oi].wire;
+            events_processed += 1;
+            cur_in_flight += 1;
+            peak_in_flight = peak_in_flight.max(cur_in_flight);
+            let g = group_ids[k];
+            // `done` stays None until the completion event; while in
+            // flight the tentative end lives in the flight table and
+            // `link_free`, where contention may still move it.
+            match env.contention {
+                ContentionModel::Kway => {
+                    in_flight[k] = Some(Flight {
+                        oi,
+                        start,
+                        at: start,
+                        rem: wire,
+                        factor: 1.0,
+                        end: start + wire,
+                    });
+                    link_free[k] = start + wire;
+                    event_gen[k] += 1;
+                    events.push(Reverse((start + wire, k, event_gen[k])));
+                    // Aggregate sharing: this dispatch changes the
+                    // group's concurrency, so the whole group is
+                    // re-priced — the new transfer picks up the factor
+                    // for the current k, and every paying group-mate
+                    // banks its progress so far and slows down for the
+                    // larger k.
+                    group_inflight[g] += 1;
+                    reprice_group(
+                        &stair,
+                        &ops,
+                        &group_members[g],
+                        group_inflight[g],
+                        &pays,
+                        &mut in_flight,
+                        &mut link_free,
+                        &mut events,
+                        &mut event_gen,
+                        start,
                     );
                 }
-                progressed = true;
+                ContentionModel::Pairwise => {
+                    let mut end = start + wire;
+                    // One-shot overlap charge: a paying link is slowed by
+                    // the pairwise penalty for the window it shares with
+                    // in-flight same-group transfers.
+                    if pays[k] && !wire.is_zero() {
+                        let mut overlap = Micros::ZERO;
+                        for &j in &group_members[g] {
+                            if j == k {
+                                continue;
+                            }
+                            let Some(f) = in_flight[j] else { continue };
+                            let lo = start.max(f.start);
+                            let hi = end.min(f.end);
+                            if hi > lo {
+                                overlap += hi - lo;
+                            }
+                        }
+                        if !overlap.is_zero() {
+                            end += overlap.scale(penalty[ops[oi].bucket]);
+                        }
+                    }
+                    link_free[k] = end;
+                    in_flight[k] = Some(Flight {
+                        oi,
+                        start,
+                        at: start,
+                        rem: wire,
+                        factor: 1.0,
+                        end,
+                    });
+                    event_gen[k] += 1;
+                    events.push(Reverse((end, k, event_gen[k])));
+                    group_inflight[g] += 1;
+                    // Symmetry: this transfer also slows down any
+                    // *paying* group-mate already in flight — extend it
+                    // by the penalty on the newly shared window (the
+                    // fastest member never pays, mirroring the
+                    // dispatch-time charge above). Both directions
+                    // measure the window against the ends as known at
+                    // this dispatch, so the charge is symmetric to first
+                    // order only; the k-way model re-prices these windows
+                    // exactly instead.
+                    for &j in &group_members[g] {
+                        if j == k || !pays[j] {
+                            continue;
+                        }
+                        let Some(fj) = in_flight[j] else { continue };
+                        let lo = start.max(fj.start);
+                        let hi = end.min(fj.end);
+                        if hi > lo {
+                            let extra = (hi - lo).scale(penalty[ops[fj.oi].bucket]);
+                            if !extra.is_zero() {
+                                link_free[j] = fj.end + extra;
+                                in_flight[j].as_mut().unwrap().end = fj.end + extra;
+                                event_gen[j] += 1;
+                                events.push(Reverse((fj.end + extra, j, event_gen[j])));
+                            }
+                        }
+                    }
+                }
+            }
+            // Foreign segment leg: record its occupancy on the segment's
+            // own stream (hierarchical topologies). The home-link span is
+            // recorded at completion, once the end can no longer move.
+            if let Some((seg_link, seg_t)) = ops[oi].seg_extra {
+                seg_busy[seg_link.index()] += seg_t;
+                if opts.record_timeline {
+                    timeline.spans.push(Span {
+                        stream: StreamId::Link(seg_link),
+                        kind: SpanKind::Comm {
+                            iter: ops[oi].iter,
+                            bucket: ops[oi].bucket,
+                            merged: ops[oi].merged,
+                        },
+                        start,
+                        end: start + seg_t,
+                    });
+                }
             }
         }
 
         // --- 2. Dispatch compute if idle and dependencies resolved. ---
+        // One attempt per event round, like the scan engine; the gates
+        // only change at completion events. (Dispatches never enable
+        // other dispatches — readiness and dependency resolution both
+        // come from completions — so one links-then-compute pass per
+        // round reproduces the scan engine's fixed-point exactly.)
         if !comp_running {
             match comp {
                 CompTask::Fwd { iter, bucket } => {
@@ -650,32 +771,33 @@ pub fn simulate(
                     match schedule.fwd_dependency {
                         FwdDependency::Barrier => {
                             if bucket == 0 && iter > 0 {
-                                // All updates of iterations < iter.
+                                // All updates of iterations < iter: fired
+                                // iff the all-fired prefix covers them,
+                                // and their max is the prefix max.
                                 let need = updates_before[iter];
-                                for u in 0..need {
-                                    match update_times[u] {
-                                        Some(t) => {
-                                            dep_time = dep_time.map(|d| d.max(t));
-                                        }
-                                        None => dep_time = None,
+                                if need > 0 {
+                                    if upd_prefix >= need {
+                                        dep_time = dep_time.map(|d| d.max(prefix_max[need - 1]));
+                                    } else {
+                                        dep_time = None;
                                     }
                                 }
                             }
                         }
                         FwdDependency::PerBucket => {
                             if iter > 0 {
-                                let oi = *covers.get(&(iter - 1, bucket)).unwrap_or_else(|| {
-                                    panic!(
-                                        "no op covers grad (iter {}, bucket {bucket})",
-                                        iter - 1
-                                    )
-                                });
+                                let oi = covers[(iter - 1) * n + bucket];
+                                assert!(
+                                    oi != u32::MAX,
+                                    "no op covers grad (iter {}, bucket {bucket})",
+                                    iter - 1
+                                );
                                 // `done` is final only after the
                                 // completion event — an in-flight op's
                                 // tentative end may still be extended by
                                 // contention, so wait rather than gate on
                                 // it (same wall-clock start either way).
-                                match ops[oi].done {
+                                match ops[oi as usize].done {
                                     Some(t) => dep_time = dep_time.map(|d| d.max(t)),
                                     None => dep_time = None,
                                 }
@@ -695,18 +817,17 @@ pub fn simulate(
                         let end = start + dur;
                         first_comp_start.get_or_insert(start);
                         compute_busy += dur;
-                        record(
-                            &mut timeline,
-                            Span {
+                        events_processed += 1;
+                        if opts.record_timeline {
+                            timeline.spans.push(Span {
                                 stream: StreamId::Compute,
                                 kind: SpanKind::Fwd { iter, bucket },
                                 start,
                                 end,
-                            },
-                        );
+                            });
+                        }
                         comp_busy_until = end;
                         comp_running = true;
-                        progressed = true;
                     }
                 }
                 CompTask::Bwd { iter, bucket } => {
@@ -714,81 +835,81 @@ pub fn simulate(
                     // Encode kernels of ops this backward task launches
                     // extend it — the wire cannot start before its
                     // gradient is compressed.
-                    let dur = buckets[bucket].bwd
-                        + enc_bwd.get(&(iter, bucket)).copied().unwrap_or(Micros::ZERO);
+                    let dur = buckets[bucket].bwd + enc_bwd[iter * n + bucket];
                     let end = start + dur;
                     compute_busy += dur;
-                    record(
-                        &mut timeline,
-                        Span {
+                    events_processed += 1;
+                    if opts.record_timeline {
+                        timeline.spans.push(Span {
                             stream: StreamId::Compute,
                             kind: SpanKind::Bwd { iter, bucket },
                             start,
                             end,
-                        },
-                    );
+                        });
+                    }
                     comp_busy_until = end;
                     comp_running = true;
-                    progressed = true;
                 }
                 CompTask::Done => {}
             }
         }
 
-        // --- 3. Advance time to the next event. ---
+        // --- 3. Advance time to the next event (strictly future). ---
+        // Peek past stale heap entries; live entries due at ≤ now (a
+        // zero-remainder flight dispatched this round) are parked and
+        // re-pushed — they fire only once something else advances the
+        // clock, exactly like the scan engine's `t > now` rule.
         let mut next_time: Option<Micros> = None;
-        let consider = |t: Micros, next: &mut Option<Micros>| {
-            if t > now {
-                *next = Some(next.map_or(t, |n: Micros| n.min(t)));
+        while let Some(&Reverse((t, k, g))) = events.peek() {
+            if event_gen[k] != g || in_flight[k].is_none() {
+                events.pop();
+                continue;
             }
+            if t <= now {
+                held.push(events.pop().expect("peeked entry").0);
+                continue;
+            }
+            next_time = Some(t);
+            break;
+        }
+        for h in held.drain(..) {
+            events.push(Reverse(h));
+        }
+        if comp_running && comp_busy_until > now {
+            next_time = Some(next_time.map_or(comp_busy_until, |t| t.min(comp_busy_until)));
+        }
+        let Some(t) = next_time else {
+            break; // nothing running, nothing pending
         };
-        if comp_running {
-            consider(comp_busy_until, &mut next_time);
-        }
-        for k in 0..n_links {
-            if in_flight[k].is_some() {
-                consider(link_free[k], &mut next_time);
-            }
-            // Idle links need no wake-up: pool entries are ready the
-            // moment they are inserted (see the dispatch invariant), so
-            // an idle link with work is served in the same event round.
-        }
-        // Pending update whose iteration end passed but ops outstanding:
-        // resolved by op-done events, nothing to schedule here.
-
-        if !progressed {
-            match next_time {
-                Some(t) => now = t,
-                None => break, // nothing running, nothing pending
-            }
-        } else {
-            continue;
-        }
+        now = t;
 
         // --- 4. Fire completions at `now`. ---
         // Link completions — chronologically (earliest projected end
-        // first), because under the k-way model every finalize re-prices
-        // the survivors of its contention group: they speed back up from
-        // the departure instant, and their shortened projections may
-        // themselves fall due within this same round.
-        loop {
-            let mut due: Option<(Micros, usize)> = None;
-            for k in 0..n_links {
-                if let Some(f) = &in_flight[k] {
-                    if f.end <= now && due.map_or(true, |(e, j)| (f.end, k) < (e, j)) {
-                        due = Some((f.end, k));
-                    }
-                }
+        // first, ties by link index: the heap key), because under the
+        // k-way model every finalize re-prices the survivors of its
+        // contention group: they speed back up from the departure
+        // instant, and their shortened projections (pushed as fresh heap
+        // entries) may themselves fall due within this same round.
+        while let Some(&Reverse((done_t, k, g))) = events.peek() {
+            if event_gen[k] != g || in_flight[k].is_none() {
+                events.pop();
+                continue;
             }
-            let Some((done_t, k)) = due else { break };
-            let f = in_flight[k].take().expect("due flight exists");
+            if done_t > now {
+                break;
+            }
+            events.pop();
+            let f = in_flight[k].take().expect("live event has a flight");
+            debug_assert_eq!(f.end, done_t);
             let oi = f.oi;
+            events_processed += 1;
+            cur_in_flight -= 1;
+            group_inflight[group_ids[k]] -= 1;
             // Finalize: contention can no longer move this transfer.
             ops[oi].done = Some(done_t);
             seg_busy[k] += done_t - f.start;
-            record(
-                &mut timeline,
-                Span {
+            if opts.record_timeline {
+                timeline.spans.push(Span {
                     stream: StreamId::Link(LinkId(k)),
                     kind: SpanKind::Comm {
                         iter: ops[oi].iter,
@@ -797,8 +918,8 @@ pub fn simulate(
                     },
                     start: f.start,
                     end: done_t,
-                },
-            );
+                });
+            }
             // Advance the staleness watermark.
             let op_iter = ops[oi].iter;
             iter_ops_remaining[op_iter] -= 1;
@@ -818,6 +939,7 @@ pub fn simulate(
                 if update_outstanding[u] == 0 {
                     if let Some(iter_end) = update_pending_end[u] {
                         update_times[u] = Some(iter_end.max(done_t));
+                        advance_upd_prefix!();
                     }
                 }
             }
@@ -826,15 +948,17 @@ pub fn simulate(
             // back up from `done_t` (k-way only — the pairwise model
             // deliberately never revisits its one-shot charge).
             if env.contention == ContentionModel::Kway {
+                let g = group_ids[k];
                 reprice_group(
-                    env,
-                    buckets,
+                    &stair,
                     &ops,
-                    &group_of,
+                    &group_members[g],
+                    group_inflight[g],
                     &pays,
                     &mut in_flight,
                     &mut link_free,
-                    group_of[k],
+                    &mut events,
+                    &mut event_gen,
                     done_t,
                 );
             }
@@ -842,6 +966,7 @@ pub fn simulate(
         // Compute completion.
         if comp_running && comp_busy_until <= now {
             comp_running = false;
+            events_processed += 1;
             // Advance the task cursor and fire boundary effects.
             match comp {
                 CompTask::Fwd { iter, bucket } => {
@@ -852,10 +977,7 @@ pub fn simulate(
                         };
                     } else {
                         // Backward window of this iteration opens.
-                        if let Some(is) = by_window.get(&(iter, 1u8)) {
-                            let is = is.clone();
-                            make_ready!(is, comp_busy_until);
-                        }
+                        make_ready!(std::mem::take(&mut bwd_open[iter]), comp_busy_until);
                         comp = CompTask::Bwd {
                             iter,
                             bucket: n - 1,
@@ -864,10 +986,7 @@ pub fn simulate(
                 }
                 CompTask::Bwd { iter, bucket } => {
                     // This bucket's gradient is ready.
-                    if let Some(is) = by_data.get(&(iter, bucket)) {
-                        let is = is.clone();
-                        make_ready!(is, comp_busy_until);
-                    }
+                    make_ready!(std::mem::take(&mut data_ready[iter * n + bucket]), comp_busy_until);
                     if bucket > 0 {
                         comp = CompTask::Bwd {
                             iter,
@@ -882,14 +1001,12 @@ pub fn simulate(
                             update_pending_end[u] = Some(comp_busy_until);
                             if update_outstanding[u] == 0 {
                                 update_times[u] = Some(comp_busy_until);
+                                advance_upd_prefix!();
                             }
                         }
                         if iter + 1 < iters {
                             // Next iteration's forward window opens.
-                            if let Some(is) = by_window.get(&(iter + 1, 0u8)) {
-                                let is = is.clone();
-                                make_ready!(is, comp_busy_until);
-                            }
+                            make_ready!(std::mem::take(&mut fwd_open[iter + 1]), comp_busy_until);
                             comp = CompTask::Fwd {
                                 iter: iter + 1,
                                 bucket: 0,
@@ -958,6 +1075,8 @@ pub fn simulate(
         link_codecs: env.link_codec_names(),
         contention: env.contention.name().to_string(),
         link_traffic,
+        events_processed,
+        peak_in_flight,
         timeline,
     }
 }

@@ -29,9 +29,11 @@
 
 mod convergence;
 mod engine;
+mod reference;
 
 pub use convergence::{training_curve, ConvergenceModel, TrainingCurve};
 pub use engine::{simulate, LinkTraffic, SimOptions, SimResult};
+pub use reference::simulate_scan;
 
 use crate::links::LinkId;
 use crate::util::Micros;
@@ -60,7 +62,7 @@ pub enum SpanKind {
 }
 
 /// One occupied interval on a stream.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Span {
     pub stream: StreamId,
     pub kind: SpanKind,
@@ -75,7 +77,7 @@ impl Span {
 }
 
 /// Full execution trace of a simulation.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Timeline {
     pub spans: Vec<Span>,
 }

@@ -1,0 +1,845 @@
+//! The **reference scan engine** — the original `simulate` main loop,
+//! kept verbatim as the golden oracle for the indexed-event engine in
+//! [`super::engine`].
+//!
+//! Every event round here re-derives its state by scanning: the
+//! next-event search walks every link, the completion loop re-scans all
+//! in-flight slots per fired completion, k-way re-pricing walks the whole
+//! registry per membership change, and the forward dependency gate pays a
+//! `BTreeMap` lookup (plus, for barrier schemes, a linear walk over all
+//! earlier updates) on every dispatch attempt. That makes it easy to
+//! audit against the model semantics documented in `engine` — and slow.
+//! [`simulate_scan`] must produce **bit-for-bit** the same [`SimResult`]
+//! as [`super::simulate`] on every input (`tests/engine_equivalence.rs`);
+//! it also serves as the "before" point of the committed
+//! `BENCH_des_hotpath.json` perf trajectory.
+//!
+//! Semantics (contention models, per-segment streams, codec encode
+//! charging) are documented once, in [`super::engine`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Span, SpanKind, StreamId, Timeline};
+use crate::links::{ClusterEnv, ContentionModel, LinkId};
+use crate::models::BucketProfile;
+use crate::sched::{FwdDependency, Schedule, Stage};
+use crate::util::Micros;
+
+use super::engine::{SimOptions, SimResult};
+
+/// Internal: one materialized communication op instance.
+#[derive(Clone, Debug)]
+struct OpInst {
+    bucket: usize,
+    link: LinkId,
+    iter: usize,
+    stage: Stage,
+    priority: i64,
+    grad_age: usize,
+    merged: usize,
+    /// Global update index this op's gradients feed.
+    update_idx: usize,
+    /// Uncontended wire time of the full segment path on its home link.
+    wire: Micros,
+    /// Foreign segment leg (hierarchical topologies): the intra/inter
+    /// link that also carries part of this transfer, and for how long.
+    seg_extra: Option<(LinkId, Micros)>,
+    /// Resolved readiness (None until known).
+    ready: Option<Micros>,
+    /// Finalized completion time, set at the completion event. None while
+    /// queued or in flight — an in-flight transfer's *tentative* end
+    /// lives in the engine's flight table, where overlap contention may
+    /// still move it (later at a group-mate's dispatch, earlier at a
+    /// group-mate's finalize under k-way), so nothing may gate on it
+    /// before completion.
+    done: Option<Micros>,
+}
+
+/// One in-flight transfer on a link. Under the k-way contention model the
+/// flight is re-priced piecewise at every group membership change; under
+/// the pairwise model `rem`/`factor` stay at their dispatch values and
+/// only `end` is one-shot extended.
+#[derive(Clone, Copy, Debug)]
+struct Flight {
+    /// Index into `ops`.
+    oi: usize,
+    /// Wire start (the home-link span is recorded at completion).
+    start: Micros,
+    /// Time of the last re-pricing event (dispatch, or any k-way
+    /// membership change since).
+    at: Micros,
+    /// Uncontended wire time still owed as of `at`.
+    rem: Micros,
+    /// Current slowdown factor (1.0 = uncontended rate).
+    factor: f64,
+    /// Projected completion: `at + rem · factor`; final once it fires.
+    end: Micros,
+}
+
+/// Re-price every in-flight member of `group` at event time `t` (k-way
+/// model): bank the progress made at the old rate over `[at, t)`, then
+/// project the remainder at the factor for the group's new concurrency
+/// `k`. Exempt (non-paying) members always run at rate 1 —
+/// `contention_factor(k ≤ 1, ·) = 1` covers a payer flying alone.
+#[allow(clippy::too_many_arguments)]
+fn reprice_group(
+    env: &ClusterEnv,
+    buckets: &[BucketProfile],
+    ops: &[OpInst],
+    group_of: &[usize],
+    pays: &[bool],
+    flights: &mut [Option<Flight>],
+    link_free: &mut [Micros],
+    group: usize,
+    t: Micros,
+) {
+    let k = flights
+        .iter()
+        .enumerate()
+        .filter(|(j, f)| group_of[*j] == group && f.is_some())
+        .count();
+    for j in 0..flights.len() {
+        if group_of[j] != group {
+            continue;
+        }
+        let Some(f) = flights[j].as_mut() else { continue };
+        let elapsed = t.saturating_sub(f.at);
+        if !elapsed.is_zero() {
+            let done = if f.factor == 1.0 {
+                elapsed
+            } else {
+                elapsed.scale(1.0 / f.factor)
+            };
+            f.rem = f.rem.saturating_sub(done);
+        }
+        f.at = f.at.max(t);
+        f.factor = if pays[j] {
+            env.contention_factor(k, buckets[ops[f.oi].bucket].params)
+        } else {
+            1.0
+        };
+        f.end = f.at
+            + if f.factor == 1.0 {
+                f.rem
+            } else {
+                f.rem.scale(f.factor)
+            };
+        link_free[j] = f.end;
+    }
+}
+
+/// Compute-task cursor: which task the compute stream runs next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum CompTask {
+    Fwd { iter: usize, bucket: usize },
+    Bwd { iter: usize, bucket: usize },
+    Done,
+}
+
+/// Execute `schedule` over `buckets` in `env` with the original
+/// scan-based main loop and return metrics. The golden reference for
+/// [`super::simulate`] — same contract, same panics on malformed
+/// schedules.
+pub fn simulate_scan(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+) -> SimResult {
+    schedule.validate().expect("invalid schedule");
+    let n = buckets.len();
+    assert!(n > 0, "no buckets");
+    let iters = opts.iterations;
+    assert!(iters > 0);
+    let n_links = env.n_links();
+    assert!(n_links > 0, "environment has no links");
+
+    // ---- Materialize op instances for every iteration. ----
+    let cycle_len = schedule.cycle.len();
+    // updates_before[t] = number of update markers in iterations < t.
+    let mut updates_before = vec![0usize; iters + 1];
+    for t in 0..iters {
+        let plan = &schedule.cycle[t % cycle_len];
+        updates_before[t + 1] = updates_before[t] + usize::from(plan.update_at_end);
+    }
+    let total_updates = updates_before[iters];
+
+    let mut ops: Vec<OpInst> = Vec::new();
+    // Codec bookkeeping: encode overhead charged on the compute stream —
+    // keyed to the compute task whose end launches the op (see the
+    // `engine` module docs) — plus per-link byte/overhead counters.
+    let mut enc_fwd: Vec<Micros> = vec![Micros::ZERO; iters];
+    let mut enc_bwd: BTreeMap<(usize, usize), Micros> = BTreeMap::new();
+    let mut link_traffic: Vec<super::LinkTraffic> = vec![Default::default(); n_links];
+    for t in 0..iters {
+        let plan = &schedule.cycle[t % cycle_len];
+        for op in plan.all_ops() {
+            assert!(
+                !(op.grad_age == 0 && op.stage == Stage::Forward),
+                "op for current-iter grad cannot launch in forward window"
+            );
+            assert!(
+                op.link.index() < n_links,
+                "op targets link {:?} but the environment registers only {n_links} links",
+                op.link
+            );
+            let codec = env.spec(op.link).codec;
+            let enc = env.encode_overhead_us(op.link, buckets[op.bucket].params);
+            if !enc.is_zero() {
+                if op.grad_age == 0 {
+                    *enc_bwd.entry((t, op.bucket)).or_insert(Micros::ZERO) += enc;
+                } else if op.stage == Stage::Backward {
+                    *enc_bwd.entry((t, n - 1)).or_insert(Micros::ZERO) += enc;
+                } else {
+                    enc_fwd[t] += enc;
+                }
+            }
+            let raw_bytes = buckets[op.bucket].params.saturating_mul(4);
+            let traffic = &mut link_traffic[op.link.index()];
+            traffic.raw_bytes += raw_bytes;
+            traffic.wire_bytes += (raw_bytes as f64 * codec.wire_ratio()).round() as u64;
+            traffic.encode += enc;
+            // Uncontended segment-path pricing; the dispatch loop adds
+            // the contention penalty for actually-overlapping windows.
+            let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
+            let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
+            let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
+            ops.push(OpInst {
+                bucket: op.bucket,
+                link: op.link,
+                iter: t,
+                stage: op.stage,
+                priority: op.priority,
+                grad_age: op.grad_age,
+                merged: op.merged,
+                update_idx: updates_before[t] + op.update_offset,
+                wire,
+                seg_extra,
+                ready: None,
+                done: None,
+            });
+        }
+    }
+
+    // Update bookkeeping: iteration whose end carries update u, and the
+    // set of ops feeding u.
+    let mut update_iter = vec![usize::MAX; total_updates.max(1)];
+    {
+        let mut u = 0;
+        for t in 0..iters {
+            if schedule.cycle[t % cycle_len].update_at_end {
+                update_iter[u] = t;
+                u += 1;
+            }
+        }
+    }
+    let mut update_outstanding = vec![0usize; total_updates];
+    for op in &ops {
+        if op.update_idx < total_updates {
+            update_outstanding[op.update_idx] += 1;
+        }
+        // Ops whose update lies beyond the horizon never gate anything.
+    }
+
+    // Coverage map for PerBucket forward dependencies:
+    // covered[(iter, bucket)] -> op index whose transfer includes that
+    // iteration's gradient of that bucket.
+    let mut covers: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    if schedule.fwd_dependency == FwdDependency::PerBucket {
+        for (oi, op) in ops.iter().enumerate() {
+            let newest = op.iter as i64 - op.grad_age as i64;
+            for k in 0..op.merged {
+                let covered_iter = newest - k as i64;
+                if covered_iter >= 0 {
+                    covers.insert((covered_iter as usize, op.bucket), oi);
+                }
+            }
+        }
+    }
+
+    // ---- Event-driven execution. ----
+    // Resources: compute stream cursor + one server per registry link.
+    let mut now = Micros::ZERO;
+    let mut timeline = Timeline::default();
+    let record = |tl: &mut Timeline, span: Span| {
+        if opts.record_timeline {
+            tl.spans.push(span);
+        }
+    };
+
+    // Per-link ready pools (indexed by LinkId), ordered by
+    // (priority, iter, bucket, op idx).
+    let mut pool: Vec<BTreeSet<(i64, usize, usize, usize)>> = vec![BTreeSet::new(); n_links];
+    // Link busy-until (= the in-flight projection's end) and the
+    // in-flight transfer itself, indexed by LinkId.
+    let mut link_free: Vec<Micros> = vec![Micros::ZERO; n_links];
+    let mut in_flight: Vec<Option<Flight>> = vec![None; n_links];
+    // Contention bookkeeping: group per link, and whether the link pays
+    // shared-NIC contention at all (the non-fastest-group-member rule).
+    let group_of: Vec<usize> = (0..n_links)
+        .map(|k| env.spec(LinkId(k)).contention_group)
+        .collect();
+    let pays: Vec<bool> = (0..n_links).map(|k| env.contended(LinkId(k))).collect();
+    // Per-link segment occupancy (wire time carried by each link,
+    // including foreign legs of hierarchical transfers + contention).
+    let mut seg_busy: Vec<Micros> = vec![Micros::ZERO; n_links];
+
+    // Event accounting (must match the indexed engine's definition
+    // bit-for-bit): dispatches + completions on links and compute.
+    let mut events_processed = 0u64;
+    let mut cur_in_flight = 0usize;
+    let mut peak_in_flight = 0usize;
+
+    // Staleness-bound bookkeeping (incremental — a linear scan of all ops
+    // per dispatch made the engine quadratic in iterations):
+    // `iter_ops_remaining[it]` counts incomplete ops launched in iteration
+    // `it`; `watermark` is the first iteration with incomplete ops;
+    // `cum_max_done[it]` (valid for it < watermark) is the latest
+    // completion time among all ops of iterations ≤ it.
+    let mut iter_ops_remaining = vec![0usize; iters];
+    for op in &ops {
+        iter_ops_remaining[op.iter] += 1;
+    }
+    let mut iter_max_done = vec![Micros::ZERO; iters];
+    let mut cum_max_done = vec![Micros::ZERO; iters];
+    let mut watermark = 0usize;
+    while watermark < iters && iter_ops_remaining[watermark] == 0 {
+        cum_max_done[watermark] = if watermark == 0 {
+            Micros::ZERO
+        } else {
+            cum_max_done[watermark - 1]
+        };
+        watermark += 1;
+    }
+
+    // Compute bookkeeping.
+    let mut comp = CompTask::Fwd { iter: 0, bucket: 0 };
+    let mut comp_busy_until = Micros::ZERO;
+    let mut comp_running = false;
+    let mut compute_busy = Micros::ZERO;
+    let mut first_comp_start: Option<Micros> = None;
+    let mut iter_ends: Vec<Micros> = Vec::with_capacity(iters);
+    // Compute end of iteration t (backward fully done).
+    let mut comp_iter_end: Vec<Option<Micros>> = vec![None; iters];
+    // Fwd window open time per iteration (= compute end of previous iter).
+    let mut update_times: Vec<Option<Micros>> = vec![None; total_updates];
+    let mut update_pending_end: Vec<Option<Micros>> = vec![None; total_updates];
+
+    // Index ops by (iter, stage) for window-open insertion and by
+    // (iter, bucket) for data-ready insertion.
+    let mut by_window: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
+    let mut by_data: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (oi, op) in ops.iter().enumerate() {
+        if op.grad_age == 0 {
+            by_data.entry((op.iter, op.bucket)).or_default().push(oi);
+        } else {
+            let stage_key = if op.stage == Stage::Forward { 0 } else { 1 };
+            by_window.entry((op.iter, stage_key)).or_default().push(oi);
+        }
+    }
+
+    // Helper: make ops ready and insert into pools.
+    macro_rules! make_ready {
+        ($indices:expr, $time:expr) => {
+            for &oi in $indices.iter() {
+                let op = &mut ops[oi];
+                debug_assert!(op.ready.is_none());
+                op.ready = Some($time);
+                pool[op.link.index()].insert((op.priority, op.iter, op.bucket, oi));
+            }
+        };
+    }
+
+    // Iteration 0 forward window opens at t=0.
+    if let Some(is) = by_window.get(&(0usize, 0u8)) {
+        let is = is.clone();
+        make_ready!(is, Micros::ZERO);
+    }
+
+    let mut safety = 0u64;
+    let safety_cap = 10_000_000u64 + ops.len() as u64 * 16;
+
+    loop {
+        safety += 1;
+        assert!(safety < safety_cap, "simulator livelock — scheduler bug?");
+
+        let mut progressed = false;
+
+        // --- 1. Dispatch links: serve best ready op if free. ---
+        for k in 0..n_links {
+            if in_flight[k].is_some() {
+                continue;
+            }
+            let free_at = link_free[k].max(Micros::ZERO);
+            // Ops are inserted into the pool at the very event that made
+            // them ready (ready ≤ now always), so the best candidate is
+            // simply the first element in (priority, iter, bucket) order.
+            let candidate = pool[k]
+                .first()
+                .filter(|&&(_, _, _, oi)| ops[oi].ready.unwrap() <= now.max(free_at))
+                .copied();
+            if let Some(key) = candidate {
+                let oi = key.3;
+                pool[k].remove(&key);
+                let start = ops[oi].ready.unwrap().max(link_free[k]);
+                let wire = ops[oi].wire;
+                events_processed += 1;
+                cur_in_flight += 1;
+                peak_in_flight = peak_in_flight.max(cur_in_flight);
+                // `done` stays None until the completion event; while in
+                // flight the tentative end lives in the flight table and
+                // `link_free`, where contention may still move it.
+                match env.contention {
+                    ContentionModel::Kway => {
+                        in_flight[k] = Some(Flight {
+                            oi,
+                            start,
+                            at: start,
+                            rem: wire,
+                            factor: 1.0,
+                            end: start + wire,
+                        });
+                        link_free[k] = start + wire;
+                        // Aggregate sharing: this dispatch changes the
+                        // group's concurrency, so the whole group is
+                        // re-priced — the new transfer picks up the
+                        // factor for the current k, and every paying
+                        // group-mate banks its progress so far and slows
+                        // down for the larger k.
+                        reprice_group(
+                            env,
+                            buckets,
+                            &ops,
+                            &group_of,
+                            &pays,
+                            &mut in_flight,
+                            &mut link_free,
+                            group_of[k],
+                            start,
+                        );
+                    }
+                    ContentionModel::Pairwise => {
+                        let mut end = start + wire;
+                        // One-shot overlap charge: a paying link is
+                        // slowed by the pairwise penalty for the window
+                        // it shares with in-flight same-group transfers.
+                        if pays[k] && !wire.is_zero() {
+                            let mut overlap = Micros::ZERO;
+                            for (j, f) in in_flight.iter().enumerate() {
+                                if j == k || group_of[j] != group_of[k] {
+                                    continue;
+                                }
+                                let Some(f) = f else { continue };
+                                let lo = start.max(f.start);
+                                let hi = end.min(f.end);
+                                if hi > lo {
+                                    overlap += hi - lo;
+                                }
+                            }
+                            if !overlap.is_zero() {
+                                let params = buckets[ops[oi].bucket].params;
+                                end += overlap.scale(env.contention_penalty(params));
+                            }
+                        }
+                        link_free[k] = end;
+                        in_flight[k] = Some(Flight {
+                            oi,
+                            start,
+                            at: start,
+                            rem: wire,
+                            factor: 1.0,
+                            end,
+                        });
+                        // Symmetry: this transfer also slows down any
+                        // *paying* group-mate already in flight — extend
+                        // it by the penalty on the newly shared window
+                        // (the fastest member never pays, mirroring the
+                        // dispatch-time charge above). Both directions
+                        // measure the window against the ends as known at
+                        // this dispatch, so the charge is symmetric to
+                        // first order only; the k-way model re-prices
+                        // these windows exactly instead.
+                        for j in 0..n_links {
+                            if j == k || group_of[j] != group_of[k] || !pays[j] {
+                                continue;
+                            }
+                            let Some(fj) = in_flight[j] else { continue };
+                            let lo = start.max(fj.start);
+                            let hi = end.min(fj.end);
+                            if hi > lo {
+                                let params = buckets[ops[fj.oi].bucket].params;
+                                let extra = (hi - lo).scale(env.contention_penalty(params));
+                                if !extra.is_zero() {
+                                    link_free[j] = fj.end + extra;
+                                    in_flight[j].as_mut().unwrap().end = fj.end + extra;
+                                }
+                            }
+                        }
+                    }
+                }
+                // Foreign segment leg: record its occupancy on the
+                // segment's own stream (hierarchical topologies). The
+                // home-link span is recorded at completion, once the end
+                // can no longer move.
+                if let Some((seg_link, seg_t)) = ops[oi].seg_extra {
+                    seg_busy[seg_link.index()] += seg_t;
+                    record(
+                        &mut timeline,
+                        Span {
+                            stream: StreamId::Link(seg_link),
+                            kind: SpanKind::Comm {
+                                iter: ops[oi].iter,
+                                bucket: ops[oi].bucket,
+                                merged: ops[oi].merged,
+                            },
+                            start,
+                            end: start + seg_t,
+                        },
+                    );
+                }
+                progressed = true;
+            }
+        }
+
+        // --- 2. Dispatch compute if idle and dependencies resolved. ---
+        if !comp_running {
+            match comp {
+                CompTask::Fwd { iter, bucket } => {
+                    // Dependency gate for the very first task of the fwd.
+                    let mut dep_time = Some(if iter == 0 {
+                        Micros::ZERO
+                    } else {
+                        comp_iter_end[iter - 1].expect("prev iter must be done")
+                    });
+                    // Staleness back-pressure: every op launched in
+                    // iterations ≤ iter − max_outstanding must be done
+                    // (the two-queue memory bound; see Schedule docs).
+                    if bucket == 0 && iter >= schedule.max_outstanding_iters.saturating_add(1) {
+                        let horizon = iter - schedule.max_outstanding_iters;
+                        if watermark >= horizon {
+                            dep_time = dep_time.map(|d| d.max(cum_max_done[horizon - 1]));
+                        } else {
+                            dep_time = None;
+                        }
+                    }
+                    match schedule.fwd_dependency {
+                        FwdDependency::Barrier => {
+                            if bucket == 0 && iter > 0 {
+                                // All updates of iterations < iter.
+                                let need = updates_before[iter];
+                                for u in 0..need {
+                                    match update_times[u] {
+                                        Some(t) => {
+                                            dep_time = dep_time.map(|d| d.max(t));
+                                        }
+                                        None => dep_time = None,
+                                    }
+                                }
+                            }
+                        }
+                        FwdDependency::PerBucket => {
+                            if iter > 0 {
+                                let oi = *covers.get(&(iter - 1, bucket)).unwrap_or_else(|| {
+                                    panic!(
+                                        "no op covers grad (iter {}, bucket {bucket})",
+                                        iter - 1
+                                    )
+                                });
+                                // `done` is final only after the
+                                // completion event — an in-flight op's
+                                // tentative end may still be extended by
+                                // contention, so wait rather than gate on
+                                // it (same wall-clock start either way).
+                                match ops[oi].done {
+                                    Some(t) => dep_time = dep_time.map(|d| d.max(t)),
+                                    None => dep_time = None,
+                                }
+                            }
+                        }
+                        FwdDependency::None => {}
+                    }
+                    if let Some(dep) = dep_time {
+                        let start = now.max(dep).max(comp_busy_until);
+                        // Forward-window encode kernels run at the head
+                        // of the iteration's compute (zero without
+                        // lossy codecs).
+                        let mut dur = buckets[bucket].fwd;
+                        if bucket == 0 {
+                            dur += enc_fwd[iter];
+                        }
+                        let end = start + dur;
+                        first_comp_start.get_or_insert(start);
+                        compute_busy += dur;
+                        events_processed += 1;
+                        record(
+                            &mut timeline,
+                            Span {
+                                stream: StreamId::Compute,
+                                kind: SpanKind::Fwd { iter, bucket },
+                                start,
+                                end,
+                            },
+                        );
+                        comp_busy_until = end;
+                        comp_running = true;
+                        progressed = true;
+                    }
+                }
+                CompTask::Bwd { iter, bucket } => {
+                    let start = now.max(comp_busy_until);
+                    // Encode kernels of ops this backward task launches
+                    // extend it — the wire cannot start before its
+                    // gradient is compressed.
+                    let dur = buckets[bucket].bwd
+                        + enc_bwd.get(&(iter, bucket)).copied().unwrap_or(Micros::ZERO);
+                    let end = start + dur;
+                    compute_busy += dur;
+                    events_processed += 1;
+                    record(
+                        &mut timeline,
+                        Span {
+                            stream: StreamId::Compute,
+                            kind: SpanKind::Bwd { iter, bucket },
+                            start,
+                            end,
+                        },
+                    );
+                    comp_busy_until = end;
+                    comp_running = true;
+                    progressed = true;
+                }
+                CompTask::Done => {}
+            }
+        }
+
+        // --- 3. Advance time to the next event. ---
+        let mut next_time: Option<Micros> = None;
+        let consider = |t: Micros, next: &mut Option<Micros>| {
+            if t > now {
+                *next = Some(next.map_or(t, |n: Micros| n.min(t)));
+            }
+        };
+        if comp_running {
+            consider(comp_busy_until, &mut next_time);
+        }
+        for k in 0..n_links {
+            if in_flight[k].is_some() {
+                consider(link_free[k], &mut next_time);
+            }
+            // Idle links need no wake-up: pool entries are ready the
+            // moment they are inserted (see the dispatch invariant), so
+            // an idle link with work is served in the same event round.
+        }
+        // Pending update whose iteration end passed but ops outstanding:
+        // resolved by op-done events, nothing to schedule here.
+
+        if !progressed {
+            match next_time {
+                Some(t) => now = t,
+                None => break, // nothing running, nothing pending
+            }
+        } else {
+            continue;
+        }
+
+        // --- 4. Fire completions at `now`. ---
+        // Link completions — chronologically (earliest projected end
+        // first), because under the k-way model every finalize re-prices
+        // the survivors of its contention group: they speed back up from
+        // the departure instant, and their shortened projections may
+        // themselves fall due within this same round.
+        loop {
+            let mut due: Option<(Micros, usize)> = None;
+            for k in 0..n_links {
+                if let Some(f) = &in_flight[k] {
+                    if f.end <= now && due.map_or(true, |(e, j)| (f.end, k) < (e, j)) {
+                        due = Some((f.end, k));
+                    }
+                }
+            }
+            let Some((done_t, k)) = due else { break };
+            let f = in_flight[k].take().expect("due flight exists");
+            let oi = f.oi;
+            events_processed += 1;
+            cur_in_flight -= 1;
+            // Finalize: contention can no longer move this transfer.
+            ops[oi].done = Some(done_t);
+            seg_busy[k] += done_t - f.start;
+            record(
+                &mut timeline,
+                Span {
+                    stream: StreamId::Link(LinkId(k)),
+                    kind: SpanKind::Comm {
+                        iter: ops[oi].iter,
+                        bucket: ops[oi].bucket,
+                        merged: ops[oi].merged,
+                    },
+                    start: f.start,
+                    end: done_t,
+                },
+            );
+            // Advance the staleness watermark.
+            let op_iter = ops[oi].iter;
+            iter_ops_remaining[op_iter] -= 1;
+            iter_max_done[op_iter] = iter_max_done[op_iter].max(done_t);
+            while watermark < iters && iter_ops_remaining[watermark] == 0 {
+                let prev = if watermark == 0 {
+                    Micros::ZERO
+                } else {
+                    cum_max_done[watermark - 1]
+                };
+                cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
+                watermark += 1;
+            }
+            let u = ops[oi].update_idx;
+            if u < total_updates {
+                update_outstanding[u] -= 1;
+                if update_outstanding[u] == 0 {
+                    if let Some(iter_end) = update_pending_end[u] {
+                        update_times[u] = Some(iter_end.max(done_t));
+                    }
+                }
+            }
+            // Finalize-path re-pricing: the departure shrinks the
+            // group's concurrency, so surviving paying members speed
+            // back up from `done_t` (k-way only — the pairwise model
+            // deliberately never revisits its one-shot charge).
+            if env.contention == ContentionModel::Kway {
+                reprice_group(
+                    env,
+                    buckets,
+                    &ops,
+                    &group_of,
+                    &pays,
+                    &mut in_flight,
+                    &mut link_free,
+                    group_of[k],
+                    done_t,
+                );
+            }
+        }
+        // Compute completion.
+        if comp_running && comp_busy_until <= now {
+            comp_running = false;
+            events_processed += 1;
+            // Advance the task cursor and fire boundary effects.
+            match comp {
+                CompTask::Fwd { iter, bucket } => {
+                    if bucket + 1 < n {
+                        comp = CompTask::Fwd {
+                            iter,
+                            bucket: bucket + 1,
+                        };
+                    } else {
+                        // Backward window of this iteration opens.
+                        if let Some(is) = by_window.get(&(iter, 1u8)) {
+                            let is = is.clone();
+                            make_ready!(is, comp_busy_until);
+                        }
+                        comp = CompTask::Bwd {
+                            iter,
+                            bucket: n - 1,
+                        };
+                    }
+                }
+                CompTask::Bwd { iter, bucket } => {
+                    // This bucket's gradient is ready.
+                    if let Some(is) = by_data.get(&(iter, bucket)) {
+                        let is = is.clone();
+                        make_ready!(is, comp_busy_until);
+                    }
+                    if bucket > 0 {
+                        comp = CompTask::Bwd {
+                            iter,
+                            bucket: bucket - 1,
+                        };
+                    } else {
+                        // Iteration end.
+                        comp_iter_end[iter] = Some(comp_busy_until);
+                        iter_ends.push(comp_busy_until);
+                        if schedule.cycle[iter % cycle_len].update_at_end {
+                            let u = updates_before[iter + 1] - 1;
+                            update_pending_end[u] = Some(comp_busy_until);
+                            if update_outstanding[u] == 0 {
+                                update_times[u] = Some(comp_busy_until);
+                            }
+                        }
+                        if iter + 1 < iters {
+                            // Next iteration's forward window opens.
+                            if let Some(is) = by_window.get(&(iter + 1, 0u8)) {
+                                let is = is.clone();
+                                make_ready!(is, comp_busy_until);
+                            }
+                            comp = CompTask::Fwd {
+                                iter: iter + 1,
+                                bucket: 0,
+                            };
+                        } else {
+                            comp = CompTask::Done;
+                        }
+                    }
+                }
+                CompTask::Done => {}
+            }
+        }
+    }
+
+    // ---- Post-conditions & metrics. ----
+    assert_eq!(iter_ends.len(), iters, "compute did not finish all iterations");
+    for (oi, op) in ops.iter().enumerate() {
+        assert!(op.done.is_some(), "op {oi} never executed: {op:?}");
+    }
+    let update_times: Vec<Micros> = update_times
+        .into_iter()
+        .enumerate()
+        .map(|(u, t)| t.unwrap_or_else(|| panic!("update {u} never fired")))
+        .collect();
+
+    let total = iter_ends
+        .last()
+        .copied()
+        .unwrap_or(Micros::ZERO)
+        .max(update_times.last().copied().unwrap_or(Micros::ZERO))
+        .max(
+            ops.iter()
+                .map(|o| o.done.unwrap())
+                .max()
+                .unwrap_or(Micros::ZERO),
+        );
+
+    // Steady-state iteration time: average over post-warm-up iterations.
+    let w = opts.warmup.min(iters - 1);
+    let steady_span = iter_ends[iters - 1] - if w == 0 { Micros::ZERO } else { iter_ends[w - 1] };
+    let steady_iter_time = steady_span / (iters - w) as u64;
+
+    let compute_span_end = iter_ends[iters - 1];
+    let compute_span_start = first_comp_start.unwrap_or(Micros::ZERO);
+    let compute_bubbles = (compute_span_end - compute_span_start).saturating_sub(compute_busy);
+
+    // Per-link busy = segment occupancy: home span durations finalized
+    // at completion (incl. overlap contention under either model) plus
+    // foreign hierarchical legs charged at dispatch. Uncontended flat
+    // topologies reduce to the sum of executed wire times.
+    let link_busy = seg_busy
+        .into_iter()
+        .enumerate()
+        .map(|(k, busy)| (LinkId(k), busy))
+        .collect();
+
+    SimResult {
+        scheme: schedule.scheme.clone(),
+        iter_ends,
+        update_times,
+        total,
+        compute_bubbles,
+        steady_iter_time,
+        link_busy,
+        link_names: env.link_names(),
+        link_codecs: env.link_codec_names(),
+        contention: env.contention.name().to_string(),
+        link_traffic,
+        events_processed,
+        peak_in_flight,
+        timeline,
+    }
+}

@@ -1,0 +1,281 @@
+//! Golden-equivalence suite for the indexed-event DES engine: on every
+//! preset × topology × scheme × contention-model combination the indexed
+//! engine (`simulate`) must reproduce the retired scan engine
+//! (`simulate_scan`) **bit-for-bit** — the full `SimResult`, timeline
+//! spans included. The scan engine is kept verbatim in `sim::reference`
+//! as the oracle; any divergence is a bug in the indexed hot path, never
+//! an acceptable drift.
+
+use deft::bench::{partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::links::{ClusterEnv, ContentionModel, LinkId, LinkPreset, LinkSpec, Topology};
+use deft::models::BucketProfile;
+use deft::sched::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
+use deft::sim::{simulate, simulate_scan, SimOptions};
+use deft::util::Micros;
+
+const ALL_SCHEMES: [Scheme; 5] = [
+    Scheme::PytorchDdp,
+    Scheme::Bytescheduler,
+    Scheme::UsByte,
+    Scheme::Deft,
+    Scheme::DeftNoMultilink,
+];
+
+/// Run both engines on one pipeline config and assert full equality.
+fn assert_engines_agree(
+    workload: &str,
+    scheme: Scheme,
+    env: &ClusterEnv,
+    iterations: usize,
+    record_timeline: bool,
+    label: &str,
+) {
+    let w = workload_by_name(workload).unwrap();
+    let buckets = partition_for(&w, scheme, env, PAPER_PARTITION, PAPER_DDP_MB).unwrap();
+    let scheduler = scheduler_for(scheme, true, env);
+    let schedule = scheduler.schedule(&buckets);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let opts = SimOptions {
+        iterations: iterations.max(warmup * 3 + 4),
+        warmup,
+        record_timeline,
+    };
+    let scan = simulate_scan(&buckets, &schedule, env, &opts);
+    let indexed = simulate(&buckets, &schedule, env, &opts);
+    assert_eq!(scan, indexed, "engines diverged on {label}");
+    assert!(scan.events_processed > 0, "{label}: no events counted");
+}
+
+/// The flat and hierarchical (8 ranks/node) variants of a preset, under
+/// both contention models.
+fn env_grid(preset: LinkPreset) -> Vec<(String, ClusterEnv)> {
+    let mut envs = Vec::new();
+    for (topo, base) in [
+        ("flat", preset.env()),
+        (
+            "hier8",
+            preset
+                .env()
+                .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1))),
+        ),
+    ] {
+        for model in [ContentionModel::Kway, ContentionModel::Pairwise] {
+            envs.push((
+                format!("{}/{topo}/{}", preset.name(), model.name()),
+                base.clone().with_contention_model(model),
+            ));
+        }
+    }
+    envs
+}
+
+/// Every preset × topology × contention model × scheme on the small
+/// transformer: the exhaustive sweep (120 engine pairs).
+#[test]
+fn indexed_engine_matches_scan_on_the_full_grid() {
+    for preset in LinkPreset::ALL {
+        for (label, env) in env_grid(preset) {
+            for scheme in ALL_SCHEMES {
+                assert_engines_agree(
+                    "small",
+                    scheme,
+                    &env,
+                    24,
+                    true,
+                    &format!("{label}/{}", scheme.name()),
+                );
+            }
+        }
+    }
+}
+
+/// The real evaluation workloads on the paper testbed, all schemes, with
+/// the full span timeline compared too.
+#[test]
+fn indexed_engine_matches_scan_on_real_workloads() {
+    let env = ClusterEnv::paper_testbed();
+    for workload in ["vgg19", "gpt2"] {
+        for scheme in ALL_SCHEMES {
+            assert_engines_agree(
+                workload,
+                scheme,
+                &env,
+                40,
+                true,
+                &format!("paper/{workload}/{}", scheme.name()),
+            );
+        }
+    }
+}
+
+/// The no-timeline fast path must agree with the scan engine running the
+/// same options, and with its own timeline-recording run on every
+/// non-timeline field.
+#[test]
+fn no_timeline_fast_path_matches_scan_and_its_own_timeline_run() {
+    let env = ClusterEnv::paper_testbed();
+    for scheme in [Scheme::PytorchDdp, Scheme::Deft] {
+        assert_engines_agree(
+            "vgg19",
+            scheme,
+            &env,
+            30,
+            false,
+            &format!("no-timeline/{}", scheme.name()),
+        );
+
+        let w = workload_by_name("vgg19").unwrap();
+        let buckets = partition_for(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB).unwrap();
+        let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+        let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+        let mk = |record_timeline| SimOptions {
+            iterations: warmup * 3 + 30,
+            warmup,
+            record_timeline,
+        };
+        let with = simulate(&buckets, &schedule, &env, &mk(true));
+        let without = simulate(&buckets, &schedule, &env, &mk(false));
+        assert!(!with.timeline.spans.is_empty());
+        assert!(without.timeline.spans.is_empty());
+        let mut stripped = with.clone();
+        stripped.timeline = Default::default();
+        assert_eq!(stripped, without, "{}: metrics depend on span recording", scheme.name());
+    }
+}
+
+// ---- Hand-built contention scenarios (from tests/contention_model.rs):
+// the k-way staircase re-pricing and pairwise extension paths exercise
+// the engine's repricing code far harder than any scheduler output. ----
+
+/// All scenario tensors sit on the Table IV plateau.
+const PARAMS: u64 = 33_554_432;
+
+fn bucket(id: usize, comm: Micros) -> BucketProfile {
+    BucketProfile {
+        id,
+        params: PARAMS,
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm,
+    }
+}
+
+fn op(bucket: usize, link: LinkId, grad_age: usize) -> CommOp {
+    CommOp {
+        bucket,
+        link,
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age,
+        merged: 1,
+        update_offset: 0,
+    }
+}
+
+fn schedule_of(bwd_ops: Vec<CommOp>) -> Schedule {
+    let s = Schedule {
+        scheme: "equivalence-probe".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops,
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+    };
+    s.validate().unwrap();
+    s
+}
+
+/// Three links on one NIC: a (μ1, exempt), b (μ2), c (μ4) — membership
+/// walks 1 → 2 → 3 → 2 → 1 across five re-pricing events.
+fn staircase() -> (Vec<BucketProfile>, Schedule, ClusterEnv) {
+    let env = ClusterEnv::paper_testbed().with_links(vec![
+        LinkSpec::new("a", 1.0).with_group(0),
+        LinkSpec::new("b", 2.0).with_group(0),
+        LinkSpec::new("c", 4.0).with_group(0),
+    ]);
+    let buckets = vec![
+        bucket(0, Micros(50_000)),
+        bucket(1, Micros(30_000)),
+        bucket(2, Micros(30_000)),
+    ];
+    let schedule = schedule_of(vec![
+        op(2, LinkId(2), 0),
+        op(1, LinkId(1), 0),
+        op(0, LinkId(0), 0),
+    ]);
+    (buckets, schedule, env)
+}
+
+/// The 3-transfer k-way staircase and its pairwise counterpart: both
+/// engines must produce identical piecewise timelines — and the k-way one
+/// must still land on the hand-computed 197 601 µs total pinned in
+/// `tests/contention_model.rs`.
+#[test]
+fn staircase_repricing_is_identical_across_engines() {
+    let (buckets, schedule, env) = staircase();
+    let opts = SimOptions {
+        iterations: 1,
+        warmup: 0,
+        record_timeline: true,
+    };
+    for model in [ContentionModel::Kway, ContentionModel::Pairwise] {
+        let env = env.clone().with_contention_model(model);
+        let scan = simulate_scan(&buckets, &schedule, &env, &opts);
+        let indexed = simulate(&buckets, &schedule, &env, &opts);
+        assert_eq!(scan, indexed, "staircase diverged under {}", model.name());
+    }
+    let kway = simulate(&buckets, &schedule, &env, &opts);
+    assert_eq!(kway.total, Micros(197_601));
+    let pair = simulate(
+        &buckets,
+        &schedule,
+        &env.with_contention_model(ContentionModel::Pairwise),
+        &opts,
+    );
+    assert_eq!(pair.total, Micros(185_746));
+}
+
+/// A group-mate finishing early shrinks the payer's flight at finalize —
+/// the indexed engine's lazy-invalidation path must fire the shrunk
+/// completion at the same instant the scan engine's rescan does.
+#[test]
+fn finalize_shrink_fires_identically_across_engines() {
+    let buckets = vec![bucket(0, Micros(20_000)), bucket(1, Micros(60_000))];
+    let schedule = schedule_of(vec![op(1, LinkId(1), 0), op(0, LinkId(0), 0)]);
+    let env = LinkPreset::SingleNic.env();
+    let opts = SimOptions {
+        iterations: 1,
+        warmup: 0,
+        record_timeline: true,
+    };
+    let scan = simulate_scan(&buckets, &schedule, &env, &opts);
+    let indexed = simulate(&buckets, &schedule, &env, &opts);
+    assert_eq!(scan, indexed);
+}
+
+/// The memoized contention staircase the indexed engine prices from must
+/// agree entry-for-entry with the closed-form `contention_factor`.
+#[test]
+fn contention_staircase_memo_matches_the_closed_form() {
+    for preset in LinkPreset::ALL {
+        let env = preset.env();
+        for params in [0u64, 4_194_304, PARAMS, 200_000_000] {
+            let stair = env.contention_staircase(10, params);
+            assert_eq!(stair.max_k(), 10);
+            for k in 0..=10usize {
+                assert_eq!(
+                    stair.factor(k),
+                    env.contention_factor(k, params),
+                    "{}: staircase[{k}] drifted at {params} params",
+                    preset.name()
+                );
+            }
+        }
+    }
+}

@@ -241,9 +241,10 @@ fn scheduling_is_deterministic_under_the_registry() {
 #[test]
 fn pipeline_orderings_survive_the_refactor() {
     let env = ClusterEnv::paper_testbed();
-    let w = workload_by_name("vgg19");
-    let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
-    let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+    let w = workload_by_name("vgg19").unwrap();
+    let ddp =
+        run_pipeline(&w, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
+    let deft = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
     assert!(deft.sim.steady_iter_time < ddp.sim.steady_iter_time);
     // DeFT's heterogeneous schedule uses the slow link.
     assert!(deft

@@ -17,8 +17,9 @@ fn env() -> ClusterEnv {
 }
 
 fn iter_time(scheme: Scheme, workload: &str) -> Micros {
-    let w = workload_by_name(workload);
+    let w = workload_by_name(workload).unwrap();
     run_pipeline(&w, scheme, &env(), PAPER_PARTITION, PAPER_DDP_MB, 40)
+        .unwrap()
         .sim
         .steady_iter_time
 }
@@ -70,9 +71,10 @@ fn deft_speedup_within_paper_band() {
 /// workload; DeFT should cut the bubble ratio dramatically.
 #[test]
 fn deft_reduces_bubbles() {
-    let w = workload_by_name("vgg19");
-    let ddp = run_pipeline(&w, Scheme::PytorchDdp, &env(), PAPER_PARTITION, PAPER_DDP_MB, 40);
-    let deft = run_pipeline(&w, Scheme::Deft, &env(), PAPER_PARTITION, PAPER_DDP_MB, 40);
+    let w = workload_by_name("vgg19").unwrap();
+    let ddp =
+        run_pipeline(&w, Scheme::PytorchDdp, &env(), PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
+    let deft = run_pipeline(&w, Scheme::Deft, &env(), PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
     assert!(ddp.sim.bubble_ratio() > 0.3, "ddp bubbles {}", ddp.sim.bubble_ratio());
     assert!(
         deft.sim.bubble_ratio() < 0.5 * ddp.sim.bubble_ratio(),
@@ -270,13 +272,15 @@ fn single_bucket_degenerate_profiles() {
 /// Bandwidth monotonicity: halving bandwidth must not speed anything up.
 #[test]
 fn bandwidth_monotonicity() {
-    let w = workload_by_name("vgg19");
+    let w = workload_by_name("vgg19").unwrap();
     for scheme in Scheme::ALL {
         let t40 = run_pipeline(&w, scheme, &env(), PAPER_PARTITION, PAPER_DDP_MB, 30)
+            .unwrap()
             .sim
             .steady_iter_time;
         let env10 = env().with_bandwidth(10.0);
         let t10 = run_pipeline(&w, scheme, &env10, PAPER_PARTITION, PAPER_DDP_MB, 30)
+            .unwrap()
             .sim
             .steady_iter_time;
         assert!(t10 >= t40, "{scheme:?}: 10Gbps {t10} faster than 40Gbps {t40}");

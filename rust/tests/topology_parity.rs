@@ -209,8 +209,8 @@ fn hierarchical_topology_runs_the_full_pipeline() {
     let env = LinkPreset::NvlinkIbTcp
         .env()
         .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
-    let w = workload_by_name("vgg19");
-    let r = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40);
+    let w = workload_by_name("vgg19").unwrap();
+    let r = run_pipeline(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB, 40).unwrap();
     r.schedule.validate().unwrap();
     assert!(r.sim.steady_iter_time.as_us() > 0);
 
