@@ -116,7 +116,8 @@ fn main() {
 
     // A rejected codec forces the lifecycle back onto raw links.
     let lossy = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
-    let rep = run_lifecycle(&w, &lossy, &LifecycleOptions::default());
+    let rep =
+        run_lifecycle(&w, &lossy, &LifecycleOptions::default()).expect("lifecycle lint gate");
     println!(
         "lifecycle on rank1-gloo: codec_fallback = {} (attempts: {:?})",
         rep.codec_fallback,

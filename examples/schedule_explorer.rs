@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example schedule_explorer -- [workload]
 //!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]
-//!        [--contention-model <pairwise|kway>]`
+//!        [--contention-model <pairwise|kway>] [--lint [--lint-json <path>]]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
 //!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
 //!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
@@ -13,9 +13,16 @@
 //!  --codec attaches a compression codec — raw | fp16 | rank<k> — to a
 //!  registry link by name, e.g. `--codec tcp=fp16`; repeatable;
 //!  --contention-model selects how shared-NIC contention is priced —
-//!  aggregate k-way sharing (default) or the legacy pairwise rule)
+//!  aggregate k-way sharing (default) or the legacy pairwise rule;
+//!  --lint skips the timelines and instead runs the static verifier
+//!  (`deft::analysis`) over the full model-zoo × preset × topology ×
+//!  scheme grid, printing one status row per plan and exiting non-zero
+//!  if any plan carries an error diagnostic; --lint-json additionally
+//!  writes every diagnostic as a JSON line tagged with its grid cell)
 
-use deft::bench::{run_pipeline, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::bench::{
+    partition_for, run_pipeline, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION,
+};
 use deft::config::Scheme;
 use deft::links::{Codec, ContentionModel, LinkId, LinkPreset, Topology};
 use deft::metrics::{gantt_steady, link_table};
@@ -31,7 +38,19 @@ fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>, ContentionM
     let mut contention = ContentionModel::default();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
-        let looked_up = if let Some(v) = a.strip_prefix("--links=") {
+        let looked_up = if a == "--lint" {
+            let mut lint_json: Option<String> = None;
+            while let Some(rest) = args.next() {
+                if let Some(v) = rest.strip_prefix("--lint-json=") {
+                    lint_json = Some(v.to_string());
+                } else if rest == "--lint-json" {
+                    lint_json = Some(args.next().expect("--lint-json needs a path"));
+                } else {
+                    panic!("--lint takes only --lint-json <path>, got `{rest}`");
+                }
+            }
+            run_lint_grid(lint_json.as_deref())
+        } else if let Some(v) = a.strip_prefix("--links=") {
             Some(v.to_string())
         } else if a == "--links" {
             Some(args.next().expect("--links needs a preset name"))
@@ -88,6 +107,89 @@ fn parse_codec_arg(spec: &str) -> (String, Codec) {
 fn parse_contention_arg(name: &str) -> ContentionModel {
     ContentionModel::parse(name)
         .unwrap_or_else(|| panic!("unknown contention model `{name}` (known: pairwise | kway)"))
+}
+
+/// `--lint`: prove every plan the four schedulers emit over the full
+/// model-zoo × link-preset × topology grid sound under the static
+/// verifier, without running the simulator. One status row per plan;
+/// every diagnostic (errors *and* warnings) goes to `--lint-json` as a
+/// JSON line tagged with its grid cell. Exits 1 iff any plan carries an
+/// error-severity diagnostic — the CI gate keys off the exit code.
+fn run_lint_grid(lint_json: Option<&str>) -> ! {
+    use deft::analysis::{lint_plan, LintOptions};
+    use std::fmt::Write as _;
+
+    let workloads = ["resnet101", "vgg19", "gpt2", "llama2"];
+    let mut schemes = Scheme::ALL.to_vec();
+    schemes.push(Scheme::DeftNoMultilink);
+    let opts = LintOptions::default();
+    let (mut jsonl, mut plans, mut skipped) = (String::new(), 0usize, 0usize);
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    println!("stat workload   preset       topo  scheme             diagnostics");
+    for wname in workloads {
+        let workload = workload_by_name(wname).expect("zoo workload");
+        for preset in LinkPreset::ALL {
+            for topo in ["flat", "hier8"] {
+                let mut env = preset.env();
+                if topo == "hier8" {
+                    env = env.with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
+                }
+                for &scheme in &schemes {
+                    let buckets = match partition_for(
+                        &workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB,
+                    ) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            skipped += 1;
+                            println!(
+                                "skip {wname:10} {:12} {topo:5} {:18} partition: {e:#}",
+                                preset.name(),
+                                scheme.name()
+                            );
+                            continue;
+                        }
+                    };
+                    let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+                    let report = lint_plan(&schedule, &buckets, &env, &opts);
+                    plans += 1;
+                    errors += report.error_count();
+                    warnings += report.warning_count();
+                    for d in &report.diagnostics {
+                        writeln!(
+                            jsonl,
+                            "{{\"workload\":\"{wname}\",\"preset\":\"{}\",\"topology\":\"{topo}\",\"scheme\":\"{}\",{}}}",
+                            preset.name(),
+                            scheme.name(),
+                            d.to_json_fields()
+                        )
+                        .expect("string write");
+                    }
+                    println!(
+                        "{:4} {wname:10} {:12} {topo:5} {:18} {} error(s), {} warning(s)",
+                        if report.is_clean() { "ok" } else { "FAIL" },
+                        preset.name(),
+                        scheme.name(),
+                        report.error_count(),
+                        report.warning_count()
+                    );
+                    if !report.is_clean() {
+                        for line in report.render_text().lines() {
+                            println!("     {line}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(path) = lint_json {
+        std::fs::write(path, &jsonl)
+            .unwrap_or_else(|e| panic!("writing lint report `{path}`: {e}"));
+        println!("wrote diagnostics to {path}");
+    }
+    println!(
+        "lint grid: {plans} plan(s) linted, {skipped} skipped, {errors} error(s), {warnings} warning(s)"
+    );
+    std::process::exit(i32::from(errors > 0));
 }
 
 fn main() {

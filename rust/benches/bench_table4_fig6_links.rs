@@ -143,6 +143,7 @@ fn main() {
         batch_multipliers: vec![1],
         warmup_iters: 0,
         max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
     };
     probe_schedule.validate().expect("probe schedule");
     let mut t2b = Table::new(&[

@@ -1,0 +1,549 @@
+//! Static verification of DeFT schedule artifacts.
+//!
+//! The DES engine discovers a malformed or infeasible plan only while
+//! executing it — an `assert!` deep in materialization, or a silently
+//! mispriced run. This module proves (or refutes) the paper's invariants
+//! over [`Schedule`]/[`crate::sched::IterPlan`] values **without running
+//! the simulator**:
+//!
+//! * **dependency soundness** — no wire departs before its producing
+//!   backward's data-ready point (a fresh gradient cannot ship in the
+//!   forward window), and `FwdDependency::PerBucket` coverage is
+//!   satisfiable within the window that consumes it (no deadlock);
+//! * **staleness** — delayed updates stay inside the schedule's
+//!   `max_outstanding_iters` bound and the update bookkeeping
+//!   (`updates_per_cycle`, batch multipliers, `update_offset`) is
+//!   consistent (§IV.C.1);
+//! * **capacity** — per-link, per-window communication load fits the
+//!   knapsack capacity under the static contention factor and the
+//!   codec-effective μ (§III.D), reproducing the solver's own `Micros`
+//!   arithmetic exactly;
+//! * **precision** — a schedule routing over a lossy
+//!   [`crate::links::Codec`] must carry a passing Preserver verdict
+//!   (§IV.C.3).
+//!
+//! Findings are typed [`Diagnostic`]s with stable codes (`DEFT-E001`…)
+//! rendered human-readably and as JSON lines; see `docs/diagnostics.md`
+//! for the full table. [`lint_schedule`] runs the plan-only structural
+//! checks (it backs [`Schedule::validate`]); [`lint_plan`] adds every
+//! check that needs the bucket profile and cluster environment. The
+//! verifier is itself verified differentially: [`apply_mutation`]
+//! perturbs known-good plans and the test suite asserts each mutation
+//! class trips its designated code.
+
+mod mutate;
+mod verifier;
+
+pub use mutate::{apply_mutation, MutatedCase, MutationClass};
+pub use verifier::{lint_plan, lint_schedule, LintOptions};
+
+use crate::links::LinkId;
+use crate::sched::{Schedule, Stage};
+use crate::util::Micros;
+use std::fmt;
+
+/// Severity of a [`Diagnostic`]. Errors make a plan unrunnable or
+/// mispriced; warnings flag suspicious-but-executable structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Stable diagnostic codes. The wire strings (`DEFT-E001`…) are frozen:
+/// tests, CI reports, and docs key on them, so new checks append new
+/// numbers and retired checks leave holes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// `DEFT-E001` — op routes over a link the registry does not have.
+    UnknownLink,
+    /// `DEFT-E002` — op references a bucket outside the profile.
+    UnknownBucket,
+    /// `DEFT-E003` — a current-iteration gradient ships in the forward
+    /// window (its producing backward has not run: no data-ready point).
+    FreshGradInForward,
+    /// `DEFT-E004` — `PerBucket`: some (iteration, bucket) gradient is
+    /// never covered by any transfer, deadlocking the next forward.
+    UncoveredGradient,
+    /// `DEFT-E005` — `PerBucket`: the covering transfer launches after
+    /// the forward that consumes it.
+    LateCoverage,
+    /// `DEFT-E006` — the steady-state cycle has no iterations.
+    EmptyCycle,
+    /// `DEFT-E007` — `update_at_end` markers disagree with
+    /// `updates_per_cycle`.
+    UpdateMarkerMismatch,
+    /// `DEFT-E008` — batch multipliers don't partition the cycle
+    /// (count ≠ updates, Σk ≠ cycle length, or some k = 0).
+    MultiplierMismatch,
+    /// `DEFT-E009` — the identical op appears twice in one window.
+    DuplicateOp,
+    /// `DEFT-E010` — a bucket ships more gradients per cycle than the
+    /// cycle produces.
+    OverShippedGradient,
+    /// `DEFT-E011` — a bucket ships fewer gradients per cycle than the
+    /// cycle produces (gradients silently dropped).
+    UnderShippedGradient,
+    /// `DEFT-E012` — an op's oldest merged gradient exceeds the
+    /// schedule's `max_outstanding_iters` staleness bound.
+    StalenessBound,
+    /// `DEFT-E013` — `update_offset` points past `updates_per_cycle`.
+    UpdateOffsetOutOfRange,
+    /// `DEFT-E014` — per-link window load exceeds the knapsack capacity
+    /// (§III.D) under the recorded solver scale.
+    CapacityOverflow,
+    /// `DEFT-E015` — a force-shipped oversized bucket is not amortized
+    /// by the iterations it merges (the debt can never be repaid).
+    ForceShipUnamortized,
+    /// `DEFT-E016` — the schedule routes over a lossy codec without a
+    /// passing Preserver verdict.
+    UngatedLossyRoute,
+    /// `DEFT-W001` — an iteration ships nothing and applies no update.
+    EmptyIteration,
+    /// `DEFT-W002` — an op's `stage` disagrees with the window vector
+    /// holding it (the engine windows by `stage`; the vec is ordering).
+    WindowMismatch,
+    /// `DEFT-W003` — an op merges zero gradients (ships nothing).
+    DegenerateOp,
+}
+
+impl Code {
+    pub const ALL: [Code; 19] = [
+        Code::UnknownLink,
+        Code::UnknownBucket,
+        Code::FreshGradInForward,
+        Code::UncoveredGradient,
+        Code::LateCoverage,
+        Code::EmptyCycle,
+        Code::UpdateMarkerMismatch,
+        Code::MultiplierMismatch,
+        Code::DuplicateOp,
+        Code::OverShippedGradient,
+        Code::UnderShippedGradient,
+        Code::StalenessBound,
+        Code::UpdateOffsetOutOfRange,
+        Code::CapacityOverflow,
+        Code::ForceShipUnamortized,
+        Code::UngatedLossyRoute,
+        Code::EmptyIteration,
+        Code::WindowMismatch,
+        Code::DegenerateOp,
+    ];
+
+    /// The frozen wire string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::UnknownLink => "DEFT-E001",
+            Code::UnknownBucket => "DEFT-E002",
+            Code::FreshGradInForward => "DEFT-E003",
+            Code::UncoveredGradient => "DEFT-E004",
+            Code::LateCoverage => "DEFT-E005",
+            Code::EmptyCycle => "DEFT-E006",
+            Code::UpdateMarkerMismatch => "DEFT-E007",
+            Code::MultiplierMismatch => "DEFT-E008",
+            Code::DuplicateOp => "DEFT-E009",
+            Code::OverShippedGradient => "DEFT-E010",
+            Code::UnderShippedGradient => "DEFT-E011",
+            Code::StalenessBound => "DEFT-E012",
+            Code::UpdateOffsetOutOfRange => "DEFT-E013",
+            Code::CapacityOverflow => "DEFT-E014",
+            Code::ForceShipUnamortized => "DEFT-E015",
+            Code::UngatedLossyRoute => "DEFT-E016",
+            Code::EmptyIteration => "DEFT-W001",
+            Code::WindowMismatch => "DEFT-W002",
+            Code::DegenerateOp => "DEFT-W003",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::EmptyIteration | Code::WindowMismatch | Code::DegenerateOp => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line statement of the invariant the code enforces (shared by
+    /// `docs/diagnostics.md` and rendered reports).
+    pub fn invariant(self) -> &'static str {
+        match self {
+            Code::UnknownLink => "every op routes over a registered link",
+            Code::UnknownBucket => "every op references a profiled bucket",
+            Code::FreshGradInForward => {
+                "a wire never starts before its producing backward's data-ready point"
+            }
+            Code::UncoveredGradient => {
+                "per-bucket forward dependencies are covered by some transfer"
+            }
+            Code::LateCoverage => "the covering transfer launches no later than the \
+                 forward window that consumes it",
+            Code::EmptyCycle => "the steady-state cycle is non-empty",
+            Code::UpdateMarkerMismatch => "update markers count updates_per_cycle exactly",
+            Code::MultiplierMismatch => "batch multipliers k_i partition the cycle (Σk = L)",
+            Code::DuplicateOp => "no window launches the identical op twice",
+            Code::OverShippedGradient => "a cycle ships at most one gradient set per iteration",
+            Code::UnderShippedGradient => "every produced gradient is eventually shipped",
+            Code::StalenessBound => "merged gradient age stays within max_outstanding_iters",
+            Code::UpdateOffsetOutOfRange => "update offsets resolve within the cycle's updates",
+            Code::CapacityOverflow => {
+                "per-link window load fits the knapsack capacity (§III.D)"
+            }
+            Code::ForceShipUnamortized => {
+                "a force-shipped oversized bucket is amortized by its merged iterations"
+            }
+            Code::UngatedLossyRoute => "lossy codec routes carry a passing Preserver verdict",
+            Code::EmptyIteration => "iterations do useful work (ship or update)",
+            Code::WindowMismatch => "op stage agrees with its window vector",
+            Code::DegenerateOp => "every op ships at least one merged gradient",
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Where in the schedule a diagnostic anchors. All fields optional: a
+/// schedule-level finding leaves everything `None`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Location {
+    /// Cycle position (0-based iteration within the steady cycle).
+    pub iter: Option<usize>,
+    /// Launch window.
+    pub stage: Option<Stage>,
+    pub bucket: Option<usize>,
+    pub link: Option<LinkId>,
+}
+
+impl Location {
+    pub fn schedule() -> Location {
+        Location::default()
+    }
+
+    pub fn iteration(iter: usize) -> Location {
+        Location {
+            iter: Some(iter),
+            ..Location::default()
+        }
+    }
+
+    pub fn bucket(bucket: usize) -> Location {
+        Location {
+            bucket: Some(bucket),
+            ..Location::default()
+        }
+    }
+
+    pub fn iter_bucket(iter: usize, bucket: usize) -> Location {
+        Location {
+            iter: Some(iter),
+            bucket: Some(bucket),
+            ..Location::default()
+        }
+    }
+
+    pub fn window_link(iter: usize, stage: Stage, link: LinkId) -> Location {
+        Location {
+            iter: Some(iter),
+            stage: Some(stage),
+            link: Some(link),
+            ..Location::default()
+        }
+    }
+
+    pub fn op(iter: usize, stage: Stage, bucket: usize, link: LinkId) -> Location {
+        Location {
+            iter: Some(iter),
+            stage: Some(stage),
+            bucket: Some(bucket),
+            link: Some(link),
+        }
+    }
+
+    pub fn link(link: LinkId) -> Location {
+        Location {
+            link: Some(link),
+            ..Location::default()
+        }
+    }
+}
+
+fn stage_str(stage: Stage) -> &'static str {
+    match stage {
+        Stage::Forward => "fwd",
+        Stage::Backward => "bwd",
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn sep(f: &mut fmt::Formatter<'_>, wrote: &mut bool) -> fmt::Result {
+            if *wrote {
+                f.write_str(" ")?;
+            }
+            *wrote = true;
+            Ok(())
+        }
+        let mut wrote = false;
+        if let Some(t) = self.iter {
+            sep(f, &mut wrote)?;
+            write!(f, "iter {t}")?;
+        }
+        if let Some(s) = self.stage {
+            sep(f, &mut wrote)?;
+            f.write_str(stage_str(s))?;
+        }
+        if let Some(b) = self.bucket {
+            sep(f, &mut wrote)?;
+            write!(f, "bucket {b}")?;
+        }
+        if let Some(l) = self.link {
+            sep(f, &mut wrote)?;
+            write!(f, "link#{}", l.index())?;
+        }
+        if !wrote {
+            f.write_str("schedule")?;
+        }
+        Ok(())
+    }
+}
+
+/// One typed lint finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(code: Code, location: Location, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            location,
+            message: message.into(),
+        }
+    }
+
+    /// The diagnostic's JSON fields, brace-less (`"code":…,"message":…`)
+    /// so callers can prepend run context (workload, preset, scheme)
+    /// into the same object.
+    pub fn to_json_fields(&self) -> String {
+        let mut out = String::with_capacity(96);
+        out.push_str("\"code\":\"");
+        out.push_str(self.code.as_str());
+        out.push_str("\",\"severity\":\"");
+        out.push_str(self.severity.as_str());
+        out.push('"');
+        if let Some(t) = self.location.iter {
+            out.push_str(&format!(",\"iter\":{t}"));
+        }
+        if let Some(s) = self.location.stage {
+            out.push_str(&format!(",\"stage\":\"{}\"", stage_str(s)));
+        }
+        if let Some(b) = self.location.bucket {
+            out.push_str(&format!(",\"bucket\":{b}"));
+        }
+        if let Some(l) = self.location.link {
+            out.push_str(&format!(",\"link\":{}", l.index()));
+        }
+        out.push_str(",\"message\":\"");
+        out.push_str(&esc(&self.message));
+        out.push('"');
+        out
+    }
+
+    /// The diagnostic as one standalone JSON object.
+    pub fn to_json(&self) -> String {
+        format!("{{{}}}", self.to_json_fields())
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} [{}]: {}",
+            self.code, self.severity, self.location, self.message
+        )
+    }
+}
+
+/// JSON string escaping (same dialect as `bench::trajectory`'s writer:
+/// backslash, quote, and control characters only).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Per-(iteration, window, link) capacity accounting emitted by the
+/// capacity lint: `load` = Σ reference-time comm of the window's
+/// regularly-packed ops, `cap` = the knapsack capacity the solver packed
+/// against (codec-effective μ, static contention, recorded scale).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowLoad {
+    pub iter: usize,
+    pub stage: Stage,
+    pub link: LinkId,
+    pub load: Micros,
+    pub cap: Micros,
+}
+
+/// The full result of a lint pass.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Capacity accounting (only populated for knapsack-governed —
+    /// `FwdDependency::None` — schedules linted with a profile).
+    pub loads: Vec<WindowLoad>,
+    /// Per-link reference-time communication launched per cycle.
+    pub link_ref_comm: Vec<Micros>,
+    /// Per-link raw gradient bytes launched per cycle (4 B/param per
+    /// transfer, matching `SimResult::link_traffic` accounting).
+    pub link_raw_bytes: Vec<u64>,
+}
+
+impl LintReport {
+    pub(crate) fn push(&mut self, code: Code, location: Location, message: impl Into<String>) {
+        self.diagnostics.push(Diagnostic::new(code, location, message));
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// Clean = zero error-severity diagnostics (warnings allowed).
+    pub fn is_clean(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.errors().next()
+    }
+
+    pub fn has_code(&self, code: Code) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Human-readable multi-line rendering.
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "lint: {} error(s), {} warning(s)\n",
+            self.error_count(),
+            self.warning_count()
+        );
+        for d in &self.diagnostics {
+            out.push_str("  ");
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// One JSON object per diagnostic, newline-separated.
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_json());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for code in Code::ALL {
+            assert!(seen.insert(code.as_str()), "duplicate wire string for {code:?}");
+            let s = code.as_str();
+            assert!(s.starts_with("DEFT-E") || s.starts_with("DEFT-W"));
+            assert_eq!(
+                code.severity(),
+                if s.starts_with("DEFT-W") {
+                    Severity::Warning
+                } else {
+                    Severity::Error
+                },
+                "{s}: wire prefix disagrees with severity"
+            );
+            assert!(!code.invariant().is_empty());
+        }
+        assert_eq!(seen.len(), Code::ALL.len());
+    }
+
+    #[test]
+    fn rendering_is_stable() {
+        let d = Diagnostic::new(
+            Code::CapacityOverflow,
+            Location::window_link(3, Stage::Backward, LinkId(1)),
+            "load 12000 µs exceeds capacity 9000 µs",
+        );
+        assert_eq!(
+            d.to_string(),
+            "DEFT-E014 error [iter 3 bwd link#1]: load 12000 µs exceeds capacity 9000 µs"
+        );
+        let d2 = Diagnostic::new(Code::EmptyCycle, Location::schedule(), "no iterations");
+        assert_eq!(d2.to_string(), "DEFT-E006 error [schedule]: no iterations");
+    }
+
+    #[test]
+    fn json_lines_escape_and_omit_absent_fields() {
+        let d = Diagnostic::new(
+            Code::UnknownBucket,
+            Location::iter_bucket(0, 7),
+            "bucket \"7\" \\ missing",
+        );
+        assert_eq!(
+            d.to_json(),
+            "{\"code\":\"DEFT-E002\",\"severity\":\"error\",\"iter\":0,\"bucket\":7,\
+             \"message\":\"bucket \\\"7\\\" \\\\ missing\"}"
+        );
+        let mut r = LintReport::default();
+        r.push(Code::EmptyIteration, Location::iteration(1), "idle");
+        assert!(r.is_clean());
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.to_json_lines().ends_with("\"idle\"}\n"));
+        assert!(r.render_text().contains("DEFT-W001 warning [iter 1]: idle"));
+    }
+}

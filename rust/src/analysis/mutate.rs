@@ -1,0 +1,352 @@
+//! Differential verification of the verifier: deterministic mutations
+//! of known-good plans, each designed to trip exactly one designated
+//! diagnostic code. The test suite asserts every class fires its code
+//! (and never lints clean) — if a lint check rots, its mutation class
+//! catches the regression.
+
+use super::Code;
+use crate::links::{ClusterEnv, Codec, LinkId};
+use crate::models::BucketProfile;
+use crate::sched::{FwdDependency, Schedule, Stage};
+use crate::util::Micros;
+
+/// One way to break a known-good plan. Every class is deterministic in
+/// `(input, seed)`: the seed only selects *which* op/link/multiplier is
+/// perturbed, never whether the perturbation happens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationClass {
+    /// Remove one op: its bucket's gradients are silently dropped.
+    DropOp,
+    /// Push an exact clone of one op into its own window.
+    DuplicateOp,
+    /// Move one backward op into the forward window with `grad_age = 0`
+    /// — a wire with no data-ready point.
+    FreshGradInForward,
+    /// Point one op at a link the registry does not have.
+    UnknownLink,
+    /// Inflate one regularly-packed bucket's comm past every window
+    /// capacity (knapsack-governed schedules only).
+    InflateBucket,
+    /// Swap a lossy rank-1 codec onto a used link without re-gating.
+    SwapCodecUngated,
+    /// Bump one batch multiplier so Σk no longer partitions the cycle.
+    BreakMultipliers,
+    /// Zero the staleness bound while aging one shipped gradient.
+    TightenStaleness,
+    /// Point one op's update offset past the cycle's updates.
+    SkewUpdateOffset,
+}
+
+impl MutationClass {
+    pub const ALL: [MutationClass; 9] = [
+        MutationClass::DropOp,
+        MutationClass::DuplicateOp,
+        MutationClass::FreshGradInForward,
+        MutationClass::UnknownLink,
+        MutationClass::InflateBucket,
+        MutationClass::SwapCodecUngated,
+        MutationClass::BreakMultipliers,
+        MutationClass::TightenStaleness,
+        MutationClass::SkewUpdateOffset,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MutationClass::DropOp => "drop-op",
+            MutationClass::DuplicateOp => "duplicate-op",
+            MutationClass::FreshGradInForward => "fresh-grad-in-forward",
+            MutationClass::UnknownLink => "unknown-link",
+            MutationClass::InflateBucket => "inflate-bucket",
+            MutationClass::SwapCodecUngated => "swap-codec-ungated",
+            MutationClass::BreakMultipliers => "break-multipliers",
+            MutationClass::TightenStaleness => "tighten-staleness",
+            MutationClass::SkewUpdateOffset => "skew-update-offset",
+        }
+    }
+
+    /// The diagnostic code this mutation is designed to trip. (Side
+    /// effects may trip more; the designated one must always fire.)
+    pub fn expected(self) -> Code {
+        match self {
+            MutationClass::DropOp => Code::UnderShippedGradient,
+            MutationClass::DuplicateOp => Code::DuplicateOp,
+            MutationClass::FreshGradInForward => Code::FreshGradInForward,
+            MutationClass::UnknownLink => Code::UnknownLink,
+            MutationClass::InflateBucket => Code::CapacityOverflow,
+            MutationClass::SwapCodecUngated => Code::UngatedLossyRoute,
+            MutationClass::BreakMultipliers => Code::MultiplierMismatch,
+            MutationClass::TightenStaleness => Code::StalenessBound,
+            MutationClass::SkewUpdateOffset => Code::UpdateOffsetOutOfRange,
+        }
+    }
+
+    /// Classes that need a knapsack-governed (`FwdDependency::None`,
+    /// i.e. DeFT-shaped) input; the rest apply to any schedule.
+    pub fn requires_knapsack(self) -> bool {
+        matches!(self, MutationClass::InflateBucket)
+    }
+}
+
+/// A mutated plan plus everything needed to lint it and check the
+/// verdict.
+#[derive(Clone, Debug)]
+pub struct MutatedCase {
+    pub class: MutationClass,
+    pub expected: Code,
+    pub schedule: Schedule,
+    pub buckets: Vec<BucketProfile>,
+    pub env: ClusterEnv,
+}
+
+fn pick(seed: u64, len: usize) -> usize {
+    assert!(len > 0, "nothing to pick a mutation target from");
+    (seed % len as u64) as usize
+}
+
+/// Addresses of every op as (iteration, window, index-in-window);
+/// window 0 = fwd, 1 = bwd.
+fn op_addrs(s: &Schedule) -> Vec<(usize, usize, usize)> {
+    let mut addrs = Vec::new();
+    for (t, p) in s.cycle.iter().enumerate() {
+        for i in 0..p.fwd_ops.len() {
+            addrs.push((t, 0, i));
+        }
+        for i in 0..p.bwd_ops.len() {
+            addrs.push((t, 1, i));
+        }
+    }
+    addrs
+}
+
+fn bwd_addrs(s: &Schedule) -> Vec<(usize, usize)> {
+    let mut addrs = Vec::new();
+    for (t, p) in s.cycle.iter().enumerate() {
+        for i in 0..p.bwd_ops.len() {
+            addrs.push((t, i));
+        }
+    }
+    addrs
+}
+
+/// Apply `class` to a known-good plan. Panics if the input is not
+/// eligible (e.g. `InflateBucket` on a barrier schedule) — the harness
+/// mutates plans it knows, it does not probe arbitrary ones.
+pub fn apply_mutation(
+    class: MutationClass,
+    schedule: &Schedule,
+    buckets: &[BucketProfile],
+    env: &ClusterEnv,
+    seed: u64,
+) -> MutatedCase {
+    let mut schedule = schedule.clone();
+    let mut buckets = buckets.to_vec();
+    let mut env = env.clone();
+    match class {
+        MutationClass::DropOp => {
+            let addrs = op_addrs(&schedule);
+            let (t, w, i) = addrs[pick(seed, addrs.len())];
+            let plan = &mut schedule.cycle[t];
+            if w == 0 {
+                plan.fwd_ops.remove(i);
+            } else {
+                plan.bwd_ops.remove(i);
+            }
+        }
+        MutationClass::DuplicateOp => {
+            let addrs = op_addrs(&schedule);
+            let (t, w, i) = addrs[pick(seed, addrs.len())];
+            let plan = &mut schedule.cycle[t];
+            if w == 0 {
+                let dup = plan.fwd_ops[i].clone();
+                plan.fwd_ops.push(dup);
+            } else {
+                let dup = plan.bwd_ops[i].clone();
+                plan.bwd_ops.push(dup);
+            }
+        }
+        MutationClass::FreshGradInForward => {
+            let addrs = bwd_addrs(&schedule);
+            let (t, i) = addrs[pick(seed, addrs.len())];
+            let plan = &mut schedule.cycle[t];
+            let mut op = plan.bwd_ops.remove(i);
+            op.stage = Stage::Forward;
+            op.grad_age = 0;
+            plan.fwd_ops.push(op);
+        }
+        MutationClass::UnknownLink => {
+            let addrs = op_addrs(&schedule);
+            let (t, w, i) = addrs[pick(seed, addrs.len())];
+            let bogus = LinkId(env.n_links() + 7);
+            let plan = &mut schedule.cycle[t];
+            if w == 0 {
+                plan.fwd_ops[i].link = bogus;
+            } else {
+                plan.bwd_ops[i].link = bogus;
+            }
+        }
+        MutationClass::InflateBucket => {
+            assert_eq!(
+                schedule.fwd_dependency,
+                FwdDependency::None,
+                "InflateBucket needs a knapsack-governed (DeFT) schedule"
+            );
+            // Regularly-packed ops only: force-shipped (priority < 0)
+            // buckets are exempt from the window cap by design.
+            let regular: Vec<usize> = {
+                let mut bs = Vec::new();
+                for p in &schedule.cycle {
+                    for op in p.fwd_ops.iter() {
+                        bs.push(op.bucket);
+                    }
+                    for op in p.bwd_ops.iter().filter(|o| o.priority >= 0) {
+                        bs.push(op.bucket);
+                    }
+                }
+                bs
+            };
+            let b = regular[pick(seed, regular.len())];
+            // Larger than the largest window capacity the lint will
+            // compute, whatever the planning μs (codec-effective μ < 1
+            // enlarges caps, so derive the bound from the μs themselves).
+            let scale = schedule.capacity_scale();
+            let scale = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+            let fwd: Micros = buckets.iter().map(|b| b.fwd).sum();
+            let bwd: Micros = buckets.iter().map(|b| b.bwd).sum();
+            let window = fwd.max(bwd).scale(scale);
+            let min_mu = env
+                .link_planning_mus()
+                .into_iter()
+                .fold(f64::INFINITY, f64::min)
+                .min(1.0);
+            let max_cap = window.scale(1.0 / min_mu);
+            buckets[b].comm = Micros(max_cap.as_us().saturating_mul(2)) + Micros(10_000);
+        }
+        MutationClass::SwapCodecUngated => {
+            let used = schedule.links_used();
+            let valid: Vec<LinkId> = used
+                .into_iter()
+                .filter(|l| l.index() < env.n_links())
+                .collect();
+            let link = valid[pick(seed, valid.len())];
+            env = env.with_codec(link, Codec::RankK { k: 1 });
+        }
+        MutationClass::BreakMultipliers => {
+            assert!(
+                !schedule.batch_multipliers.is_empty(),
+                "BreakMultipliers needs at least one update"
+            );
+            let i = pick(seed, schedule.batch_multipliers.len());
+            schedule.batch_multipliers[i] += 1;
+        }
+        MutationClass::TightenStaleness => {
+            let addrs = bwd_addrs(&schedule);
+            let (t, i) = addrs[pick(seed, addrs.len())];
+            schedule.max_outstanding_iters = 0;
+            // Age the picked gradient one iteration so its staleness
+            // span (grad_age + merged − 1 ≥ 1) exceeds the zero bound
+            // on any input, DeFT or baseline.
+            schedule.cycle[t].bwd_ops[i].grad_age = 1;
+        }
+        MutationClass::SkewUpdateOffset => {
+            let addrs = op_addrs(&schedule);
+            let (t, w, i) = addrs[pick(seed, addrs.len())];
+            let bogus = schedule.updates_per_cycle + 2;
+            let plan = &mut schedule.cycle[t];
+            if w == 0 {
+                plan.fwd_ops[i].update_offset = bogus;
+            } else {
+                plan.bwd_ops[i].update_offset = bogus;
+            }
+        }
+    }
+    MutatedCase {
+        class,
+        expected: class.expected(),
+        schedule,
+        buckets,
+        env,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{lint_plan, LintOptions};
+    use crate::links::LinkPreset;
+    use crate::sched::{CommOp, IterPlan};
+
+    fn base() -> (Schedule, Vec<BucketProfile>, ClusterEnv) {
+        let env = LinkPreset::Paper2Link.env();
+        let buckets: Vec<BucketProfile> = (0..4)
+            .map(|id| BucketProfile {
+                id,
+                params: 2_000_000,
+                fwd: Micros(9_000),
+                bwd: Micros(11_000),
+                comm: Micros(5_000),
+            })
+            .collect();
+        let schedule = Schedule {
+            scheme: "probe".into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops: (0..4)
+                    .map(|b| CommOp {
+                        bucket: b,
+                        link: LinkId(b % 2),
+                        stage: Stage::Backward,
+                        priority: b as i64,
+                        grad_age: 0,
+                        merged: 1,
+                        update_offset: 0,
+                    })
+                    .collect(),
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::None,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 0,
+            max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
+        };
+        (schedule, buckets, env)
+    }
+
+    #[test]
+    fn base_plan_is_clean_and_every_class_trips_its_code() {
+        let (schedule, buckets, env) = base();
+        let opts = LintOptions::default();
+        let r = lint_plan(&schedule, &buckets, &env, &opts);
+        assert!(r.is_clean(), "base must lint clean:\n{}", r.render_text());
+        for class in MutationClass::ALL {
+            for seed in [0u64, 1, 5] {
+                let case = apply_mutation(class, &schedule, &buckets, &env, seed);
+                let r = lint_plan(&case.schedule, &case.buckets, &case.env, &opts);
+                assert!(
+                    r.has_code(case.expected),
+                    "{} (seed {seed}) must trip {}:\n{}",
+                    class.name(),
+                    case.expected.as_str(),
+                    r.render_text()
+                );
+                assert!(
+                    !r.is_clean(),
+                    "{} (seed {seed}) lints clean — silent acceptance",
+                    class.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mutations_are_deterministic_in_the_seed() {
+        let (schedule, buckets, env) = base();
+        for class in MutationClass::ALL {
+            let a = apply_mutation(class, &schedule, &buckets, &env, 3);
+            let b = apply_mutation(class, &schedule, &buckets, &env, 3);
+            assert_eq!(a.schedule, b.schedule, "{}", class.name());
+            assert_eq!(a.buckets, b.buckets, "{}", class.name());
+        }
+    }
+}

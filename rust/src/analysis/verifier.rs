@@ -1,0 +1,705 @@
+//! The lint passes: structural checks over a bare [`Schedule`]
+//! ([`lint_schedule`]) and the full profile/environment-aware verifier
+//! ([`lint_plan`]).
+
+use super::{Code, LintReport, Location, WindowLoad};
+use crate::links::{ClusterEnv, LinkId};
+use crate::models::BucketProfile;
+use crate::preserver::{self, WalkParams};
+use crate::sched::{cap_loss, CommOp, FwdDependency, Schedule, Stage};
+use crate::util::Micros;
+
+/// Options for [`lint_plan`]. Defaults mirror the lifecycle driver:
+/// Table V's walk, the paper's ε, precision checking on.
+#[derive(Clone, Debug)]
+pub struct LintOptions {
+    /// Run the Preserver precision lint (`DEFT-E016`). The lifecycle's
+    /// pre-walk gate turns this off — the walk itself runs next.
+    pub check_precision: bool,
+    pub walk: WalkParams,
+    pub base_batch: f64,
+    pub epsilon: f64,
+}
+
+impl Default for LintOptions {
+    fn default() -> LintOptions {
+        let (walk, base_batch) = preserver::table5_setting();
+        LintOptions {
+            check_precision: true,
+            walk,
+            base_batch,
+            epsilon: preserver::EPSILON,
+        }
+    }
+}
+
+/// Structural lint: every invariant provable from the [`Schedule`] value
+/// alone (no bucket profile, no environment). Backs
+/// [`Schedule::validate`]; cheap enough for the simulator's entry check.
+pub fn lint_schedule(schedule: &Schedule) -> LintReport {
+    let mut r = LintReport::default();
+    structural(schedule, &mut r);
+    r
+}
+
+fn structural(s: &Schedule, r: &mut LintReport) {
+    if s.cycle.is_empty() {
+        r.push(
+            Code::EmptyCycle,
+            Location::schedule(),
+            "the steady-state cycle contains no iterations",
+        );
+        return;
+    }
+    let len = s.cycle.len();
+    let marks = s.cycle.iter().filter(|p| p.update_at_end).count();
+    if marks != s.updates_per_cycle {
+        r.push(
+            Code::UpdateMarkerMismatch,
+            Location::schedule(),
+            format!(
+                "{marks} update_at_end marker(s) but updates_per_cycle = {}",
+                s.updates_per_cycle
+            ),
+        );
+    }
+    if s.batch_multipliers.len() != s.updates_per_cycle {
+        r.push(
+            Code::MultiplierMismatch,
+            Location::schedule(),
+            format!(
+                "{} batch multiplier(s) for {} update(s)",
+                s.batch_multipliers.len(),
+                s.updates_per_cycle
+            ),
+        );
+    }
+    if let Some(i) = s.batch_multipliers.iter().position(|&k| k == 0) {
+        r.push(
+            Code::MultiplierMismatch,
+            Location::schedule(),
+            format!("batch multiplier #{i} is zero (every update must absorb ≥ 1 iteration)"),
+        );
+    }
+    let ksum: u64 = s.batch_multipliers.iter().sum();
+    if ksum != len as u64 {
+        r.push(
+            Code::MultiplierMismatch,
+            Location::schedule(),
+            format!("batch multipliers sum to {ksum} but the cycle has {len} iteration(s)"),
+        );
+    }
+    for (t, plan) in s.cycle.iter().enumerate() {
+        if plan.num_ops() == 0 && !plan.update_at_end {
+            r.push(
+                Code::EmptyIteration,
+                Location::iteration(t),
+                "iteration ships nothing and applies no update",
+            );
+        }
+        for (ops, stage) in [
+            (&plan.fwd_ops, Stage::Forward),
+            (&plan.bwd_ops, Stage::Backward),
+        ] {
+            for (i, op) in ops.iter().enumerate() {
+                let loc = Location::op(t, stage, op.bucket, op.link);
+                if op.stage != stage {
+                    r.push(
+                        Code::WindowMismatch,
+                        loc,
+                        format!(
+                            "op with stage {} sits in the {} window vector",
+                            super::stage_str(op.stage),
+                            super::stage_str(stage)
+                        ),
+                    );
+                }
+                if op.stage == Stage::Forward && op.grad_age == 0 {
+                    r.push(
+                        Code::FreshGradInForward,
+                        loc,
+                        "a current-iteration gradient cannot ship in the forward window \
+                         (its producing backward has not run)",
+                    );
+                }
+                if op.merged == 0 {
+                    r.push(Code::DegenerateOp, loc, "op merges zero gradients");
+                } else if s.max_outstanding_iters != usize::MAX {
+                    let span = op.grad_age + op.merged - 1;
+                    if span > s.max_outstanding_iters {
+                        r.push(
+                            Code::StalenessBound,
+                            loc,
+                            format!(
+                                "oldest merged gradient is {span} iteration(s) stale, \
+                                 over the bound {}",
+                                s.max_outstanding_iters
+                            ),
+                        );
+                    }
+                }
+                if op.update_offset > s.updates_per_cycle {
+                    r.push(
+                        Code::UpdateOffsetOutOfRange,
+                        loc,
+                        format!(
+                            "update_offset {} exceeds updates_per_cycle {}",
+                            op.update_offset, s.updates_per_cycle
+                        ),
+                    );
+                }
+                if ops[..i].iter().any(|prev| prev == op) {
+                    r.push(
+                        Code::DuplicateOp,
+                        loc,
+                        "the identical op appears twice in the same window",
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Full static verification of a plan against its bucket profile and
+/// target environment: structural checks plus registry references,
+/// gradient-volume conservation, `PerBucket` coverage, §III.D knapsack
+/// capacity (reproducing the solver's `Micros` arithmetic exactly), and
+/// the Preserver precision gate for lossy codec routes.
+pub fn lint_plan(
+    schedule: &Schedule,
+    buckets: &[BucketProfile],
+    env: &ClusterEnv,
+    opts: &LintOptions,
+) -> LintReport {
+    let mut r = LintReport::default();
+    structural(schedule, &mut r);
+    if schedule.cycle.is_empty() {
+        return r;
+    }
+    let n_links = env.n_links();
+    let n_buckets = buckets.len();
+    let len = schedule.cycle.len();
+
+    // Every (cycle position, window stage, op) triple, in engine
+    // materialization order (fwd vector first, then bwd).
+    let ops: Vec<(usize, Stage, &CommOp)> = schedule
+        .cycle
+        .iter()
+        .enumerate()
+        .flat_map(|(t, p)| {
+            p.fwd_ops
+                .iter()
+                .map(move |o| (t, Stage::Forward, o))
+                .chain(p.bwd_ops.iter().map(move |o| (t, Stage::Backward, o)))
+        })
+        .collect();
+
+    // ---- Registry soundness (DEFT-E001/E002). ----
+    let mut registry_ok = true;
+    for &(t, stage, op) in &ops {
+        if op.link.index() >= n_links {
+            registry_ok = false;
+            r.push(
+                Code::UnknownLink,
+                Location::op(t, stage, op.bucket, op.link),
+                format!(
+                    "op routes over link #{} but the registry has {n_links} link(s)",
+                    op.link.index()
+                ),
+            );
+        }
+        if op.bucket >= n_buckets {
+            registry_ok = false;
+            r.push(
+                Code::UnknownBucket,
+                Location::op(t, stage, op.bucket, op.link),
+                format!(
+                    "op references bucket {} but the profile has {n_buckets} bucket(s)",
+                    op.bucket
+                ),
+            );
+        }
+    }
+
+    // ---- Gradient-volume conservation (DEFT-E010/E011): over one
+    // steady cycle each bucket produces `len` gradients and must ship
+    // exactly `len` (merged transfers count their merge width). ----
+    let mut shipped = vec![0u64; n_buckets];
+    for &(_, _, op) in &ops {
+        if op.bucket < n_buckets {
+            shipped[op.bucket] += op.merged as u64;
+        }
+    }
+    for (b, &ship) in shipped.iter().enumerate() {
+        use std::cmp::Ordering;
+        match ship.cmp(&(len as u64)) {
+            Ordering::Greater => r.push(
+                Code::OverShippedGradient,
+                Location::bucket(b),
+                format!("bucket {b} ships {ship} gradient sets per {len}-iteration cycle"),
+            ),
+            Ordering::Less => r.push(
+                Code::UnderShippedGradient,
+                Location::bucket(b),
+                format!(
+                    "bucket {b} ships only {ship} of {len} gradient sets per cycle \
+                     (gradients silently dropped)"
+                ),
+            ),
+            Ordering::Equal => {}
+        }
+    }
+
+    if schedule.fwd_dependency == FwdDependency::PerBucket && registry_ok && n_buckets > 0 {
+        coverage(schedule, n_buckets, &mut r);
+    }
+    if schedule.fwd_dependency == FwdDependency::None && registry_ok {
+        capacity(schedule, buckets, env, &ops, &mut r);
+    }
+
+    // ---- Per-link per-cycle volume accounting (consumed by the
+    // sim-consistency tests and the explorer's lint table). ----
+    let mut ref_comm = vec![Micros::ZERO; n_links];
+    let mut raw_bytes = vec![0u64; n_links];
+    for &(_, _, op) in &ops {
+        if op.link.index() < n_links && op.bucket < n_buckets {
+            ref_comm[op.link.index()] += buckets[op.bucket].comm;
+            raw_bytes[op.link.index()] += buckets[op.bucket].params.saturating_mul(4);
+        }
+    }
+    r.link_ref_comm = ref_comm;
+    r.link_raw_bytes = raw_bytes;
+
+    // ---- Precision (DEFT-E016): a lossy route needs a passing
+    // Preserver verdict on this schedule's update sequence. ----
+    let ksum: u64 = schedule.batch_multipliers.iter().sum();
+    if opts.check_precision && ksum > 0 {
+        let errs = env.link_path_codec_errors();
+        let worst = schedule.worst_codec_error(&errs);
+        if worst > 0.0 {
+            let report = preserver::quantify_with_error(
+                &opts.walk,
+                opts.base_batch,
+                &schedule.batch_multipliers,
+                worst,
+            );
+            if !preserver::acceptable(&report, opts.epsilon) {
+                let link = schedule
+                    .links_used()
+                    .into_iter()
+                    .filter(|l| l.index() < errs.len())
+                    .max_by(|a, b| errs[a.index()].total_cmp(&errs[b.index()]));
+                r.push(
+                    Code::UngatedLossyRoute,
+                    Location {
+                        link,
+                        ..Location::default()
+                    },
+                    format!(
+                        "lossy codec route (worst gradient error {worst:.4}) fails the \
+                         Preserver gate: convergence ratio {:.4} outside 1 ± {}",
+                        report.ratio, opts.epsilon
+                    ),
+                );
+            }
+        }
+    }
+    r
+}
+
+/// `PerBucket` dependency soundness over the steady window: replay the
+/// engine's coverage-arena construction (last covering op wins, in
+/// materialization order) for a horizon long enough that every cyclic
+/// writer of the mid window exists, then require each (iteration,
+/// bucket) gradient of the mid window to be covered by a transfer that
+/// launches no later than the forward consuming it. A covering op in
+/// the *forward* window of t+1 is legal (DeFT Case 1: the forward
+/// waits on it); one in the backward window of t+1 or later deadlocks.
+fn coverage(schedule: &Schedule, n: usize, r: &mut LintReport) {
+    let len = schedule.cycle.len();
+    let span = schedule
+        .cycle
+        .iter()
+        .flat_map(|p| p.all_ops())
+        .map(|o| o.grad_age + o.merged)
+        .max()
+        .unwrap_or(1);
+    let horizon = 3 * len + span;
+    let mut cover: Vec<Option<(usize, Stage)>> = vec![None; horizon * n];
+    for t in 0..horizon {
+        let plan = &schedule.cycle[t % len];
+        let windowed = plan
+            .fwd_ops
+            .iter()
+            .map(|o| (Stage::Forward, o))
+            .chain(plan.bwd_ops.iter().map(|o| (Stage::Backward, o)));
+        for (stage, op) in windowed {
+            if t < op.grad_age {
+                continue;
+            }
+            let newest = t - op.grad_age;
+            for k in 0..op.merged {
+                if k > newest {
+                    break;
+                }
+                cover[(newest - k) * n + op.bucket] = Some((t, stage));
+            }
+        }
+    }
+    for t in len..2 * len {
+        let p = t % len;
+        for b in 0..n {
+            match cover[t * n + b] {
+                None => r.push(
+                    Code::UncoveredGradient,
+                    Location::iter_bucket(p, b),
+                    format!(
+                        "gradient (cycle iter {p}, bucket {b}) is never shipped: \
+                         the next forward for bucket {b} deadlocks"
+                    ),
+                ),
+                Some((u, stage)) if u > t + 1 || (u == t + 1 && stage == Stage::Backward) => r
+                    .push(
+                        Code::LateCoverage,
+                        Location::iter_bucket(p, b),
+                        format!(
+                            "gradient (cycle iter {p}, bucket {b}) is covered only at \
+                             iteration +{} in the {} window — after the forward that \
+                             consumes it",
+                            u - t,
+                            super::stage_str(stage)
+                        ),
+                    ),
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+/// §III.D capacity verification for knapsack-governed schedules
+/// (`FwdDependency::None`), reproducing `Deft`'s packing arithmetic
+/// exactly: per window, the regularly-packed reference-time load on each
+/// link must fit `cap_loss(window_compute × scale, planning μ)`, where
+/// `scale` is the solver's recorded capacity scale and planning μ is the
+/// codec-effective segment-path slowdown times the static contention
+/// factor. Force-shipped oversized buckets (priority < 0) are exempt
+/// from the window cap but must be amortized by their merge width:
+/// `merged × (fwd + bwd) × scale ≥ comm`, else the solver's debt can
+/// never be repaid.
+fn capacity(
+    schedule: &Schedule,
+    buckets: &[BucketProfile],
+    env: &ClusterEnv,
+    ops: &[(usize, Stage, &CommOp)],
+    r: &mut LintReport,
+) {
+    let raw_scale = schedule.capacity_scale();
+    let scale = if raw_scale.is_finite() && raw_scale > 0.0 {
+        raw_scale
+    } else {
+        1.0
+    };
+    let mus = env.link_planning_mus();
+    let n_links = env.n_links();
+    let names = env.link_names();
+    let fwd_compute: Micros = buckets.iter().map(|b| b.fwd).sum();
+    let bwd_compute: Micros = buckets.iter().map(|b| b.bwd).sum();
+    let cap_iter = (fwd_compute + bwd_compute).scale(scale);
+    for (t, plan) in schedule.cycle.iter().enumerate() {
+        for (window_ops, stage, window_compute) in [
+            (&plan.fwd_ops, Stage::Forward, fwd_compute),
+            (&plan.bwd_ops, Stage::Backward, bwd_compute),
+        ] {
+            let scaled = window_compute.scale(scale);
+            let caps: Vec<Micros> = mus.iter().map(|&mu| cap_loss(scaled, mu)).collect();
+            let mut load = vec![Micros::ZERO; n_links];
+            for op in window_ops {
+                let comm = buckets[op.bucket].comm;
+                if stage == Stage::Backward && op.priority < 0 {
+                    let amortized = Micros(cap_iter.as_us().saturating_mul(op.merged as u64));
+                    if amortized < comm {
+                        r.push(
+                            Code::ForceShipUnamortized,
+                            Location::op(t, stage, op.bucket, op.link),
+                            format!(
+                                "force-shipped bucket {} needs {} µs of wire but its {} \
+                                 merged iteration(s) amortize only {} µs",
+                                op.bucket,
+                                comm.as_us(),
+                                op.merged,
+                                amortized.as_us()
+                            ),
+                        );
+                    }
+                    continue;
+                }
+                load[op.link.index()] += comm;
+            }
+            for (k, (&l, &cap)) in load.iter().zip(caps.iter()).enumerate() {
+                r.loads.push(WindowLoad {
+                    iter: t,
+                    stage,
+                    link: LinkId(k),
+                    load: l,
+                    cap,
+                });
+                if l > cap {
+                    r.push(
+                        Code::CapacityOverflow,
+                        Location::window_link(t, stage, LinkId(k)),
+                        format!(
+                            "link {} carries {} µs of reference comm in a {} window \
+                             with knapsack capacity {} µs (scale {scale:.3})",
+                            names.get(k).map(String::as_str).unwrap_or("?"),
+                            l.as_us(),
+                            super::stage_str(stage),
+                            cap.as_us()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::links::{Codec, LinkPreset};
+    use crate::sched::IterPlan;
+
+    fn op(bucket: usize, link: usize, stage: Stage, grad_age: usize) -> CommOp {
+        CommOp {
+            bucket,
+            link: LinkId(link),
+            stage,
+            priority: 0,
+            grad_age,
+            merged: 1,
+            update_offset: 0,
+        }
+    }
+
+    /// One-iteration WFBP-shaped schedule over `n` buckets on link 0.
+    fn wfbp_like(n: usize, dep: FwdDependency) -> Schedule {
+        Schedule {
+            scheme: "probe".into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops: (0..n).map(|b| op(b, 0, Stage::Backward, 0)).collect(),
+                update_at_end: true,
+            }],
+            fwd_dependency: dep,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 0,
+            max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
+        }
+    }
+
+    fn probe_buckets(n: usize) -> Vec<BucketProfile> {
+        (0..n)
+            .map(|id| BucketProfile {
+                id,
+                params: 1_000_000,
+                fwd: Micros(10_000),
+                bwd: Micros(12_000),
+                comm: Micros(4_000),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_plan_lints_clean() {
+        let env = LinkPreset::Paper2Link.env();
+        let s = wfbp_like(3, FwdDependency::Barrier);
+        let r = lint_plan(&s, &probe_buckets(3), &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.diagnostics.len(), 0);
+        assert_eq!(r.link_ref_comm[0], Micros(12_000));
+        assert_eq!(r.link_raw_bytes[0], 3 * 4_000_000);
+        assert_eq!(r.link_ref_comm[1], Micros::ZERO);
+    }
+
+    #[test]
+    fn structural_codes_fire() {
+        let env = LinkPreset::Paper2Link.env();
+        let buckets = probe_buckets(3);
+        let lint = |s: &Schedule| lint_plan(s, &buckets, &env, &LintOptions::default());
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle.clear();
+        assert!(lint(&s).has_code(Code::EmptyCycle));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.updates_per_cycle = 2;
+        let r = lint(&s);
+        assert!(r.has_code(Code::UpdateMarkerMismatch));
+        assert!(r.has_code(Code::MultiplierMismatch));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.batch_multipliers = vec![0];
+        let r = lint(&s);
+        assert!(r.has_code(Code::MultiplierMismatch));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        let dup = s.cycle[0].bwd_ops[1].clone();
+        s.cycle[0].bwd_ops.push(dup);
+        let r = lint(&s);
+        assert!(r.has_code(Code::DuplicateOp));
+        assert!(r.has_code(Code::OverShippedGradient));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle[0].fwd_ops.push(op(0, 0, Stage::Forward, 0));
+        let r = lint(&s);
+        assert!(r.has_code(Code::FreshGradInForward));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle[0].bwd_ops[0].merged = 0;
+        let r = lint(&s);
+        assert!(r.has_code(Code::DegenerateOp));
+        assert!(r.has_code(Code::UnderShippedGradient));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.max_outstanding_iters = 1;
+        s.cycle[0].bwd_ops[0].grad_age = 3;
+        assert!(lint(&s).has_code(Code::StalenessBound));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle[0].bwd_ops[2].update_offset = 9;
+        assert!(lint(&s).has_code(Code::UpdateOffsetOutOfRange));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle[0].bwd_ops[0].link = LinkId(9);
+        assert!(lint(&s).has_code(Code::UnknownLink));
+
+        let mut s = wfbp_like(3, FwdDependency::Barrier);
+        s.cycle[0].bwd_ops[0].bucket = 7;
+        let r = lint(&s);
+        assert!(r.has_code(Code::UnknownBucket));
+        assert!(r.has_code(Code::UnderShippedGradient));
+    }
+
+    #[test]
+    fn stage_window_mismatch_is_a_warning_only() {
+        let mut s = wfbp_like(2, FwdDependency::Barrier);
+        let moved = s.cycle[0].bwd_ops.pop().expect("two ops");
+        s.cycle[0].fwd_ops.push(moved); // stage stays Backward
+        let r = lint_schedule(&s);
+        assert!(r.has_code(Code::WindowMismatch));
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn perbucket_coverage_catches_missing_and_late_transfers() {
+        let env = LinkPreset::Paper2Link.env();
+        let buckets = probe_buckets(2);
+        // Self-covering one-iteration cycle: clean.
+        let s = wfbp_like(2, FwdDependency::PerBucket);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+
+        // Bucket 1's transfer dropped: both conservation and coverage
+        // must fire.
+        let mut s = wfbp_like(2, FwdDependency::PerBucket);
+        s.cycle[0].bwd_ops.retain(|o| o.bucket != 1);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::UncoveredGradient), "{}", r.render_text());
+        assert!(r.has_code(Code::UnderShippedGradient));
+
+        // Bucket 1 shipped one iteration late **in the backward window**:
+        // the consuming forward has already passed — deadlock.
+        let mut s = wfbp_like(2, FwdDependency::PerBucket);
+        s.cycle[0].bwd_ops[1].grad_age = 1;
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::LateCoverage), "{}", r.render_text());
+
+        // The same one-iteration lag in the **forward** window is DeFT
+        // Case 1 and legal: the forward waits on the arriving wire.
+        let mut s = wfbp_like(2, FwdDependency::PerBucket);
+        let mut moved = s.cycle[0].bwd_ops.remove(1);
+        moved.stage = Stage::Forward;
+        moved.grad_age = 1;
+        s.cycle[0].fwd_ops.push(moved);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn capacity_overflow_and_force_amortization() {
+        let env = LinkPreset::Paper2Link.env();
+        let mut buckets = probe_buckets(2);
+        let s = wfbp_like(2, FwdDependency::None);
+        // Window capacity on link 0 = Σbwd = 24 000 µs (μ = 1, scale 1);
+        // the 8 000 µs load fits.
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+        let bwd0 = r
+            .loads
+            .iter()
+            .find(|w| w.stage == Stage::Backward && w.link == LinkId(0))
+            .expect("bwd window load");
+        assert_eq!(bwd0.load, Micros(8_000));
+        assert_eq!(bwd0.cap, Micros(24_000));
+
+        // Inflate bucket 1 past every window capacity.
+        buckets[1].comm = Micros(60_000);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::CapacityOverflow), "{}", r.render_text());
+
+        // A force-shipped (priority < 0) op is exempt from the window cap
+        // but must amortize: merged = 3 × cap_iter 44 000 ≥ 60 000 ✓.
+        let mut s2 = wfbp_like(2, FwdDependency::None);
+        s2.cycle[0].bwd_ops[1].priority = -1;
+        s2.cycle[0].bwd_ops[1].merged = 3;
+        // (merged 3 over a 1-iteration cycle trips over-shipping too —
+        // this probe only asserts the two capacity codes.)
+        let r = lint_plan(&s2, &buckets, &env, &LintOptions::default());
+        assert!(!r.has_code(Code::CapacityOverflow), "{}", r.render_text());
+        assert!(!r.has_code(Code::ForceShipUnamortized));
+
+        // merged = 1 only amortizes 44 000 µs < 60 000 µs.
+        s2.cycle[0].bwd_ops[1].merged = 1;
+        let r = lint_plan(&s2, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::ForceShipUnamortized), "{}", r.render_text());
+    }
+
+    #[test]
+    fn recorded_capacity_scale_governs_the_cap() {
+        let env = LinkPreset::Paper2Link.env();
+        let mut buckets = probe_buckets(2);
+        buckets[0].comm = Micros(30_000); // > Σbwd 24 000 at scale 1
+        let mut s = wfbp_like(2, FwdDependency::None);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::CapacityOverflow));
+        // The solver recorded an enlarged capacity: 24 000 × 1.5 fits.
+        s.capacity_scale_bits = (1.5f64).to_bits();
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn lossy_route_without_verdict_errors() {
+        let env = LinkPreset::Paper2Link
+            .env()
+            .with_codec(LinkId(0), Codec::RankK { k: 1 });
+        let buckets = probe_buckets(2);
+        let s = wfbp_like(2, FwdDependency::Barrier);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.has_code(Code::UngatedLossyRoute), "{}", r.render_text());
+        // Precision off (the lifecycle's pre-walk gate): no E016.
+        let opts = LintOptions {
+            check_precision: false,
+            ..LintOptions::default()
+        };
+        let r = lint_plan(&s, &buckets, &env, &opts);
+        assert!(r.is_clean(), "{}", r.render_text());
+        // fp16's error passes the walk: clean even with precision on.
+        let env = LinkPreset::Paper2Link
+            .env()
+            .with_codec(LinkId(0), Codec::Fp16);
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+}

@@ -46,7 +46,21 @@
 //!
 //! The public API is intentionally small: build a [`models::Workload`],
 //! pick a [`sched::Scheduler`], run it through [`sim::simulate`], or
-//! drive real training with [`train::Trainer`].
+//! drive real training with [`train::Trainer`]. Plans can be proven
+//! sound before any of that via the static verifier in [`analysis`]
+//! (typed `DEFT-E…` diagnostics; see `docs/diagnostics.md`).
+
+// ---- Crate-wide lint policy ----
+// The crate is pure safe Rust (the PJRT FFI lives behind the vendored
+// `xla` crate, not here); keep it that way.
+#![forbid(unsafe_code)]
+// Debugging leftovers never land on main.
+#![warn(clippy::dbg_macro, clippy::todo, clippy::unimplemented)]
+// Non-test code must surface failure context: `expect` with a message
+// (or a typed `util::error::Result`) instead of bare `unwrap`. Tests
+// keep `unwrap` for brevity — the `not(test)` gate exempts `#[cfg(test)]`
+// builds, and integration tests/benches/examples are separate crates.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
 pub mod util;
 pub mod solver;
@@ -56,6 +70,7 @@ pub mod links;
 pub mod sim;
 pub mod sched;
 pub mod preserver;
+pub mod analysis;
 pub mod profiler;
 pub mod config;
 pub mod metrics;

@@ -32,7 +32,7 @@ pub(crate) fn distribute(total: Micros, weights: &[f64]) -> Vec<Micros> {
     order.sort_by(|&a, &b| {
         let fa = raw[a] - raw[a].floor();
         let fb = raw[b] - raw[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        fb.total_cmp(&fa).then(a.cmp(&b))
     });
     for i in 0..(t - assigned) as usize {
         shares[order[i % order.len()]] += 1;
@@ -97,7 +97,7 @@ pub fn vgg19() -> Workload {
     let mut spec = spec;
     let raw_total: u64 = spec.iter().map(|s| s.1).sum();
     let excess = raw_total - 143_652_544;
-    spec.last_mut().unwrap().1 -= excess;
+    spec.last_mut().expect("non-empty layer spec").1 -= excess;
 
     let names = spec.iter().map(|s| s.0.to_string()).collect();
     let params = spec.iter().map(|s| s.1).collect();

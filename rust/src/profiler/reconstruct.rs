@@ -69,8 +69,8 @@ pub fn reconstruct(events: &[RawEvent]) -> Vec<ReconstructedBucket> {
         .iter()
         .filter(|e| e.thread == ThreadId::ComputeStream && e.name.ends_with("_fwd"))
         .collect();
-    let fwd_region_start = fwd_kernels.iter().map(|e| e.start).min().unwrap();
-    let fwd_region_end = fwd_kernels.iter().map(|e| e.end).max().unwrap();
+    let fwd_region_start = fwd_kernels.iter().map(|e| e.start).min().expect("trace has forward kernels");
+    let fwd_region_end = fwd_kernels.iter().map(|e| e.end).max().expect("trace has forward kernels");
 
     // Step 1+2: comm op → last backward op → backward endpoint kernel.
     // Comm ops appear in backward order: first comm = output-most bucket.

@@ -79,6 +79,7 @@ impl Scheduler for Bytescheduler {
             batch_multipliers: vec![1],
             warmup_iters: 1,
             max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
         }
     }
 }

@@ -156,7 +156,9 @@ impl Deft {
 
 /// Reference-time capacity lost on a μ-slower link when `release` of
 /// overlap compute disappears (the μ-slower knapsack holds μ× less).
-fn cap_loss(release: Micros, mu: f64) -> Micros {
+/// Shared with `crate::analysis`, whose capacity lint must reproduce
+/// the solver's rounding bit-for-bit.
+pub(crate) fn cap_loss(release: Micros, mu: f64) -> Micros {
     if mu == 1.0 {
         release
     } else {
@@ -538,6 +540,7 @@ impl Deft {
             // Two-queue staleness bound: at most the active + forming
             // groups' communications may be in flight.
             max_outstanding_iters: (2 * (end - start)).max(2),
+            capacity_scale_bits: scale.to_bits(),
         };
         debug_assert!(schedule.validate().is_ok(), "{:?}", schedule.validate());
         schedule

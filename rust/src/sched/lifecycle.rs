@@ -20,12 +20,15 @@
 //! full closed loop of the paper is executable and testable — not just
 //! the solver in isolation.
 
+use crate::analysis::{lint_plan, LintOptions, LintReport};
+use crate::bail;
 use crate::links::ClusterEnv;
 use crate::models::{BucketProfile, Workload};
 use crate::preserver::{self, WalkParams};
 use crate::profiler::{generate_trace, reconstruct, TraceOptions};
 use crate::sched::{Deft, DeftOptions, Schedule, Scheduler};
 use crate::sim::{simulate, SimOptions, SimResult};
+use crate::util::error::Result;
 
 /// Outcome of one lifecycle run.
 pub struct LifecycleReport {
@@ -41,6 +44,32 @@ pub struct LifecycleReport {
     /// Solver fell back to the raw (codec-stripped) registry — the
     /// accepted schedule is then byte-identical to the no-codec plan.
     pub codec_fallback: bool,
+    /// Full static-verifier report of the accepted schedule against the
+    /// trial environment (precision lint included). Always clean when
+    /// `run_lifecycle` returns `Ok` — kept for its capacity and volume
+    /// accounting.
+    pub lint: LintReport,
+}
+
+/// The lifecycle's static gate: lint `schedule` against its profile and
+/// environment, failing with the rendered diagnostics when any
+/// error-severity finding exists. A plan that fails here never reaches
+/// the Preserver walk or the simulator.
+pub fn lint_gate(
+    schedule: &Schedule,
+    profile: &[BucketProfile],
+    env: &ClusterEnv,
+    opts: &LintOptions,
+) -> Result<LintReport> {
+    let lint = lint_plan(schedule, profile, env, opts);
+    if !lint.is_clean() {
+        bail!(
+            "schedule '{}' rejected by the static verifier before simulation:\n{}",
+            schedule.scheme,
+            lint.render_text()
+        );
+    }
+    Ok(lint)
 }
 
 /// Options for the lifecycle driver.
@@ -82,7 +111,7 @@ pub fn run_lifecycle(
     workload: &Workload,
     env: &ClusterEnv,
     opts: &LifecycleOptions,
-) -> LifecycleReport {
+) -> Result<LifecycleReport> {
     // --- 1. Profile: raw operator logs → bucket-level times. ---
     let topts = TraceOptions::uniform(workload, opts.n_buckets);
     let (events, _truth) = generate_trace(workload, &topts);
@@ -138,6 +167,21 @@ pub fn run_lifecycle(
             ..opts.deft.clone()
         });
         let schedule = deft.schedule(&profile);
+        // Static gate (before the Preserver walk): a structurally
+        // unsound or §III.D-infeasible plan reports its diagnostics
+        // instead of simulating. Precision is off here — the walk that
+        // decides the lossy-route verdict runs right below.
+        lint_gate(
+            &schedule,
+            &profile,
+            solve_env,
+            &LintOptions {
+                check_precision: false,
+                walk: opts.walk,
+                base_batch: opts.base_batch,
+                epsilon: opts.epsilon,
+            },
+        )?;
         // Gradient error of the worst lossy link the schedule routes
         // over (zero on the raw registry).
         let err = if use_codecs {
@@ -182,8 +226,21 @@ pub fn run_lifecycle(
 
     // --- 4. Trial application (simulated). ---
     // After a codec fallback the accepted schedule assumes raw links, so
-    // the trial prices raw wires too.
+    // the trial prices raw wires too. The accepted plan passes the full
+    // verifier — precision lint included — against the trial
+    // environment before it is allowed to simulate.
     let trial_env = if codec_fallback { &raw_env } else { env };
+    let lint = lint_gate(
+        &schedule,
+        &profile,
+        trial_env,
+        &LintOptions {
+            check_precision: true,
+            walk: opts.walk,
+            base_batch: opts.base_batch,
+            epsilon: opts.epsilon,
+        },
+    )?;
     let trial = simulate(
         &profile,
         &schedule,
@@ -195,13 +252,14 @@ pub fn run_lifecycle(
         },
     );
 
-    LifecycleReport {
+    Ok(LifecycleReport {
         profile,
         schedule,
         attempts,
         trial,
         codec_fallback,
-    }
+        lint,
+    })
 }
 
 #[cfg(test)]
@@ -212,7 +270,7 @@ mod tests {
     #[test]
     fn lifecycle_converges_on_gpt2() {
         let env = ClusterEnv::paper_testbed();
-        let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default());
+        let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default()).expect("lifecycle");
         assert_eq!(rep.profile.len(), 8);
         rep.schedule.validate().unwrap();
         assert!(!rep.attempts.is_empty());
@@ -232,7 +290,7 @@ mod tests {
         let env = ClusterEnv::paper_testbed();
         let mut opts = LifecycleOptions::default();
         opts.deft.heterogeneous = false; // harsher: single link
-        let rep = run_lifecycle(&vgg19(), &env, &opts);
+        let rep = run_lifecycle(&vgg19(), &env, &opts).expect("lifecycle");
         assert!(
             rep.attempts.len() >= 2,
             "expected capacity feedback on CR≈2, attempts {:?}",
@@ -255,8 +313,8 @@ mod tests {
         let lossy = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
         let opts = LifecycleOptions::default();
         let w = vgg19();
-        let r_raw = run_lifecycle(&w, &raw, &opts);
-        let r_lossy = run_lifecycle(&w, &lossy, &opts);
+        let r_raw = run_lifecycle(&w, &raw, &opts).expect("raw lifecycle");
+        let r_lossy = run_lifecycle(&w, &lossy, &opts).expect("lossy lifecycle");
         assert!(!r_raw.codec_fallback);
         assert!(r_lossy.codec_fallback, "rank-1 error must trip the gate");
         assert_eq!(r_lossy.schedule, r_raw.schedule, "fallback plan must be the raw plan");
@@ -266,6 +324,37 @@ mod tests {
         // replay.
         assert_eq!(r_lossy.attempts.len(), r_raw.attempts.len() + 1);
         assert!((r_lossy.attempts[0].1 - 1.0).abs() > opts.epsilon);
+        // Regression: the raw-fallback plan passes the full verifier —
+        // precision lint included — against the raw trial environment.
+        assert!(
+            r_lossy.lint.is_clean(),
+            "fallback plan must lint clean:\n{}",
+            r_lossy.lint.render_text()
+        );
+        assert!(!r_lossy.lint.loads.is_empty(), "capacity accounting recorded");
+    }
+
+    #[test]
+    fn lint_gate_rejects_a_mutated_plan_before_simulation() {
+        use crate::analysis::{apply_mutation, MutationClass};
+        let env = ClusterEnv::paper_testbed();
+        let rep =
+            run_lifecycle(&gpt2(), &env, &LifecycleOptions::default()).expect("lifecycle");
+        let opts = LintOptions::default();
+        // The accepted plan passes the gate…
+        lint_gate(&rep.schedule, &rep.profile, &env, &opts).expect("accepted plan is clean");
+        // …and any harness mutation of it is rejected with its
+        // diagnostic code in the error text, before any simulation.
+        for class in [MutationClass::DropOp, MutationClass::InflateBucket] {
+            let case = apply_mutation(class, &rep.schedule, &rep.profile, &env, 0);
+            let err = lint_gate(&case.schedule, &case.buckets, &case.env, &opts)
+                .expect_err("mutated plan must be rejected");
+            assert!(
+                err.to_string().contains(case.expected.as_str()),
+                "{}: {err}",
+                class.name()
+            );
+        }
     }
 
     #[test]
@@ -274,17 +363,18 @@ mod tests {
         // fp16's rounding error sits far below ε: the lossy route is
         // accepted and no fallback happens.
         let env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
-        let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default());
+        let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default()).expect("lifecycle");
         assert!(!rep.codec_fallback);
         rep.schedule.validate().unwrap();
         assert!(rep.trial.steady_iter_time.as_us() > 0);
+        assert!(rep.lint.is_clean());
     }
 
     #[test]
     fn lifecycle_profile_matches_workload_totals() {
         let env = ClusterEnv::paper_testbed();
         let w = gpt2();
-        let rep = run_lifecycle(&w, &env, &LifecycleOptions::default());
+        let rep = run_lifecycle(&w, &env, &LifecycleOptions::default()).expect("lifecycle");
         let params: u64 = rep.profile.iter().map(|b| b.params).sum();
         assert_eq!(params, w.total_params());
         let fwd: crate::util::Micros = rep.profile.iter().map(|b| b.fwd).sum();

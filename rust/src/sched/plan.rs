@@ -98,6 +98,12 @@ pub struct Schedule {
     /// groups in flight, so its bound is ~2 cycles; schemes whose forward
     /// dependencies are already stricter use `usize::MAX`.
     pub max_outstanding_iters: usize,
+    /// The Solver's knapsack capacity scale when this schedule was
+    /// produced, stored as `f64::to_bits` so `Schedule` stays `Eq` and
+    /// byte-identical plans compare equal. Baselines (which never scale
+    /// capacities) record 1.0; `crate::analysis`'s capacity lint replays
+    /// the §III.D packing arithmetic at exactly this scale.
+    pub capacity_scale_bits: u64,
 }
 
 impl Schedule {
@@ -111,34 +117,26 @@ impl Schedule {
         self.cycle.iter().map(|p| p.num_ops()).sum()
     }
 
-    /// Validate internal consistency (used by tests and debug asserts):
-    /// Σ batch multipliers = cycle length, update markers match
-    /// `updates_per_cycle`.
+    /// The Solver capacity scale recorded at plan time (see
+    /// [`Schedule::capacity_scale_bits`]).
+    pub fn capacity_scale(&self) -> f64 {
+        f64::from_bits(self.capacity_scale_bits)
+    }
+
+    /// Validate internal consistency (used by tests and debug asserts).
+    ///
+    /// Back-compat wrapper over [`crate::analysis::lint_schedule`]: runs
+    /// the full structural lint (update bookkeeping, multipliers,
+    /// duplicate ops, staleness bound, forward-window data readiness)
+    /// and returns the first **error**-severity diagnostic as a string.
+    /// Callers wanting the complete typed report — warnings, capacity
+    /// accounting, profile/environment-aware checks — use
+    /// `analysis::lint_schedule` / `analysis::lint_plan` directly.
     pub fn validate(&self) -> Result<(), String> {
-        if self.cycle.is_empty() {
-            return Err("empty cycle".into());
+        match crate::analysis::lint_schedule(self).first_error() {
+            None => Ok(()),
+            Some(d) => Err(d.to_string()),
         }
-        let marks = self.cycle.iter().filter(|p| p.update_at_end).count();
-        if marks != self.updates_per_cycle {
-            return Err(format!(
-                "updates_per_cycle {} != update markers {marks}",
-                self.updates_per_cycle
-            ));
-        }
-        if self.updates_per_cycle != self.batch_multipliers.len() {
-            return Err(format!(
-                "batch multipliers {:?} vs {} updates",
-                self.batch_multipliers, self.updates_per_cycle
-            ));
-        }
-        let ksum: u64 = self.batch_multipliers.iter().sum();
-        if ksum != self.cycle.len() as u64 {
-            return Err(format!(
-                "Σk = {ksum} != cycle length {}",
-                self.cycle.len()
-            ));
-        }
-        Ok(())
     }
 
     /// The set of registry links this schedule actually routes over, in
@@ -210,6 +208,7 @@ mod tests {
             batch_multipliers: vec![1],
             warmup_iters: 0,
             max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
         };
         assert!(s.validate().is_ok());
         s.updates_per_cycle = 2;
@@ -217,6 +216,19 @@ mod tests {
         s.updates_per_cycle = 1;
         s.batch_multipliers = vec![2];
         assert!(s.validate().is_err());
+        // Gaps the old string check missed, now caught by the typed
+        // lint behind the wrapper: duplicate ops and a fresh gradient
+        // in the forward window (error strings carry stable codes).
+        s.batch_multipliers = vec![1];
+        s.cycle[0].bwd_ops.push(op(0));
+        let err = s.validate().expect_err("duplicate op must fail");
+        assert!(err.contains("DEFT-E009"), "{err}");
+        s.cycle[0].bwd_ops.pop();
+        let mut fresh = op(1);
+        fresh.stage = Stage::Forward;
+        s.cycle[0].fwd_ops.push(fresh);
+        let err = s.validate().expect_err("fresh grad in fwd must fail");
+        assert!(err.contains("DEFT-E003"), "{err}");
     }
 
     #[test]
@@ -241,6 +253,7 @@ mod tests {
             batch_multipliers: vec![2],
             warmup_iters: 0,
             max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
         };
         assert!((s.update_frequency() - 0.5).abs() < 1e-12);
         assert_eq!(s.ops_per_cycle(), 4);

@@ -101,7 +101,7 @@ impl UsByte {
         while !remaining.is_empty() {
             // Ready candidates at the link's current free time (or the
             // earliest-ready if none).
-            let min_ready = remaining.iter().map(|&b| ready[b]).min().unwrap();
+            let min_ready = remaining.iter().map(|&b| ready[b]).min().expect("remaining is non-empty");
             let decision_t = link_t.max(min_ready);
             let candidates: Vec<usize> = remaining
                 .iter()
@@ -166,6 +166,7 @@ impl Scheduler for UsByte {
             batch_multipliers: vec![1],
             warmup_iters: 1,
             max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
         }
     }
 }

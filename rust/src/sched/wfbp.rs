@@ -48,6 +48,7 @@ impl Scheduler for Wfbp {
             batch_multipliers: vec![1],
             warmup_iters: 0,
             max_outstanding_iters: usize::MAX,
+            capacity_scale_bits: (1.0f64).to_bits(),
         }
     }
 }

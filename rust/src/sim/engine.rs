@@ -617,8 +617,8 @@ pub fn simulate(
             // them ready (ready ≤ now always), so the best candidate is
             // simply the heap minimum in (priority, iter, bucket) order.
             let Reverse((_, _, _, oi)) = pool[k].pop().expect("non-empty pool");
-            debug_assert!(ops[oi].ready.unwrap() <= now);
-            let start = ops[oi].ready.unwrap().max(link_free[k]);
+            debug_assert!(ops[oi].ready.is_some_and(|r| r <= now));
+            let start = ops[oi].ready.expect("pooled op is ready").max(link_free[k]);
             let wire = ops[oi].wire;
             events_processed += 1;
             cur_in_flight += 1;
@@ -714,7 +714,7 @@ pub fn simulate(
                             let extra = (hi - lo).scale(penalty[ops[fj.oi].bucket]);
                             if !extra.is_zero() {
                                 link_free[j] = fj.end + extra;
-                                in_flight[j].as_mut().unwrap().end = fj.end + extra;
+                                in_flight[j].as_mut().expect("flight j is in flight").end = fj.end + extra;
                                 event_gen[j] += 1;
                                 events.push(Reverse((fj.end + extra, j, event_gen[j])));
                             }
@@ -1039,7 +1039,7 @@ pub fn simulate(
         .max(update_times.last().copied().unwrap_or(Micros::ZERO))
         .max(
             ops.iter()
-                .map(|o| o.done.unwrap())
+                .map(|o| o.done.expect("all ops completed"))
                 .max()
                 .unwrap_or(Micros::ZERO),
         );

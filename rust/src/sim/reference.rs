@@ -376,12 +376,12 @@ pub fn simulate_scan(
             // simply the first element in (priority, iter, bucket) order.
             let candidate = pool[k]
                 .first()
-                .filter(|&&(_, _, _, oi)| ops[oi].ready.unwrap() <= now.max(free_at))
+                .filter(|&&(_, _, _, oi)| ops[oi].ready.is_some_and(|r| r <= now.max(free_at)))
                 .copied();
             if let Some(key) = candidate {
                 let oi = key.3;
                 pool[k].remove(&key);
-                let start = ops[oi].ready.unwrap().max(link_free[k]);
+                let start = ops[oi].ready.expect("pooled op is ready").max(link_free[k]);
                 let wire = ops[oi].wire;
                 events_processed += 1;
                 cur_in_flight += 1;
@@ -471,7 +471,7 @@ pub fn simulate_scan(
                                 let extra = (hi - lo).scale(env.contention_penalty(params));
                                 if !extra.is_zero() {
                                     link_free[j] = fj.end + extra;
-                                    in_flight[j].as_mut().unwrap().end = fj.end + extra;
+                                    in_flight[j].as_mut().expect("flight j is in flight").end = fj.end + extra;
                                 }
                             }
                         }
@@ -802,7 +802,7 @@ pub fn simulate_scan(
         .max(update_times.last().copied().unwrap_or(Micros::ZERO))
         .max(
             ops.iter()
-                .map(|o| o.done.unwrap())
+                .map(|o| o.done.expect("all ops completed"))
                 .max()
                 .unwrap_or(Micros::ZERO),
         );

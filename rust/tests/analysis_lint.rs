@@ -1,0 +1,348 @@
+//! Integration suite for the static verifier (`deft::analysis`).
+//!
+//! Three angles, per the paper's soundness story:
+//!
+//! 1. **Grid cleanliness** — every plan the four schedulers emit across
+//!    the model zoo × link presets × topologies lints clean, and the
+//!    lint's per-cycle volume accounting matches what the discrete-event
+//!    simulator actually puts on the wire (`SimResult::link_traffic`).
+//! 2. **Solver agreement** — schedules built from the greedy *and* the
+//!    exact §III.D multi-knapsack assignments both pass the capacity
+//!    lint, with the greedy objective never above the exact optimum
+//!    (property-checked over random instances).
+//! 3. **Mutation sensitivity** — every `analysis::MutationClass` applied
+//!    to a known-clean DeFT plan trips at least one error diagnostic,
+//!    including its designated code (property-checked over random
+//!    class × seed draws).
+//!
+//! Plus a docs-sync check: `docs/diagnostics.md` documents every code.
+
+use deft::analysis::{apply_mutation, lint_plan, Code, LintOptions, MutationClass};
+use deft::bench::{
+    partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION,
+};
+use deft::config::Scheme;
+use deft::links::{ClusterEnv, LinkId, LinkPreset, Topology};
+use deft::models::BucketProfile;
+use deft::sched::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
+use deft::sim::{simulate, SimOptions};
+use deft::solver::{multi_knapsack_exact, multi_knapsack_greedy, Item};
+use deft::util::prop::{check, Gen};
+use deft::util::Micros;
+
+fn all_schemes() -> Vec<Scheme> {
+    let mut schemes = Scheme::ALL.to_vec();
+    schemes.push(Scheme::DeftNoMultilink);
+    schemes
+}
+
+fn grid_envs(preset: LinkPreset) -> Vec<(&'static str, ClusterEnv)> {
+    vec![
+        ("flat", preset.env()),
+        (
+            "hier8",
+            preset
+                .env()
+                .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1))),
+        ),
+    ]
+}
+
+// ---- 1. Grid cleanliness + simulator consistency. ----
+
+/// Every plan any scheduler emits over the zoo × preset × topology grid
+/// passes the full verifier (capacity, coverage, conservation, precision).
+/// (llama2 rides the CI explorer `--lint` grid; `small` keeps this test
+/// fast while still covering a non-paper shape.)
+#[test]
+fn every_scheduler_plan_lints_clean_across_the_grid() {
+    let opts = LintOptions::default();
+    let mut linted = 0usize;
+    for wname in ["resnet101", "vgg19", "gpt2", "small"] {
+        let w = workload_by_name(wname).expect("zoo workload");
+        for preset in LinkPreset::ALL {
+            for (topo, env) in grid_envs(preset) {
+                for scheme in all_schemes() {
+                    let Ok(buckets) =
+                        partition_for(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB)
+                    else {
+                        continue; // sweep semantics: infeasible combos skip
+                    };
+                    let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+                    let report = lint_plan(&schedule, &buckets, &env, &opts);
+                    assert!(
+                        report.is_clean(),
+                        "{wname} × {} × {topo} × {}:\n{}",
+                        preset.name(),
+                        scheme.name(),
+                        report.render_text()
+                    );
+                    linted += 1;
+                }
+            }
+        }
+    }
+    assert!(linted >= 100, "grid shrank unexpectedly: {linted} plans");
+}
+
+/// The lint's per-cycle byte accounting is the simulator's ground truth:
+/// over any whole number of cycles, `SimResult::link_traffic[k].raw_bytes`
+/// is exactly `cycles × LintReport::link_raw_bytes[k]`.
+#[test]
+fn lint_volume_accounting_matches_the_simulator() {
+    let opts = LintOptions::default();
+    for wname in ["vgg19", "gpt2"] {
+        let w = workload_by_name(wname).expect("zoo workload");
+        for (topo, env) in grid_envs(LinkPreset::Paper2Link) {
+            for scheme in all_schemes() {
+                let buckets = partition_for(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB)
+                    .expect("partition");
+                let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+                let report = lint_plan(&schedule, &buckets, &env, &opts);
+                assert!(report.is_clean(), "{}", report.render_text());
+
+                let cycle = schedule.cycle.len();
+                let cycles = 6usize;
+                let sim = simulate(
+                    &buckets,
+                    &schedule,
+                    &env,
+                    &SimOptions {
+                        iterations: cycle * cycles,
+                        warmup: cycle,
+                        record_timeline: false,
+                    },
+                );
+                for (k, traffic) in sim.link_traffic.iter().enumerate() {
+                    assert_eq!(
+                        traffic.raw_bytes,
+                        report.link_raw_bytes[k] * cycles as u64,
+                        "{wname} × {topo} × {} link {k}: sim bytes diverge from lint",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- 2. Greedy and exact knapsack plans both pass the capacity lint. ----
+
+/// Mirror of `sched::cap_loss` (the §III.D knapsack capacity for one
+/// link): a slow link's window holds `window/μ` of reference-time comm.
+fn cap_of(window: Micros, mu: f64) -> Micros {
+    if mu == 1.0 {
+        window
+    } else {
+        window.scale(1.0 / mu)
+    }
+}
+
+/// Bucket set for a synthetic knapsack instance: `fwd = comm` per bucket
+/// so the whole-iteration amortization bound always covers force-shipped
+/// leftovers.
+fn knapsack_buckets(comms: &[u64], bwds: &[u64]) -> Vec<BucketProfile> {
+    comms
+        .iter()
+        .zip(bwds.iter())
+        .enumerate()
+        .map(|(id, (&comm, &bwd))| BucketProfile {
+            id,
+            params: 1_000_000,
+            fwd: Micros(comm),
+            bwd: Micros(bwd),
+            comm: Micros(comm),
+        })
+        .collect()
+}
+
+/// One-iteration `FwdDependency::None` schedule realizing a multi-knapsack
+/// assignment: packed ids ride their sack's link in the backward window;
+/// leftovers force-ship on the reference link (priority −1), exactly like
+/// DeFT's over-capacity path.
+fn schedule_from_assignment(
+    scheme: &str,
+    n_buckets: usize,
+    assignments: &[Vec<usize>],
+) -> Schedule {
+    let mut bwd_ops = Vec::new();
+    let mut packed = vec![false; n_buckets];
+    for (k, ids) in assignments.iter().enumerate() {
+        for (i, &id) in ids.iter().enumerate() {
+            packed[id] = true;
+            bwd_ops.push(CommOp {
+                bucket: id,
+                link: LinkId(k),
+                stage: Stage::Backward,
+                priority: i as i64,
+                grad_age: 1,
+                merged: 1,
+                update_offset: 0,
+            });
+        }
+    }
+    for (id, &was_packed) in packed.iter().enumerate() {
+        if !was_packed {
+            bwd_ops.push(CommOp {
+                bucket: id,
+                link: LinkId::REFERENCE,
+                stage: Stage::Backward,
+                priority: -1,
+                grad_age: 1,
+                merged: 1,
+                update_offset: 0,
+            });
+        }
+    }
+    Schedule {
+        scheme: scheme.into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops,
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::None,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 1,
+        max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
+    }
+}
+
+/// Deterministic instance: both solver outputs realize as lint-clean
+/// plans and greedy never beats the exact optimum.
+#[test]
+fn greedy_and_exact_knapsack_plans_both_lint_clean() {
+    let env = ClusterEnv::paper_testbed();
+    let mus = env.link_planning_mus();
+    let comms: Vec<u64> = vec![9_000, 7_500, 6_000, 4_500, 3_000, 2_500, 1_500, 800];
+    let bwds: Vec<u64> = vec![2_000; 8];
+    let buckets = knapsack_buckets(&comms, &bwds);
+    let sum_bwd: Micros = buckets.iter().map(|b| b.bwd).sum();
+    let caps: Vec<Micros> = mus.iter().map(|&mu| cap_of(sum_bwd, mu)).collect();
+    let items: Vec<Item> = buckets
+        .iter()
+        .map(|b| Item::new(b.id, b.comm))
+        .collect();
+
+    let greedy = multi_knapsack_greedy(&items, &caps);
+    let (exact_assign, exact_total) = multi_knapsack_exact(&items, &caps);
+    assert!(greedy.total <= exact_total, "greedy beat the exact optimum");
+
+    let opts = LintOptions::default();
+    for (name, assign) in [("greedy", &greedy.assignments), ("exact", &exact_assign)] {
+        let s = schedule_from_assignment(name, buckets.len(), assign);
+        let report = lint_plan(&s, &buckets, &env, &opts);
+        assert!(
+            report.is_clean(),
+            "{name} assignment failed the lint:\n{}",
+            report.render_text()
+        );
+        // The lint's recorded backward-window loads equal the packed
+        // comm per sack — capacity accounting is exact, not bounded.
+        for w in report
+            .loads
+            .iter()
+            .filter(|w| w.stage == Stage::Backward)
+        {
+            let packed: Micros = assign[w.link.index()]
+                .iter()
+                .map(|&id| buckets[id].comm)
+                .sum();
+            assert_eq!(w.load, packed, "{name} link {:?}", w.link);
+            assert!(w.load <= w.cap);
+        }
+    }
+}
+
+/// Property: over random instances, the greedy plan passes the capacity
+/// lint (the packer never overfills the caps the lint re-derives) and its
+/// objective never exceeds the exact optimum.
+#[test]
+fn prop_capacity_lint_passing_greedy_stays_below_exact() {
+    let env = ClusterEnv::paper_testbed();
+    let mus = env.link_planning_mus();
+    check("greedy ≤ exact on lint-clean plans", 120, |g: &mut Gen| {
+        let comms = g.vec_u64(2..=8, 100..=30_000);
+        let bwds = g.vec_u64(comms.len()..=comms.len(), 100..=20_000);
+        let buckets = knapsack_buckets(&comms, &bwds);
+        let sum_bwd: Micros = buckets.iter().map(|b| b.bwd).sum();
+        let caps: Vec<Micros> = mus.iter().map(|&mu| cap_of(sum_bwd, mu)).collect();
+        let items: Vec<Item> = buckets.iter().map(|b| Item::new(b.id, b.comm)).collect();
+
+        let greedy = multi_knapsack_greedy(&items, &caps);
+        let s = schedule_from_assignment("greedy-prop", buckets.len(), &greedy.assignments);
+        let report = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        if !report.is_clean() {
+            return Err(format!(
+                "greedy plan failed the lint:\n{}",
+                report.render_text()
+            ));
+        }
+        let (_, exact_total) = multi_knapsack_exact(&items, &caps);
+        if greedy.total > exact_total {
+            return Err(format!(
+                "greedy {} µs beat exact {} µs",
+                greedy.total.as_us(),
+                exact_total.as_us()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. Mutation sensitivity. ----
+
+fn deft_vgg19_case() -> (Schedule, Vec<BucketProfile>, ClusterEnv) {
+    let env = ClusterEnv::paper_testbed();
+    let w = workload_by_name("vgg19").expect("zoo workload");
+    let buckets =
+        partition_for(&w, Scheme::Deft, &env, PAPER_PARTITION, PAPER_DDP_MB).expect("partition");
+    let schedule = scheduler_for(Scheme::Deft, true, &env).schedule(&buckets);
+    (schedule, buckets, env)
+}
+
+/// Property: any mutation class at any seed produces at least one error
+/// diagnostic, and specifically the class's designated code — the
+/// differential argument that the verifier actually discriminates.
+#[test]
+fn prop_every_mutation_trips_its_designated_code() {
+    let (schedule, buckets, env) = deft_vgg19_case();
+    let opts = LintOptions::default();
+    let base = lint_plan(&schedule, &buckets, &env, &opts);
+    assert!(base.is_clean(), "base plan dirty:\n{}", base.render_text());
+
+    check("mutations always trip their code", 80, |g: &mut Gen| {
+        let class = MutationClass::ALL[g.usize_in(0..=MutationClass::ALL.len() - 1)];
+        let seed = g.u64_in(0..=10_000);
+        let case = apply_mutation(class, &schedule, &buckets, &env, seed);
+        let report = lint_plan(&case.schedule, &case.buckets, &case.env, &opts);
+        if report.is_clean() {
+            return Err(format!("{} (seed {seed}) linted clean", class.name()));
+        }
+        if !report.has_code(case.expected) {
+            return Err(format!(
+                "{} (seed {seed}) missed {}:\n{}",
+                class.name(),
+                case.expected.as_str(),
+                report.render_text()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---- 4. Docs stay in sync with the code table. ----
+
+#[test]
+fn docs_list_every_diagnostic_code() {
+    let docs = include_str!("../../docs/diagnostics.md");
+    for code in Code::ALL {
+        assert!(
+            docs.contains(code.as_str()),
+            "docs/diagnostics.md is missing {}",
+            code.as_str()
+        );
+    }
+}

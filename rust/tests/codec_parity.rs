@@ -382,8 +382,8 @@ fn preserver_rejection_forces_fallback_to_the_no_codec_plan() {
     let lossy_env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::RankK { k: 1 });
     let opts = LifecycleOptions::default();
     let w = vgg19();
-    let r_raw = run_lifecycle(&w, &raw_env, &opts);
-    let r_lossy = run_lifecycle(&w, &lossy_env, &opts);
+    let r_raw = run_lifecycle(&w, &raw_env, &opts).expect("raw lifecycle");
+    let r_lossy = run_lifecycle(&w, &lossy_env, &opts).expect("lossy lifecycle");
     assert!(!r_raw.codec_fallback);
     assert!(r_lossy.codec_fallback, "rank-1 error must be rejected");
     assert!(
@@ -400,7 +400,7 @@ fn preserver_rejection_forces_fallback_to_the_no_codec_plan() {
 
     // fp16's error is inside ε: the lossy route is kept.
     let fp16_env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
-    let r_fp16 = run_lifecycle(&w, &fp16_env, &opts);
+    let r_fp16 = run_lifecycle(&w, &fp16_env, &opts).expect("fp16 lifecycle");
     assert!(!r_fp16.codec_fallback, "fp16 must pass the gate");
 }
 
@@ -435,6 +435,7 @@ fn two_bucket_schedule() -> (Vec<BucketProfile>, Schedule) {
         batch_multipliers: vec![1],
         warmup_iters: 0,
         max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
     };
     schedule.validate().unwrap();
     (vec![bucket(0), bucket(1)], schedule)

@@ -186,6 +186,7 @@ fn schedule_of(bwd_ops: Vec<CommOp>) -> Schedule {
         batch_multipliers: vec![1],
         warmup_iters: 0,
         max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
     };
     s.validate().unwrap();
     s

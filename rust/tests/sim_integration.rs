@@ -175,6 +175,7 @@ fn simulator_conserves_time_under_forced_3way_contention() {
         batch_multipliers: vec![1],
         warmup_iters: 0,
         max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
     };
     schedule.validate().unwrap();
     let iters = 3usize;

@@ -141,6 +141,7 @@ fn pair_schedule(first: LinkId, second: LinkId) -> (Vec<BucketProfile>, Schedule
         batch_multipliers: vec![1],
         warmup_iters: 0,
         max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
     };
     schedule.validate().unwrap();
     (vec![bucket(0), bucket(1)], schedule)
