@@ -5,7 +5,9 @@
 //!
 //! Run: `cargo run --release --example schedule_explorer -- [workload]
 //!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]
-//!        [--contention-model <pairwise|kway>] [--lint [--lint-json <path>]]`
+//!        [--contention-model <pairwise|kway>]
+//!        [--faults <scenario>] [--fault-seed <n>] [--fault-log <path>]
+//!        [--lint [--lint-json <path>]]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
 //!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
 //!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
@@ -14,28 +16,54 @@
 //!  registry link by name, e.g. `--codec tcp=fp16`; repeatable;
 //!  --contention-model selects how shared-NIC contention is priced —
 //!  aggregate k-way sharing (default) or the legacy pairwise rule;
+//!  --faults injects a named fault scenario (straggler | flap | elastic
+//!  | mixed — see docs/faults.md) into every simulation, printing the
+//!  degraded iteration time next to the healthy one; --fault-seed
+//!  overrides the scenario's jitter seed; --fault-log writes every
+//!  recorded fault event as a JSON line;
 //!  --lint skips the timelines and instead runs the static verifier
 //!  (`deft::analysis`) over the full model-zoo × preset × topology ×
 //!  scheme grid, printing one status row per plan and exiting non-zero
 //!  if any plan carries an error diagnostic; --lint-json additionally
-//!  writes every diagnostic as a JSON line tagged with its grid cell)
+//!  writes every diagnostic as a JSON line tagged with its grid cell.
+//!  With --faults, the lint grid also carries the scenario's worst-case
+//!  link degradation as a capacity envelope — plans that only fit
+//!  healthy links pick up DEFT-W004 warnings — and each grid cell runs
+//!  a short faulted simulation on both engines, asserting they agree
+//!  bit-for-bit and feeding --fault-log)
 
 use deft::bench::{
     partition_for, run_pipeline, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION,
 };
 use deft::config::Scheme;
+use deft::faults::FaultSpec;
 use deft::links::{Codec, ContentionModel, LinkId, LinkPreset, Topology};
 use deft::metrics::{gantt_steady, link_table};
 use deft::models::BucketProfile;
 use deft::profiler::{generate_trace, reconstruct, TraceOptions};
 use deft::sched::feature_matrix;
+use deft::sim::{simulate_faulted, simulate_scan_faulted, SimOptions};
 
-fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>, ContentionModel) {
+struct Args {
+    workload: String,
+    preset: LinkPreset,
+    ranks_per_node: usize,
+    codecs: Vec<(String, Codec)>,
+    contention: ContentionModel,
+    faults: Option<String>,
+    fault_seed: Option<u64>,
+    fault_log: Option<String>,
+}
+
+fn parse_args() -> Args {
     let mut workload = "vgg19".to_string();
     let mut preset = LinkPreset::Paper2Link;
     let mut ranks_per_node = 1usize;
     let mut codecs: Vec<(String, Codec)> = Vec::new();
     let mut contention = ContentionModel::default();
+    let mut faults: Option<String> = None;
+    let mut fault_seed: Option<u64> = None;
+    let mut fault_log: Option<String> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         let looked_up = if a == "--lint" {
@@ -45,11 +73,42 @@ fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>, ContentionM
                     lint_json = Some(v.to_string());
                 } else if rest == "--lint-json" {
                     lint_json = Some(args.next().expect("--lint-json needs a path"));
+                } else if let Some(v) = rest.strip_prefix("--fault-log=") {
+                    fault_log = Some(v.to_string());
+                } else if rest == "--fault-log" {
+                    fault_log = Some(args.next().expect("--fault-log needs a path"));
                 } else {
-                    panic!("--lint takes only --lint-json <path>, got `{rest}`");
+                    panic!(
+                        "--lint takes only --lint-json <path> / --fault-log <path>, got `{rest}`"
+                    );
                 }
             }
-            run_lint_grid(lint_json.as_deref())
+            run_lint_grid(
+                lint_json.as_deref(),
+                faults.as_deref(),
+                fault_seed,
+                fault_log.as_deref(),
+            )
+        } else if let Some(v) = a.strip_prefix("--faults=") {
+            faults = Some(parse_faults_arg(v));
+            None
+        } else if a == "--faults" {
+            let v = args.next().expect("--faults needs a scenario name");
+            faults = Some(parse_faults_arg(&v));
+            None
+        } else if let Some(v) = a.strip_prefix("--fault-seed=") {
+            fault_seed = Some(v.parse().expect("--fault-seed needs an integer"));
+            None
+        } else if a == "--fault-seed" {
+            let v = args.next().expect("--fault-seed needs an integer");
+            fault_seed = Some(v.parse().expect("--fault-seed needs an integer"));
+            None
+        } else if let Some(v) = a.strip_prefix("--fault-log=") {
+            fault_log = Some(v.to_string());
+            None
+        } else if a == "--fault-log" {
+            fault_log = Some(args.next().expect("--fault-log needs a path"));
+            None
         } else if let Some(v) = a.strip_prefix("--links=") {
             Some(v.to_string())
         } else if a == "--links" {
@@ -92,7 +151,38 @@ fn parse_args() -> (String, LinkPreset, usize, Vec<(String, Codec)>, ContentionM
             });
         }
     }
-    (workload, preset, ranks_per_node, codecs, contention)
+    Args {
+        workload,
+        preset,
+        ranks_per_node,
+        codecs,
+        contention,
+        faults,
+        fault_seed,
+        fault_log,
+    }
+}
+
+fn parse_faults_arg(name: &str) -> String {
+    // Resolve against a placeholder worker count purely to validate the
+    // name early; real specs are rebuilt per environment.
+    if FaultSpec::preset(name, 16).is_none() {
+        panic!(
+            "unknown fault scenario `{name}` (known: {})",
+            FaultSpec::preset_names().join(" | ")
+        );
+    }
+    name.to_string()
+}
+
+/// Resolve a named scenario against `workers`, with the optional
+/// `--fault-seed` override applied.
+fn fault_spec_for(scenario: &str, workers: usize, seed: Option<u64>) -> FaultSpec {
+    let mut spec = FaultSpec::preset(scenario, workers).expect("validated scenario name");
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    spec
 }
 
 fn parse_codec_arg(spec: &str) -> (String, Codec) {
@@ -115,16 +205,27 @@ fn parse_contention_arg(name: &str) -> ContentionModel {
 /// every diagnostic (errors *and* warnings) goes to `--lint-json` as a
 /// JSON line tagged with its grid cell. Exits 1 iff any plan carries an
 /// error-severity diagnostic — the CI gate keys off the exit code.
-fn run_lint_grid(lint_json: Option<&str>) -> ! {
+///
+/// With a `--faults` scenario the grid additionally (a) lints every plan
+/// against the scenario's worst-case capacity envelope (DEFT-W004) and
+/// (b) runs a short faulted simulation of every cell on both engines,
+/// asserting bit-for-bit agreement; recorded fault events go to
+/// `--fault-log` as JSON lines tagged with their cell.
+fn run_lint_grid(
+    lint_json: Option<&str>,
+    fault_scenario: Option<&str>,
+    fault_seed: Option<u64>,
+    fault_log: Option<&str>,
+) -> ! {
     use deft::analysis::{lint_plan, LintOptions};
     use std::fmt::Write as _;
 
     let workloads = ["resnet101", "vgg19", "gpt2", "llama2"];
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
-    let opts = LintOptions::default();
     let (mut jsonl, mut plans, mut skipped) = (String::new(), 0usize, 0usize);
     let (mut errors, mut warnings) = (0usize, 0usize);
+    let (mut fault_jsonl, mut fault_events, mut faulted_cells) = (String::new(), 0usize, 0usize);
     println!("stat workload   preset       topo  scheme             diagnostics");
     for wname in workloads {
         let workload = workload_by_name(wname).expect("zoo workload");
@@ -134,6 +235,11 @@ fn run_lint_grid(lint_json: Option<&str>) -> ! {
                 if topo == "hier8" {
                     env = env.with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
                 }
+                let spec = fault_scenario.map(|s| fault_spec_for(s, env.workers, fault_seed));
+                let opts = LintOptions {
+                    fault_envelope: spec.clone(),
+                    ..LintOptions::default()
+                };
                 for &scheme in &schemes {
                     let buckets = match partition_for(
                         &workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB,
@@ -177,6 +283,36 @@ fn run_lint_grid(lint_json: Option<&str>) -> ! {
                             println!("     {line}");
                         }
                     }
+                    if let Some(spec) = &spec {
+                        let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+                        let sopts = SimOptions {
+                            iterations: (warmup * 3 + 4).max(12),
+                            warmup,
+                            record_timeline: false,
+                        };
+                        let indexed =
+                            simulate_faulted(&buckets, &schedule, &env, &sopts, Some(spec));
+                        let scan =
+                            simulate_scan_faulted(&buckets, &schedule, &env, &sopts, Some(spec));
+                        assert!(
+                            indexed == scan,
+                            "engines diverge under faults: {wname}/{}/{topo}/{}",
+                            preset.name(),
+                            scheme.name()
+                        );
+                        faulted_cells += 1;
+                        fault_events += indexed.fault_log.len();
+                        for e in &indexed.fault_log {
+                            writeln!(
+                                fault_jsonl,
+                                "{{\"workload\":\"{wname}\",\"preset\":\"{}\",\"topology\":\"{topo}\",\"scheme\":\"{}\",\"fault\":{}}}",
+                                preset.name(),
+                                scheme.name(),
+                                e.to_json()
+                            )
+                            .expect("string write");
+                        }
+                    }
                 }
             }
         }
@@ -186,6 +322,17 @@ fn run_lint_grid(lint_json: Option<&str>) -> ! {
             .unwrap_or_else(|e| panic!("writing lint report `{path}`: {e}"));
         println!("wrote diagnostics to {path}");
     }
+    if let Some(path) = fault_log {
+        std::fs::write(path, &fault_jsonl)
+            .unwrap_or_else(|e| panic!("writing fault log `{path}`: {e}"));
+        println!("wrote fault log to {path}");
+    }
+    if let Some(name) = fault_scenario {
+        println!(
+            "fault grid: scenario `{name}` simulated on {faulted_cells} cell(s), \
+             {fault_events} fault event(s), engines agree"
+        );
+    }
     println!(
         "lint grid: {plans} plan(s) linted, {skipped} skipped, {errors} error(s), {warnings} warning(s)"
     );
@@ -193,7 +340,16 @@ fn run_lint_grid(lint_json: Option<&str>) -> ! {
 }
 
 fn main() {
-    let (name, preset, ranks_per_node, codecs, contention) = parse_args();
+    let Args {
+        workload: name,
+        preset,
+        ranks_per_node,
+        codecs,
+        contention,
+        faults,
+        fault_seed,
+        fault_log,
+    } = parse_args();
     let workload = workload_by_name(&name).unwrap_or_else(|e| panic!("{e:#}"));
     let mut env = preset.env().with_contention_model(contention);
     if ranks_per_node > 1 {
@@ -264,6 +420,13 @@ fn main() {
         env.link_names().join("+"),
         env.contention.name()
     );
+    let fault_spec = faults
+        .as_deref()
+        .map(|s| fault_spec_for(s, env.workers, fault_seed));
+    if let Some(name) = &faults {
+        println!("\nfaults: scenario `{name}` injected into every simulation below");
+    }
+    let mut fault_jsonl = String::new();
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
     for scheme in schemes {
@@ -278,5 +441,42 @@ fn main() {
         );
         println!("{}", gantt_steady(&r.sim, r.schedule.cycle.len(), 110));
         println!("{}", link_table(&r.sim));
+        if let Some(spec) = &fault_spec {
+            let warmup = r.schedule.warmup_iters + r.schedule.cycle.len() + 2;
+            let sopts = SimOptions {
+                iterations: (warmup * 3 + 4).max(40),
+                warmup,
+                record_timeline: false,
+            };
+            let faulted = simulate_faulted(&r.buckets, &r.schedule, &env, &sopts, Some(spec));
+            let scan = simulate_scan_faulted(&r.buckets, &r.schedule, &env, &sopts, Some(spec));
+            assert!(
+                faulted == scan,
+                "engines diverge under faults for {}",
+                scheme.name()
+            );
+            println!(
+                "    faulted: iter {} ({:.2}x healthy), {} fault event(s)",
+                faulted.steady_iter_time,
+                faulted.steady_iter_time.ratio(r.sim.steady_iter_time),
+                faulted.fault_log.len()
+            );
+            for e in &faulted.fault_log {
+                use std::fmt::Write as _;
+                writeln!(
+                    fault_jsonl,
+                    "{{\"workload\":\"{}\",\"scheme\":\"{}\",\"fault\":{}}}",
+                    workload.name,
+                    scheme.name(),
+                    e.to_json()
+                )
+                .expect("string write");
+            }
+        }
+    }
+    if let Some(path) = &fault_log {
+        std::fs::write(path, &fault_jsonl)
+            .unwrap_or_else(|e| panic!("writing fault log `{path}`: {e}"));
+        println!("\nwrote fault log to {path}");
     }
 }

@@ -120,10 +120,15 @@ pub enum Code {
     WindowMismatch,
     /// `DEFT-W003` — an op merges zero gradients (ships nothing).
     DegenerateOp,
+    /// `DEFT-W004` — a window load fits the healthy capacity but not the
+    /// capacity left under the declared fault envelope's worst link
+    /// degradation (the plan's staleness bound breaks if the envelope is
+    /// realized).
+    FaultEnvelopeCapacity,
 }
 
 impl Code {
-    pub const ALL: [Code; 19] = [
+    pub const ALL: [Code; 20] = [
         Code::UnknownLink,
         Code::UnknownBucket,
         Code::FreshGradInForward,
@@ -143,6 +148,7 @@ impl Code {
         Code::EmptyIteration,
         Code::WindowMismatch,
         Code::DegenerateOp,
+        Code::FaultEnvelopeCapacity,
     ];
 
     /// The frozen wire string.
@@ -167,12 +173,16 @@ impl Code {
             Code::EmptyIteration => "DEFT-W001",
             Code::WindowMismatch => "DEFT-W002",
             Code::DegenerateOp => "DEFT-W003",
+            Code::FaultEnvelopeCapacity => "DEFT-W004",
         }
     }
 
     pub fn severity(self) -> Severity {
         match self {
-            Code::EmptyIteration | Code::WindowMismatch | Code::DegenerateOp => Severity::Warning,
+            Code::EmptyIteration
+            | Code::WindowMismatch
+            | Code::DegenerateOp
+            | Code::FaultEnvelopeCapacity => Severity::Warning,
             _ => Severity::Error,
         }
     }
@@ -209,6 +219,9 @@ impl Code {
             Code::EmptyIteration => "iterations do useful work (ship or update)",
             Code::WindowMismatch => "op stage agrees with its window vector",
             Code::DegenerateOp => "every op ships at least one merged gradient",
+            Code::FaultEnvelopeCapacity => {
+                "window loads survive the declared fault envelope's worst link degradation"
+            }
         }
     }
 }

@@ -3,6 +3,7 @@
 //! ([`lint_plan`]).
 
 use super::{Code, LintReport, Location, WindowLoad};
+use crate::faults::FaultSpec;
 use crate::links::{ClusterEnv, LinkId};
 use crate::models::BucketProfile;
 use crate::preserver::{self, WalkParams};
@@ -19,6 +20,11 @@ pub struct LintOptions {
     pub walk: WalkParams,
     pub base_batch: f64,
     pub epsilon: f64,
+    /// Declared fault envelope: when set, the capacity pass additionally
+    /// prices each link's planning μ at the envelope's worst wire
+    /// inflation ([`FaultSpec::worst_wire_inflation`]) and warns
+    /// (`DEFT-W004`) on windows that fit only the healthy capacity.
+    pub fault_envelope: Option<FaultSpec>,
 }
 
 impl Default for LintOptions {
@@ -29,6 +35,7 @@ impl Default for LintOptions {
             walk,
             base_batch,
             epsilon: preserver::EPSILON,
+            fault_envelope: None,
         }
     }
 }
@@ -254,7 +261,7 @@ pub fn lint_plan(
         coverage(schedule, n_buckets, &mut r);
     }
     if schedule.fwd_dependency == FwdDependency::None && registry_ok {
-        capacity(schedule, buckets, env, &ops, &mut r);
+        capacity(schedule, buckets, env, &ops, opts, &mut r);
     }
 
     // ---- Per-link per-cycle volume accounting (consumed by the
@@ -391,6 +398,7 @@ fn capacity(
     buckets: &[BucketProfile],
     env: &ClusterEnv,
     ops: &[(usize, Stage, &CommOp)],
+    opts: &LintOptions,
     r: &mut LintReport,
 ) {
     let raw_scale = schedule.capacity_scale();
@@ -402,6 +410,15 @@ fn capacity(
     let mus = env.link_planning_mus();
     let n_links = env.n_links();
     let names = env.link_names();
+    // Declared fault envelope: worst wire-time inflation per link (flaps
+    // + elastic membership; 1.0 when no envelope is declared). Straggler
+    // stretch only grows the compute windows, so it cannot shrink a
+    // capacity — wire inflation is the whole degradation story here.
+    let envelope_mus: Option<Vec<f64>> = opts.fault_envelope.as_ref().map(|spec| {
+        (0..n_links)
+            .map(|k| mus[k] * spec.worst_wire_inflation(LinkId(k), env))
+            .collect()
+    });
     let fwd_compute: Micros = buckets.iter().map(|b| b.fwd).sum();
     let bwd_compute: Micros = buckets.iter().map(|b| b.bwd).sum();
     let cap_iter = (fwd_compute + bwd_compute).scale(scale);
@@ -456,6 +473,26 @@ fn capacity(
                             cap.as_us()
                         ),
                     );
+                } else if let Some(emus) = &envelope_mus {
+                    let degraded = cap_loss(scaled, emus[k]);
+                    if l > degraded {
+                        r.push(
+                            Code::FaultEnvelopeCapacity,
+                            Location::window_link(t, stage, LinkId(k)),
+                            format!(
+                                "link {} carries {} µs of reference comm in a {} window: \
+                                 fits the healthy capacity {} µs but not the {} µs left \
+                                 under the declared fault envelope (worst wire inflation \
+                                 {:.3}×)",
+                                names.get(k).map(String::as_str).unwrap_or("?"),
+                                l.as_us(),
+                                super::stage_str(stage),
+                                cap.as_us(),
+                                degraded.as_us(),
+                                emus[k] / mus[k].max(f64::MIN_POSITIVE)
+                            ),
+                        );
+                    }
                 }
             }
         }
@@ -663,6 +700,37 @@ mod tests {
         s2.cycle[0].bwd_ops[1].merged = 1;
         let r = lint_plan(&s2, &buckets, &env, &LintOptions::default());
         assert!(r.has_code(Code::ForceShipUnamortized), "{}", r.render_text());
+    }
+
+    #[test]
+    fn fault_envelope_warns_on_degraded_capacity_only() {
+        use crate::faults::{FaultSpec, Flap};
+        let env = LinkPreset::Paper2Link.env();
+        let buckets = probe_buckets(2);
+        let s = wfbp_like(2, FwdDependency::None);
+        let envelope = |factor: f64| LintOptions {
+            fault_envelope: Some(FaultSpec {
+                flaps: vec![Flap {
+                    link: LinkId(0),
+                    at: Micros(10_000),
+                    factor,
+                }],
+                ..FaultSpec::default()
+            }),
+            ..LintOptions::default()
+        };
+        // Load 8 000 µs on link 0, healthy cap 24 000 µs. A 4× flap
+        // shrinks the envelope cap to 6 000 µs: W004, still clean
+        // (warning severity).
+        let r = lint_plan(&s, &buckets, &env, &envelope(4.0));
+        assert!(r.has_code(Code::FaultEnvelopeCapacity), "{}", r.render_text());
+        assert!(r.is_clean(), "W004 must stay a warning: {}", r.render_text());
+        // A 2× flap leaves 12 000 µs — the load survives the envelope.
+        let r = lint_plan(&s, &buckets, &env, &envelope(2.0));
+        assert!(!r.has_code(Code::FaultEnvelopeCapacity), "{}", r.render_text());
+        // No envelope declared: no W004 path at all.
+        let r = lint_plan(&s, &buckets, &env, &LintOptions::default());
+        assert!(r.diagnostics.is_empty(), "{}", r.render_text());
     }
 
     #[test]

@@ -23,8 +23,9 @@ use std::hint::black_box;
 
 use super::{partition_for, scheduler_for, time_it, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use crate::config::Scheme;
+use crate::faults::FaultSpec;
 use crate::links::{ClusterEnv, LinkId, LinkPreset, Topology};
-use crate::sim::{simulate, simulate_scan, SimOptions};
+use crate::sim::{simulate_faulted, simulate_scan_faulted, SimOptions};
 use crate::util::error::Result;
 
 /// One pinned benchmark scenario. Scenarios are identified by `name` in
@@ -44,6 +45,9 @@ pub struct Scenario {
     /// Simulated training iterations (floor; the pipeline may raise it
     /// to cover scheduler warm-up).
     pub iterations: usize,
+    /// `Some(scenario)` = run both engines under this named fault
+    /// scenario ([`FaultSpec::preset`]); `None` = healthy cluster.
+    pub faults: Option<&'static str>,
 }
 
 impl Scenario {
@@ -70,7 +74,18 @@ impl Scenario {
             workers,
             scheme,
             iterations: 120,
+            faults: None,
         }
+    }
+
+    /// Pin a named fault scenario onto this scenario. The name suffix
+    /// keeps faulted rows distinct in the committed file — the gate
+    /// never compares a faulted run against a healthy baseline.
+    fn with_faults(mut self, scenario: &'static str) -> Scenario {
+        self.name.push_str("+faults-");
+        self.name.push_str(scenario);
+        self.faults = Some(scenario);
+        self
     }
 
     /// Topology label used in the JSON point (`flat` / `hier<rpn>`).
@@ -104,7 +119,8 @@ fn grid_envs() -> [(LinkPreset, Option<usize>, usize); 4] {
 }
 
 /// Full pinned grid: gpt2/vgg19/llama2 × the four cluster shapes × all
-/// four schemes (48 scenarios, 96 points).
+/// four schemes (48 scenarios, 96 points), plus one faulted row that
+/// keeps the fault-injection hot path on the perf trajectory.
 pub fn full_scenarios() -> Vec<Scenario> {
     let mut v = Vec::new();
     for workload in ["gpt2", "vgg19", "llama2"] {
@@ -114,13 +130,18 @@ pub fn full_scenarios() -> Vec<Scenario> {
             }
         }
     }
+    v.push(
+        Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp)
+            .with_faults("mixed"),
+    );
     v
 }
 
 /// Per-PR CI smoke subset (must stay a subset of [`full_scenarios`] so
 /// the committed full file always carries the rows the gate matches):
-/// the DDP barrier path on the flat paper testbed, and the 10k-rank
-/// hierarchical headline scenario.
+/// the DDP barrier path on the flat paper testbed, the 10k-rank
+/// hierarchical headline scenario, and the faulted row (fault-injection
+/// pricing must not rot off the trajectory).
 pub fn smoke_scenarios() -> Vec<Scenario> {
     vec![
         Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp),
@@ -131,6 +152,8 @@ pub fn smoke_scenarios() -> Vec<Scenario> {
             10_240,
             Scheme::PytorchDdp,
         ),
+        Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp)
+            .with_faults("mixed"),
     ]
 }
 
@@ -184,10 +207,17 @@ pub fn run_scenario(s: &Scenario, reps: usize) -> Result<Vec<Point>> {
         record_timeline: false,
     };
 
+    // Faulted scenarios resolve their named preset once; healthy rows
+    // pass `None`, which is exactly the pre-fault simulate() path.
+    let spec = s
+        .faults
+        .map(|n| FaultSpec::preset(n, s.workers).expect("pinned scenario names a known preset"));
+    let spec = spec.as_ref();
+
     // Insurance on every trajectory run: the engines must agree
     // bit-for-bit before their timings mean anything.
-    let reference = simulate_scan(&buckets, &schedule, &env, &indexed_opts);
-    let indexed = simulate(&buckets, &schedule, &env, &indexed_opts);
+    let reference = simulate_scan_faulted(&buckets, &schedule, &env, &indexed_opts, spec);
+    let indexed = simulate_faulted(&buckets, &schedule, &env, &indexed_opts, spec);
     assert_eq!(
         reference, indexed,
         "indexed engine diverged from the scan reference on `{}`",
@@ -195,10 +225,10 @@ pub fn run_scenario(s: &Scenario, reps: usize) -> Result<Vec<Point>> {
     );
 
     let (scan_s, _) = time_it(1, reps, || {
-        black_box(simulate_scan(&buckets, &schedule, &env, &scan_opts));
+        black_box(simulate_scan_faulted(&buckets, &schedule, &env, &scan_opts, spec));
     });
     let (indexed_s, _) = time_it(1, reps, || {
-        black_box(simulate(&buckets, &schedule, &env, &indexed_opts));
+        black_box(simulate_faulted(&buckets, &schedule, &env, &indexed_opts, spec));
     });
 
     let solver_iterations = match s.scheme {
@@ -684,6 +714,19 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn faulted_scenario_is_pinned_and_distinct() {
+        let s = smoke_scenarios()
+            .into_iter()
+            .find(|s| s.faults.is_some())
+            .expect("smoke grid carries a faulted row");
+        assert!(s.name.ends_with("+faults-mixed"), "{}", s.name);
+        assert!(
+            FaultSpec::preset(s.faults.unwrap(), s.workers).is_some(),
+            "pinned fault scenario must resolve"
+        );
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod toml_lite;
 
 pub use toml_lite::{parse, ParseError, Value};
 
+use crate::faults::{FaultSpec, Flap, MembershipChange, Straggler};
 use crate::links::{ClusterEnv, Codec, ContentionModel, LinkId, LinkPreset, LinkSpec, Topology};
 use crate::partition::Strategy;
 use crate::util::Micros;
@@ -142,6 +143,40 @@ pub struct ExperimentConfig {
     /// `"kway"` (aggregate k-way sharing, the default) or `"pairwise"`
     /// (the legacy Table IV rule). See [`ContentionModel`].
     pub contention_model: String,
+    /// `[faults] scenario`: named fault preset injected into simulation
+    /// runs (`straggler` | `flap` | `elastic` | `mixed`; empty = none).
+    /// The remaining `[faults]` keys override or extend it — see
+    /// docs/faults.md and [`FaultSpec::preset`].
+    pub faults_scenario: String,
+    /// `[faults] seed`: jitter-stream seed override (< 0 = keep the
+    /// scenario's seed).
+    pub faults_seed: i64,
+    /// `[faults] jitter_pct`: per-task compute jitter override (< 0 =
+    /// keep the scenario's value).
+    pub faults_jitter_pct: f64,
+    /// `[faults] drift_band`: drift-monitor band override (< 0 = keep
+    /// the scenario's value; 0 disables the monitor).
+    pub faults_drift_band: f64,
+    /// `[faults] straggler_factor`: extra persistent straggler stretch
+    /// (≤ 0 = none).
+    pub faults_straggler_factor: f64,
+    /// `[faults] straggler_from_iter`: onset iteration of the extra
+    /// straggler.
+    pub faults_straggler_from_iter: usize,
+    /// `[faults] flap_link`: registry link name of an extra flap (empty
+    /// = none).
+    pub faults_flap_link: String,
+    /// `[faults] flap_at_us`: sim time (µs) of the extra flap.
+    pub faults_flap_at_us: u64,
+    /// `[faults] flap_factor`: wire-time factor of the extra flap
+    /// (> 1 degrades, 1 recovers).
+    pub faults_flap_factor: f64,
+    /// `[faults] elastic_workers`: extra membership change to this many
+    /// ranks (0 = none).
+    pub faults_elastic_workers: usize,
+    /// `[faults] elastic_at_iter`: iteration of the extra membership
+    /// change.
+    pub faults_elastic_at_iter: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -167,6 +202,17 @@ impl Default for ExperimentConfig {
             topology_inter: String::new(),
             topology_codec: String::new(),
             contention_model: ContentionModel::default().name().to_string(),
+            faults_scenario: String::new(),
+            faults_seed: -1,
+            faults_jitter_pct: -1.0,
+            faults_drift_band: -1.0,
+            faults_straggler_factor: 0.0,
+            faults_straggler_from_iter: 2,
+            faults_flap_link: String::new(),
+            faults_flap_at_us: 20_000,
+            faults_flap_factor: 2.0,
+            faults_elastic_workers: 0,
+            faults_elastic_at_iter: 2,
         }
     }
 }
@@ -248,7 +294,43 @@ impl ExperimentConfig {
                 return Err("links[0] is the reference link and must have mu = 1.0".into());
             }
         }
+        self.validate_faults()?;
         self.validate_topology()
+    }
+
+    /// Validate the `[faults]` table. Only registry-independent checks
+    /// live here; link-name resolution happens in [`Self::fault_spec`],
+    /// which has the effective [`ClusterEnv`] in hand.
+    fn validate_faults(&self) -> Result<(), String> {
+        if !self.faults_scenario.is_empty()
+            && FaultSpec::preset(&self.faults_scenario, self.workers).is_none()
+        {
+            return Err(format!(
+                "faults.scenario: unknown scenario `{}` (known: {})",
+                self.faults_scenario,
+                FaultSpec::preset_names().join(" | ")
+            ));
+        }
+        if self.faults_jitter_pct >= 0.0 && !(0.0..10.0).contains(&self.faults_jitter_pct) {
+            return Err("faults.jitter_pct must be in [0, 10)".into());
+        }
+        if self.faults_drift_band >= 0.0 && !(0.0..10.0).contains(&self.faults_drift_band) {
+            return Err("faults.drift_band must be in [0, 10)".into());
+        }
+        if self.faults_straggler_factor > 0.0
+            && !(self.faults_straggler_factor >= 1.0 && self.faults_straggler_factor.is_finite())
+        {
+            return Err("faults.straggler_factor must be ≥ 1 (or ≤ 0 for none)".into());
+        }
+        if !self.faults_flap_link.is_empty()
+            && !(self.faults_flap_factor > 0.0 && self.faults_flap_factor.is_finite())
+        {
+            return Err("faults.flap_factor must be positive and finite".into());
+        }
+        if self.faults_elastic_workers == 1 {
+            return Err("faults.elastic_workers must be ≥ 2 (or 0 for none)".into());
+        }
+        Ok(())
     }
 
     /// Validate the `[topology]` table against the effective registry.
@@ -381,6 +463,63 @@ impl ExperimentConfig {
         env
     }
 
+    /// The fault-injection spec the `[faults]` table describes, resolved
+    /// against the effective environment (flap links are named, so the
+    /// registry must already be built). `Ok(None)` means the table is
+    /// absent or declares nothing — run healthy.
+    pub fn fault_spec(&self, env: &ClusterEnv) -> Result<Option<FaultSpec>, String> {
+        let mut spec = if self.faults_scenario.is_empty() {
+            FaultSpec::default()
+        } else {
+            FaultSpec::preset(&self.faults_scenario, self.workers)
+                .ok_or_else(|| format!("unknown fault scenario `{}`", self.faults_scenario))?
+        };
+        if self.faults_seed >= 0 {
+            spec.seed = self.faults_seed as u64;
+        }
+        if self.faults_jitter_pct >= 0.0 {
+            spec.jitter_pct = self.faults_jitter_pct;
+        }
+        if self.faults_drift_band >= 0.0 {
+            spec.drift_band = self.faults_drift_band;
+        }
+        if self.faults_straggler_factor > 0.0 {
+            spec.stragglers.push(Straggler {
+                from_iter: self.faults_straggler_from_iter,
+                factor: self.faults_straggler_factor,
+            });
+        }
+        if !self.faults_flap_link.is_empty() {
+            let link = env.link(&self.faults_flap_link).ok_or_else(|| {
+                format!(
+                    "faults.flap_link: unknown link `{}` (registry: {})",
+                    self.faults_flap_link,
+                    env.links
+                        .iter()
+                        .map(|l| l.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            spec.flaps.push(Flap {
+                link,
+                at: Micros(self.faults_flap_at_us),
+                factor: self.faults_flap_factor,
+            });
+        }
+        if self.faults_elastic_workers > 0 {
+            spec.membership.push(MembershipChange {
+                at_iter: self.faults_elastic_at_iter,
+                workers: self.faults_elastic_workers,
+            });
+        }
+        if self.faults_scenario.is_empty() && spec.is_noop() && spec.drift_band <= 0.0 {
+            return Ok(None);
+        }
+        spec.validate(env)?;
+        Ok(Some(spec))
+    }
+
     /// The partition strategy this config's scheme uses.
     pub fn strategy(&self) -> Strategy {
         match self.scheme {
@@ -440,6 +579,37 @@ impl ExperimentConfig {
             "topology.codec" => self.topology_codec = value.as_str()?.to_string(),
             "contention.model" | "contention_model" => {
                 self.contention_model = value.as_str()?.to_string()
+            }
+            "faults.scenario" | "faults_scenario" => {
+                self.faults_scenario = value.as_str()?.to_string()
+            }
+            "faults.seed" | "faults_seed" => self.faults_seed = value.as_int()?,
+            "faults.jitter_pct" | "faults_jitter_pct" => {
+                self.faults_jitter_pct = value.as_float()?
+            }
+            "faults.drift_band" | "faults_drift_band" => {
+                self.faults_drift_band = value.as_float()?
+            }
+            "faults.straggler_factor" | "faults_straggler_factor" => {
+                self.faults_straggler_factor = value.as_float()?
+            }
+            "faults.straggler_from_iter" | "faults_straggler_from_iter" => {
+                self.faults_straggler_from_iter = value.as_int()? as usize
+            }
+            "faults.flap_link" | "faults_flap_link" => {
+                self.faults_flap_link = value.as_str()?.to_string()
+            }
+            "faults.flap_at_us" | "faults_flap_at_us" => {
+                self.faults_flap_at_us = value.as_int()? as u64
+            }
+            "faults.flap_factor" | "faults_flap_factor" => {
+                self.faults_flap_factor = value.as_float()?
+            }
+            "faults.elastic_workers" | "faults_elastic_workers" => {
+                self.faults_elastic_workers = value.as_int()? as usize
+            }
+            "faults.elastic_at_iter" | "faults_elastic_at_iter" => {
+                self.faults_elastic_at_iter = value.as_int()? as usize
             }
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
@@ -529,6 +699,47 @@ warmup = 4
         assert!(ExperimentConfig::from_toml("scheme = \"magic\"\n").is_err());
         assert!(ExperimentConfig::from_toml("workers = 0\n").is_err());
         assert!(ExperimentConfig::from_toml("iterations = 2\nwarmup = 5\n").is_err());
+    }
+
+    #[test]
+    fn faults_table_builds_a_spec() {
+        let text = r#"
+[faults]
+scenario = "flap"
+seed = 99
+jitter_pct = 0.01
+straggler_factor = 1.4
+straggler_from_iter = 3
+flap_link = "gloo"
+flap_at_us = 30000
+flap_factor = 2.5
+elastic_workers = 8
+elastic_at_iter = 4
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let env = cfg.env();
+        let spec = cfg.fault_spec(&env).unwrap().expect("faults declared");
+        assert_eq!(spec.seed, 99);
+        assert!((spec.jitter_pct - 0.01).abs() < 1e-12);
+        // Preset "flap" contributes two flaps; the table appends a third.
+        assert_eq!(spec.flaps.len(), 3);
+        assert_eq!(spec.flaps[2].at, Micros(30_000));
+        assert_eq!(spec.stragglers.len(), 1);
+        assert_eq!(spec.stragglers[0].from_iter, 3);
+        assert_eq!(spec.membership.len(), 1);
+        assert_eq!(spec.membership[0].workers, 8);
+
+        // An empty table means "run healthy".
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.fault_spec(&cfg.env()).unwrap(), None);
+
+        // Unknown scenario names and nonsense ranges are rejected early.
+        assert!(ExperimentConfig::from_toml("[faults]\nscenario = \"meteor\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[faults]\nstraggler_factor = 0.5\n").is_err());
+        assert!(ExperimentConfig::from_toml("[faults]\nelastic_workers = 1\n").is_err());
+        // Unknown flap links surface when the spec is resolved.
+        let cfg = ExperimentConfig::from_toml("[faults]\nflap_link = \"warp\"\n").unwrap();
+        assert!(cfg.fault_spec(&cfg.env()).is_err());
     }
 
     #[test]

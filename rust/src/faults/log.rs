@@ -1,0 +1,148 @@
+//! The fault log: every injected fault and every drift-gate decision a
+//! run records on [`SimResult::fault_log`](crate::sim::SimResult).
+//!
+//! Events carry **integer-only** payloads (µs, ppm) so the log — and
+//! therefore `SimResult` — stays `Eq` and bit-for-bit comparable across
+//! engines and replays. Ratios are parts-per-million (`1_500_000` =
+//! 1.5×).
+
+use crate::links::LinkId;
+use crate::util::Micros;
+
+/// Convert a non-negative ratio to parts-per-million.
+pub fn to_ppm(ratio: f64) -> u64 {
+    debug_assert!(ratio >= 0.0, "negative ratio");
+    (ratio * 1e6).round() as u64
+}
+
+/// One entry of a run's fault log.
+///
+/// Scheduled faults (straggler onsets, link flaps, membership changes)
+/// are recorded up front by
+/// [`FaultTrace::materialize`](crate::faults::FaultTrace::materialize);
+/// `DriftAlarm`s are appended by the engines as iterations complete and
+/// `GateDecision`s by the lifecycle's drift re-gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// A persistent compute straggler becomes active at `iter`.
+    StragglerOnset { iter: usize, factor_ppm: u64 },
+    /// A link's wire-time ratio changes to `ratio_ppm` (vs its healthy
+    /// pricing) at sim time `at`.
+    LinkFlap {
+        link: LinkId,
+        at: Micros,
+        ratio_ppm: u64,
+    },
+    /// Cluster membership changes before `iter`: allreduce wire times
+    /// rescale by `wire_scale_ppm` from this iteration on.
+    Membership {
+        iter: usize,
+        workers: usize,
+        wire_scale_ppm: u64,
+    },
+    /// Measured per-link busy of `iter` exceeded the planned busy by
+    /// more than the configured drift band.
+    DriftAlarm {
+        iter: usize,
+        link: LinkId,
+        measured: Micros,
+        planned: Micros,
+        excess_ppm: u64,
+    },
+    /// The lifecycle re-ran the Preserver gate against the drifted
+    /// topology (error = codec error compounded with measured drift).
+    GateDecision {
+        iter: usize,
+        error_ppm: u64,
+        accepted: bool,
+    },
+}
+
+impl FaultEvent {
+    /// Stable kind tag (the `"event"` field of [`FaultEvent::to_json`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::StragglerOnset { .. } => "straggler_onset",
+            FaultEvent::LinkFlap { .. } => "link_flap",
+            FaultEvent::Membership { .. } => "membership",
+            FaultEvent::DriftAlarm { .. } => "drift_alarm",
+            FaultEvent::GateDecision { .. } => "gate_decision",
+        }
+    }
+
+    /// One JSON object (no trailing newline) for the JSON-lines fault
+    /// log artifact.
+    pub fn to_json(&self) -> String {
+        match self {
+            FaultEvent::StragglerOnset { iter, factor_ppm } => format!(
+                "{{\"event\":\"straggler_onset\",\"iter\":{iter},\"factor_ppm\":{factor_ppm}}}"
+            ),
+            FaultEvent::LinkFlap { link, at, ratio_ppm } => format!(
+                "{{\"event\":\"link_flap\",\"link\":{},\"at_us\":{},\"ratio_ppm\":{ratio_ppm}}}",
+                link.index(),
+                at.as_us()
+            ),
+            FaultEvent::Membership {
+                iter,
+                workers,
+                wire_scale_ppm,
+            } => format!(
+                "{{\"event\":\"membership\",\"iter\":{iter},\"workers\":{workers},\
+                 \"wire_scale_ppm\":{wire_scale_ppm}}}"
+            ),
+            FaultEvent::DriftAlarm {
+                iter,
+                link,
+                measured,
+                planned,
+                excess_ppm,
+            } => format!(
+                "{{\"event\":\"drift_alarm\",\"iter\":{iter},\"link\":{},\"measured_us\":{},\
+                 \"planned_us\":{},\"excess_ppm\":{excess_ppm}}}",
+                link.index(),
+                measured.as_us(),
+                planned.as_us()
+            ),
+            FaultEvent::GateDecision {
+                iter,
+                error_ppm,
+                accepted,
+            } => format!(
+                "{{\"event\":\"gate_decision\",\"iter\":{iter},\"error_ppm\":{error_ppm},\
+                 \"accepted\":{accepted}}}"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shapes_are_stable() {
+        let e = FaultEvent::LinkFlap {
+            link: LinkId(1),
+            at: Micros(40_000),
+            ratio_ppm: 3_000_000,
+        };
+        assert_eq!(
+            e.to_json(),
+            "{\"event\":\"link_flap\",\"link\":1,\"at_us\":40000,\"ratio_ppm\":3000000}"
+        );
+        assert_eq!(e.kind(), "link_flap");
+        let g = FaultEvent::GateDecision {
+            iter: 5,
+            error_ppm: 230_000,
+            accepted: false,
+        };
+        assert!(g.to_json().contains("\"accepted\":false"));
+    }
+
+    #[test]
+    fn ppm_rounds_to_nearest() {
+        assert_eq!(to_ppm(1.0), 1_000_000);
+        assert_eq!(to_ppm(1.5), 1_500_000);
+        assert_eq!(to_ppm(0.977_777_9), 977_778);
+    }
+}

@@ -1,0 +1,328 @@
+//! Deterministic, seeded fault injection for dynamic clusters.
+//!
+//! Every run so far simulated a static cluster at steady state. This
+//! module injects the three fault families the ROADMAP's
+//! dynamic-cluster item calls for, as a **pure function of the spec**
+//! — no online randomness inside the engines, so the indexed and scan
+//! engines replay the identical trace bit-for-bit:
+//!
+//! * **Compute jitter and stragglers** — per-(iteration, bucket)
+//!   forward/backward stretch, drawn once from a seeded xoshiro stream
+//!   (`jitter_pct`) plus persistent per-iteration stretch factors
+//!   (`stragglers`).
+//! * **Link flaps** — a link's wire-time ratio changes at scheduled sim
+//!   times; in-flight transfers are re-priced piecewise exactly like
+//!   k-way membership changes are today (bank progress at the old rate,
+//!   re-project the remainder at the new rate).
+//! * **Elastic membership** — ranks join/leave between iterations;
+//!   allreduce wire times rescale by the ring-factor ratio
+//!   ([`ClusterEnv::elastic_wire_scale`]).
+//!
+//! A [`FaultSpec`] is declarative and engine-agnostic;
+//! [`FaultTrace::materialize`] compiles it against a concrete
+//! (profile, schedule, environment, iteration count) into the flat
+//! arrays both engines consume. The trace also carries the **drift
+//! monitor**: planned per-link busy per cycle slot, compared against
+//! measured busy as each iteration completes; breaches land on
+//! [`SimResult::fault_log`](crate::sim::SimResult) as
+//! [`FaultEvent::DriftAlarm`]s, and the lifecycle re-runs the Preserver
+//! gate against the drifted topology (see `docs/faults.md`).
+
+mod log;
+mod trace;
+
+pub use log::{to_ppm, FaultEvent};
+pub use trace::{FaultTrace, FlapAt};
+
+use crate::links::{ClusterEnv, LinkId};
+use crate::util::Micros;
+
+/// A persistent compute straggler: from iteration `from_iter` on, every
+/// bucket's forward and backward stretch by `factor` (≥ 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Straggler {
+    pub from_iter: usize,
+    pub factor: f64,
+}
+
+/// A scheduled link-speed change: from sim time `at` on, wire times on
+/// `link` are priced at `factor ×` their healthy value. `factor > 1`
+/// degrades the link, `factor = 1` recovers it. Factors are absolute
+/// (vs the healthy link), not cumulative.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Flap {
+    pub link: LinkId,
+    pub at: Micros,
+    pub factor: f64,
+}
+
+/// An elastic-membership change: from iteration `at_iter` on the
+/// cluster has `workers` ranks, rescaling ring-allreduce wire times by
+/// the ratio of ring factors `2(k−1)/k`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MembershipChange {
+    pub at_iter: usize,
+    pub workers: usize,
+}
+
+/// Declarative fault scenario: what goes wrong, when, and how tightly
+/// the drift monitor watches the consequences.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Seed of the jitter stream (xoshiro256++ via splitmix64).
+    pub seed: u64,
+    /// Uniform per-(iteration, bucket) compute jitter: each forward and
+    /// backward independently stretches by `[0, jitter_pct]`. 0 = off.
+    pub jitter_pct: f64,
+    pub stragglers: Vec<Straggler>,
+    pub flaps: Vec<Flap>,
+    pub membership: Vec<MembershipChange>,
+    /// Relative drift band of the monitor: an iteration whose measured
+    /// per-link busy exceeds `planned × (1 + drift_band)` raises a
+    /// [`FaultEvent::DriftAlarm`]. 0 disables monitoring.
+    pub drift_band: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 17,
+            jitter_pct: 0.0,
+            stragglers: Vec::new(),
+            flaps: Vec::new(),
+            membership: Vec::new(),
+            drift_band: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Named scenario presets, parameterized by the cluster size (the
+    /// elastic scenarios shrink/restore relative to it). Used by
+    /// `schedule_explorer --faults <name>` and the CI fault grid.
+    pub fn preset(name: &str, workers: usize) -> Option<FaultSpec> {
+        let spec = match name {
+            "straggler" => FaultSpec {
+                stragglers: vec![Straggler {
+                    from_iter: 2,
+                    factor: 1.5,
+                }],
+                drift_band: 0.25,
+                ..FaultSpec::default()
+            },
+            "flap" => FaultSpec {
+                // Degrade the reference link 4× mid-run, recover later.
+                flaps: vec![
+                    Flap {
+                        link: LinkId::REFERENCE,
+                        at: Micros(15_000),
+                        factor: 4.0,
+                    },
+                    Flap {
+                        link: LinkId::REFERENCE,
+                        at: Micros(400_000),
+                        factor: 1.0,
+                    },
+                ],
+                drift_band: 0.25,
+                ..FaultSpec::default()
+            },
+            "elastic" => FaultSpec {
+                membership: vec![
+                    MembershipChange {
+                        at_iter: 3,
+                        workers: (workers - workers / 4).max(2),
+                    },
+                    MembershipChange {
+                        at_iter: 8,
+                        workers,
+                    },
+                ],
+                drift_band: 0.25,
+                ..FaultSpec::default()
+            },
+            "mixed" => FaultSpec {
+                jitter_pct: 0.02,
+                stragglers: vec![Straggler {
+                    from_iter: 4,
+                    factor: 1.3,
+                }],
+                flaps: vec![
+                    Flap {
+                        link: LinkId::REFERENCE,
+                        at: Micros(20_000),
+                        factor: 2.5,
+                    },
+                    Flap {
+                        link: LinkId::REFERENCE,
+                        at: Micros(600_000),
+                        factor: 1.0,
+                    },
+                ],
+                membership: vec![MembershipChange {
+                    at_iter: 6,
+                    workers: (workers - workers / 4).max(2),
+                }],
+                drift_band: 0.25,
+                ..FaultSpec::default()
+            },
+            _ => return None,
+        };
+        Some(spec)
+    }
+
+    /// Names [`FaultSpec::preset`] accepts.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["straggler", "flap", "elastic", "mixed"]
+    }
+
+    /// No injected faults at all (drift monitoring may still be on).
+    pub fn is_noop(&self) -> bool {
+        self.jitter_pct == 0.0
+            && self.stragglers.is_empty()
+            && self.flaps.is_empty()
+            && self.membership.is_empty()
+    }
+
+    /// Validate the spec against the environment it will run in.
+    pub fn validate(&self, env: &ClusterEnv) -> Result<(), String> {
+        if !(0.0..10.0).contains(&self.jitter_pct) {
+            return Err(format!(
+                "faults: jitter_pct {} must be in [0, 10)",
+                self.jitter_pct
+            ));
+        }
+        if !(0.0..10.0).contains(&self.drift_band) {
+            return Err(format!(
+                "faults: drift_band {} must be in [0, 10)",
+                self.drift_band
+            ));
+        }
+        for (i, s) in self.stragglers.iter().enumerate() {
+            if !(s.factor >= 1.0 && s.factor.is_finite()) {
+                return Err(format!(
+                    "faults: stragglers[{i}] factor {} must be ≥ 1",
+                    s.factor
+                ));
+            }
+        }
+        for (i, f) in self.flaps.iter().enumerate() {
+            if !(f.factor > 0.0 && f.factor.is_finite()) {
+                return Err(format!(
+                    "faults: flaps[{i}] factor {} must be positive",
+                    f.factor
+                ));
+            }
+            if f.link.index() >= env.n_links() {
+                return Err(format!(
+                    "faults: flaps[{i}] link {} outside the {}-link registry",
+                    f.link.index(),
+                    env.n_links()
+                ));
+            }
+        }
+        for (i, m) in self.membership.iter().enumerate() {
+            if m.workers < 2 {
+                return Err(format!(
+                    "faults: membership[{i}] workers {} must be ≥ 2",
+                    m.workers
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Worst (largest) wire-time inflation the envelope declares for a
+    /// link: the maximum over its flap ratios and every membership
+    /// change's wire rescale, floored at 1. The static verifier uses
+    /// this to warn when a window that fits its §III.D cap today would
+    /// overrun under the declared envelope (`DEFT-W004`).
+    pub fn worst_wire_inflation(&self, link: LinkId, env: &ClusterEnv) -> f64 {
+        let mut worst = 1.0f64;
+        for f in &self.flaps {
+            if f.link == link && f.factor > worst {
+                worst = f.factor;
+            }
+        }
+        for m in &self.membership {
+            let s = env.elastic_wire_scale(m.workers);
+            if s > worst {
+                worst = s;
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_validate() {
+        let env = ClusterEnv::paper_testbed();
+        for name in FaultSpec::preset_names() {
+            let spec = FaultSpec::preset(name, env.workers).expect("known preset");
+            spec.validate(&env).expect("preset validates");
+            assert!(!spec.is_noop(), "preset {name} must inject something");
+        }
+        assert!(FaultSpec::preset("meteor-strike", 16).is_none());
+        assert!(FaultSpec::default().is_noop());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let env = ClusterEnv::paper_testbed();
+        let bad = FaultSpec {
+            stragglers: vec![Straggler {
+                from_iter: 0,
+                factor: 0.5,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(&env).is_err());
+        let bad = FaultSpec {
+            flaps: vec![Flap {
+                link: LinkId(99),
+                at: Micros(1),
+                factor: 2.0,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(&env).is_err());
+        let bad = FaultSpec {
+            membership: vec![MembershipChange {
+                at_iter: 1,
+                workers: 1,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(&env).is_err());
+        let bad = FaultSpec {
+            jitter_pct: -0.1,
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(&env).is_err());
+    }
+
+    #[test]
+    fn worst_wire_inflation_covers_flaps_and_membership() {
+        let env = ClusterEnv::paper_testbed();
+        let spec = FaultSpec::preset("flap", env.workers).unwrap();
+        assert!((spec.worst_wire_inflation(LinkId::REFERENCE, &env) - 4.0).abs() < 1e-12);
+        // A link the envelope never touches keeps inflation 1.
+        let other = LinkId(env.n_links() - 1);
+        if other != LinkId::REFERENCE {
+            assert!((spec.worst_wire_inflation(other, &env) - 1.0).abs() < 1e-12);
+        }
+        // Growing the cluster inflates wire times on every link.
+        let grow = FaultSpec {
+            membership: vec![MembershipChange {
+                at_iter: 2,
+                workers: env.workers * 4,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(grow.worst_wire_inflation(LinkId::REFERENCE, &env) > 1.0);
+    }
+}

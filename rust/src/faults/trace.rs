@@ -1,0 +1,401 @@
+//! Compilation of a [`FaultSpec`] into the flat, engine-agnostic trace
+//! both DES engines replay.
+//!
+//! Everything here is a **pure function** of the spec and the
+//! (profile, schedule, environment, iteration count) it is compiled
+//! against: the jitter stream is drawn up front in a fixed order
+//! (iteration → bucket → forward-then-backward), flaps are sorted and
+//! clamped, and the drift monitor's planned busy is priced once with
+//! the planner's own [`ClusterEnv::wire_time`] rule. The indexed and
+//! scan engines therefore consume byte-identical inputs, which is what
+//! makes bit-for-bit replay equality under faults possible at all.
+
+use super::{to_ppm, FaultEvent, FaultSpec};
+use crate::links::{ClusterEnv, LinkId};
+use crate::models::BucketProfile;
+use crate::sched::Schedule;
+use crate::util::{Micros, Rng};
+
+/// One materialized link flap, in engine-ready form: `ratio` is the
+/// absolute wire-time multiplier (vs the healthy link) from `at` on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlapAt {
+    pub at: Micros,
+    /// Link registry index.
+    pub link: usize,
+    /// Absolute wire-time ratio from `at` on (1.0 = healthy).
+    pub ratio: f64,
+    /// `ratio` in parts-per-million (what the fault log records).
+    pub ratio_ppm: u64,
+}
+
+/// A fully materialized fault trace for one simulation run.
+#[derive(Clone, Debug)]
+pub struct FaultTrace {
+    n_buckets: usize,
+    n_links: usize,
+    cycle_len: usize,
+    /// Extra forward compute per `(iteration, bucket)`, flattened
+    /// `iter * n_buckets + bucket` (jitter + straggler stretch).
+    pub fwd_extra: Vec<Micros>,
+    /// Extra backward compute per `(iteration, bucket)`.
+    pub bwd_extra: Vec<Micros>,
+    /// Link flaps sorted by `(at, link)`; ties keep spec order, so for
+    /// two same-instant flaps on one link the later entry wins.
+    pub flaps: Vec<FlapAt>,
+    /// Per-iteration wire-time rescale from elastic membership (1.0
+    /// when the configured cluster is intact).
+    pub wire_scale: Vec<f64>,
+    /// Planner-priced per-link busy of each cycle slot, flattened
+    /// `slot * n_links + link` — the drift monitor's "planned" side.
+    pub planned_cycle_busy: Vec<Micros>,
+    /// Drift band in parts-per-million; 0 disables the monitor.
+    pub drift_band_ppm: u64,
+    /// The scheduled fault events, pre-formatted for the fault log.
+    pub scheduled: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    /// Compile `spec` against a concrete run.
+    pub fn materialize(
+        spec: &FaultSpec,
+        iterations: usize,
+        buckets: &[BucketProfile],
+        schedule: &Schedule,
+        env: &ClusterEnv,
+    ) -> FaultTrace {
+        let n = buckets.len();
+        let n_links = env.n_links();
+        let iters = iterations.max(1);
+
+        // Compute stretch: one jitter draw per (iteration, bucket,
+        // fwd/bwd) in fixed order, plus the persistent stragglers.
+        let mut rng = Rng::new(spec.seed);
+        let mut fwd_extra = vec![Micros::ZERO; iters * n];
+        let mut bwd_extra = vec![Micros::ZERO; iters * n];
+        for t in 0..iters {
+            let straggle: f64 = spec
+                .stragglers
+                .iter()
+                .filter(|s| t >= s.from_iter)
+                .map(|s| s.factor - 1.0)
+                .sum();
+            for (b, bucket) in buckets.iter().enumerate() {
+                let (jf, jb) = if spec.jitter_pct > 0.0 {
+                    (
+                        rng.range_f64(0.0, spec.jitter_pct),
+                        rng.range_f64(0.0, spec.jitter_pct),
+                    )
+                } else {
+                    (0.0, 0.0)
+                };
+                let ef = jf + straggle;
+                if ef > 0.0 {
+                    fwd_extra[t * n + b] = bucket.fwd.scale(ef);
+                }
+                let eb = jb + straggle;
+                if eb > 0.0 {
+                    bwd_extra[t * n + b] = bucket.bwd.scale(eb);
+                }
+            }
+        }
+
+        // Flaps: clamp to t ≥ 1 µs (time 0 would race the first
+        // dispatch; a degradation meant "from the start" belongs in the
+        // LinkSpec itself), sort by (at, link) keeping spec order on
+        // ties so the later same-instant entry wins.
+        let mut flaps: Vec<FlapAt> = spec
+            .flaps
+            .iter()
+            .map(|f| FlapAt {
+                at: f.at.max(Micros(1)),
+                link: f.link.index(),
+                ratio: f.factor,
+                ratio_ppm: to_ppm(f.factor),
+            })
+            .collect();
+        flaps.sort_by_key(|f| (f.at, f.link));
+
+        // Elastic membership → per-iteration wire rescale.
+        let mut membership = spec.membership.clone();
+        membership.sort_by_key(|m| m.at_iter);
+        let mut wire_scale = vec![1.0f64; iters];
+        for (t, ws) in wire_scale.iter_mut().enumerate() {
+            if let Some(m) = membership.iter().rev().find(|m| m.at_iter <= t) {
+                *ws = env.elastic_wire_scale(m.workers);
+            }
+        }
+
+        // Drift monitor: planner-priced busy per (cycle slot, link).
+        let cycle_len = schedule.cycle.len().max(1);
+        let mut planned_cycle_busy = vec![Micros::ZERO; cycle_len * n_links];
+        for (ci, plan) in schedule.cycle.iter().enumerate() {
+            for op in plan.all_ops() {
+                if let Some(bucket) = buckets.get(op.bucket) {
+                    if op.link.index() < n_links {
+                        planned_cycle_busy[ci * n_links + op.link.index()] +=
+                            env.wire_time(op.link, bucket.comm, bucket.params);
+                    }
+                }
+            }
+        }
+
+        // Pre-format the scheduled events for the fault log.
+        let mut scheduled = Vec::new();
+        for s in &spec.stragglers {
+            scheduled.push(FaultEvent::StragglerOnset {
+                iter: s.from_iter,
+                factor_ppm: to_ppm(s.factor),
+            });
+        }
+        for f in &flaps {
+            scheduled.push(FaultEvent::LinkFlap {
+                link: LinkId(f.link),
+                at: f.at,
+                ratio_ppm: f.ratio_ppm,
+            });
+        }
+        for m in &membership {
+            scheduled.push(FaultEvent::Membership {
+                iter: m.at_iter,
+                workers: m.workers,
+                wire_scale_ppm: to_ppm(env.elastic_wire_scale(m.workers)),
+            });
+        }
+
+        FaultTrace {
+            n_buckets: n,
+            n_links,
+            cycle_len,
+            fwd_extra,
+            bwd_extra,
+            flaps,
+            wire_scale,
+            planned_cycle_busy,
+            drift_band_ppm: to_ppm(spec.drift_band),
+            scheduled,
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.n_buckets
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.n_links
+    }
+
+    /// Is the drift monitor armed? Engines only account per-iteration
+    /// measured busy when it is.
+    pub fn monitors_drift(&self) -> bool {
+        self.drift_band_ppm > 0
+    }
+
+    /// Wire rescale of iteration `t` (membership changes past the last
+    /// materialized iteration keep the final scale).
+    pub fn wire_scale_at(&self, t: usize) -> f64 {
+        self.wire_scale[t.min(self.wire_scale.len() - 1)]
+    }
+
+    /// Compare iteration `iter`'s measured per-link busy against the
+    /// planned busy of its cycle slot (rescaled for declared
+    /// membership), appending a [`FaultEvent::DriftAlarm`] per link
+    /// whose measured busy exceeds `planned × (1 + band)`. One-sided:
+    /// running *faster* than planned is never drift. Integer
+    /// arithmetic throughout so both engines log identical alarms.
+    pub fn drift_check(&self, iter: usize, measured: &[Micros], log: &mut Vec<FaultEvent>) {
+        if self.drift_band_ppm == 0 {
+            return;
+        }
+        debug_assert_eq!(measured.len(), self.n_links);
+        let slot = iter % self.cycle_len;
+        let ws = self.wire_scale_at(iter);
+        for (k, &m) in measured.iter().enumerate() {
+            let mut planned = self.planned_cycle_busy[slot * self.n_links + k];
+            if ws != 1.0 {
+                planned = planned.scale(ws);
+            }
+            let lhs = m.as_us() as u128 * 1_000_000;
+            let rhs = planned.as_us() as u128 * (1_000_000 + self.drift_band_ppm as u128);
+            if lhs > rhs {
+                let excess_ppm = if planned.is_zero() {
+                    // No planned traffic at all: report a saturated
+                    // 1000× excess rather than dividing by zero.
+                    1_000_000_000
+                } else {
+                    let ratio_ppm = m.as_us() as u128 * 1_000_000 / planned.as_us() as u128;
+                    (ratio_ppm.saturating_sub(1_000_000)).min(u64::MAX as u128) as u64
+                };
+                log.push(FaultEvent::DriftAlarm {
+                    iter,
+                    link: LinkId(k),
+                    measured: m,
+                    planned,
+                    excess_ppm,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{Flap, MembershipChange, Straggler};
+
+    fn bucket(id: usize, fwd: u64, bwd: u64, comm: u64) -> BucketProfile {
+        BucketProfile {
+            id,
+            params: 1_000_000,
+            fwd: Micros(fwd),
+            bwd: Micros(bwd),
+            comm: Micros(comm),
+        }
+    }
+
+    fn tiny_schedule(n_buckets: usize) -> Schedule {
+        use crate::sched::{CommOp, FwdDependency, IterPlan, Stage};
+        let bwd_ops = (0..n_buckets)
+            .map(|b| CommOp {
+                bucket: b,
+                link: LinkId::REFERENCE,
+                stage: Stage::Backward,
+                priority: b as i64,
+                grad_age: 0,
+                merged: 1,
+                update_offset: 0,
+            })
+            .collect();
+        Schedule {
+            scheme: "test".into(),
+            cycle: vec![IterPlan {
+                fwd_ops: Vec::new(),
+                bwd_ops,
+                update_at_end: true,
+            }],
+            fwd_dependency: FwdDependency::Barrier,
+            updates_per_cycle: 1,
+            batch_multipliers: vec![1],
+            warmup_iters: 0,
+            max_outstanding_iters: 1,
+            capacity_scale_bits: (1.0f64).to_bits(),
+        }
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 1_000, 2_000, 5_000), bucket(1, 1_500, 2_500, 6_000)];
+        let schedule = tiny_schedule(2);
+        let spec = FaultSpec {
+            jitter_pct: 0.1,
+            stragglers: vec![Straggler {
+                from_iter: 3,
+                factor: 1.4,
+            }],
+            drift_band: 0.2,
+            ..FaultSpec::default()
+        };
+        let a = FaultTrace::materialize(&spec, 8, &buckets, &schedule, &env);
+        let b = FaultTrace::materialize(&spec, 8, &buckets, &schedule, &env);
+        assert_eq!(a.fwd_extra, b.fwd_extra);
+        assert_eq!(a.bwd_extra, b.bwd_extra);
+        assert_eq!(a.scheduled, b.scheduled);
+        // Straggler stretch kicks in at its onset iteration.
+        assert!(a.bwd_extra[3 * 2] >= Micros(2_000).scale(0.4));
+        assert!(a.bwd_extra[0] < Micros(2_000).scale(0.4));
+    }
+
+    #[test]
+    fn flaps_sort_and_clamp() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 1_000, 2_000, 5_000)];
+        let schedule = tiny_schedule(1);
+        let spec = FaultSpec {
+            flaps: vec![
+                Flap {
+                    link: LinkId(1),
+                    at: Micros(9_000),
+                    factor: 2.0,
+                },
+                Flap {
+                    link: LinkId::REFERENCE,
+                    at: Micros(0),
+                    factor: 3.0,
+                },
+            ],
+            ..FaultSpec::default()
+        };
+        let tr = FaultTrace::materialize(&spec, 4, &buckets, &schedule, &env);
+        assert_eq!(tr.flaps[0].at, Micros(1), "time-0 flap clamps to 1 µs");
+        assert_eq!(tr.flaps[0].link, 0);
+        assert_eq!(tr.flaps[1].at, Micros(9_000));
+        assert_eq!(tr.scheduled.len(), 2);
+    }
+
+    #[test]
+    fn membership_rescales_by_iteration() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 1_000, 2_000, 5_000)];
+        let schedule = tiny_schedule(1);
+        let spec = FaultSpec {
+            membership: vec![MembershipChange {
+                at_iter: 2,
+                workers: 8,
+            }],
+            ..FaultSpec::default()
+        };
+        let tr = FaultTrace::materialize(&spec, 5, &buckets, &schedule, &env);
+        assert!((tr.wire_scale[0] - 1.0).abs() < 1e-12);
+        assert!((tr.wire_scale[1] - 1.0).abs() < 1e-12);
+        let shrunk = env.elastic_wire_scale(8);
+        assert!(shrunk < 1.0, "16 → 8 ranks shrinks the ring factor");
+        assert!((tr.wire_scale[2] - shrunk).abs() < 1e-12);
+        assert!((tr.wire_scale_at(99) - shrunk).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_check_is_one_sided_and_banded() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 1_000, 2_000, 5_000)];
+        let schedule = tiny_schedule(1);
+        let spec = FaultSpec {
+            drift_band: 0.25,
+            ..FaultSpec::default()
+        };
+        let tr = FaultTrace::materialize(&spec, 4, &buckets, &schedule, &env);
+        assert!(tr.monitors_drift());
+        let planned = tr.planned_cycle_busy[0];
+        assert!(!planned.is_zero());
+        let n = tr.n_links();
+        let mut log = Vec::new();
+        // At the band edge: no alarm (strict inequality).
+        let mut measured = vec![Micros::ZERO; n];
+        measured[0] = planned.scale(1.25);
+        tr.drift_check(0, &measured, &mut log);
+        // Slower than planned but inside the band: no alarm either.
+        measured[0] = planned.scale(1.1);
+        tr.drift_check(1, &measured, &mut log);
+        // Faster than planned: never drift.
+        measured[0] = planned.scale(0.5);
+        tr.drift_check(2, &measured, &mut log);
+        assert!(log.is_empty());
+        // Past the band: one alarm with the right excess.
+        measured[0] = planned.scale(1.5) + Micros(1);
+        tr.drift_check(3, &measured, &mut log);
+        assert_eq!(log.len(), 1);
+        match log[0] {
+            FaultEvent::DriftAlarm {
+                iter,
+                link,
+                excess_ppm,
+                ..
+            } => {
+                assert_eq!(iter, 3);
+                assert_eq!(link, LinkId::REFERENCE);
+                assert!(excess_ppm >= 500_000 - 2_000 && excess_ppm <= 500_000 + 2_000);
+            }
+            _ => panic!("expected a drift alarm"),
+        }
+    }
+}

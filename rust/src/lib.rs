@@ -69,6 +69,7 @@ pub mod models;
 pub mod links;
 pub mod sim;
 pub mod sched;
+pub mod faults;
 pub mod preserver;
 pub mod analysis;
 pub mod profiler;

@@ -1205,6 +1205,22 @@ impl ClusterEnv {
             })
             .collect()
     }
+
+    /// Wire-time rescale when cluster membership changes from the
+    /// configured `workers` to `new_workers` mid-run (elastic
+    /// training): ring-allreduce traffic scales with 2(k−1)/k, so
+    /// every transfer's wire time re-prices by the ratio of ring
+    /// factors. Degenerate memberships (either side ≤ 1 worker, where
+    /// no collective runs at all) price to 1.0.
+    pub fn elastic_wire_scale(&self, new_workers: usize) -> f64 {
+        let base = ring_factor_of(self.workers);
+        let new = ring_factor_of(new_workers);
+        if base == 0.0 || new == 0.0 {
+            1.0
+        } else {
+            new / base
+        }
+    }
 }
 
 #[cfg(test)]

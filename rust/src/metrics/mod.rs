@@ -379,6 +379,7 @@ mod tests {
             ],
             events_processed: 4,
             peak_in_flight: 2,
+            fault_log: Vec::new(),
             timeline: Timeline::default(),
         };
         let table = link_table(&result);

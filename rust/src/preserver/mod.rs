@@ -162,6 +162,19 @@ pub fn acceptable(report: &ConvergenceReport, epsilon: f64) -> bool {
     (report.ratio - 1.0).abs() <= epsilon
 }
 
+/// Compose two independent gradient-degradation sources into one
+/// effective error for [`quantify_with_error`]: the useful drift each
+/// source leaves is `1 − e`, and independent sources multiply —
+/// `1 − e_c = (1 − a)(1 − b)`. Clamped below 1 so the composed value
+/// stays a legal [`WalkParams::with_gradient_error`] input. Used by the
+/// lifecycle's drift re-gate to stack the codec error with the
+/// fault-drift error.
+pub fn combined_error(a: f64, b: f64) -> f64 {
+    assert!((0.0..1.0).contains(&a), "gradient error {a} must be in [0, 1)");
+    assert!((0.0..1.0).contains(&b), "gradient error {b} must be in [0, 1)");
+    (1.0 - (1.0 - a) * (1.0 - b)).min(0.999_999)
+}
+
 /// The paper's default acceptance band ε (§IV.C.3).
 pub const EPSILON: f64 = 0.01;
 
@@ -295,6 +308,23 @@ mod tests {
         let rank1_short =
             quantify_with_error(&p, b, &[1], crate::links::Codec::RankK { k: 1 }.error());
         assert!(!acceptable(&rank1_short, EPSILON), "ratio {}", rank1_short.ratio);
+    }
+
+    #[test]
+    fn combined_error_composes_independent_sources() {
+        // Identity on either side, symmetric, and never weaker than the
+        // stronger source alone.
+        assert_eq!(combined_error(0.0, 0.0), 0.0);
+        assert!((combined_error(0.3, 0.0) - 0.3).abs() < 1e-15);
+        assert!((combined_error(0.0, 0.3) - 0.3).abs() < 1e-15);
+        let c = combined_error(0.2, 0.5);
+        assert!((c - 0.6).abs() < 1e-15, "1 - 0.8*0.5 = 0.6, got {c}");
+        assert_eq!(combined_error(0.2, 0.5), combined_error(0.5, 0.2));
+        // Near-total degradation stays a legal with_gradient_error input.
+        let hot = combined_error(0.999_999, 0.999_999);
+        assert!(hot < 1.0);
+        let (p, _) = table5_setting();
+        let _ = p.with_gradient_error(hot);
     }
 
     #[test]

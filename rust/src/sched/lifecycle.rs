@@ -22,13 +22,58 @@
 
 use crate::analysis::{lint_plan, LintOptions, LintReport};
 use crate::bail;
+use crate::faults::{to_ppm, FaultEvent, FaultSpec};
 use crate::links::ClusterEnv;
 use crate::models::{BucketProfile, Workload};
 use crate::preserver::{self, WalkParams};
 use crate::profiler::{generate_trace, reconstruct, TraceOptions};
 use crate::sched::{Deft, DeftOptions, Schedule, Scheduler};
-use crate::sim::{simulate, SimOptions, SimResult};
+use crate::sim::{simulate_faulted, SimOptions, SimResult};
 use crate::util::error::Result;
+
+/// Why the lifecycle abandoned its first-choice plan for the raw
+/// (codec-stripped) replay — the context behind
+/// [`LifecycleReport::codec_fallback`], which stays a bare flag for
+/// compatibility. `None` means the first-choice registry's plan was
+/// accepted as-is.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FallbackReason {
+    /// No fallback happened.
+    None,
+    /// The Preserver's walk rejected a lossy-codec route: the ratio fell
+    /// outside ε while the clean (raw) walk passed, so the lossy codecs
+    /// were the problem and the registry fell back to raw.
+    CodecGateRejected {
+        /// The rejected lossy walk's final-expectation ratio.
+        ratio: f64,
+    },
+    /// The accepted lossy plan failed the full-precision static verifier
+    /// against the trial environment; the lifecycle re-solved on the raw
+    /// registry instead of erroring out.
+    LintRejected {
+        /// Rendered diagnostics of the rejected plan.
+        diagnostics: String,
+    },
+    /// The trial's drift monitor tripped (measured per-link busy left
+    /// the declared band) and the Preserver re-gate — run with the codec
+    /// and drift errors composed — rejected the schedule under the
+    /// degraded topology. The raw/fallback plan replaces it.
+    DriftGateRejected {
+        /// Iteration of the worst drift alarm that drove the re-gate.
+        alarm_iter: usize,
+        /// Composed gradient error fed to the re-gate walk, in ppm.
+        error_ppm: u64,
+        /// The rejected re-gate walk's final-expectation ratio.
+        ratio: f64,
+    },
+}
+
+impl FallbackReason {
+    /// True when the accepted schedule is the raw-registry replay.
+    pub fn is_fallback(&self) -> bool {
+        *self != FallbackReason::None
+    }
+}
 
 /// Outcome of one lifecycle run.
 pub struct LifecycleReport {
@@ -38,12 +83,17 @@ pub struct LifecycleReport {
     pub schedule: Schedule,
     /// Preserver verdicts per Solver attempt: (capacity scale, ratio).
     pub attempts: Vec<(f64, f64)>,
-    /// Trial simulation of the accepted schedule.
+    /// Trial simulation of the accepted schedule (under
+    /// [`LifecycleOptions::faults`] when set; its `fault_log` then also
+    /// carries the drift re-gate's [`FaultEvent::GateDecision`]).
     pub trial: SimResult,
-    /// True when the Preserver rejected a lossy-codec route and the
-    /// Solver fell back to the raw (codec-stripped) registry — the
-    /// accepted schedule is then byte-identical to the no-codec plan.
+    /// True when the accepted schedule is the raw (codec-stripped)
+    /// replay — byte-identical to the no-codec plan. `fallback` says
+    /// why.
     pub codec_fallback: bool,
+    /// Why the lifecycle fell back to the raw plan (or
+    /// [`FallbackReason::None`]).
+    pub fallback: FallbackReason,
     /// Full static-verifier report of the accepted schedule against the
     /// trial environment (precision lint included). Always clean when
     /// `run_lifecycle` returns `Ok` — kept for its capacity and volume
@@ -82,6 +132,11 @@ pub struct LifecycleOptions {
     pub walk: WalkParams,
     pub base_batch: f64,
     pub deft: DeftOptions,
+    /// Fault scenario injected into the trial simulation. When its
+    /// drift band trips there, the Preserver re-gates the schedule with
+    /// the drift error composed into the walk (see
+    /// [`FallbackReason::DriftGateRejected`]). `None` = healthy trial.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for LifecycleOptions {
@@ -97,6 +152,7 @@ impl Default for LifecycleOptions {
                 preserver: false, // the lifecycle drives the feedback itself
                 ..DeftOptions::default()
             },
+            faults: None,
         }
     }
 }
@@ -150,6 +206,7 @@ pub fn run_lifecycle(
     let codec_errors = env.link_path_codec_errors();
     let mut use_codecs = env.has_lossy_codec();
     let mut codec_fallback = false;
+    let mut fallback = FallbackReason::None;
     let mut scale = opts.deft.capacity_scale;
     let mut attempts = Vec::new();
     let mut accepted: Option<Schedule> = None;
@@ -180,6 +237,7 @@ pub fn run_lifecycle(
                 walk: opts.walk,
                 base_batch: opts.base_batch,
                 epsilon: opts.epsilon,
+                fault_envelope: opts.faults.clone(),
             },
         )?;
         // Gradient error of the worst lossy link the schedule routes
@@ -211,6 +269,9 @@ pub fn run_lifecycle(
             if preserver::acceptable(&clean, opts.epsilon) {
                 use_codecs = false;
                 codec_fallback = true;
+                fallback = FallbackReason::CodecGateRejected {
+                    ratio: report.ratio,
+                };
                 // The raw re-solve is free (same capacity, and it can
                 // happen at most once): not counting it as a retry
                 // guarantees the accepted schedule really is a raw-plan
@@ -222,35 +283,123 @@ pub fn run_lifecycle(
         scale *= 1.15;
         retry += 1;
     }
-    let schedule = accepted.expect("at least one attempt");
+    let mut schedule = accepted.expect("at least one attempt");
 
     // --- 4. Trial application (simulated). ---
     // After a codec fallback the accepted schedule assumes raw links, so
     // the trial prices raw wires too. The accepted plan passes the full
     // verifier — precision lint included — against the trial
     // environment before it is allowed to simulate.
-    let trial_env = if codec_fallback { &raw_env } else { env };
-    let lint = lint_gate(
-        &schedule,
+    let precision_lint = LintOptions {
+        check_precision: true,
+        walk: opts.walk,
+        base_batch: opts.base_batch,
+        epsilon: opts.epsilon,
+        fault_envelope: opts.faults.clone(),
+    };
+    let resolve_raw = |scale: f64| -> Schedule {
+        Deft::new(DeftOptions {
+            capacity_scale: scale,
+            preserver: false,
+            link_mus: raw_env.link_planning_mus(),
+            ..opts.deft.clone()
+        })
+        .schedule(&profile)
+    };
+    let mut trial_env = if codec_fallback { &raw_env } else { env };
+    let mut lint = match lint_gate(&schedule, &profile, trial_env, &precision_lint) {
+        Ok(lint) => lint,
+        // A lossy plan the precision lint rejects degrades to the raw
+        // replay (same capacity) instead of erroring out — the raw plan
+        // must still pass, so a structurally broken plan keeps failing.
+        Err(e) if !codec_fallback && env.has_lossy_codec() => {
+            fallback = FallbackReason::LintRejected {
+                diagnostics: e.to_string(),
+            };
+            codec_fallback = true;
+            trial_env = &raw_env;
+            schedule = resolve_raw(scale);
+            lint_gate(&schedule, &profile, trial_env, &precision_lint)?
+        }
+        Err(e) => return Err(e),
+    };
+    let sim_opts = |schedule: &Schedule| SimOptions {
+        iterations: opts.trial_iters.max(schedule.cycle.len() * 3),
+        warmup: schedule.cycle.len().max(2),
+        record_timeline: false,
+    };
+    let mut trial = simulate_faulted(
         &profile,
-        trial_env,
-        &LintOptions {
-            check_precision: true,
-            walk: opts.walk,
-            base_batch: opts.base_batch,
-            epsilon: opts.epsilon,
-        },
-    )?;
-    let trial = simulate(
-        &profile,
         &schedule,
         trial_env,
-        &SimOptions {
-            iterations: opts.trial_iters.max(schedule.cycle.len() * 3),
-            warmup: schedule.cycle.len().max(2),
-            record_timeline: false,
-        },
+        &sim_opts(&schedule),
+        opts.faults.as_ref(),
     );
+
+    // --- 5. Drift-aware Preserver re-gate. ---
+    // If the trial's drift monitor tripped (measured per-link busy left
+    // the declared band), the planned schedule's staleness/convergence
+    // reasoning no longer holds as priced: re-run the Preserver walk
+    // with the drift excess composed into the gradient error. Rejection
+    // degrades to the raw replay — exactly like the codec gate — rather
+    // than silently executing a now-unsafe schedule. Every decision is
+    // recorded on the trial's `fault_log`.
+    let worst_alarm = trial
+        .fault_log
+        .iter()
+        .filter_map(|e| match e {
+            FaultEvent::DriftAlarm {
+                iter, excess_ppm, ..
+            } => Some((*excess_ppm, *iter)),
+            _ => None,
+        })
+        .max();
+    if let Some((excess_ppm, alarm_iter)) = worst_alarm {
+        let codec_err = if codec_fallback {
+            0.0
+        } else {
+            schedule.worst_codec_error(&codec_errors)
+        };
+        let drift_err = (excess_ppm as f64 / 1e6).min(0.95);
+        let combined = preserver::combined_error(codec_err, drift_err);
+        let regate = preserver::quantify_with_error(
+            &opts.walk,
+            opts.base_batch,
+            &schedule.batch_multipliers,
+            combined,
+        );
+        let accepted_by_gate = preserver::acceptable(&regate, opts.epsilon);
+        if !accepted_by_gate {
+            fallback = FallbackReason::DriftGateRejected {
+                alarm_iter,
+                error_ppm: to_ppm(combined),
+                ratio: regate.ratio,
+            };
+            if !codec_fallback && env.has_lossy_codec() {
+                // Degrade to the raw replay and re-trial it under the
+                // same fault scenario (its own drift alarms, if any,
+                // land on the fresh fault log).
+                codec_fallback = true;
+                trial_env = &raw_env;
+                schedule = resolve_raw(scale);
+                lint = lint_gate(&schedule, &profile, trial_env, &precision_lint)?;
+                trial = simulate_faulted(
+                    &profile,
+                    &schedule,
+                    trial_env,
+                    &sim_opts(&schedule),
+                    opts.faults.as_ref(),
+                );
+            }
+            // Else: already on the raw plan — nothing safer to degrade
+            // to; the recorded rejection flags the envelope breach.
+        }
+        trial.fault_log.push(FaultEvent::GateDecision {
+            iter: alarm_iter,
+            error_ppm: to_ppm(combined),
+            accepted: accepted_by_gate,
+        });
+    }
 
     Ok(LifecycleReport {
         profile,
@@ -258,6 +407,7 @@ pub fn run_lifecycle(
         attempts,
         trial,
         codec_fallback,
+        fallback,
         lint,
     })
 }
@@ -316,7 +466,16 @@ mod tests {
         let r_raw = run_lifecycle(&w, &raw, &opts).expect("raw lifecycle");
         let r_lossy = run_lifecycle(&w, &lossy, &opts).expect("lossy lifecycle");
         assert!(!r_raw.codec_fallback);
+        assert_eq!(r_raw.fallback, FallbackReason::None);
         assert!(r_lossy.codec_fallback, "rank-1 error must trip the gate");
+        let rejected_ratio =
+            matches!(r_lossy.fallback, FallbackReason::CodecGateRejected { ratio }
+                if (ratio - 1.0).abs() > opts.epsilon);
+        assert!(
+            rejected_ratio,
+            "fallback reason must carry the rejected ratio: {:?}",
+            r_lossy.fallback
+        );
         assert_eq!(r_lossy.schedule, r_raw.schedule, "fallback plan must be the raw plan");
         assert_eq!(r_lossy.trial.steady_iter_time, r_raw.trial.steady_iter_time);
         assert_eq!(r_lossy.trial.iter_ends, r_raw.trial.iter_ends);
@@ -365,9 +524,11 @@ mod tests {
         let env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
         let rep = run_lifecycle(&gpt2(), &env, &LifecycleOptions::default()).expect("lifecycle");
         assert!(!rep.codec_fallback);
+        assert_eq!(rep.fallback, FallbackReason::None);
         rep.schedule.validate().unwrap();
         assert!(rep.trial.steady_iter_time.as_us() > 0);
         assert!(rep.lint.is_clean());
+        assert!(rep.trial.fault_log.is_empty(), "healthy trial logs no faults");
     }
 
     #[test]

@@ -24,7 +24,7 @@ mod wfbp;
 pub use bytescheduler::Bytescheduler;
 pub(crate) use deft::cap_loss;
 pub use deft::{Deft, DeftOptions};
-pub use lifecycle::{lint_gate, run_lifecycle, LifecycleOptions, LifecycleReport};
+pub use lifecycle::{lint_gate, run_lifecycle, FallbackReason, LifecycleOptions, LifecycleReport};
 pub use plan::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
 pub use usbyte::UsByte;
 pub use wfbp::Wfbp;

@@ -89,6 +89,7 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
 use super::{Span, SpanKind, StreamId, Timeline};
+use crate::faults::{FaultEvent, FaultSpec, FaultTrace, FlapAt};
 use crate::links::{ClusterEnv, ContentionModel, ContentionStaircase, LinkId};
 use crate::models::BucketProfile;
 use crate::sched::{FwdDependency, Schedule, Stage};
@@ -170,6 +171,10 @@ pub struct SimResult {
     /// Maximum number of transfers simultaneously in flight across all
     /// links (event-queue pressure indicator).
     pub peak_in_flight: usize,
+    /// Every injected fault and drift-monitor alarm of the run, in
+    /// scheduled-then-chronological order (empty without fault
+    /// injection). Integer-only payloads, so replays stay `Eq`.
+    pub fault_log: Vec<FaultEvent>,
     pub timeline: Timeline,
 }
 
@@ -318,6 +323,39 @@ pub fn simulate(
     env: &ClusterEnv,
     opts: &SimOptions,
 ) -> SimResult {
+    run(buckets, schedule, env, opts, None)
+}
+
+/// Execute `schedule` under an injected fault scenario (stragglers,
+/// compute jitter, link flaps, elastic membership — see
+/// [`crate::faults`]).
+///
+/// Deterministic by construction: the spec is first compiled into a
+/// [`FaultTrace`] — a pure function of `(spec, iterations, buckets,
+/// schedule, env)` with no online randomness — so an identical call
+/// replays bit-for-bit, on this engine and on
+/// [`super::reference::simulate_scan_faulted`]
+/// (`tests/fault_injection.rs`). `faults: None` is exactly
+/// [`simulate`].
+pub fn simulate_faulted(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+    faults: Option<&FaultSpec>,
+) -> SimResult {
+    let trace =
+        faults.map(|spec| FaultTrace::materialize(spec, opts.iterations, buckets, schedule, env));
+    run(buckets, schedule, env, opts, trace.as_ref())
+}
+
+fn run(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+    faults: Option<&FaultTrace>,
+) -> SimResult {
     schedule.validate().expect("invalid schedule");
     let n = buckets.len();
     assert!(n > 0, "no buckets");
@@ -384,12 +422,22 @@ pub fn simulate(
             traffic.encode += enc;
             // Uncontended segment-path pricing; the dispatch loop adds
             // the contention penalty for actually-overlapping windows.
-            let (wire, seg_extra) = *seg_memo[mi].get_or_insert_with(|| {
+            let (mut wire, mut seg_extra) = *seg_memo[mi].get_or_insert_with(|| {
                 let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
                 let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
                 let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
                 (wire, seg_extra)
             });
+            // Elastic membership: the declared cluster size of this
+            // iteration rescales the whole segment path (ring-factor
+            // ratio; see `ClusterEnv::elastic_wire_scale`).
+            if let Some(ft) = faults {
+                let s = ft.wire_scale_at(t);
+                if s != 1.0 {
+                    wire = wire.scale(s);
+                    seg_extra = seg_extra.map(|(l, m)| (l, m.scale(s)));
+                }
+            }
             ops.push(OpInst {
                 bucket: op.bucket,
                 link: op.link,
@@ -512,6 +560,25 @@ pub fn simulate(
     let mut cur_in_flight = 0usize;
     let mut peak_in_flight = 0usize;
 
+    // ---- Fault-injection state. ----
+    // Flaps fire as first-class events: the next unfired flap's time is
+    // always a candidate in the next-event search, so the clock never
+    // jumps past a flap and banking in-flight progress at `now` is
+    // exact. `cur_ratio[k]` is link k's current wire-time multiplier.
+    let flaps: &[FlapAt] = match faults {
+        Some(ft) => ft.flaps.as_slice(),
+        None => &[],
+    };
+    let mut next_flap = 0usize;
+    let mut cur_ratio: Vec<f64> = vec![1.0; n_links];
+    let mut fault_log: Vec<FaultEvent> = faults.map(|ft| ft.scheduled.clone()).unwrap_or_default();
+    // Measured per-(iteration, link) home busy for the drift monitor
+    // (only accounted while the monitor is armed).
+    let mut iter_link_busy: Vec<Micros> = match faults {
+        Some(ft) if ft.monitors_drift() => vec![Micros::ZERO; iters * n_links],
+        _ => Vec::new(),
+    };
+
     // Staleness-bound bookkeeping (incremental — a linear scan of all ops
     // per dispatch made the engine quadratic in iterations):
     // `iter_ops_remaining[it]` counts incomplete ops launched in iteration
@@ -619,7 +686,15 @@ pub fn simulate(
             let Reverse((_, _, _, oi)) = pool[k].pop().expect("non-empty pool");
             debug_assert!(ops[oi].ready.is_some_and(|r| r <= now));
             let start = ops[oi].ready.expect("pooled op is ready").max(link_free[k]);
-            let wire = ops[oi].wire;
+            // A degraded (flapped) link prices the whole transfer at its
+            // current ratio; a mid-flight flap re-prices the remainder
+            // piecewise at the flap event below.
+            let r = cur_ratio[k];
+            let wire = if r == 1.0 {
+                ops[oi].wire
+            } else {
+                ops[oi].wire.scale(r)
+            };
             events_processed += 1;
             cur_in_flight += 1;
             peak_in_flight = peak_in_flight.max(cur_in_flight);
@@ -814,6 +889,10 @@ pub fn simulate(
                         if bucket == 0 {
                             dur += enc_fwd[iter];
                         }
+                        // Injected compute jitter / straggler stretch.
+                        if let Some(ft) = faults {
+                            dur += ft.fwd_extra[iter * n + bucket];
+                        }
                         let end = start + dur;
                         first_comp_start.get_or_insert(start);
                         compute_busy += dur;
@@ -835,7 +914,11 @@ pub fn simulate(
                     // Encode kernels of ops this backward task launches
                     // extend it — the wire cannot start before its
                     // gradient is compressed.
-                    let dur = buckets[bucket].bwd + enc_bwd[iter * n + bucket];
+                    let mut dur = buckets[bucket].bwd + enc_bwd[iter * n + bucket];
+                    // Injected compute jitter / straggler stretch.
+                    if let Some(ft) = faults {
+                        dur += ft.bwd_extra[iter * n + bucket];
+                    }
                     let end = start + dur;
                     compute_busy += dur;
                     events_processed += 1;
@@ -878,6 +961,15 @@ pub fn simulate(
         if comp_running && comp_busy_until > now {
             next_time = Some(next_time.map_or(comp_busy_until, |t| t.min(comp_busy_until)));
         }
+        // The next unfired flap is always a candidate event, so the
+        // clock lands exactly on it (never jumps it) and the mid-flight
+        // re-pricing below banks progress at the precise flap instant.
+        if next_flap < flaps.len() {
+            let fa = flaps[next_flap].at;
+            if fa > now {
+                next_time = Some(next_time.map_or(fa, |t| t.min(fa)));
+            }
+        }
         let Some(t) = next_time else {
             break; // nothing running, nothing pending
         };
@@ -908,6 +1000,13 @@ pub fn simulate(
             // Finalize: contention can no longer move this transfer.
             ops[oi].done = Some(done_t);
             seg_busy[k] += done_t - f.start;
+            if !iter_link_busy.is_empty() {
+                // Drift monitor: measured home busy of the op's launch
+                // iteration (the full home span — comparable to the
+                // planner's `wire_time`, which also prices the whole
+                // segment path plus static contention).
+                iter_link_busy[ops[oi].iter * n_links + k] += done_t - f.start;
+            }
             if opts.record_timeline {
                 timeline.spans.push(Span {
                     stream: StreamId::Link(LinkId(k)),
@@ -931,6 +1030,18 @@ pub fn simulate(
                     cum_max_done[watermark - 1]
                 };
                 cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
+                // Every comm op of `watermark` has completed: its
+                // measured per-link busy is final — compare against the
+                // planned busy of its cycle slot.
+                if let Some(ft) = faults {
+                    if !iter_link_busy.is_empty() {
+                        ft.drift_check(
+                            watermark,
+                            &iter_link_busy[watermark * n_links..(watermark + 1) * n_links],
+                            &mut fault_log,
+                        );
+                    }
+                }
                 watermark += 1;
             }
             let u = ops[oi].update_idx;
@@ -961,6 +1072,67 @@ pub fn simulate(
                     &mut event_gen,
                     done_t,
                 );
+            }
+        }
+        // Link flaps due at `now` (after completions: a transfer whose
+        // projected end is exactly `now` completes at its pre-flap
+        // pricing, which is exact — the flap takes effect from `now`
+        // on). The link's wire-time ratio changes and its in-flight
+        // transfer is re-priced piecewise: bank the progress made so
+        // far, re-project the remainder at the new ratio — the same
+        // bank-then-reproject arithmetic k-way membership changes use.
+        // Pairwise flights carry one-shot overlap extensions not
+        // derivable from `rem`, so their remaining wall-clock window is
+        // rescaled one-shot instead, consistent with that model's
+        // never-revisit semantics.
+        while next_flap < flaps.len() && flaps[next_flap].at <= now {
+            let fl = flaps[next_flap];
+            next_flap += 1;
+            events_processed += 1;
+            let j = fl.link;
+            if j >= n_links {
+                continue;
+            }
+            let old_r = cur_ratio[j];
+            let new_r = fl.ratio;
+            cur_ratio[j] = new_r;
+            if new_r == old_r {
+                continue;
+            }
+            if let Some(f) = in_flight[j].as_mut() {
+                let end = match env.contention {
+                    ContentionModel::Kway => {
+                        let elapsed = now.saturating_sub(f.at);
+                        if !elapsed.is_zero() {
+                            let done = if f.factor == 1.0 {
+                                elapsed
+                            } else {
+                                elapsed.scale(1.0 / f.factor)
+                            };
+                            f.rem = f.rem.saturating_sub(done);
+                        }
+                        f.at = f.at.max(now);
+                        // `rem` is owed wire time priced at the old
+                        // ratio; the same physical bytes re-price by
+                        // new/old.
+                        f.rem = f.rem.scale(new_r / old_r);
+                        f.at + if f.factor == 1.0 {
+                            f.rem
+                        } else {
+                            f.rem.scale(f.factor)
+                        }
+                    }
+                    ContentionModel::Pairwise => {
+                        let rem_wall = f.end.saturating_sub(now);
+                        now + rem_wall.scale(new_r / old_r)
+                    }
+                };
+                if end != f.end {
+                    f.end = end;
+                    link_free[j] = end;
+                    event_gen[j] += 1;
+                    events.push(Reverse((end, j, event_gen[j])));
+                }
             }
         }
         // Compute completion.
@@ -1077,6 +1249,7 @@ pub fn simulate(
         link_traffic,
         events_processed,
         peak_in_flight,
+        fault_log,
         timeline,
     }
 }

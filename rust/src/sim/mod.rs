@@ -32,8 +32,8 @@ mod engine;
 mod reference;
 
 pub use convergence::{training_curve, ConvergenceModel, TrainingCurve};
-pub use engine::{simulate, LinkTraffic, SimOptions, SimResult};
-pub use reference::simulate_scan;
+pub use engine::{simulate, simulate_faulted, LinkTraffic, SimOptions, SimResult};
+pub use reference::{simulate_scan, simulate_scan_faulted};
 
 use crate::links::LinkId;
 use crate::util::Micros;

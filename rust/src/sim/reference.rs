@@ -20,6 +20,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::{Span, SpanKind, StreamId, Timeline};
+use crate::faults::{FaultEvent, FaultSpec, FaultTrace, FlapAt};
 use crate::links::{ClusterEnv, ContentionModel, LinkId};
 use crate::models::BucketProfile;
 use crate::sched::{FwdDependency, Schedule, Stage};
@@ -146,6 +147,33 @@ pub fn simulate_scan(
     env: &ClusterEnv,
     opts: &SimOptions,
 ) -> SimResult {
+    run(buckets, schedule, env, opts, None)
+}
+
+/// Scan-engine counterpart of [`super::engine::simulate_faulted`]: same
+/// fault semantics (stragglers, compute jitter, link flaps, elastic
+/// membership, drift monitor), re-derived by scanning. Must produce
+/// bit-for-bit the same [`SimResult`] — including `fault_log` — for any
+/// `(spec, opts)` pair (`tests/fault_injection.rs`).
+pub fn simulate_scan_faulted(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+    faults: Option<&FaultSpec>,
+) -> SimResult {
+    let trace =
+        faults.map(|spec| FaultTrace::materialize(spec, opts.iterations, buckets, schedule, env));
+    run(buckets, schedule, env, opts, trace.as_ref())
+}
+
+fn run(
+    buckets: &[BucketProfile],
+    schedule: &Schedule,
+    env: &ClusterEnv,
+    opts: &SimOptions,
+    faults: Option<&FaultTrace>,
+) -> SimResult {
     schedule.validate().expect("invalid schedule");
     let n = buckets.len();
     assert!(n > 0, "no buckets");
@@ -202,8 +230,18 @@ pub fn simulate_scan(
             // Uncontended segment-path pricing; the dispatch loop adds
             // the contention penalty for actually-overlapping windows.
             let segs = env.wire_segments(op.link, buckets[op.bucket].comm);
-            let wire: Micros = segs.iter().map(|&(_, t)| t).sum();
-            let seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
+            let mut wire: Micros = segs.iter().map(|&(_, t)| t).sum();
+            let mut seg_extra = segs.iter().find(|&&(l, _)| l != op.link).copied();
+            // Elastic membership: the declared cluster size of this
+            // iteration rescales the whole segment path (ring-factor
+            // ratio; see `ClusterEnv::elastic_wire_scale`).
+            if let Some(ft) = faults {
+                let s = ft.wire_scale_at(t);
+                if s != 1.0 {
+                    wire = wire.scale(s);
+                    seg_extra = seg_extra.map(|(l, m)| (l, m.scale(s)));
+                }
+            }
             ops.push(OpInst {
                 bucket: op.bucket,
                 link: op.link,
@@ -289,6 +327,25 @@ pub fn simulate_scan(
     let mut events_processed = 0u64;
     let mut cur_in_flight = 0usize;
     let mut peak_in_flight = 0usize;
+
+    // ---- Fault-injection state. ----
+    // Flaps fire as first-class events: the next unfired flap's time is
+    // always a candidate in the next-event search, so the clock never
+    // jumps past a flap and banking in-flight progress at `now` is
+    // exact. `cur_ratio[k]` is link k's current wire-time multiplier.
+    let flaps: &[FlapAt] = match faults {
+        Some(ft) => ft.flaps.as_slice(),
+        None => &[],
+    };
+    let mut next_flap = 0usize;
+    let mut cur_ratio: Vec<f64> = vec![1.0; n_links];
+    let mut fault_log: Vec<FaultEvent> = faults.map(|ft| ft.scheduled.clone()).unwrap_or_default();
+    // Measured per-(iteration, link) home busy for the drift monitor
+    // (only accounted while the monitor is armed).
+    let mut iter_link_busy: Vec<Micros> = match faults {
+        Some(ft) if ft.monitors_drift() => vec![Micros::ZERO; iters * n_links],
+        _ => Vec::new(),
+    };
 
     // Staleness-bound bookkeeping (incremental — a linear scan of all ops
     // per dispatch made the engine quadratic in iterations):
@@ -382,7 +439,15 @@ pub fn simulate_scan(
                 let oi = key.3;
                 pool[k].remove(&key);
                 let start = ops[oi].ready.expect("pooled op is ready").max(link_free[k]);
-                let wire = ops[oi].wire;
+                // A degraded (flapped) link prices the whole transfer at
+                // its current ratio; a mid-flight flap re-prices the
+                // remainder piecewise at the flap event below.
+                let r = cur_ratio[k];
+                let wire = if r == 1.0 {
+                    ops[oi].wire
+                } else {
+                    ops[oi].wire.scale(r)
+                };
                 events_processed += 1;
                 cur_in_flight += 1;
                 peak_in_flight = peak_in_flight.max(cur_in_flight);
@@ -567,6 +632,10 @@ pub fn simulate_scan(
                         if bucket == 0 {
                             dur += enc_fwd[iter];
                         }
+                        // Injected compute jitter / straggler stretch.
+                        if let Some(ft) = faults {
+                            dur += ft.fwd_extra[iter * n + bucket];
+                        }
                         let end = start + dur;
                         first_comp_start.get_or_insert(start);
                         compute_busy += dur;
@@ -590,8 +659,12 @@ pub fn simulate_scan(
                     // Encode kernels of ops this backward task launches
                     // extend it — the wire cannot start before its
                     // gradient is compressed.
-                    let dur = buckets[bucket].bwd
+                    let mut dur = buckets[bucket].bwd
                         + enc_bwd.get(&(iter, bucket)).copied().unwrap_or(Micros::ZERO);
+                    // Injected compute jitter / straggler stretch.
+                    if let Some(ft) = faults {
+                        dur += ft.bwd_extra[iter * n + bucket];
+                    }
                     let end = start + dur;
                     compute_busy += dur;
                     events_processed += 1;
@@ -632,6 +705,12 @@ pub fn simulate_scan(
         }
         // Pending update whose iteration end passed but ops outstanding:
         // resolved by op-done events, nothing to schedule here.
+        // The next unfired flap is always a candidate event, so the
+        // clock lands exactly on it (never jumps it) and the mid-flight
+        // re-pricing below banks progress at the precise flap instant.
+        if next_flap < flaps.len() {
+            consider(flaps[next_flap].at, &mut next_time);
+        }
 
         if !progressed {
             match next_time {
@@ -665,6 +744,13 @@ pub fn simulate_scan(
             // Finalize: contention can no longer move this transfer.
             ops[oi].done = Some(done_t);
             seg_busy[k] += done_t - f.start;
+            if !iter_link_busy.is_empty() {
+                // Drift monitor: measured home busy of the op's launch
+                // iteration (the full home span — comparable to the
+                // planner's `wire_time`, which also prices the whole
+                // segment path plus static contention).
+                iter_link_busy[ops[oi].iter * n_links + k] += done_t - f.start;
+            }
             record(
                 &mut timeline,
                 Span {
@@ -689,6 +775,18 @@ pub fn simulate_scan(
                     cum_max_done[watermark - 1]
                 };
                 cum_max_done[watermark] = prev.max(iter_max_done[watermark]);
+                // Every comm op of `watermark` has completed: its
+                // measured per-link busy is final — compare against the
+                // planned busy of its cycle slot.
+                if let Some(ft) = faults {
+                    if !iter_link_busy.is_empty() {
+                        ft.drift_check(
+                            watermark,
+                            &iter_link_busy[watermark * n_links..(watermark + 1) * n_links],
+                            &mut fault_log,
+                        );
+                    }
+                }
                 watermark += 1;
             }
             let u = ops[oi].update_idx;
@@ -716,6 +814,63 @@ pub fn simulate_scan(
                     group_of[k],
                     done_t,
                 );
+            }
+        }
+        // Link flaps due at `now` (after completions: a transfer whose
+        // projected end is exactly `now` completes at its pre-flap
+        // pricing, which is exact — the flap takes effect from `now`
+        // on). The link's wire-time ratio changes and its in-flight
+        // transfer is re-priced piecewise: bank the progress made so
+        // far, re-project the remainder at the new ratio — the same
+        // bank-then-reproject arithmetic k-way membership changes use.
+        // Pairwise flights carry one-shot overlap extensions not
+        // derivable from `rem`, so their remaining wall-clock window is
+        // rescaled one-shot instead, consistent with that model's
+        // never-revisit semantics.
+        while next_flap < flaps.len() && flaps[next_flap].at <= now {
+            let fl = flaps[next_flap];
+            next_flap += 1;
+            events_processed += 1;
+            let j = fl.link;
+            if j >= n_links {
+                continue;
+            }
+            let old_r = cur_ratio[j];
+            let new_r = fl.ratio;
+            cur_ratio[j] = new_r;
+            if new_r == old_r {
+                continue;
+            }
+            if let Some(f) = in_flight[j].as_mut() {
+                let end = match env.contention {
+                    ContentionModel::Kway => {
+                        let elapsed = now.saturating_sub(f.at);
+                        if !elapsed.is_zero() {
+                            let done = if f.factor == 1.0 {
+                                elapsed
+                            } else {
+                                elapsed.scale(1.0 / f.factor)
+                            };
+                            f.rem = f.rem.saturating_sub(done);
+                        }
+                        f.at = f.at.max(now);
+                        // `rem` is owed wire time priced at the old
+                        // ratio; the same physical bytes re-price by
+                        // new/old.
+                        f.rem = f.rem.scale(new_r / old_r);
+                        f.at + if f.factor == 1.0 {
+                            f.rem
+                        } else {
+                            f.rem.scale(f.factor)
+                        }
+                    }
+                    ContentionModel::Pairwise => {
+                        let rem_wall = f.end.saturating_sub(now);
+                        now + rem_wall.scale(new_r / old_r)
+                    }
+                };
+                f.end = end;
+                link_free[j] = end;
             }
         }
         // Compute completion.
@@ -840,6 +995,7 @@ pub fn simulate_scan(
         link_traffic,
         events_processed,
         peak_in_flight,
+        fault_log,
         timeline,
     }
 }

@@ -1,0 +1,353 @@
+//! Fault-injection suite: seeded determinism, engine equivalence under
+//! faults, a hand-computed single-flap oracle, straggler monotonicity,
+//! profiler-trace replay under faults, and the lifecycle's drift-aware
+//! Preserver re-gate.
+//!
+//! The contract under test (see `docs/faults.md`): a [`FaultSpec`] is
+//! compiled into a deterministic trace before simulation, so identical
+//! seed + fault config ⇒ bit-for-bit identical [`deft::sim::SimResult`]
+//! — fault log included — on both engines.
+
+use deft::bench::{partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::Scheme;
+use deft::faults::{FaultEvent, FaultSpec, Flap, Straggler};
+use deft::links::{ClusterEnv, Codec, LinkId, LinkPreset, LinkSpec, Topology};
+use deft::models::BucketProfile;
+use deft::profiler::{generate_trace, reconstruct, TraceOptions};
+use deft::sched::{
+    run_lifecycle, CommOp, FallbackReason, FwdDependency, IterPlan, LifecycleOptions, Schedule,
+    Stage,
+};
+use deft::sim::{simulate, simulate_faulted, simulate_scan_faulted, SimOptions};
+use deft::util::Micros;
+
+const ALL_SCHEMES: [Scheme; 5] = [
+    Scheme::PytorchDdp,
+    Scheme::Bytescheduler,
+    Scheme::UsByte,
+    Scheme::Deft,
+    Scheme::DeftNoMultilink,
+];
+
+fn bucket(id: usize, comm: Micros) -> BucketProfile {
+    BucketProfile {
+        id,
+        params: 1_000_000,
+        fwd: Micros(10_000),
+        bwd: Micros(10_000),
+        comm,
+    }
+}
+
+fn op(bucket: usize, link: LinkId, grad_age: usize) -> CommOp {
+    CommOp {
+        bucket,
+        link,
+        stage: Stage::Backward,
+        priority: 0,
+        grad_age,
+        merged: 1,
+        update_offset: 0,
+    }
+}
+
+fn schedule_of(bwd_ops: Vec<CommOp>) -> Schedule {
+    let s = Schedule {
+        scheme: "fault-probe".into(),
+        cycle: vec![IterPlan {
+            fwd_ops: Vec::new(),
+            bwd_ops,
+            update_at_end: true,
+        }],
+        fwd_dependency: FwdDependency::Barrier,
+        updates_per_cycle: 1,
+        batch_multipliers: vec![1],
+        warmup_iters: 0,
+        max_outstanding_iters: usize::MAX,
+        capacity_scale_bits: (1.0f64).to_bits(),
+    };
+    s.validate().unwrap();
+    s
+}
+
+/// Build a real pipeline (workload → partition → schedule) and simulate
+/// it on both engines under `spec`, asserting bit-for-bit agreement.
+fn faulted_pipeline(
+    workload: &str,
+    scheme: Scheme,
+    env: &ClusterEnv,
+    spec: Option<&FaultSpec>,
+    label: &str,
+) -> deft::sim::SimResult {
+    let w = workload_by_name(workload).unwrap();
+    let buckets = partition_for(&w, scheme, env, PAPER_PARTITION, PAPER_DDP_MB).unwrap();
+    let schedule = scheduler_for(scheme, true, env).schedule(&buckets);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let opts = SimOptions {
+        iterations: warmup * 3 + 12,
+        warmup,
+        record_timeline: true,
+    };
+    let indexed = simulate_faulted(&buckets, &schedule, env, &opts, spec);
+    let scan = simulate_scan_faulted(&buckets, &schedule, env, &opts, spec);
+    assert_eq!(indexed, scan, "engines diverged under faults on {label}");
+    indexed
+}
+
+/// Hand-computed single-flap oracle on a one-link, one-bucket plan.
+///
+/// fwd 0→10 000 µs, bwd 10 000→20 000 µs, then a 50 000 µs transfer on
+/// the lone μ=1 link: healthy end = 70 000 µs. A flap to 3.0× at
+/// t = 40 000 banks the 20 000 µs already transferred, re-prices the
+/// 30 000 µs remainder at 3× → end = 40 000 + 90 000 = 130 000 µs.
+#[test]
+fn single_flap_matches_hand_computed_piecewise_repricing() {
+    let env = ClusterEnv::paper_testbed().with_links(vec![LinkSpec::new("w", 1.0).with_group(0)]);
+    let buckets = vec![bucket(0, Micros(50_000))];
+    let schedule = schedule_of(vec![op(0, LinkId(0), 0)]);
+    let opts = SimOptions {
+        iterations: 1,
+        warmup: 0,
+        record_timeline: true,
+    };
+    let healthy = simulate(&buckets, &schedule, &env, &opts);
+    assert_eq!(healthy.total, Micros(70_000));
+
+    let spec = FaultSpec {
+        flaps: vec![Flap {
+            link: LinkId(0),
+            at: Micros(40_000),
+            factor: 3.0,
+        }],
+        ..FaultSpec::default()
+    };
+    let flapped = simulate_faulted(&buckets, &schedule, &env, &opts, Some(&spec));
+    assert_eq!(flapped.total, Micros(130_000), "piecewise re-pricing is exact");
+    assert_eq!(
+        flapped.fault_log,
+        vec![FaultEvent::LinkFlap {
+            link: LinkId(0),
+            at: Micros(40_000),
+            ratio_ppm: 3_000_000,
+        }]
+    );
+    let scan = simulate_scan_faulted(&buckets, &schedule, &env, &opts, Some(&spec));
+    assert_eq!(flapped, scan);
+}
+
+/// A noop spec (no jitter, no faults, no drift band) must be exactly the
+/// unfaulted simulation — same events, same metrics, empty fault log.
+#[test]
+fn noop_spec_is_bit_for_bit_the_healthy_run() {
+    let env = ClusterEnv::paper_testbed();
+    let noop = FaultSpec::default();
+    assert!(noop.is_noop());
+    for scheme in [Scheme::PytorchDdp, Scheme::Deft] {
+        let w = workload_by_name("small").unwrap();
+        let buckets = partition_for(&w, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB).unwrap();
+        let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+        let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+        let opts = SimOptions {
+            iterations: warmup * 3 + 8,
+            warmup,
+            record_timeline: true,
+        };
+        let healthy = simulate(&buckets, &schedule, &env, &opts);
+        let faulted = simulate_faulted(&buckets, &schedule, &env, &opts, Some(&noop));
+        assert_eq!(healthy, faulted, "{}: noop spec perturbed the run", scheme.name());
+        assert!(faulted.fault_log.is_empty());
+    }
+}
+
+/// Identical seed + fault config ⇒ identical `SimResult`, fault log
+/// included — and a different jitter seed actually changes the run.
+#[test]
+fn seeded_fault_runs_replay_bit_for_bit() {
+    let env = ClusterEnv::paper_testbed();
+    let mut spec = FaultSpec::preset("mixed", env.workers).unwrap();
+    let a = faulted_pipeline("small", Scheme::Deft, &env, Some(&spec), "replay/a");
+    let b = faulted_pipeline("small", Scheme::Deft, &env, Some(&spec), "replay/b");
+    assert_eq!(a, b, "same seed must replay bit-for-bit");
+    assert!(!a.fault_log.is_empty(), "mixed scenario records its faults");
+
+    spec.seed ^= 0x9e37_79b9;
+    let c = faulted_pipeline("small", Scheme::Deft, &env, Some(&spec), "replay/c");
+    assert_ne!(
+        a.iter_ends, c.iter_ends,
+        "a different jitter seed must perturb iteration timing"
+    );
+}
+
+/// Both engines, every preset × topology × scheme, under the compound
+/// "mixed" scenario (jitter + straggler + flap + membership).
+#[test]
+fn engines_agree_under_mixed_faults_on_the_full_grid() {
+    for preset in LinkPreset::ALL {
+        for (topo, env) in [
+            ("flat", preset.env()),
+            (
+                "hier8",
+                preset
+                    .env()
+                    .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1))),
+            ),
+        ] {
+            let spec = FaultSpec::preset("mixed", env.workers).unwrap();
+            for scheme in ALL_SCHEMES {
+                faulted_pipeline(
+                    "small",
+                    scheme,
+                    &env,
+                    Some(&spec),
+                    &format!("{}/{topo}/{}", preset.name(), scheme.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Time-to-solution is monotone non-decreasing in straggler severity: a
+/// slower worker can never finish training earlier.
+#[test]
+fn tts_is_monotone_in_straggler_severity() {
+    let env = ClusterEnv::paper_testbed();
+    let mut prev = Micros::ZERO;
+    for factor in [1.0, 1.2, 1.5, 2.0, 3.0] {
+        let spec = FaultSpec {
+            stragglers: vec![Straggler {
+                from_iter: 2,
+                factor,
+            }],
+            ..FaultSpec::default()
+        };
+        let sim = faulted_pipeline(
+            "small",
+            Scheme::Deft,
+            &env,
+            Some(&spec),
+            &format!("straggler-{factor}"),
+        );
+        assert!(
+            sim.total >= prev,
+            "total {:?} decreased at straggler factor {factor} (prev {:?})",
+            sim.total,
+            prev
+        );
+        prev = sim.total;
+    }
+}
+
+/// Satellite: a recorded operator trace, reconstructed at bucket level,
+/// replays through the faulted simulator — the Fig. 8 round-trip is a
+/// valid fault-scenario input, and both engines agree on it.
+#[test]
+fn reconstructed_trace_replays_under_a_straggler() {
+    let env = ClusterEnv::paper_testbed();
+    let w = workload_by_name("gpt2").unwrap();
+    let topts = TraceOptions::uniform(&w, 6);
+    let (events, _truth) = generate_trace(&w, &topts);
+    let rec = reconstruct(&events);
+    let mut profile: Vec<BucketProfile> = Vec::with_capacity(rec.len());
+    let mut layer = 0usize;
+    for (b, r) in rec.iter().enumerate() {
+        let count = topts.layers_per_bucket[b];
+        let params: u64 = w.layers[layer..layer + count].iter().map(|l| l.params).sum();
+        layer += count;
+        profile.push(BucketProfile {
+            id: r.id,
+            params,
+            fwd: r.fwd,
+            bwd: r.bwd,
+            comm: env.reference_comm(params, w.comm_rate_ref),
+        });
+    }
+    let schedule = scheduler_for(Scheme::Deft, true, &env).schedule(&profile);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let opts = SimOptions {
+        iterations: warmup * 3 + 8,
+        warmup,
+        record_timeline: true,
+    };
+    let spec = FaultSpec {
+        stragglers: vec![Straggler {
+            from_iter: 2,
+            factor: 1.5,
+        }],
+        ..FaultSpec::default()
+    };
+    let healthy = simulate(&profile, &schedule, &env, &opts);
+    let indexed = simulate_faulted(&profile, &schedule, &env, &opts, Some(&spec));
+    let scan = simulate_scan_faulted(&profile, &schedule, &env, &opts, Some(&spec));
+    assert_eq!(indexed, scan, "engines diverged on the reconstructed trace");
+    assert!(
+        indexed.total >= healthy.total,
+        "a straggler cannot speed up the reconstructed replay"
+    );
+    assert_eq!(
+        indexed.fault_log,
+        vec![FaultEvent::StragglerOnset {
+            iter: 2,
+            factor_ppm: 1_500_000,
+        }]
+    );
+}
+
+/// Tentpole acceptance: a drift-band breach in the trial demonstrably
+/// re-runs the Preserver gate, records its decision on the fault log,
+/// and degrades the lossy plan to the raw replay.
+#[test]
+fn drift_band_breach_regates_and_falls_back() {
+    // fp16 on gloo passes the codec gate (error ≪ ε), so without faults
+    // this env accepts the lossy plan with no fallback. A severe early
+    // link flap (4× on the reference link until t = 400 ms) pushes the
+    // measured busy far outside the 25% drift band: the re-gate walk
+    // runs with the drift error composed in and must reject.
+    let env = ClusterEnv::paper_testbed().with_codec(LinkId(1), Codec::Fp16);
+    let opts = LifecycleOptions {
+        faults: Some(FaultSpec::preset("flap", env.workers).unwrap()),
+        ..LifecycleOptions::default()
+    };
+    let rep = run_lifecycle(&workload_by_name("gpt2").unwrap(), &env, &opts).expect("lifecycle");
+
+    let alarms = rep
+        .trial
+        .fault_log
+        .iter()
+        .filter(|e| matches!(e, FaultEvent::DriftAlarm { .. }))
+        .count();
+    assert!(alarms > 0, "the 4x flap must trip the drift monitor");
+    let decisions: Vec<&FaultEvent> = rep
+        .trial
+        .fault_log
+        .iter()
+        .filter(|e| matches!(e, FaultEvent::GateDecision { .. }))
+        .collect();
+    assert_eq!(decisions.len(), 1, "exactly one re-gate decision is recorded");
+    assert!(
+        matches!(decisions[0], FaultEvent::GateDecision { accepted: false, .. }),
+        "the composed drift error must fail the walk: {:?}",
+        decisions[0]
+    );
+    assert!(
+        matches!(rep.fallback, FallbackReason::DriftGateRejected { .. }),
+        "fallback reason must be the drift re-gate: {:?}",
+        rep.fallback
+    );
+    assert!(rep.fallback.is_fallback());
+    assert!(rep.codec_fallback, "rejection degrades to the raw replay");
+
+    // The same scenario against an already-raw registry still records
+    // the rejected gate decision but has nothing safer to degrade to.
+    let raw_env = ClusterEnv::paper_testbed();
+    let rep_raw = run_lifecycle(&workload_by_name("gpt2").unwrap(), &raw_env, &opts)
+        .expect("raw lifecycle");
+    assert!(
+        rep_raw
+            .trial
+            .fault_log
+            .iter()
+            .any(|e| matches!(e, FaultEvent::GateDecision { .. })),
+        "gate decision recorded on the raw registry too"
+    );
+    assert!(!rep_raw.codec_fallback, "no lossy plan to fall back from");
+}
