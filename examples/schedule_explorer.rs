@@ -7,7 +7,10 @@
 //!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]
 //!        [--contention-model <pairwise|kway>]
 //!        [--faults <scenario>] [--fault-seed <n>] [--fault-log <path>]
-//!        [--lint [--lint-json <path>]]`
+//!        [--lint [--lint-json <path>]]
+//!        [--sweep [--grid small|full] [--threads <n>] [--out <path>]
+//!                 [--csv <path>] [--faults <scenario>]]
+//!        [--serve]`
 //! (workload ∈ resnet101 | vgg19 | gpt2; default vgg19;
 //!  preset ∈ paper-2link | single-nic | nvlink-ib-tcp; default paper-2link;
 //!  --ranks-per-node > 1 applies a hierarchical topology with link 0 as
@@ -30,7 +33,15 @@
 //!  link degradation as a capacity envelope — plans that only fit
 //!  healthy links pick up DEFT-W004 warnings — and each grid cell runs
 //!  a short faulted simulation on both engines, asserting they agree
-//!  bit-for-bit and feeding --fault-log)
+//!  bit-for-bit and feeding --fault-log;
+//!  --sweep runs the batch sweep engine (`deft::sweep`) over the named
+//!  grid across a thread pool, printing one winner row per cell,
+//!  writing results as JSON lines (--out) and a summary CSV (--csv),
+//!  and exiting non-zero if any cell errors — `--faults` inside the
+//!  sub-command pins the grid's fault axis to one scenario;
+//!  --serve starts the long-running capacity planner: line-delimited
+//!  JSON queries on stdin, memoized cell answers on stdout — see
+//!  docs/sweeps.md for the protocol)
 
 use deft::bench::{
     partition_for, run_pipeline, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION,
@@ -89,6 +100,51 @@ fn parse_args() -> Args {
                 fault_seed,
                 fault_log.as_deref(),
             )
+        } else if a == "--sweep" {
+            let mut grid_name = "small".to_string();
+            let mut threads = 4usize;
+            let mut out: Option<String> = None;
+            let mut csv: Option<String> = None;
+            let mut sweep_faults = faults.clone();
+            while let Some(rest) = args.next() {
+                if let Some(v) = rest.strip_prefix("--grid=") {
+                    grid_name = v.to_string();
+                } else if rest == "--grid" {
+                    grid_name = args.next().expect("--grid needs small|full");
+                } else if let Some(v) = rest.strip_prefix("--threads=") {
+                    threads = v.parse().expect("--threads needs an integer");
+                } else if rest == "--threads" {
+                    let v = args.next().expect("--threads needs an integer");
+                    threads = v.parse().expect("--threads needs an integer");
+                } else if let Some(v) = rest.strip_prefix("--out=") {
+                    out = Some(v.to_string());
+                } else if rest == "--out" {
+                    out = Some(args.next().expect("--out needs a path"));
+                } else if let Some(v) = rest.strip_prefix("--faults=") {
+                    sweep_faults = Some(parse_faults_arg(v));
+                } else if rest == "--faults" {
+                    let v = args.next().expect("--faults needs a scenario name");
+                    sweep_faults = Some(parse_faults_arg(&v));
+                } else if let Some(v) = rest.strip_prefix("--csv=") {
+                    csv = Some(v.to_string());
+                } else if rest == "--csv" {
+                    csv = Some(args.next().expect("--csv needs a path"));
+                } else {
+                    panic!(
+                        "--sweep takes only --grid small|full / --threads N / --out FILE / \
+                         --csv FILE / --faults NAME, got `{rest}`"
+                    );
+                }
+            }
+            run_sweep(
+                &grid_name,
+                threads,
+                out.as_deref(),
+                csv.as_deref(),
+                sweep_faults.as_deref(),
+            )
+        } else if a == "--serve" {
+            run_serve()
         } else if let Some(v) = a.strip_prefix("--faults=") {
             faults = Some(parse_faults_arg(v));
             None
@@ -199,6 +255,86 @@ fn parse_contention_arg(name: &str) -> ContentionModel {
         .unwrap_or_else(|| panic!("unknown contention model `{name}` (known: pairwise | kway)"))
 }
 
+/// `--sweep`: fan the named grid across a thread pool of DES runs
+/// (`deft::sweep::run_grid`), print one winner row per cell, stream the
+/// full results as JSON lines / summary CSV, and exit non-zero iff any
+/// cell errored — the CI smoke step keys off the exit code. Parallel
+/// output is bit-for-bit identical to `--threads 1`.
+fn run_sweep(
+    grid_name: &str,
+    threads: usize,
+    out: Option<&str>,
+    csv: Option<&str>,
+    faults: Option<&str>,
+) -> ! {
+    use deft::sweep::{run_grid, summary_csv, to_jsonl, SweepGrid};
+    let mut grid = match grid_name {
+        "small" => SweepGrid::small(),
+        "full" => SweepGrid::full(),
+        other => panic!("--grid takes small|full, got `{other}`"),
+    };
+    if let Some(name) = faults {
+        grid.faults = vec![Some(name.to_string())];
+    }
+    let cells = grid.cells();
+    eprintln!(
+        "sweep: {} cell(s) ({grid_name} grid{}) across {threads} thread(s)...",
+        cells.len(),
+        faults.map(|f| format!(", faults `{f}`")).unwrap_or_default()
+    );
+    let outcomes = run_grid(&grid, threads);
+    let mut errors = 0usize;
+    println!("stat cell                                                        winner         iter(us)   tts(us)  coverage");
+    for o in &outcomes {
+        match &o.result {
+            Ok(r) => println!(
+                "ok   {:59} {:14} {:>8} {:>9} {:>7.1}%",
+                o.cell.key(),
+                r.winner,
+                r.iter_us,
+                r.tts_us,
+                r.coverage_ppm as f64 / 10_000.0
+            ),
+            Err(e) => {
+                errors += 1;
+                println!("FAIL {:59} {e}", o.cell.key());
+            }
+        }
+    }
+    if let Some(path) = out {
+        std::fs::write(path, to_jsonl(&outcomes))
+            .unwrap_or_else(|e| panic!("writing sweep results `{path}`: {e}"));
+        println!("wrote {} JSONL line(s) to {path}", outcomes.len());
+    }
+    if let Some(path) = csv {
+        std::fs::write(path, summary_csv(&outcomes))
+            .unwrap_or_else(|e| panic!("writing sweep summary `{path}`: {e}"));
+        println!("wrote summary CSV to {path}");
+    }
+    println!("sweep: {} cell(s), {errors} error(s)", outcomes.len());
+    std::process::exit(i32::from(errors > 0));
+}
+
+/// `--serve`: the long-running capacity planner. Line-delimited JSON
+/// queries on stdin, memoized cell answers on stdout (protocol in
+/// docs/sweeps.md); ends on `quit`/`exit`/EOF.
+fn run_serve() -> ! {
+    let mut planner = deft::sweep::Planner::new();
+    eprintln!(
+        "capacity planner ready: one JSON query per line on stdin \
+         (e.g. {{\"workload\": \"gpt2\", \"ranks_per_node\": 8}}); `quit` ends"
+    );
+    planner
+        .serve(std::io::stdin().lock(), std::io::stdout().lock())
+        .expect("planner I/O");
+    eprintln!(
+        "planner: {} cache hit(s), {} miss(es)",
+        planner.hits(),
+        planner.misses()
+    );
+    std::process::exit(0);
+}
+
 /// `--lint`: prove every plan the four schedulers emit over the full
 /// model-zoo × link-preset × topology grid sound under the static
 /// verifier, without running the simulator. One status row per plan;
@@ -220,20 +356,30 @@ fn run_lint_grid(
     use deft::analysis::{lint_plan, LintOptions};
     use std::fmt::Write as _;
 
-    let workloads = ["resnet101", "vgg19", "gpt2", "llama2"];
+    // The lint grid reads its cells from the sweep definition, so the
+    // static verifier and the batch sweep always cover the same
+    // model-zoo × preset × topology space (`ranks_per_node` 1 → flat,
+    // n → hier<n>).
+    let grid = deft::sweep::SweepGrid::full();
     let mut schemes = Scheme::ALL.to_vec();
     schemes.push(Scheme::DeftNoMultilink);
     let (mut jsonl, mut plans, mut skipped) = (String::new(), 0usize, 0usize);
     let (mut errors, mut warnings) = (0usize, 0usize);
     let (mut fault_jsonl, mut fault_events, mut faulted_cells) = (String::new(), 0usize, 0usize);
     println!("stat workload   preset       topo  scheme             diagnostics");
-    for wname in workloads {
-        let workload = workload_by_name(wname).expect("zoo workload");
-        for preset in LinkPreset::ALL {
-            for topo in ["flat", "hier8"] {
+    for wname in &grid.workloads {
+        let workload = workload_by_name(wname).expect("sweep-grid workload");
+        for pname in &grid.presets {
+            let preset = LinkPreset::parse(pname).expect("sweep-grid preset");
+            for &rpn in &grid.ranks_per_node {
+                let topo = if rpn > 1 {
+                    format!("hier{rpn}")
+                } else {
+                    "flat".to_string()
+                };
                 let mut env = preset.env();
-                if topo == "hier8" {
-                    env = env.with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)));
+                if rpn > 1 {
+                    env = env.with_topology(Topology::hierarchical(rpn, LinkId(0), LinkId(1)));
                 }
                 let spec = fault_scenario.map(|s| fault_spec_for(s, env.workers, fault_seed));
                 let opts = LintOptions {

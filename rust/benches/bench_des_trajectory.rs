@@ -10,21 +10,25 @@
 //!     --check ../BENCH_des_hotpath.json --band 0.25 --out fresh.json
 //! ```
 //!
-//! Flags: `--smoke` (default) | `--full` grid selection; `--reps N`
-//! timed repetitions per engine (default 3); `--out FILE` write fresh
-//! points; `--check FILE` gate against a committed file; `--band F`
-//! allowed fractional regression (default 0.25); `--absolute` also gate
-//! raw events/sec (same-host runs only). Exits non-zero when the gate
-//! fails. See BENCHMARKS.md for the workflow.
+//! Flags: `--smoke` (default) | `--full` grid selection; `--sweep`
+//! adds the batch-sweep throughput scenario (serial vs 4-thread
+//! `sweep::run_grid` over the full zoo × preset × topology × codec ×
+//! contention grid — implied by `--full`, skipped in smoke runs);
+//! `--reps N` timed repetitions per engine (default 3); `--out FILE`
+//! write fresh points; `--check FILE` gate against a committed file;
+//! `--band F` allowed fractional regression (default 0.25);
+//! `--absolute` also gate raw events/sec (same-host runs only). Exits
+//! non-zero when the gate fails. See BENCHMARKS.md for the workflow.
 
 use deft::bench::trajectory::{
-    check_against, full_scenarios, parse_points, run, smoke_scenarios, to_json,
+    check_against, full_scenarios, parse_points, run, run_sweep_points, smoke_scenarios, to_json,
 };
 use deft::metrics::Table;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut full = false;
+    let mut sweep = false;
     let mut reps = 3usize;
     let mut out: Option<String> = None;
     let mut check: Option<String> = None;
@@ -35,6 +39,7 @@ fn main() {
         match a.as_str() {
             "--full" => full = true,
             "--smoke" => full = false,
+            "--sweep" => sweep = true,
             "--absolute" => absolute = true,
             "--reps" => reps = take(&mut it, a).parse().expect("--reps takes an integer"),
             "--out" => out = Some(take(&mut it, a)),
@@ -42,7 +47,7 @@ fn main() {
             "--band" => band = take(&mut it, a).parse().expect("--band takes a float"),
             other => {
                 eprintln!(
-                    "unknown flag `{other}` (expected --smoke | --full | --reps N | \
+                    "unknown flag `{other}` (expected --smoke | --full | --sweep | --reps N | \
                      --out FILE | --check FILE | --band F | --absolute)"
                 );
                 std::process::exit(2);
@@ -56,7 +61,11 @@ fn main() {
         scenarios.len(),
         if full { "full grid" } else { "smoke" }
     );
-    let points = run(&scenarios, reps).expect("trajectory run failed");
+    let mut points = run(&scenarios, reps).expect("trajectory run failed");
+    if sweep || full {
+        eprintln!("running the full-grid sweep scenario (serial vs 4 threads)...");
+        points.extend(run_sweep_points(reps));
+    }
 
     let mut t = Table::new(&["scenario", "engine", "wall", "events/s", "speedup"]);
     for p in &points {

@@ -27,6 +27,7 @@ use crate::faults::FaultSpec;
 use crate::links::{ClusterEnv, LinkId, LinkPreset, Topology};
 use crate::sim::{simulate_faulted, simulate_scan_faulted, SimOptions};
 use crate::util::error::Result;
+use crate::util::json::{esc, parse_json, Json};
 
 /// One pinned benchmark scenario. Scenarios are identified by `name` in
 /// the JSON file; the gate matches committed and fresh points on it, so
@@ -267,23 +268,65 @@ pub fn run(scenarios: &[Scenario], reps: usize) -> Result<Vec<Point>> {
     Ok(points)
 }
 
-// ---- BENCH_*.json writing (no serde in the offline build). ----
+/// Scenario name of the sweep-throughput trajectory row.
+pub const SWEEP_SCENARIO: &str = "sweep-zoo-full-4t";
 
-fn esc(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
+/// Number of worker threads the sweep row's parallel leg uses.
+pub const SWEEP_THREADS: usize = 4;
+
+/// Time the full acceptance sweep ([`SweepGrid::full`], 96 cells)
+/// serial vs `SWEEP_THREADS`-threaded, as one trajectory scenario:
+/// `engine = "scan"` is the serial run, `engine = "indexed"` the
+/// parallel one, so the existing indexed/scan ratio gate doubles as the
+/// N-thread-speedup gate (acceptance floor: ≥ 2× at N = 4). Equality of
+/// the two runs is asserted before any timing — a sweep whose parallel
+/// results drift from serial has no trajectory to stand on.
+pub fn run_sweep_points(reps: usize) -> Vec<Point> {
+    use crate::sweep::{run_cells, SweepGrid};
+    let cells = SweepGrid::full().cells();
+    let serial = run_cells(&cells, 1);
+    let parallel = run_cells(&cells, SWEEP_THREADS);
+    assert_eq!(
+        serial, parallel,
+        "{SWEEP_THREADS}-thread sweep diverged from serial execution"
+    );
+    let events: u64 = serial
+        .iter()
+        .filter_map(|o| o.result.as_ref().ok())
+        .flat_map(|r| r.schemes.iter())
+        .map(|s| s.events)
+        .sum();
+    // The equality pass above already warmed both paths.
+    let (serial_s, _) = time_it(0, reps, || {
+        black_box(run_cells(&cells, 1));
+    });
+    let (parallel_s, _) = time_it(0, reps, || {
+        black_box(run_cells(&cells, SWEEP_THREADS));
+    });
+    let mk = |engine: &str, wall_s: f64, threads: usize| Point {
+        scenario: SWEEP_SCENARIO.to_string(),
+        engine: engine.to_string(),
+        workload: "zoo".to_string(),
+        preset: "all".to_string(),
+        topology: "flat+hier8".to_string(),
+        workers: 16,
+        scheme: "all".to_string(),
+        contention: "pairwise+kway".to_string(),
+        iterations: cells.len() as u64,
+        record_timeline: false,
+        wall_s,
+        events,
+        events_per_sec: events as f64 / wall_s.max(1e-12),
+        peak_in_flight: threads as u64,
+        solver_iterations: (cells.len() * crate::config::Scheme::ALL.len()) as u64,
+    };
+    vec![
+        mk("scan", serial_s, 1),
+        mk("indexed", parallel_s, SWEEP_THREADS),
+    ]
 }
+
+// ---- BENCH_*.json writing (via `util::json`, no serde). ----
 
 /// Serialize points into the committed `BENCH_des_hotpath.json` format
 /// (schema documented in `BENCHMARKS.md`).
@@ -315,232 +358,6 @@ pub fn to_json(bench: &str, host: &str, points: &[Point]) -> String {
     }
     out.push_str("  ]\n}\n");
     out
-}
-
-// ---- Minimal JSON reader (enough for the schema above). ----
-
-#[derive(Clone, Debug, PartialEq)]
-enum Json {
-    Null,
-    Bool(bool),
-    Num(f64),
-    Str(String),
-    Arr(Vec<Json>),
-    Obj(Vec<(String, Json)>),
-}
-
-impl Json {
-    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
-        match self {
-            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
-            _ => None,
-        }
-    }
-
-    fn as_str(&self) -> Option<&str> {
-        match self {
-            Json::Str(s) => Some(s),
-            _ => None,
-        }
-    }
-
-    fn as_f64(&self) -> Option<f64> {
-        match self {
-            Json::Num(n) => Some(*n),
-            _ => None,
-        }
-    }
-
-    fn as_bool(&self) -> Option<bool> {
-        match self {
-            Json::Bool(b) => Some(*b),
-            _ => None,
-        }
-    }
-}
-
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn skip_ws(&mut self) {
-        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
-            self.pos += 1;
-        }
-    }
-
-    fn peek(&mut self) -> Result<u8> {
-        self.skip_ws();
-        self.bytes
-            .get(self.pos)
-            .copied()
-            .ok_or_else(|| crate::err!("unexpected end of JSON at byte {}", self.pos))
-    }
-
-    fn expect(&mut self, c: u8) -> Result<()> {
-        let got = self.peek()?;
-        if got != c {
-            crate::bail!(
-                "expected `{}` at byte {}, found `{}`",
-                c as char,
-                self.pos,
-                got as char
-            );
-        }
-        self.pos += 1;
-        Ok(())
-    }
-
-    fn value(&mut self) -> Result<Json> {
-        match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
-            b'"' => Ok(Json::Str(self.string()?)),
-            b't' => self.literal("true", Json::Bool(true)),
-            b'f' => self.literal("false", Json::Bool(false)),
-            b'n' => self.literal("null", Json::Null),
-            _ => self.number(),
-        }
-    }
-
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
-        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
-            self.pos += lit.len();
-            Ok(v)
-        } else {
-            crate::bail!("invalid literal at byte {}", self.pos)
-        }
-    }
-
-    fn number(&mut self) -> Result<Json> {
-        let start = self.pos;
-        while self.pos < self.bytes.len()
-            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
-        {
-            self.pos += 1;
-        }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos])
-            .map_err(|e| crate::err!("non-utf8 number: {e}"))?;
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|e| crate::err!("bad number `{s}` at byte {start}: {e}"))
-    }
-
-    fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
-        let mut out = String::new();
-        loop {
-            let Some(&b) = self.bytes.get(self.pos) else {
-                crate::bail!("unterminated string at byte {}", self.pos);
-            };
-            self.pos += 1;
-            match b {
-                b'"' => return Ok(out),
-                b'\\' => {
-                    let Some(&e) = self.bytes.get(self.pos) else {
-                        crate::bail!("dangling escape at byte {}", self.pos);
-                    };
-                    self.pos += 1;
-                    match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'n' => out.push('\n'),
-                        b't' => out.push('\t'),
-                        b'r' => out.push('\r'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos..self.pos + 4)
-                                .and_then(|h| std::str::from_utf8(h).ok())
-                                .ok_or_else(|| crate::err!("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|e| crate::err!("bad \\u escape `{hex}`: {e}"))?;
-                            self.pos += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        }
-                        other => crate::bail!("unknown escape `\\{}`", other as char),
-                    }
-                }
-                b => {
-                    // Re-join multi-byte UTF-8 sequences.
-                    let start = self.pos - 1;
-                    let len = match b {
-                        0x00..=0x7f => 1,
-                        0xc0..=0xdf => 2,
-                        0xe0..=0xef => 3,
-                        _ => 4,
-                    };
-                    let end = (start + len).min(self.bytes.len());
-                    let s = std::str::from_utf8(&self.bytes[start..end])
-                        .map_err(|e| crate::err!("non-utf8 string: {e}"))?;
-                    out.push_str(s);
-                    self.pos = end;
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        if self.peek()? == b']' {
-            self.pos += 1;
-            return Ok(Json::Arr(items));
-        }
-        loop {
-            items.push(self.value()?);
-            match self.peek()? {
-                b',' => self.pos += 1,
-                b']' => {
-                    self.pos += 1;
-                    return Ok(Json::Arr(items));
-                }
-                c => crate::bail!("expected `,` or `]` at byte {}, found `{}`", self.pos, c as char),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
-        let mut fields = Vec::new();
-        if self.peek()? == b'}' {
-            self.pos += 1;
-            return Ok(Json::Obj(fields));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.expect(b':')?;
-            let val = self.value()?;
-            fields.push((key, val));
-            match self.peek()? {
-                b',' => self.pos += 1,
-                b'}' => {
-                    self.pos += 1;
-                    return Ok(Json::Obj(fields));
-                }
-                c => crate::bail!("expected `,` or `}}` at byte {}, found `{}`", self.pos, c as char),
-            }
-        }
-    }
-}
-
-fn parse_json(text: &str) -> Result<Json> {
-    let mut p = Parser {
-        bytes: text.as_bytes(),
-        pos: 0,
-    };
-    let v = p.value()?;
-    p.skip_ws();
-    if p.pos != p.bytes.len() {
-        crate::bail!("trailing data after JSON document at byte {}", p.pos);
-    }
-    Ok(v)
 }
 
 /// Parse a `BENCH_*.json` document back into points.
@@ -774,6 +591,31 @@ mod tests {
         let out = check_against(&committed, &fresh, 0.25, false);
         assert_eq!(out.compared, 0);
         assert!(out.passed());
+    }
+
+    #[test]
+    fn committed_trajectory_carries_the_faulted_and_sweep_rows() {
+        let pts = parse_points(include_str!("../../../BENCH_des_hotpath.json"))
+            .expect("committed trajectory parses");
+        for engine in ["scan", "indexed"] {
+            assert!(
+                pts.iter()
+                    .any(|p| p.engine == engine && p.scenario.ends_with("+faults-mixed")),
+                "committed file must carry a `{engine}` faulted row"
+            );
+            assert!(
+                pts.iter().any(|p| p.engine == engine && p.scenario == SWEEP_SCENARIO),
+                "committed file must carry a `{engine}` sweep-throughput row"
+            );
+        }
+        // And the ratio gate actually covers them: a self-comparison
+        // must compare every committed scenario — faulted and sweep
+        // rows included, so a regression there fails CI like any other.
+        let out = check_against(&pts, &pts, 0.25, false);
+        assert!(out.passed(), "{:?}", out.failures);
+        let scenarios: std::collections::BTreeSet<&str> =
+            pts.iter().map(|p| p.scenario.as_str()).collect();
+        assert_eq!(out.compared, scenarios.len(), "every committed scenario is gated");
     }
 
     #[test]

@@ -163,6 +163,9 @@ pub struct ExperimentConfig {
     /// `[faults] straggler_from_iter`: onset iteration of the extra
     /// straggler.
     pub faults_straggler_from_iter: usize,
+    /// `[faults] straggler_rank`: rank the extra straggler lives on
+    /// (slowest-rank rule — see docs/faults.md). Must be < `workers`.
+    pub faults_straggler_rank: usize,
     /// `[faults] flap_link`: registry link name of an extra flap (empty
     /// = none).
     pub faults_flap_link: String,
@@ -177,6 +180,25 @@ pub struct ExperimentConfig {
     /// `[faults] elastic_at_iter`: iteration of the extra membership
     /// change.
     pub faults_elastic_at_iter: usize,
+    /// `[sweep] workloads`: comma-separated model-zoo names the batch
+    /// sweep engine fans over (see docs/sweeps.md).
+    pub sweep_workloads: String,
+    /// `[sweep] presets`: comma-separated link-preset names.
+    pub sweep_presets: String,
+    /// `[sweep] ranks_per_node`: comma-separated per-node rank counts
+    /// (1 = flat; > 1 = hierarchical on the preset's first two links).
+    pub sweep_ranks_per_node: String,
+    /// `[sweep] codecs`: comma-separated codec names attached to every
+    /// non-reference link of a cell (`raw` leaves the preset as-is).
+    pub sweep_codecs: String,
+    /// `[sweep] contention`: comma-separated contention-model names.
+    pub sweep_contention: String,
+    /// `[sweep] faults`: comma-separated fault-preset names; `none`
+    /// sweeps the healthy cluster.
+    pub sweep_faults: String,
+    /// `[sweep] threads`: worker threads of the sweep pool (1 = serial;
+    /// results are bit-for-bit identical either way).
+    pub sweep_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -208,11 +230,19 @@ impl Default for ExperimentConfig {
             faults_drift_band: -1.0,
             faults_straggler_factor: 0.0,
             faults_straggler_from_iter: 2,
+            faults_straggler_rank: 0,
             faults_flap_link: String::new(),
             faults_flap_at_us: 20_000,
             faults_flap_factor: 2.0,
             faults_elastic_workers: 0,
             faults_elastic_at_iter: 2,
+            sweep_workloads: "resnet101,vgg19,gpt2,llama2".into(),
+            sweep_presets: "paper-2link,single-nic,nvlink-ib-tcp".into(),
+            sweep_ranks_per_node: "1,8".into(),
+            sweep_codecs: "raw,fp16".into(),
+            sweep_contention: "pairwise,kway".into(),
+            sweep_faults: "none".into(),
+            sweep_threads: 4,
         }
     }
 }
@@ -295,6 +325,7 @@ impl ExperimentConfig {
             }
         }
         self.validate_faults()?;
+        self.validate_sweep()?;
         self.validate_topology()
     }
 
@@ -329,6 +360,98 @@ impl ExperimentConfig {
         }
         if self.faults_elastic_workers == 1 {
             return Err("faults.elastic_workers must be ≥ 2 (or 0 for none)".into());
+        }
+        if self.faults_straggler_factor > 0.0 && self.faults_straggler_rank >= self.workers {
+            return Err(format!(
+                "faults.straggler_rank {} outside the {}-rank cluster",
+                self.faults_straggler_rank, self.workers
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate the `[sweep]` table's grid axes: every comma-separated
+    /// item must name a known workload / preset / codec / contention
+    /// model / fault preset, and every axis must be non-empty.
+    fn validate_sweep(&self) -> Result<(), String> {
+        if self.sweep_threads == 0 {
+            return Err("sweep.threads must be ≥ 1".into());
+        }
+        let items = |s: &str| -> Vec<String> {
+            s.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        };
+        for (key, axis) in [
+            ("sweep.workloads", &self.sweep_workloads),
+            ("sweep.presets", &self.sweep_presets),
+            ("sweep.ranks_per_node", &self.sweep_ranks_per_node),
+            ("sweep.codecs", &self.sweep_codecs),
+            ("sweep.contention", &self.sweep_contention),
+            ("sweep.faults", &self.sweep_faults),
+        ] {
+            if items(axis).is_empty() {
+                return Err(format!("{key}: axis must list at least one value"));
+            }
+        }
+        for w in items(&self.sweep_workloads) {
+            crate::bench::workload_by_name(&w)
+                .map_err(|e| format!("sweep.workloads: {e}"))?;
+        }
+        for p in items(&self.sweep_presets) {
+            if LinkPreset::parse(&p).is_none() {
+                return Err(format!(
+                    "sweep.presets: unknown preset `{p}` (known: {})",
+                    LinkPreset::ALL
+                        .iter()
+                        .map(|p| p.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+        for r in items(&self.sweep_ranks_per_node) {
+            let rpn: usize = r
+                .parse()
+                .map_err(|_| format!("sweep.ranks_per_node: `{r}` is not an integer"))?;
+            if rpn == 0 {
+                return Err("sweep.ranks_per_node: values must be ≥ 1".into());
+            }
+            if self.workers % rpn != 0 {
+                return Err(format!(
+                    "sweep.ranks_per_node: {rpn} must divide workers {}",
+                    self.workers
+                ));
+            }
+        }
+        for c in items(&self.sweep_codecs) {
+            if Codec::parse(&c).is_none() {
+                return Err(format!(
+                    "sweep.codecs: unknown codec `{c}` (known: raw | fp16 | rank<k>)"
+                ));
+            }
+        }
+        for m in items(&self.sweep_contention) {
+            if ContentionModel::parse(&m).is_none() {
+                return Err(format!(
+                    "sweep.contention: unknown model `{m}` (known: {})",
+                    ContentionModel::ALL
+                        .iter()
+                        .map(|m| m.name())
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                ));
+            }
+        }
+        for f in items(&self.sweep_faults) {
+            if f != "none" && FaultSpec::preset(&f, self.workers).is_none() {
+                return Err(format!(
+                    "sweep.faults: unknown preset `{f}` (known: none | {})",
+                    FaultSpec::preset_names().join(" | ")
+                ));
+            }
         }
         Ok(())
     }
@@ -487,6 +610,7 @@ impl ExperimentConfig {
             spec.stragglers.push(Straggler {
                 from_iter: self.faults_straggler_from_iter,
                 factor: self.faults_straggler_factor,
+                rank: self.faults_straggler_rank,
             });
         }
         if !self.faults_flap_link.is_empty() {
@@ -596,6 +720,9 @@ impl ExperimentConfig {
             "faults.straggler_from_iter" | "faults_straggler_from_iter" => {
                 self.faults_straggler_from_iter = value.as_int()? as usize
             }
+            "faults.straggler_rank" | "faults_straggler_rank" => {
+                self.faults_straggler_rank = value.as_int()? as usize
+            }
             "faults.flap_link" | "faults_flap_link" => {
                 self.faults_flap_link = value.as_str()?.to_string()
             }
@@ -611,6 +738,19 @@ impl ExperimentConfig {
             "faults.elastic_at_iter" | "faults_elastic_at_iter" => {
                 self.faults_elastic_at_iter = value.as_int()? as usize
             }
+            "sweep.workloads" | "sweep_workloads" => {
+                self.sweep_workloads = value.as_str()?.to_string()
+            }
+            "sweep.presets" | "sweep_presets" => self.sweep_presets = value.as_str()?.to_string(),
+            "sweep.ranks_per_node" | "sweep_ranks_per_node" => {
+                self.sweep_ranks_per_node = value.as_str()?.to_string()
+            }
+            "sweep.codecs" | "sweep_codecs" => self.sweep_codecs = value.as_str()?.to_string(),
+            "sweep.contention" | "sweep_contention" => {
+                self.sweep_contention = value.as_str()?.to_string()
+            }
+            "sweep.faults" | "sweep_faults" => self.sweep_faults = value.as_str()?.to_string(),
+            "sweep.threads" | "sweep_threads" => self.sweep_threads = value.as_int()? as usize,
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
                 if let Some(rest) = other.strip_prefix("links.") {
@@ -740,6 +880,43 @@ elastic_at_iter = 4
         // Unknown flap links surface when the spec is resolved.
         let cfg = ExperimentConfig::from_toml("[faults]\nflap_link = \"warp\"\n").unwrap();
         assert!(cfg.fault_spec(&cfg.env()).is_err());
+
+        // The extra straggler carries its rank; out-of-cluster ranks are
+        // rejected up front (slowest-rank rule — docs/faults.md).
+        let cfg = ExperimentConfig::from_toml(
+            "[faults]\nstraggler_factor = 1.5\nstraggler_rank = 3\n",
+        )
+        .unwrap();
+        let spec = cfg.fault_spec(&cfg.env()).unwrap().expect("declared");
+        assert_eq!(spec.stragglers[0].rank, 3);
+        assert!(ExperimentConfig::from_toml(
+            "[faults]\nstraggler_factor = 1.5\nstraggler_rank = 99\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sweep_table_is_validated() {
+        let cfg = ExperimentConfig::from_toml(
+            "[sweep]\nworkloads = \"vgg19,gpt2\"\npresets = \"paper-2link\"\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sweep_workloads, "vgg19,gpt2");
+        assert_eq!(cfg.sweep_presets, "paper-2link");
+        assert_eq!(cfg.sweep_threads, 2);
+        // Defaults describe the full acceptance grid.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.sweep_workloads, "resnet101,vgg19,gpt2,llama2");
+        assert_eq!(d.sweep_ranks_per_node, "1,8");
+        // Every axis item is validated against its registry.
+        assert!(ExperimentConfig::from_toml("[sweep]\nworkloads = \"warpnet\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\npresets = \"warp\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\nranks_per_node = \"3\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\ncodecs = \"zfp\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\ncontention = \"freeway\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\nfaults = \"meteor\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\nthreads = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sweep]\nworkloads = \",\"\n").is_err());
     }
 
     #[test]

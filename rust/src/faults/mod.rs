@@ -37,12 +37,21 @@ pub use trace::{FaultTrace, FlapAt};
 use crate::links::{ClusterEnv, LinkId};
 use crate::util::Micros;
 
-/// A persistent compute straggler: from iteration `from_iter` on, every
-/// bucket's forward and backward stretch by `factor` (≥ 1).
+/// A persistent compute straggler on one rank: from iteration
+/// `from_iter` on, every bucket's forward and backward on rank `rank`
+/// stretch by `factor` (≥ 1).
+///
+/// Data-parallel ranks all run the same buckets, so the compute window
+/// the engines simulate extends by the **slowest rank's** total excess:
+/// stragglers on the *same* rank compound additively, stragglers on
+/// *different* ranks do not — only the worst rank sits on the critical
+/// path (the slowest-rank rule; see `docs/faults.md`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Straggler {
     pub from_iter: usize,
     pub factor: f64,
+    /// Rank the straggler lives on (must be `< env.workers`).
+    pub rank: usize,
 }
 
 /// A scheduled link-speed change: from sim time `at` on, wire times on
@@ -106,6 +115,7 @@ impl FaultSpec {
                 stragglers: vec![Straggler {
                     from_iter: 2,
                     factor: 1.5,
+                    rank: 0,
                 }],
                 drift_band: 0.25,
                 ..FaultSpec::default()
@@ -146,6 +156,7 @@ impl FaultSpec {
                 stragglers: vec![Straggler {
                     from_iter: 4,
                     factor: 1.3,
+                    rank: 0,
                 }],
                 flaps: vec![
                     Flap {
@@ -203,6 +214,12 @@ impl FaultSpec {
                 return Err(format!(
                     "faults: stragglers[{i}] factor {} must be ≥ 1",
                     s.factor
+                ));
+            }
+            if s.rank >= env.workers {
+                return Err(format!(
+                    "faults: stragglers[{i}] rank {} outside the {}-rank cluster",
+                    s.rank, env.workers
                 ));
             }
         }
@@ -277,10 +294,20 @@ mod tests {
             stragglers: vec![Straggler {
                 from_iter: 0,
                 factor: 0.5,
+                rank: 0,
             }],
             ..FaultSpec::default()
         };
         assert!(bad.validate(&env).is_err());
+        let bad = FaultSpec {
+            stragglers: vec![Straggler {
+                from_iter: 0,
+                factor: 1.5,
+                rank: env.workers,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(&env).is_err(), "out-of-cluster rank must be rejected");
         let bad = FaultSpec {
             flaps: vec![Flap {
                 link: LinkId(99),

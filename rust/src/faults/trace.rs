@@ -73,13 +73,22 @@ impl FaultTrace {
         let mut rng = Rng::new(spec.seed);
         let mut fwd_extra = vec![Micros::ZERO; iters * n];
         let mut bwd_extra = vec![Micros::ZERO; iters * n];
+        let mut per_rank: Vec<(usize, f64)> = Vec::new();
         for t in 0..iters {
-            let straggle: f64 = spec
-                .stragglers
-                .iter()
-                .filter(|s| t >= s.from_iter)
-                .map(|s| s.factor - 1.0)
-                .sum();
+            // Slowest-rank rule: a straggler stretches only its own
+            // rank's contribution, and data-parallel ranks run the same
+            // buckets, so the window extends by the worst rank's total
+            // excess — excesses on one rank sum, excesses on different
+            // ranks do not (the non-straggling ranks finish earlier and
+            // wait).
+            per_rank.clear();
+            for s in spec.stragglers.iter().filter(|s| t >= s.from_iter) {
+                match per_rank.iter_mut().find(|(r, _)| *r == s.rank) {
+                    Some((_, excess)) => *excess += s.factor - 1.0,
+                    None => per_rank.push((s.rank, s.factor - 1.0)),
+                }
+            }
+            let straggle = per_rank.iter().fold(0.0f64, |m, &(_, e)| m.max(e));
             for (b, bucket) in buckets.iter().enumerate() {
                 let (jf, jb) = if spec.jitter_pct > 0.0 {
                     (
@@ -292,6 +301,7 @@ mod tests {
             stragglers: vec![Straggler {
                 from_iter: 3,
                 factor: 1.4,
+                rank: 0,
             }],
             drift_band: 0.2,
             ..FaultSpec::default()
@@ -304,6 +314,36 @@ mod tests {
         // Straggler stretch kicks in at its onset iteration.
         assert!(a.bwd_extra[3 * 2] >= Micros(2_000).scale(0.4));
         assert!(a.bwd_extra[0] < Micros(2_000).scale(0.4));
+    }
+
+    #[test]
+    fn stragglers_on_distinct_ranks_take_the_max_not_the_sum() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 10_000, 10_000, 5_000)];
+        let schedule = tiny_schedule(1);
+        let mk = |rank_b: usize| FaultSpec {
+            stragglers: vec![
+                Straggler {
+                    from_iter: 0,
+                    factor: 1.5,
+                    rank: 0,
+                },
+                Straggler {
+                    from_iter: 0,
+                    factor: 1.25,
+                    rank: rank_b,
+                },
+            ],
+            ..FaultSpec::default()
+        };
+        // Different ranks: the window follows the slowest rank (+50%).
+        let tr = FaultTrace::materialize(&mk(1), 2, &buckets, &schedule, &env);
+        assert_eq!(tr.fwd_extra[0], Micros(5_000));
+        assert_eq!(tr.bwd_extra[0], Micros(5_000));
+        // Same rank: the excesses compound additively (+75%).
+        let tr = FaultTrace::materialize(&mk(0), 2, &buckets, &schedule, &env);
+        assert_eq!(tr.fwd_extra[0], Micros(7_500));
+        assert_eq!(tr.bwd_extra[0], Micros(7_500));
     }
 
     #[test]

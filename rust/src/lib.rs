@@ -78,3 +78,4 @@ pub mod metrics;
 pub mod runtime;
 pub mod train;
 pub mod bench;
+pub mod sweep;

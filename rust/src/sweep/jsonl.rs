@@ -1,0 +1,301 @@
+//! JSON-lines serialization of sweep results, plus the summary CSV.
+//!
+//! One line per cell, written as each cell completes (the sweep streams;
+//! a crashed run keeps every finished cell). The schema is documented in
+//! `docs/sweeps.md` and round-trips exactly through [`parse_jsonl`]:
+//! every numeric field is an integer well inside f64's exact range, so
+//! parse(write(x)) == x bit-for-bit — pinned by `tests/sweep_grid.rs`.
+
+use super::runner::{CellOutcome, CellResult, SchemeResult};
+use super::SweepCell;
+use crate::util::error::Result;
+use crate::util::json::{esc, parse_json, Json};
+
+fn cell_json(cell: &SweepCell) -> String {
+    let faults = match &cell.faults {
+        Some(f) => format!("\"{}\"", esc(f)),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"workload\": \"{}\", \"preset\": \"{}\", \"ranks_per_node\": {}, \
+         \"codec\": \"{}\", \"contention\": \"{}\", \"faults\": {}, \"workers\": {}}}",
+        esc(&cell.workload),
+        esc(&cell.preset),
+        cell.ranks_per_node,
+        esc(&cell.codec),
+        esc(&cell.contention),
+        faults,
+        cell.workers
+    )
+}
+
+fn scheme_json(s: &SchemeResult) -> String {
+    format!(
+        "{{\"scheme\": \"{}\", \"status\": \"{}\", \"iter_us\": {}, \"total_us\": {}, \
+         \"events\": {}, \"coverage_ppm\": {}, \"fallback\": \"{}\"}}",
+        esc(&s.scheme),
+        esc(&s.status),
+        s.iter_us,
+        s.total_us,
+        s.events,
+        s.coverage_ppm,
+        esc(&s.fallback)
+    )
+}
+
+/// Serialize one cell outcome as a single JSON line (no trailing
+/// newline).
+pub fn outcome_to_json(outcome: &CellOutcome) -> String {
+    match &outcome.result {
+        Err(e) => format!(
+            "{{\"cell\": {}, \"status\": \"error\", \"error\": \"{}\"}}",
+            cell_json(&outcome.cell),
+            esc(e)
+        ),
+        Ok(res) => {
+            let schemes: Vec<String> = res.schemes.iter().map(scheme_json).collect();
+            format!(
+                "{{\"cell\": {}, \"status\": \"ok\", \"winner\": \"{}\", \"tts_us\": {}, \
+                 \"iter_us\": {}, \"coverage_ppm\": {}, \"fallback\": \"{}\", \
+                 \"schemes\": [{}]}}",
+                cell_json(&outcome.cell),
+                esc(&res.winner),
+                res.tts_us,
+                res.iter_us,
+                res.coverage_ppm,
+                esc(&res.fallback),
+                schemes.join(", ")
+            )
+        }
+    }
+}
+
+/// Serialize a full result set, one line per cell.
+pub fn to_jsonl(outcomes: &[CellOutcome]) -> String {
+    let mut out = String::new();
+    for o in outcomes {
+        out.push_str(&outcome_to_json(o));
+        out.push('\n');
+    }
+    out
+}
+
+fn req_str(doc: &Json, key: &str, what: &str) -> Result<String> {
+    doc.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| crate::err!("{what}: missing string `{key}`"))
+}
+
+fn req_u64(doc: &Json, key: &str, what: &str) -> Result<u64> {
+    doc.get(key)
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| crate::err!("{what}: missing numeric `{key}`"))
+}
+
+/// Parse a `"cell"` object (shared with the server's query parser,
+/// which fills defaults before delegating here).
+pub fn cell_from_json(doc: &Json) -> Result<SweepCell> {
+    let faults = match doc.get("faults") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) if s == "none" => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(other) => crate::bail!("cell: `faults` must be a string or null, got {other:?}"),
+    };
+    Ok(SweepCell {
+        workload: req_str(doc, "workload", "cell")?,
+        preset: req_str(doc, "preset", "cell")?,
+        ranks_per_node: req_u64(doc, "ranks_per_node", "cell")? as usize,
+        codec: req_str(doc, "codec", "cell")?,
+        contention: req_str(doc, "contention", "cell")?,
+        faults,
+        workers: req_u64(doc, "workers", "cell")? as usize,
+    })
+}
+
+fn scheme_from_json(doc: &Json) -> Result<SchemeResult> {
+    Ok(SchemeResult {
+        scheme: req_str(doc, "scheme", "scheme")?,
+        status: req_str(doc, "status", "scheme")?,
+        iter_us: req_u64(doc, "iter_us", "scheme")?,
+        total_us: req_u64(doc, "total_us", "scheme")?,
+        events: req_u64(doc, "events", "scheme")?,
+        coverage_ppm: req_u64(doc, "coverage_ppm", "scheme")?,
+        fallback: req_str(doc, "fallback", "scheme")?,
+    })
+}
+
+/// Parse one JSONL line back into a [`CellOutcome`].
+pub fn outcome_from_json(line: &str) -> Result<CellOutcome> {
+    let doc = parse_json(line)?;
+    let cell = cell_from_json(
+        doc.get("cell")
+            .ok_or_else(|| crate::err!("outcome: missing `cell`"))?,
+    )?;
+    let status = req_str(&doc, "status", "outcome")?;
+    if status == "error" {
+        return Ok(CellOutcome {
+            cell,
+            result: Err(req_str(&doc, "error", "outcome")?),
+        });
+    }
+    let Some(Json::Arr(items)) = doc.get("schemes") else {
+        crate::bail!("outcome: missing `schemes` array");
+    };
+    let mut schemes = Vec::with_capacity(items.len());
+    for item in items {
+        schemes.push(scheme_from_json(item)?);
+    }
+    Ok(CellOutcome {
+        cell: cell.clone(),
+        result: Ok(CellResult {
+            cell,
+            schemes,
+            winner: req_str(&doc, "winner", "outcome")?,
+            tts_us: req_u64(&doc, "tts_us", "outcome")?,
+            iter_us: req_u64(&doc, "iter_us", "outcome")?,
+            coverage_ppm: req_u64(&doc, "coverage_ppm", "outcome")?,
+            fallback: req_str(&doc, "fallback", "outcome")?,
+        }),
+    })
+}
+
+/// Parse a JSONL document (blank lines ignored).
+pub fn parse_jsonl(text: &str) -> Result<Vec<CellOutcome>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(
+            outcome_from_json(line)
+                .map_err(|e| crate::err!("sweep results line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Per-cell winner summary in the repo's CSV idiom (one row per cell;
+/// error cells carry the message in `status`).
+pub fn summary_csv(outcomes: &[CellOutcome]) -> String {
+    let mut out = String::from(
+        "workload,preset,ranks_per_node,codec,contention,faults,workers,\
+         status,winner,tts_us,iter_us,coverage_ppm,fallback\n",
+    );
+    for o in outcomes {
+        let c = &o.cell;
+        let prefix = format!(
+            "{},{},{},{},{},{},{}",
+            c.workload,
+            c.preset,
+            c.ranks_per_node,
+            c.codec,
+            c.contention,
+            c.faults.as_deref().unwrap_or("none"),
+            c.workers
+        );
+        match &o.result {
+            Ok(r) => out.push_str(&format!(
+                "{prefix},ok,{},{},{},{},{}\n",
+                r.winner, r.tts_us, r.iter_us, r.coverage_ppm, r.fallback
+            )),
+            Err(e) => out.push_str(&format!(
+                "{prefix},error: {},,,,,\n",
+                e.replace(',', ";").replace('\n', " ")
+            )),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> SweepCell {
+        SweepCell {
+            workload: "gpt2".into(),
+            preset: "paper-2link".into(),
+            ranks_per_node: 8,
+            codec: "fp16".into(),
+            contention: "kway".into(),
+            faults: Some("mixed".into()),
+            workers: 16,
+        }
+    }
+
+    fn outcome() -> CellOutcome {
+        let schemes = vec![
+            SchemeResult {
+                scheme: "pytorch-ddp".into(),
+                status: "ok".into(),
+                iter_us: 120,
+                total_us: 4800,
+                events: 960,
+                coverage_ppm: 1_000_000,
+                fallback: "none".into(),
+            },
+            SchemeResult {
+                scheme: "deft".into(),
+                status: "ok".into(),
+                iter_us: 90,
+                total_us: 3600,
+                events: 1200,
+                coverage_ppm: 500_000,
+                fallback: "drift-gate".into(),
+            },
+        ];
+        CellOutcome {
+            cell: cell(),
+            result: Ok(CellResult {
+                cell: cell(),
+                schemes,
+                winner: "deft".into(),
+                tts_us: 3600,
+                iter_us: 90,
+                coverage_ppm: 500_000,
+                fallback: "drift-gate".into(),
+            }),
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_exactly() {
+        let outcomes = vec![
+            outcome(),
+            CellOutcome {
+                cell: SweepCell { faults: None, ..cell() },
+                result: Err("unknown preset `warp`".into()),
+            },
+        ];
+        let text = to_jsonl(&outcomes);
+        assert_eq!(text.lines().count(), 2, "one line per cell");
+        let back = parse_jsonl(&text).expect("round-trip parses");
+        assert_eq!(back, outcomes, "parse(write(x)) == x");
+    }
+
+    #[test]
+    fn summary_csv_has_one_row_per_cell() {
+        let outcomes = vec![
+            outcome(),
+            CellOutcome {
+                cell: cell(),
+                result: Err("boom, with a comma".into()),
+            },
+        ];
+        let csv = summary_csv(&outcomes);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows");
+        assert!(lines[0].starts_with("workload,preset,"));
+        assert!(lines[1].contains(",ok,deft,3600,90,500000,drift-gate"));
+        assert!(lines[2].contains("error: boom; with a comma"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse_jsonl("{\"cell\": {}}\n").is_err());
+        assert!(parse_jsonl("not json\n").is_err());
+        assert!(parse_jsonl("").expect("empty ok").is_empty());
+    }
+}

@@ -1,0 +1,353 @@
+//! Batch sweep engine + capacity-planning service.
+//!
+//! The explorer answers one (model, topology, codec, contention)
+//! question per process run; this module answers *all* of them. A
+//! [`SweepGrid`] names the axes — model zoo × link preset ×
+//! `ranks_per_node` × codec × contention model × fault preset — and
+//! [`runner::run_grid`] fans the resulting [`SweepCell`]s across a
+//! thread pool of DES runs. Every cell runs the full scheme suite: the
+//! DeFT leg goes through the real
+//! [`run_lifecycle`](crate::sched::run_lifecycle) (Profiler → Solver →
+//! Preserver gate → trial, drift re-gate included), the baselines
+//! through partition → schedule → faulted simulation. The per-cell
+//! winner (best scheme, time-to-solution, effective coverage rate) is
+//! aggregated into a [`runner::CellResult`].
+//!
+//! Determinism contract: [`runner::run_cell`] is a **pure function** of
+//! its cell — no shared mutable state, no ambient randomness — so the
+//! thread pool claims cells by index and collects results *in index
+//! order*, making parallel output bit-for-bit identical to serial
+//! (pinned by `tests/sweep_grid.rs`, faults included).
+//!
+//! Results stream as JSON lines ([`jsonl`]) plus a summary CSV, and
+//! [`server::Planner`] exposes the long-running query mode: line-
+//! delimited JSON questions over stdin/stdout, answered from a memoized
+//! cell cache so a repeated query never re-pays profiling, partitioning,
+//! or simulation (a reported hit/miss counter proves it). See
+//! `docs/sweeps.md`.
+
+pub mod jsonl;
+pub mod runner;
+pub mod server;
+
+pub use jsonl::{parse_jsonl, summary_csv, to_jsonl};
+pub use runner::{run_cell, run_cells, run_grid, CellOutcome, CellResult, SchemeResult};
+pub use server::Planner;
+
+use crate::config::ExperimentConfig;
+use crate::faults::FaultSpec;
+use crate::links::{ClusterEnv, Codec, ContentionModel, LinkId, LinkPreset, Topology};
+
+/// One point of the sweep grid: everything needed to build the cluster
+/// environment and fault scenario of a planning question. All fields
+/// are plain values so cells hash, compare, and round-trip exactly.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SweepCell {
+    /// Model-zoo workload name (see [`crate::bench::workload_by_name`]).
+    pub workload: String,
+    /// Link-topology preset name (see [`LinkPreset::parse`]).
+    pub preset: String,
+    /// Ranks per node: 1 = flat; > 1 = hierarchical on the preset's
+    /// first two links (intra = link 0, inter = link 1).
+    pub ranks_per_node: usize,
+    /// Codec attached to every non-reference link (`raw` = leave the
+    /// preset untouched).
+    pub codec: String,
+    /// Contention-model name (see [`ContentionModel::parse`]).
+    pub contention: String,
+    /// Fault preset injected into every run of the cell
+    /// ([`FaultSpec::preset`]); `None` = healthy cluster.
+    pub faults: Option<String>,
+    pub workers: usize,
+}
+
+impl SweepCell {
+    /// Stable identity string: the JSONL/cache key and log label.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|rpn{}|{}|{}|{}|w{}",
+            self.workload,
+            self.preset,
+            self.ranks_per_node,
+            self.codec,
+            self.contention,
+            self.faults.as_deref().unwrap_or("none"),
+            self.workers
+        )
+    }
+
+    /// Build the cluster environment this cell describes. Every axis
+    /// value is validated here so a malformed query or config surfaces
+    /// as a typed cell error, never a panic inside a worker thread.
+    pub fn env(&self) -> Result<ClusterEnv, String> {
+        let preset = LinkPreset::parse(&self.preset)
+            .ok_or_else(|| format!("unknown preset `{}`", self.preset))?;
+        let contention = ContentionModel::parse(&self.contention)
+            .ok_or_else(|| format!("unknown contention model `{}`", self.contention))?;
+        let codec = Codec::parse(&self.codec)
+            .ok_or_else(|| format!("unknown codec `{}`", self.codec))?;
+        if self.workers < 2 {
+            return Err(format!("workers {} must be ≥ 2", self.workers));
+        }
+        let mut env = preset
+            .env()
+            .with_workers(self.workers)
+            .with_contention_model(contention);
+        if self.ranks_per_node > 1 {
+            if self.workers % self.ranks_per_node != 0 {
+                return Err(format!(
+                    "ranks_per_node {} must divide workers {}",
+                    self.ranks_per_node, self.workers
+                ));
+            }
+            if env.n_links() < 2 {
+                return Err(format!(
+                    "preset `{}` has {} link(s); hierarchical cells need ≥ 2",
+                    self.preset,
+                    env.n_links()
+                ));
+            }
+            env = env.with_topology(Topology::hierarchical(
+                self.ranks_per_node,
+                LinkId(0),
+                LinkId(1),
+            ));
+        }
+        if codec != Codec::Raw {
+            // The reference link stays raw (it anchors μ = 1 pricing);
+            // every other link carries the cell's codec.
+            for id in 1..env.n_links() {
+                env = env.with_codec(LinkId(id), codec);
+            }
+        }
+        Ok(env)
+    }
+
+    /// Resolve the cell's fault preset (validated against the cell's
+    /// worker count). `Ok(None)` = healthy cell.
+    pub fn fault_spec(&self) -> Result<Option<FaultSpec>, String> {
+        match self.faults.as_deref() {
+            None | Some("none") => Ok(None),
+            Some(name) => FaultSpec::preset(name, self.workers)
+                .map(Some)
+                .ok_or_else(|| format!("unknown fault preset `{name}`")),
+        }
+    }
+}
+
+/// The sweep's grid axes. [`SweepGrid::cells`] is the cartesian product
+/// in a fixed nesting order (workloads outermost, faults innermost), so
+/// cell order — and therefore every downstream artifact — is
+/// deterministic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepGrid {
+    pub workloads: Vec<String>,
+    pub presets: Vec<String>,
+    pub ranks_per_node: Vec<usize>,
+    pub codecs: Vec<String>,
+    pub contention: Vec<String>,
+    /// Fault presets; `None` entries sweep the healthy cluster.
+    pub faults: Vec<Option<String>>,
+    pub workers: usize,
+}
+
+/// Split a comma-separated axis string into trimmed, non-empty items.
+pub fn split_csv(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+impl SweepGrid {
+    /// The acceptance-criteria grid: full model zoo × all three link
+    /// presets × {flat, hier8} × {raw, fp16} × {pairwise, kway},
+    /// healthy — 96 cells.
+    pub fn full() -> SweepGrid {
+        SweepGrid {
+            workloads: ["resnet101", "vgg19", "gpt2", "llama2"]
+                .map(String::from)
+                .to_vec(),
+            presets: ["paper-2link", "single-nic", "nvlink-ib-tcp"]
+                .map(String::from)
+                .to_vec(),
+            ranks_per_node: vec![1, 8],
+            codecs: ["raw", "fp16"].map(String::from).to_vec(),
+            contention: ["pairwise", "kway"].map(String::from).to_vec(),
+            faults: vec![None],
+            workers: 16,
+        }
+    }
+
+    /// The CI smoke grid: 2 workloads × 2 presets × {flat, hier8} ×
+    /// {raw, fp16}, k-way only, healthy — 16 cells.
+    pub fn small() -> SweepGrid {
+        SweepGrid {
+            workloads: ["vgg19", "gpt2"].map(String::from).to_vec(),
+            presets: ["paper-2link", "nvlink-ib-tcp"].map(String::from).to_vec(),
+            ranks_per_node: vec![1, 8],
+            codecs: ["raw", "fp16"].map(String::from).to_vec(),
+            contention: vec!["kway".to_string()],
+            faults: vec![None],
+            workers: 16,
+        }
+    }
+
+    /// Build the grid a config's `[sweep]` table describes. The table's
+    /// axes are comma-separated strings (the TOML subset has no arrays);
+    /// they are re-validated here so a hand-built config fails the same
+    /// way a parsed one does.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<SweepGrid, String> {
+        let mut ranks_per_node = Vec::new();
+        for r in split_csv(&cfg.sweep_ranks_per_node) {
+            ranks_per_node.push(
+                r.parse::<usize>()
+                    .map_err(|_| format!("sweep.ranks_per_node: `{r}` is not an integer"))?,
+            );
+        }
+        let faults = split_csv(&cfg.sweep_faults)
+            .into_iter()
+            .map(|f| if f == "none" { None } else { Some(f) })
+            .collect();
+        let grid = SweepGrid {
+            workloads: split_csv(&cfg.sweep_workloads),
+            presets: split_csv(&cfg.sweep_presets),
+            ranks_per_node,
+            codecs: split_csv(&cfg.sweep_codecs),
+            contention: split_csv(&cfg.sweep_contention),
+            faults,
+            workers: cfg.workers,
+        };
+        for axis in [
+            grid.workloads.len(),
+            grid.presets.len(),
+            grid.ranks_per_node.len(),
+            grid.codecs.len(),
+            grid.contention.len(),
+            grid.faults.len(),
+        ] {
+            if axis == 0 {
+                return Err("sweep: every grid axis needs at least one value".into());
+            }
+        }
+        for cell in grid.cells() {
+            cell.env().map_err(|e| format!("sweep cell {}: {e}", cell.key()))?;
+            cell.fault_spec()
+                .map_err(|e| format!("sweep cell {}: {e}", cell.key()))?;
+        }
+        Ok(grid)
+    }
+
+    /// The cartesian product, in deterministic nesting order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::new();
+        for w in &self.workloads {
+            for p in &self.presets {
+                for &rpn in &self.ranks_per_node {
+                    for c in &self.codecs {
+                        for m in &self.contention {
+                            for f in &self.faults {
+                                out.push(SweepCell {
+                                    workload: w.clone(),
+                                    preset: p.clone(),
+                                    ranks_per_node: rpn,
+                                    codec: c.clone(),
+                                    contention: m.clone(),
+                                    faults: f.clone(),
+                                    workers: self.workers,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_is_the_acceptance_grid() {
+        let cells = SweepGrid::full().cells();
+        assert_eq!(cells.len(), 96, "4 workloads × 3 presets × 2 × 2 × 2");
+        // Every cell validates.
+        for cell in &cells {
+            cell.env().expect("full-grid cell must build");
+            assert_eq!(cell.fault_spec().expect("healthy"), None);
+        }
+        // Keys are unique (the cache and JSONL rely on it).
+        let mut keys: Vec<String> = cells.iter().map(SweepCell::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 96);
+    }
+
+    #[test]
+    fn small_grid_is_a_subset_of_full() {
+        let small = SweepGrid::small().cells();
+        assert_eq!(small.len(), 16);
+        let full = SweepGrid::full().cells();
+        for cell in &small {
+            assert!(full.contains(cell), "small cell {} not in full grid", cell.key());
+        }
+    }
+
+    #[test]
+    fn cell_env_rejects_bad_axes() {
+        let cell = SweepCell {
+            workload: "gpt2".into(),
+            preset: "paper-2link".into(),
+            ranks_per_node: 1,
+            codec: "raw".into(),
+            contention: "kway".into(),
+            faults: None,
+            workers: 16,
+        };
+        cell.env().expect("baseline cell builds");
+        assert!(SweepCell { preset: "warp".into(), ..cell.clone() }.env().is_err());
+        assert!(SweepCell { codec: "zfp".into(), ..cell.clone() }.env().is_err());
+        assert!(SweepCell { contention: "freeway".into(), ..cell.clone() }.env().is_err());
+        assert!(SweepCell { ranks_per_node: 3, ..cell.clone() }.env().is_err());
+        assert!(SweepCell { workers: 1, ..cell.clone() }.env().is_err());
+        assert!(
+            SweepCell { faults: Some("meteor".into()), ..cell.clone() }
+                .fault_spec()
+                .is_err()
+        );
+        assert!(
+            SweepCell { faults: Some("mixed".into()), ..cell }
+                .fault_spec()
+                .expect("known preset")
+                .is_some()
+        );
+    }
+
+    #[test]
+    fn grid_from_config_round_trips() {
+        let cfg = ExperimentConfig::default();
+        let grid = SweepGrid::from_config(&cfg).expect("default config sweeps");
+        assert_eq!(grid, SweepGrid::full(), "default [sweep] table is the full grid");
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.sweep_workloads = "gpt2".into();
+        cfg.sweep_presets = "paper-2link".into();
+        cfg.sweep_ranks_per_node = "1".into();
+        cfg.sweep_codecs = "raw".into();
+        cfg.sweep_contention = "kway".into();
+        cfg.sweep_faults = "none,mixed".into();
+        let grid = SweepGrid::from_config(&cfg).expect("faulted grid");
+        assert_eq!(grid.cells().len(), 2);
+        assert_eq!(grid.faults, vec![None, Some("mixed".to_string())]);
+
+        cfg.sweep_faults = "meteor".into();
+        assert!(SweepGrid::from_config(&cfg).is_err());
+        cfg.sweep_faults = "none".into();
+        cfg.sweep_ranks_per_node = "nope".into();
+        assert!(SweepGrid::from_config(&cfg).is_err());
+    }
+}

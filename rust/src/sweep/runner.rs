@@ -1,0 +1,295 @@
+//! The sweep executor: one pure function per cell, fanned across a
+//! work-claiming thread pool.
+//!
+//! [`run_cell`] runs the full scheme suite for one [`SweepCell`]: the
+//! DeFT leg goes through the real [`run_lifecycle`] (so sweep answers
+//! are *exactly* the explorer's answers — pinned by
+//! `tests/sweep_grid.rs`), the baselines through partition → schedule →
+//! faulted simulation with a deterministic iteration rule. Everything a
+//! cell reads is owned by the cell (the contention staircases and
+//! partition memos live inside each cell's own [`ClusterEnv`]), so cells
+//! never share mutable state and any execution order yields identical
+//! results.
+//!
+//! [`run_grid`] exploits that: worker threads claim cell indices from an
+//! atomic counter and park each result in its index's slot; collection
+//! happens in index order, making N-thread output bit-for-bit equal to
+//! serial output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::{SweepCell, SweepGrid};
+use crate::bench::{partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use crate::config::Scheme;
+use crate::sched::{run_lifecycle, FallbackReason, LifecycleOptions, Schedule};
+use crate::sim::{simulate_faulted, SimOptions, SimResult};
+
+/// One scheme's outcome inside a cell. Integer/string fields only so
+/// cell results compare exactly (`Eq`) across serial and parallel runs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchemeResult {
+    pub scheme: String,
+    /// `"ok"`, or `"skipped: <reason>"` when this scheme cannot run in
+    /// the cell's environment (e.g. its partitioner rejects the model).
+    pub status: String,
+    /// Steady-state iteration time, µs.
+    pub iter_us: u64,
+    /// Time-to-solution of the cell's trial run, µs.
+    pub total_us: u64,
+    /// Discrete events the trial executed.
+    pub events: u64,
+    /// Effective coverage rate (updates per cycle / cycle length) in
+    /// ppm — DeFT's N:M delayed-update coverage; 1 000 000 = every
+    /// iteration updates.
+    pub coverage_ppm: u64,
+    /// Lifecycle fallback label: `none` | `codec-gate` | `lint` |
+    /// `drift-gate` (always `none` for the baseline schemes).
+    pub fallback: String,
+}
+
+/// Aggregated answer for one cell: the per-scheme table plus the winner
+/// by steady-state iteration time (ties break in [`Scheme::ALL`] order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub schemes: Vec<SchemeResult>,
+    pub winner: String,
+    /// Winner's time-to-solution, µs.
+    pub tts_us: u64,
+    /// Winner's steady-state iteration time, µs.
+    pub iter_us: u64,
+    /// Winner's effective coverage rate, ppm.
+    pub coverage_ppm: u64,
+    /// Winner's fallback label.
+    pub fallback: String,
+}
+
+/// A cell's terminal outcome: its result, or the error that stopped it
+/// (invalid environment, or every scheme failed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellOutcome {
+    pub cell: SweepCell,
+    pub result: Result<CellResult, String>,
+}
+
+fn fallback_label(reason: &FallbackReason) -> &'static str {
+    match reason {
+        FallbackReason::None => "none",
+        FallbackReason::CodecGateRejected { .. } => "codec-gate",
+        FallbackReason::LintRejected { .. } => "lint",
+        FallbackReason::DriftGateRejected { .. } => "drift-gate",
+    }
+}
+
+fn coverage_ppm(schedule: &Schedule) -> u64 {
+    let cycle = schedule.cycle.len().max(1) as u64;
+    schedule.updates_per_cycle as u64 * 1_000_000 / cycle
+}
+
+fn scheme_result(
+    scheme: Scheme,
+    schedule: &Schedule,
+    sim: &SimResult,
+    fallback: &'static str,
+) -> SchemeResult {
+    SchemeResult {
+        scheme: scheme.name().to_string(),
+        status: "ok".to_string(),
+        iter_us: sim.steady_iter_time.as_us(),
+        total_us: sim.total.as_us(),
+        events: sim.events_processed,
+        coverage_ppm: coverage_ppm(schedule),
+        fallback: fallback.to_string(),
+    }
+}
+
+fn skipped(scheme: Scheme, reason: String) -> SchemeResult {
+    SchemeResult {
+        scheme: scheme.name().to_string(),
+        status: format!("skipped: {reason}"),
+        iter_us: 0,
+        total_us: 0,
+        events: 0,
+        coverage_ppm: 0,
+        fallback: "none".to_string(),
+    }
+}
+
+/// Run one cell: every scheme in [`Scheme::ALL`] order, then pick the
+/// winner. Pure — same cell in, same bits out, on any thread.
+pub fn run_cell(cell: &SweepCell) -> CellOutcome {
+    let outcome = |result| CellOutcome {
+        cell: cell.clone(),
+        result,
+    };
+    let env = match cell.env() {
+        Ok(env) => env,
+        Err(e) => return outcome(Err(e)),
+    };
+    let spec = match cell.fault_spec() {
+        Ok(spec) => spec,
+        Err(e) => return outcome(Err(e)),
+    };
+    let workload = match workload_by_name(&cell.workload) {
+        Ok(w) => w,
+        Err(e) => return outcome(Err(e.to_string())),
+    };
+
+    let mut schemes = Vec::with_capacity(Scheme::ALL.len());
+    for scheme in Scheme::ALL {
+        if scheme == Scheme::Deft {
+            // The DeFT leg is the full lifecycle — Profiler, Solver,
+            // Preserver gate, trial, drift re-gate — so a sweep answer
+            // is exactly what `run_lifecycle` would report standalone.
+            let opts = LifecycleOptions {
+                faults: spec.clone(),
+                ..LifecycleOptions::default()
+            };
+            match run_lifecycle(&workload, &env, &opts) {
+                Ok(rep) => schemes.push(scheme_result(
+                    scheme,
+                    &rep.schedule,
+                    &rep.trial,
+                    fallback_label(&rep.fallback),
+                )),
+                Err(e) => schemes.push(skipped(scheme, e.to_string())),
+            }
+            continue;
+        }
+        let buckets =
+            match partition_for(&workload, scheme, &env, PAPER_PARTITION, PAPER_DDP_MB) {
+                Ok(b) => b,
+                Err(e) => {
+                    schemes.push(skipped(scheme, e.to_string()));
+                    continue;
+                }
+            };
+        let schedule = scheduler_for(scheme, true, &env).schedule(&buckets);
+        let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+        let opts = SimOptions {
+            iterations: warmup * 3 + 12,
+            warmup,
+            record_timeline: false,
+        };
+        let sim = simulate_faulted(&buckets, &schedule, &env, &opts, spec.as_ref());
+        schemes.push(scheme_result(scheme, &schedule, &sim, "none"));
+    }
+
+    let winner = schemes
+        .iter()
+        .filter(|s| s.status == "ok")
+        .fold(None::<&SchemeResult>, |best, s| match best {
+            Some(b) if b.iter_us <= s.iter_us => Some(b),
+            _ => Some(s),
+        });
+    let Some(winner) = winner else {
+        let reasons: Vec<&str> = schemes.iter().map(|s| s.status.as_str()).collect();
+        return outcome(Err(format!("every scheme failed: {}", reasons.join("; "))));
+    };
+    let result = CellResult {
+        cell: cell.clone(),
+        winner: winner.scheme.clone(),
+        tts_us: winner.total_us,
+        iter_us: winner.iter_us,
+        coverage_ppm: winner.coverage_ppm,
+        fallback: winner.fallback.clone(),
+        schemes: schemes.clone(),
+    };
+    outcome(Ok(result))
+}
+
+/// Run a cell list across `threads` workers. Threads claim cells by
+/// index from an atomic counter; results are collected in index order,
+/// so output is bit-for-bit identical to `threads = 1`.
+pub fn run_cells(cells: &[SweepCell], threads: usize) -> Vec<CellOutcome> {
+    if threads <= 1 || cells.len() <= 1 {
+        return cells.iter().map(run_cell).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellOutcome>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(cells.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let out = run_cell(&cells[i]);
+                *slots[i].lock().expect("sweep slot lock poisoned") = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("sweep slot lock poisoned")
+                .expect("every cell index was claimed and filled")
+        })
+        .collect()
+}
+
+/// Run a whole grid (see [`run_cells`]).
+pub fn run_grid(grid: &SweepGrid, threads: usize) -> Vec<CellOutcome> {
+    run_cells(&grid.cells(), threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cell() -> SweepCell {
+        SweepCell {
+            workload: "small".into(),
+            preset: "paper-2link".into(),
+            ranks_per_node: 1,
+            codec: "raw".into(),
+            contention: "kway".into(),
+            faults: None,
+            workers: 16,
+        }
+    }
+
+    #[test]
+    fn run_cell_answers_with_a_winner() {
+        let out = run_cell(&tiny_cell());
+        let res = out.result.expect("healthy cell succeeds");
+        assert_eq!(res.schemes.len(), Scheme::ALL.len());
+        assert!(res.schemes.iter().all(|s| s.status == "ok"));
+        assert!(res.schemes.iter().any(|s| s.scheme == res.winner));
+        assert!(res.iter_us > 0 && res.tts_us >= res.iter_us);
+        // The winner actually has the minimal iteration time.
+        let min = res.schemes.iter().map(|s| s.iter_us).min().expect("schemes");
+        assert_eq!(res.iter_us, min);
+        // Full coverage on the healthy defaults (no N:M delay in play
+        // for the winner's accepted schedule would show < 1.0 here).
+        assert!(res.coverage_ppm > 0 && res.coverage_ppm <= 1_000_000);
+    }
+
+    #[test]
+    fn run_cell_is_deterministic() {
+        let cell = SweepCell {
+            faults: Some("mixed".into()),
+            ..tiny_cell()
+        };
+        let a = run_cell(&cell);
+        let b = run_cell(&cell);
+        assert_eq!(a, b, "same cell must replay bit-for-bit");
+    }
+
+    #[test]
+    fn invalid_cells_error_instead_of_panicking() {
+        let out = run_cell(&SweepCell {
+            preset: "warp".into(),
+            ..tiny_cell()
+        });
+        assert!(out.result.is_err());
+        let out = run_cell(&SweepCell {
+            workload: "warpnet".into(),
+            ..tiny_cell()
+        });
+        assert!(out.result.is_err());
+    }
+}

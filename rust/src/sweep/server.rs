@@ -1,0 +1,230 @@
+//! The capacity-planning service: a long-running query loop over the
+//! sweep engine.
+//!
+//! Protocol (line-delimited JSON over any `BufRead`/`Write` pair —
+//! `schedule_explorer --serve` wires it to stdin/stdout):
+//!
+//! ```text
+//! → {"workload": "gpt2", "preset": "nvlink-ib-tcp", "ranks_per_node": 8}
+//! ← {"cache": "miss", "cache_hits": 0, "cache_misses": 1, "answer": {…cell outcome…}}
+//! → {"workload": "gpt2", "preset": "nvlink-ib-tcp", "ranks_per_node": 8}
+//! ← {"cache": "hit", "cache_hits": 1, "cache_misses": 1, "answer": {…identical…}}
+//! → quit
+//! ```
+//!
+//! Every query field except `workload` is optional (`preset`
+//! "paper-2link", `ranks_per_node` 1, `codec` "raw", `contention`
+//! "kway", `faults` null, `workers` 16). Answers are full
+//! [`CellOutcome`] lines (the JSONL schema), wrapped with the cache
+//! verdict: a repeated query is served from the memoized cell table —
+//! profiling, partition solutions, and the per-cell [`ClusterEnv`]
+//! staircases are all paid once — and the hit/miss counters make that
+//! observable to clients and to the acceptance test. Responses carry no
+//! wall-clock fields, so a scripted query sequence is answered
+//! byte-identically by any fresh [`Planner`].
+//!
+//! [`ClusterEnv`]: crate::links::ClusterEnv
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+
+use super::jsonl::outcome_to_json;
+use super::runner::{run_cell, CellOutcome};
+use super::SweepCell;
+use crate::util::error::Result;
+use crate::util::json::{esc, parse_json, Json};
+
+/// The query server's state: a memoized cell table plus hit/miss
+/// counters.
+#[derive(Default)]
+pub struct Planner {
+    cache: HashMap<String, CellOutcome>,
+    hits: u64,
+    misses: u64,
+}
+
+fn query_cell(doc: &Json) -> Result<SweepCell> {
+    if !matches!(doc, Json::Obj(_)) {
+        crate::bail!("query must be a JSON object");
+    }
+    let opt_str = |key: &str, default: &str| -> Result<String> {
+        match doc.get(key) {
+            None => Ok(default.to_string()),
+            Some(Json::Str(s)) => Ok(s.clone()),
+            Some(other) => crate::bail!("query: `{key}` must be a string, got {other:?}"),
+        }
+    };
+    let opt_usize = |key: &str, default: usize| -> Result<usize> {
+        match doc.get(key) {
+            None => Ok(default),
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+            Some(other) => {
+                crate::bail!("query: `{key}` must be a non-negative integer, got {other:?}")
+            }
+        }
+    };
+    let workload = match doc.get("workload") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => crate::bail!("query: missing string `workload`"),
+    };
+    let faults = match doc.get("faults") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) if s == "none" => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(other) => crate::bail!("query: `faults` must be a string or null, got {other:?}"),
+    };
+    Ok(SweepCell {
+        workload,
+        preset: opt_str("preset", "paper-2link")?,
+        ranks_per_node: opt_usize("ranks_per_node", 1)?,
+        codec: opt_str("codec", "raw")?,
+        contention: opt_str("contention", "kway")?,
+        faults,
+        workers: opt_usize("workers", 16)?,
+    })
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner::default()
+    }
+
+    /// Cache-hit counter (queries answered without re-running a cell).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache-miss counter (cells solved from scratch).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Seed the cache with already-computed outcomes (e.g. a finished
+    /// batch sweep), so the server starts warm.
+    pub fn preload(&mut self, outcomes: &[CellOutcome]) {
+        for o in outcomes {
+            self.cache.insert(o.cell.key(), o.clone());
+        }
+    }
+
+    /// Answer one cell question, memoized. The JSON response wraps the
+    /// cell's JSONL outcome with the cache verdict and counters.
+    pub fn answer(&mut self, cell: &SweepCell) -> String {
+        let key = cell.key();
+        let verdict = if self.cache.contains_key(&key) {
+            self.hits += 1;
+            "hit"
+        } else {
+            let out = run_cell(cell);
+            self.cache.insert(key.clone(), out);
+            self.misses += 1;
+            "miss"
+        };
+        let outcome = &self.cache[&key];
+        format!(
+            "{{\"cache\": \"{verdict}\", \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"answer\": {}}}",
+            self.hits,
+            self.misses,
+            outcome_to_json(outcome)
+        )
+    }
+
+    /// Handle one protocol line. `None` = quit; `Some(response)` is one
+    /// JSON line to write back (parse and validation errors included —
+    /// the server never dies on a bad query).
+    pub fn handle(&mut self, line: &str) -> Option<String> {
+        let line = line.trim();
+        if line == "quit" || line == "exit" {
+            return None;
+        }
+        let cell = parse_json(line).and_then(|doc| query_cell(&doc));
+        Some(match cell {
+            Ok(cell) => self.answer(&cell),
+            Err(e) => format!("{{\"status\": \"error\", \"error\": \"{}\"}}", esc(&e.to_string())),
+        })
+    }
+
+    /// The blocking serve loop: one response line per request line,
+    /// flushed immediately; ends on `quit`/`exit` or EOF. Blank lines
+    /// are ignored.
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match self.handle(&line) {
+                None => break,
+                Some(resp) => {
+                    writeln!(writer, "{resp}")?;
+                    writer.flush()?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const QUERY: &str = r#"{"workload": "small"}"#;
+
+    #[test]
+    fn repeated_queries_hit_the_cache_and_answer_identically() {
+        let mut p = Planner::new();
+        let first = p.handle(QUERY).expect("response");
+        assert!(first.contains("\"cache\": \"miss\""));
+        assert!(first.contains("\"cache_misses\": 1"));
+        let second = p.handle(QUERY).expect("response");
+        assert!(second.contains("\"cache\": \"hit\""));
+        assert!(second.contains("\"cache_hits\": 1"));
+        // Identical answers modulo the cache verdict.
+        let strip = |s: &str| s.split("\"answer\": ").nth(1).map(str::to_string);
+        assert_eq!(strip(&first), strip(&second));
+        assert!(strip(&first).is_some());
+        assert_eq!((p.hits(), p.misses()), (1, 1));
+    }
+
+    #[test]
+    fn bad_queries_answer_with_errors_not_death() {
+        let mut p = Planner::new();
+        let resp = p.handle("not json").expect("response");
+        assert!(resp.contains("\"status\": \"error\""));
+        let resp = p.handle("{\"preset\": \"paper-2link\"}").expect("response");
+        assert!(resp.contains("missing string `workload`"));
+        // An unknown workload is a valid query answered with a cell
+        // error, not a protocol error.
+        let resp = p
+            .handle("{\"workload\": \"warpnet\"}")
+            .expect("response");
+        assert!(resp.contains("\"status\": \"error\"") || resp.contains("unknown workload"));
+        assert!(p.handle("quit").is_none());
+    }
+
+    #[test]
+    fn serve_loop_speaks_the_line_protocol() {
+        let mut p = Planner::new();
+        let input = format!("\n{QUERY}\n{QUERY}\nquit\n{QUERY}\n");
+        let mut out = Vec::new();
+        p.serve(input.as_bytes(), &mut out).expect("io");
+        let text = String::from_utf8(out).expect("utf8");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "quit stops the loop; blank lines skipped");
+        assert!(lines[0].contains("\"cache\": \"miss\""));
+        assert!(lines[1].contains("\"cache\": \"hit\""));
+    }
+
+    #[test]
+    fn preload_makes_the_first_query_a_hit() {
+        let cell = query_cell(&parse_json(QUERY).expect("json")).expect("cell");
+        let outcome = run_cell(&cell);
+        let mut p = Planner::new();
+        p.preload(std::slice::from_ref(&outcome));
+        let resp = p.handle(QUERY).expect("response");
+        assert!(resp.contains("\"cache\": \"hit\""));
+        assert_eq!((p.hits(), p.misses()), (1, 0));
+    }
+}

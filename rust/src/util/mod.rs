@@ -15,6 +15,9 @@
 //!   Gaussian-walk quantifier.
 //! * [`error`] — a string-backed error/context substrate (no `anyhow`)
 //!   used by the runtime and trainer layers.
+//! * [`json`] — a minimal JSON reader/writer (no `serde`) shared by the
+//!   bench trajectory files, the sweep JSONL stream, and the planning
+//!   server's query protocol.
 
 pub mod time;
 pub mod rng;
@@ -22,6 +25,7 @@ pub mod stats;
 pub mod prop;
 pub mod mathx;
 pub mod error;
+pub mod json;
 
 pub use rng::Rng;
 pub use time::Micros;

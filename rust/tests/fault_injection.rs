@@ -135,6 +135,90 @@ fn single_flap_matches_hand_computed_piecewise_repricing() {
     assert_eq!(flapped, scan);
 }
 
+/// Hand-computed slowest-rank oracle on a one-link, one-bucket plan.
+///
+/// fwd 0→10 000 µs, bwd 10 000→20 000 µs, then a 50 000 µs transfer on
+/// the lone μ=1 link: healthy end = 70 000 µs. Stragglers of 1.5× on
+/// rank 0 and 1.25× on rank 1 both start at iteration 0; the window
+/// follows the **slowest rank** (rank 0, +50%): fwd and bwd each gain
+/// 5 000 µs → end = 80 000 µs, not the 85 000 µs the old uniform-sum
+/// rule (+75%) would give. Moving both stragglers onto rank 0 *does*
+/// sum — same-rank excesses compound — and yields exactly 85 000 µs.
+#[test]
+fn rank_asymmetric_stragglers_match_hand_computed_slowest_rank_rule() {
+    let env = ClusterEnv::paper_testbed().with_links(vec![LinkSpec::new("w", 1.0).with_group(0)]);
+    let buckets = vec![bucket(0, Micros(50_000))];
+    let schedule = schedule_of(vec![op(0, LinkId(0), 0)]);
+    let opts = SimOptions {
+        iterations: 1,
+        warmup: 0,
+        record_timeline: true,
+    };
+    let healthy = simulate(&buckets, &schedule, &env, &opts);
+    assert_eq!(healthy.total, Micros(70_000));
+
+    let two_ranks = FaultSpec {
+        stragglers: vec![
+            Straggler {
+                from_iter: 0,
+                factor: 1.5,
+                rank: 0,
+            },
+            Straggler {
+                from_iter: 0,
+                factor: 1.25,
+                rank: 1,
+            },
+        ],
+        ..FaultSpec::default()
+    };
+    let indexed = simulate_faulted(&buckets, &schedule, &env, &opts, Some(&two_ranks));
+    assert_eq!(
+        indexed.total,
+        Micros(80_000),
+        "the window follows the slowest rank, not the rank sum"
+    );
+    assert_eq!(
+        indexed.fault_log,
+        vec![
+            FaultEvent::StragglerOnset {
+                iter: 0,
+                factor_ppm: 1_500_000,
+            },
+            FaultEvent::StragglerOnset {
+                iter: 0,
+                factor_ppm: 1_250_000,
+            },
+        ]
+    );
+    let scan = simulate_scan_faulted(&buckets, &schedule, &env, &opts, Some(&two_ranks));
+    assert_eq!(indexed, scan, "engines diverged on the straggler oracle");
+
+    let same_rank = FaultSpec {
+        stragglers: vec![
+            Straggler {
+                from_iter: 0,
+                factor: 1.5,
+                rank: 0,
+            },
+            Straggler {
+                from_iter: 0,
+                factor: 1.25,
+                rank: 0,
+            },
+        ],
+        ..FaultSpec::default()
+    };
+    let stacked = simulate_faulted(&buckets, &schedule, &env, &opts, Some(&same_rank));
+    assert_eq!(
+        stacked.total,
+        Micros(85_000),
+        "excesses on the same rank compound additively"
+    );
+    let scan = simulate_scan_faulted(&buckets, &schedule, &env, &opts, Some(&same_rank));
+    assert_eq!(stacked, scan);
+}
+
 /// A noop spec (no jitter, no faults, no drift band) must be exactly the
 /// unfaulted simulation — same events, same metrics, empty fault log.
 #[test]
@@ -217,6 +301,7 @@ fn tts_is_monotone_in_straggler_severity() {
             stragglers: vec![Straggler {
                 from_iter: 2,
                 factor,
+                rank: 0,
             }],
             ..FaultSpec::default()
         };
@@ -272,6 +357,7 @@ fn reconstructed_trace_replays_under_a_straggler() {
         stragglers: vec![Straggler {
             from_iter: 2,
             factor: 1.5,
+            rank: 0,
         }],
         ..FaultSpec::default()
     };

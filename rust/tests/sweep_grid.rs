@@ -1,0 +1,186 @@
+//! Integration pins for the batch sweep engine (`deft::sweep`).
+//!
+//! The contract under test, in order: a sweep answer is *exactly* the
+//! standalone run's answer (DeFT leg = `run_lifecycle`, baselines =
+//! partition → schedule → faulted simulation with the pinned iteration
+//! rule); parallel execution is bit-for-bit identical to serial, fault
+//! injection included; the JSONL schema round-trips real results; and
+//! the capacity planner answers a scripted query sequence
+//! deterministically, with observable cache hits.
+
+use deft::bench::{partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
+use deft::config::{ExperimentConfig, Scheme};
+use deft::sched::{run_lifecycle, FallbackReason, LifecycleOptions};
+use deft::sim::{simulate_faulted, SimOptions};
+use deft::sweep::{
+    parse_jsonl, run_cell, run_grid, summary_csv, to_jsonl, Planner, SweepCell, SweepGrid,
+};
+
+fn cell(workload: &str, faults: Option<&str>) -> SweepCell {
+    SweepCell {
+        workload: workload.to_string(),
+        preset: "paper-2link".to_string(),
+        ranks_per_node: 1,
+        codec: "raw".to_string(),
+        contention: "kway".to_string(),
+        faults: faults.map(str::to_string),
+        workers: 16,
+    }
+}
+
+/// A small all-`small`-workload grid so the parallel-equality and
+/// round-trip pins stay fast; `faults` axis per test.
+fn tiny_grid(faults: Vec<Option<String>>) -> SweepGrid {
+    let mut grid = SweepGrid::small();
+    grid.workloads = vec!["small".to_string()];
+    grid.presets = vec!["paper-2link".to_string()];
+    grid.faults = faults;
+    grid
+}
+
+#[test]
+fn sweep_answers_equal_standalone_runs_exactly() {
+    let c = cell("small", None);
+    let res = run_cell(&c).result.expect("healthy cell succeeds");
+    let env = c.env().expect("cell env builds");
+    let workload = workload_by_name("small").expect("workload");
+
+    // The DeFT leg is the real lifecycle — same schedule, same trial,
+    // same fallback reason as running the explorer on this cell.
+    let rep = run_lifecycle(&workload, &env, &LifecycleOptions::default()).expect("lifecycle");
+    let deft = res.schemes.iter().find(|s| s.scheme == "deft").expect("deft row");
+    assert_eq!(deft.status, "ok");
+    assert_eq!(deft.iter_us, rep.trial.steady_iter_time.as_us());
+    assert_eq!(deft.total_us, rep.trial.total.as_us());
+    assert_eq!(deft.events, rep.trial.events_processed);
+    let label = match rep.fallback {
+        FallbackReason::None => "none",
+        FallbackReason::CodecGateRejected { .. } => "codec-gate",
+        FallbackReason::LintRejected { .. } => "lint",
+        FallbackReason::DriftGateRejected { .. } => "drift-gate",
+    };
+    assert_eq!(deft.fallback, label);
+
+    // A baseline leg is partition → schedule → simulation under the
+    // sweep's pinned iteration rule, nothing more.
+    let buckets = partition_for(&workload, Scheme::PytorchDdp, &env, PAPER_PARTITION, PAPER_DDP_MB)
+        .expect("partition");
+    let schedule = scheduler_for(Scheme::PytorchDdp, true, &env).schedule(&buckets);
+    let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
+    let opts = SimOptions {
+        iterations: warmup * 3 + 12,
+        warmup,
+        record_timeline: false,
+    };
+    let sim = simulate_faulted(&buckets, &schedule, &env, &opts, None);
+    let ddp = res
+        .schemes
+        .iter()
+        .find(|s| s.scheme == "pytorch-ddp")
+        .expect("ddp row");
+    assert_eq!(ddp.iter_us, sim.steady_iter_time.as_us());
+    assert_eq!(ddp.total_us, sim.total.as_us());
+    assert_eq!(ddp.events, sim.events_processed);
+
+    // The winner is the first minimal-iteration scheme in
+    // `Scheme::ALL` order, and the headline fields are its fields.
+    let best = res
+        .schemes
+        .iter()
+        .filter(|s| s.status == "ok")
+        .min_by_key(|s| s.iter_us)
+        .expect("an ok scheme");
+    assert_eq!(res.winner, best.scheme);
+    assert_eq!(res.tts_us, best.total_us);
+    assert_eq!(res.iter_us, best.iter_us);
+    assert_eq!(res.coverage_ppm, best.coverage_ppm);
+    assert_eq!(res.fallback, best.fallback);
+}
+
+#[test]
+fn parallel_sweep_is_bit_for_bit_serial_including_faults() {
+    let grid = tiny_grid(vec![None, Some("mixed".to_string())]);
+    let cells = grid.cells();
+    assert_eq!(cells.len(), 8, "1 × 1 × {{1,8}} × {{raw,fp16}} × kway × {{none,mixed}}");
+    assert!(cells.iter().any(|c| c.faults.as_deref() == Some("mixed")));
+    let serial = run_grid(&grid, 1);
+    assert!(serial.iter().all(|o| o.result.is_ok()));
+    for threads in [2, 4] {
+        let parallel = run_grid(&grid, threads);
+        assert_eq!(
+            serial, parallel,
+            "{threads}-thread sweep must equal serial bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn jsonl_and_csv_round_trip_real_results() {
+    let mut grid = tiny_grid(vec![None, Some("straggler".to_string())]);
+    grid.ranks_per_node = vec![1];
+    grid.codecs = vec!["raw".to_string()];
+    let outcomes = run_grid(&grid, 2);
+    let text = to_jsonl(&outcomes);
+    assert_eq!(text.lines().count(), outcomes.len(), "one JSONL line per cell");
+    let back = parse_jsonl(&text).expect("real sweep output parses");
+    assert_eq!(back, outcomes, "parse(write(x)) == x on real sweep output");
+    let csv = summary_csv(&outcomes);
+    assert_eq!(csv.lines().count(), outcomes.len() + 1, "header + one row per cell");
+}
+
+#[test]
+fn planner_answers_a_scripted_sequence_deterministically() {
+    let script = [
+        r#"{"workload": "small"}"#,
+        r#"{"workload": "small", "faults": "mixed"}"#,
+        r#"{"workload": "small"}"#,
+        r#"{"workload": "warpnet"}"#,
+        r#"{"workload": "small", "faults": "mixed"}"#,
+    ];
+    let run_script = || {
+        let mut p = Planner::new();
+        let out: Vec<String> = script
+            .iter()
+            .map(|q| p.handle(q).expect("every line answers"))
+            .collect();
+        (out, p.hits(), p.misses())
+    };
+    let (a, hits_a, misses_a) = run_script();
+    let (b, hits_b, misses_b) = run_script();
+    assert_eq!(a, b, "two fresh planners answer the script byte-identically");
+    assert_eq!((hits_a, misses_a), (hits_b, misses_b));
+    // Repeats (queries 3 and 5) are cache hits — the second answer is
+    // demonstrably served from the memo table, not re-simulated — and
+    // even the unknown-workload cell is cached as an error outcome.
+    assert_eq!((hits_a, misses_a), (2, 3));
+    assert!(a[0].contains("\"cache\": \"miss\""));
+    assert!(a[2].contains("\"cache\": \"hit\""));
+    assert!(a[4].contains("\"cache\": \"hit\""));
+    let strip = |s: &str| s.split("\"answer\": ").nth(1).expect("answer payload").to_string();
+    assert_eq!(strip(&a[0]), strip(&a[2]), "hit repeats the miss's answer");
+    assert_eq!(strip(&a[1]), strip(&a[4]));
+    assert!(strip(&a[3]).contains("\"status\": \"error\""));
+}
+
+#[test]
+fn config_sweep_table_drives_the_grid() {
+    let cfg = ExperimentConfig::default();
+    let grid = SweepGrid::from_config(&cfg).expect("default [sweep] table builds");
+    assert_eq!(grid, SweepGrid::full(), "default table is the acceptance grid");
+    assert_eq!(grid.cells().len(), 96);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.sweep_workloads = "small".to_string();
+    cfg.sweep_presets = "paper-2link".to_string();
+    cfg.sweep_ranks_per_node = "1,8".to_string();
+    cfg.sweep_codecs = "raw".to_string();
+    cfg.sweep_contention = "pairwise,kway".to_string();
+    cfg.sweep_faults = "none,flap".to_string();
+    let grid = SweepGrid::from_config(&cfg).expect("custom table builds");
+    assert_eq!(grid.cells().len(), 8);
+    let outcomes = run_grid(&grid, 2);
+    assert!(
+        outcomes.iter().all(|o| o.result.is_ok()),
+        "a validated config grid runs without cell errors"
+    );
+}
