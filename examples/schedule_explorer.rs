@@ -7,6 +7,7 @@
 //!        [--links <preset>] [--ranks-per-node <n>] [--codec <link>=<codec>]
 //!        [--contention-model <pairwise|kway>]
 //!        [--faults <scenario>] [--fault-seed <n>] [--fault-log <path>]
+//!        [--replan]
 //!        [--lint [--lint-json <path>]]
 //!        [--sweep [--grid small|full] [--threads <n>] [--out <path>]
 //!                 [--csv <path>] [--faults <scenario>]]
@@ -24,6 +25,11 @@
 //!  degraded iteration time next to the healthy one; --fault-seed
 //!  overrides the scenario's jitter seed; --fault-log writes every
 //!  recorded fault event as a JSON line;
+//!  --replan closes the loop on drift: a rejected drift re-gate
+//!  re-solves the §III.D knapsacks against measured link capacities
+//!  instead of falling straight back to the raw plan (docs/replan.md) —
+//!  it switches the DeFT legs of --sweep, and adds a `deft+replan`
+//!  lifecycle row per faulted --lint cell;
 //!  --lint skips the timelines and instead runs the static verifier
 //!  (`deft::analysis`) over the full model-zoo × preset × topology ×
 //!  scheme grid, printing one status row per plan and exiting non-zero
@@ -75,6 +81,7 @@ fn parse_args() -> Args {
     let mut faults: Option<String> = None;
     let mut fault_seed: Option<u64> = None;
     let mut fault_log: Option<String> = None;
+    let mut replan = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         let looked_up = if a == "--lint" {
@@ -88,9 +95,12 @@ fn parse_args() -> Args {
                     fault_log = Some(v.to_string());
                 } else if rest == "--fault-log" {
                     fault_log = Some(args.next().expect("--fault-log needs a path"));
+                } else if rest == "--replan" {
+                    replan = true;
                 } else {
                     panic!(
-                        "--lint takes only --lint-json <path> / --fault-log <path>, got `{rest}`"
+                        "--lint takes only --lint-json <path> / --fault-log <path> / --replan, \
+                         got `{rest}`"
                     );
                 }
             }
@@ -99,6 +109,7 @@ fn parse_args() -> Args {
                 faults.as_deref(),
                 fault_seed,
                 fault_log.as_deref(),
+                replan,
             )
         } else if a == "--sweep" {
             let mut grid_name = "small".to_string();
@@ -129,10 +140,12 @@ fn parse_args() -> Args {
                     csv = Some(v.to_string());
                 } else if rest == "--csv" {
                     csv = Some(args.next().expect("--csv needs a path"));
+                } else if rest == "--replan" {
+                    replan = true;
                 } else {
                     panic!(
                         "--sweep takes only --grid small|full / --threads N / --out FILE / \
-                         --csv FILE / --faults NAME, got `{rest}`"
+                         --csv FILE / --faults NAME / --replan, got `{rest}`"
                     );
                 }
             }
@@ -142,6 +155,7 @@ fn parse_args() -> Args {
                 out.as_deref(),
                 csv.as_deref(),
                 sweep_faults.as_deref(),
+                replan,
             )
         } else if a == "--serve" {
             run_serve()
@@ -164,6 +178,9 @@ fn parse_args() -> Args {
             None
         } else if a == "--fault-log" {
             fault_log = Some(args.next().expect("--fault-log needs a path"));
+            None
+        } else if a == "--replan" {
+            replan = true;
             None
         } else if let Some(v) = a.strip_prefix("--links=") {
             Some(v.to_string())
@@ -259,13 +276,16 @@ fn parse_contention_arg(name: &str) -> ContentionModel {
 /// (`deft::sweep::run_grid`), print one winner row per cell, stream the
 /// full results as JSON lines / summary CSV, and exit non-zero iff any
 /// cell errored — the CI smoke step keys off the exit code. Parallel
-/// output is bit-for-bit identical to `--threads 1`.
+/// output is bit-for-bit identical to `--threads 1`. `--replan` lets
+/// every DeFT leg re-plan on a rejected drift re-gate instead of
+/// falling back raw (docs/replan.md).
 fn run_sweep(
     grid_name: &str,
     threads: usize,
     out: Option<&str>,
     csv: Option<&str>,
     faults: Option<&str>,
+    replan: bool,
 ) -> ! {
     use deft::sweep::{run_grid, summary_csv, to_jsonl, SweepGrid};
     let mut grid = match grid_name {
@@ -276,11 +296,13 @@ fn run_sweep(
     if let Some(name) = faults {
         grid.faults = vec![Some(name.to_string())];
     }
+    grid.replan = replan;
     let cells = grid.cells();
     eprintln!(
-        "sweep: {} cell(s) ({grid_name} grid{}) across {threads} thread(s)...",
+        "sweep: {} cell(s) ({grid_name} grid{}{}) across {threads} thread(s)...",
         cells.len(),
-        faults.map(|f| format!(", faults `{f}`")).unwrap_or_default()
+        faults.map(|f| format!(", faults `{f}`")).unwrap_or_default(),
+        if replan { ", replan on" } else { "" }
     );
     let outcomes = run_grid(&grid, threads);
     let mut errors = 0usize;
@@ -347,13 +369,20 @@ fn run_serve() -> ! {
 /// (b) runs a short faulted simulation of every cell on both engines,
 /// asserting bit-for-bit agreement; recorded fault events go to
 /// `--fault-log` as JSON lines tagged with their cell.
+///
+/// `--replan` (with `--faults`) adds one `deft+replan` row per grid
+/// cell: the full DeFT lifecycle with measured-drift re-planning on,
+/// whose accepted schedule must itself lint clean — the CI fault grid
+/// keys off that row staying error-free.
 fn run_lint_grid(
     lint_json: Option<&str>,
     fault_scenario: Option<&str>,
     fault_seed: Option<u64>,
     fault_log: Option<&str>,
+    replan: bool,
 ) -> ! {
     use deft::analysis::{lint_plan, LintOptions};
+    use deft::sched::{run_lifecycle, FallbackReason, LifecycleOptions, ReplanOptions};
     use std::fmt::Write as _;
 
     // The lint grid reads its cells from the sweep definition, so the
@@ -457,6 +486,60 @@ fn run_lint_grid(
                                 e.to_json()
                             )
                             .expect("string write");
+                        }
+                    }
+                }
+                // The closed-loop row: a full DeFT lifecycle with
+                // measured-drift re-planning, whose accepted schedule
+                // must itself lint clean.
+                if let (true, Some(spec)) = (replan, &spec) {
+                    let opts = LifecycleOptions {
+                        faults: Some(spec.clone()),
+                        replan: ReplanOptions {
+                            enabled: true,
+                            ..ReplanOptions::default()
+                        },
+                        ..LifecycleOptions::default()
+                    };
+                    match run_lifecycle(&workload, &env, &opts) {
+                        Ok(rep) => {
+                            plans += 1;
+                            errors += rep.lint.error_count();
+                            warnings += rep.lint.warning_count();
+                            let label = match rep.fallback {
+                                FallbackReason::None => "none",
+                                FallbackReason::CodecGateRejected { .. } => "codec-gate",
+                                FallbackReason::LintRejected { .. } => "lint",
+                                FallbackReason::DriftGateRejected { .. } => "drift-gate",
+                                FallbackReason::Replanned { .. } => "replanned",
+                            };
+                            println!(
+                                "{:4} {wname:10} {:12} {topo:5} {:18} {} error(s), {} warning(s), fallback {label}",
+                                if rep.lint.is_clean() { "ok" } else { "FAIL" },
+                                preset.name(),
+                                "deft+replan",
+                                rep.lint.error_count(),
+                                rep.lint.warning_count()
+                            );
+                            faulted_cells += 1;
+                            fault_events += rep.trial.fault_log.len();
+                            for e in &rep.trial.fault_log {
+                                writeln!(
+                                    fault_jsonl,
+                                    "{{\"workload\":\"{wname}\",\"preset\":\"{}\",\"topology\":\"{topo}\",\"scheme\":\"deft+replan\",\"fault\":{}}}",
+                                    preset.name(),
+                                    e.to_json()
+                                )
+                                .expect("string write");
+                            }
+                        }
+                        Err(e) => {
+                            skipped += 1;
+                            println!(
+                                "skip {wname:10} {:12} {topo:5} {:18} lifecycle: {e:#}",
+                                preset.name(),
+                                "deft+replan"
+                            );
                         }
                     }
                 }

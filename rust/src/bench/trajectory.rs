@@ -49,6 +49,11 @@ pub struct Scenario {
     /// `Some(scenario)` = run both engines under this named fault
     /// scenario ([`FaultSpec::preset`]); `None` = healthy cluster.
     pub faults: Option<&'static str>,
+    /// Time the lifecycle's measured-drift re-planned schedule instead
+    /// of the plain solver output (requires `faults`; DeFT scheme only —
+    /// see [`crate::sched::replan`]). The timed engines are unchanged;
+    /// only the schedule they replay comes from the closed loop.
+    pub replan: bool,
 }
 
 impl Scenario {
@@ -76,6 +81,7 @@ impl Scenario {
             scheme,
             iterations: 120,
             faults: None,
+            replan: false,
         }
     }
 
@@ -86,6 +92,18 @@ impl Scenario {
         self.name.push_str("+faults-");
         self.name.push_str(scenario);
         self.faults = Some(scenario);
+        self
+    }
+
+    /// Pin a named fault scenario *and* measured-drift re-planning: the
+    /// timed schedule is the one the closed lifecycle loop accepted
+    /// after re-solving against measured capacities. Its own name
+    /// suffix keeps re-planned rows distinct from plain faulted ones.
+    fn with_replan(mut self, scenario: &'static str) -> Scenario {
+        self.name.push_str("+replan-");
+        self.name.push_str(scenario);
+        self.faults = Some(scenario);
+        self.replan = true;
         self
     }
 
@@ -121,7 +139,8 @@ fn grid_envs() -> [(LinkPreset, Option<usize>, usize); 4] {
 
 /// Full pinned grid: gpt2/vgg19/llama2 × the four cluster shapes × all
 /// four schemes (48 scenarios, 96 points), plus one faulted row that
-/// keeps the fault-injection hot path on the perf trajectory.
+/// keeps the fault-injection hot path on the perf trajectory and one
+/// re-planned row that keeps the closed drift loop on it.
 pub fn full_scenarios() -> Vec<Scenario> {
     let mut v = Vec::new();
     for workload in ["gpt2", "vgg19", "llama2"] {
@@ -134,6 +153,10 @@ pub fn full_scenarios() -> Vec<Scenario> {
     v.push(
         Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp)
             .with_faults("mixed"),
+    );
+    v.push(
+        Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::Deft)
+            .with_replan("mixed"),
     );
     v
 }
@@ -155,6 +178,11 @@ pub fn smoke_scenarios() -> Vec<Scenario> {
         ),
         Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::PytorchDdp)
             .with_faults("mixed"),
+        // The closed loop's accepted schedule must stay on the perf
+        // trajectory too: profile → solve → drift re-gate → re-plan,
+        // then both engines replay the re-planned plan under faults.
+        Scenario::new("gpt2", LinkPreset::Paper2Link, None, 16, Scheme::Deft)
+            .with_replan("mixed"),
     ]
 }
 
@@ -189,9 +217,30 @@ pub struct Point {
 pub fn run_scenario(s: &Scenario, reps: usize) -> Result<Vec<Point>> {
     let w = workload_by_name(s.workload)?;
     let env = s.env();
-    let buckets = partition_for(&w, s.scheme, &env, PAPER_PARTITION, PAPER_DDP_MB)?;
-    let scheduler = scheduler_for(s.scheme, true, &env);
-    let schedule = scheduler.schedule(&buckets);
+    // Faulted scenarios resolve their named preset once; healthy rows
+    // pass `None`, which is exactly the pre-fault simulate() path.
+    let spec = s
+        .faults
+        .map(|n| FaultSpec::preset(n, s.workers).expect("pinned scenario names a known preset"));
+    let (buckets, schedule) = if s.replan {
+        // Re-planned rows time the engines on the schedule the closed
+        // lifecycle loop accepted (profile → solve → drift re-gate →
+        // measured-capacity re-solve), paired with its own profile.
+        let opts = crate::sched::LifecycleOptions {
+            faults: spec.clone(),
+            replan: crate::sched::ReplanOptions {
+                enabled: true,
+                ..crate::sched::ReplanOptions::default()
+            },
+            ..crate::sched::LifecycleOptions::default()
+        };
+        let rep = crate::sched::run_lifecycle(&w, &env, &opts)?;
+        (rep.profile, rep.schedule)
+    } else {
+        let buckets = partition_for(&w, s.scheme, &env, PAPER_PARTITION, PAPER_DDP_MB)?;
+        let schedule = scheduler_for(s.scheme, true, &env).schedule(&buckets);
+        (buckets, schedule)
+    };
     let warmup = schedule.warmup_iters + schedule.cycle.len() + 2;
     let iterations = s.iterations.max(warmup * 3 + 4);
     // "Before" = the scan engine in the configuration every bench paid
@@ -208,11 +257,6 @@ pub fn run_scenario(s: &Scenario, reps: usize) -> Result<Vec<Point>> {
         record_timeline: false,
     };
 
-    // Faulted scenarios resolve their named preset once; healthy rows
-    // pass `None`, which is exactly the pre-fault simulate() path.
-    let spec = s
-        .faults
-        .map(|n| FaultSpec::preset(n, s.workers).expect("pinned scenario names a known preset"));
     let spec = spec.as_ref();
 
     // Insurance on every trajectory run: the engines must agree
@@ -602,6 +646,11 @@ mod tests {
                 pts.iter()
                     .any(|p| p.engine == engine && p.scenario.ends_with("+faults-mixed")),
                 "committed file must carry a `{engine}` faulted row"
+            );
+            assert!(
+                pts.iter()
+                    .any(|p| p.engine == engine && p.scenario.ends_with("+replan-mixed")),
+                "committed file must carry a `{engine}` re-planned row"
             );
             assert!(
                 pts.iter().any(|p| p.engine == engine && p.scenario == SWEEP_SCENARIO),

@@ -157,6 +157,10 @@ pub struct ExperimentConfig {
     /// `[faults] drift_band`: drift-monitor band override (< 0 = keep
     /// the scenario's value; 0 disables the monitor).
     pub faults_drift_band: f64,
+    /// `[faults] drift_low_side`: also raise band-symmetric low-side
+    /// drift alarms ([`FaultSpec::drift_low_side`]) — the re-planner's
+    /// over-conservative-plan signal. Off by default.
+    pub faults_drift_low_side: bool,
     /// `[faults] straggler_factor`: extra persistent straggler stretch
     /// (≤ 0 = none).
     pub faults_straggler_factor: f64,
@@ -199,6 +203,17 @@ pub struct ExperimentConfig {
     /// `[sweep] threads`: worker threads of the sweep pool (1 = serial;
     /// results are bit-for-bit identical either way).
     pub sweep_threads: usize,
+    /// `[replan] enabled`: on a rejected drift re-gate, re-solve the
+    /// §III.D knapsacks against measured link capacities before falling
+    /// back to the raw plan (see docs/replan.md).
+    pub replan_enabled: bool,
+    /// `[replan] min_excess_ppm`: only re-plan when the compounded
+    /// drift error is at least this many ppm (0 = re-plan on every
+    /// rejected re-gate).
+    pub replan_min_excess_ppm: u64,
+    /// `[replan] max_retries`: capacity-feedback retries of the re-plan
+    /// loop (the same ×1.15 feedback the Preserver uses).
+    pub replan_max_retries: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +243,7 @@ impl Default for ExperimentConfig {
             faults_seed: -1,
             faults_jitter_pct: -1.0,
             faults_drift_band: -1.0,
+            faults_drift_low_side: false,
             faults_straggler_factor: 0.0,
             faults_straggler_from_iter: 2,
             faults_straggler_rank: 0,
@@ -243,6 +259,9 @@ impl Default for ExperimentConfig {
             sweep_contention: "pairwise,kway".into(),
             sweep_faults: "none".into(),
             sweep_threads: 4,
+            replan_enabled: false,
+            replan_min_excess_ppm: 0,
+            replan_max_retries: crate::preserver::MAX_RETRIES,
         }
     }
 }
@@ -606,6 +625,9 @@ impl ExperimentConfig {
         if self.faults_drift_band >= 0.0 {
             spec.drift_band = self.faults_drift_band;
         }
+        if self.faults_drift_low_side {
+            spec.drift_low_side = true;
+        }
         if self.faults_straggler_factor > 0.0 {
             spec.stragglers.push(Straggler {
                 from_iter: self.faults_straggler_from_iter,
@@ -642,6 +664,17 @@ impl ExperimentConfig {
         }
         spec.validate(env)?;
         Ok(Some(spec))
+    }
+
+    /// The re-planner knobs the `[replan]` table describes (see
+    /// docs/replan.md): measured-drift adaptive re-planning on a
+    /// rejected drift re-gate.
+    pub fn replan_options(&self) -> crate::sched::ReplanOptions {
+        crate::sched::ReplanOptions {
+            enabled: self.replan_enabled,
+            min_excess_ppm: self.replan_min_excess_ppm,
+            max_retries: self.replan_max_retries,
+        }
     }
 
     /// The partition strategy this config's scheme uses.
@@ -714,6 +747,9 @@ impl ExperimentConfig {
             "faults.drift_band" | "faults_drift_band" => {
                 self.faults_drift_band = value.as_float()?
             }
+            "faults.drift_low_side" | "faults_drift_low_side" => {
+                self.faults_drift_low_side = value.as_bool()?
+            }
             "faults.straggler_factor" | "faults_straggler_factor" => {
                 self.faults_straggler_factor = value.as_float()?
             }
@@ -751,6 +787,13 @@ impl ExperimentConfig {
             }
             "sweep.faults" | "sweep_faults" => self.sweep_faults = value.as_str()?.to_string(),
             "sweep.threads" | "sweep_threads" => self.sweep_threads = value.as_int()? as usize,
+            "replan.enabled" | "replan_enabled" => self.replan_enabled = value.as_bool()?,
+            "replan.min_excess_ppm" | "replan_min_excess_ppm" => {
+                self.replan_min_excess_ppm = value.as_int()? as u64
+            }
+            "replan.max_retries" | "replan_max_retries" => {
+                self.replan_max_retries = value.as_int()? as usize
+            }
             other => {
                 // `[[links]]` blocks flatten to `links.<index>.<field>`.
                 if let Some(rest) = other.strip_prefix("links.") {
@@ -917,6 +960,33 @@ elastic_at_iter = 4
         assert!(ExperimentConfig::from_toml("[sweep]\nfaults = \"meteor\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[sweep]\nthreads = 0\n").is_err());
         assert!(ExperimentConfig::from_toml("[sweep]\nworkloads = \",\"\n").is_err());
+    }
+
+    #[test]
+    fn replan_table_round_trips() {
+        // Defaults: the loop is closed only on request, and the config
+        // builder mirrors ReplanOptions::default() exactly.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.replan_options(), crate::sched::ReplanOptions::default());
+        assert!(!d.faults_drift_low_side);
+
+        let cfg = ExperimentConfig::from_toml(
+            "[replan]\nenabled = true\nmin_excess_ppm = 50000\nmax_retries = 4\n\n\
+             [faults]\ndrift_band = 0.25\ndrift_low_side = true\n",
+        )
+        .unwrap();
+        let opts = cfg.replan_options();
+        assert!(opts.enabled);
+        assert_eq!(opts.min_excess_ppm, 50_000);
+        assert_eq!(opts.max_retries, 4);
+        let spec = cfg.fault_spec(&cfg.env()).unwrap().expect("monitor on");
+        assert!(spec.drift_low_side);
+        assert!((spec.drift_band - 0.25).abs() < 1e-12);
+        // Low-side alarms are strictly opt-in: the table key is the only
+        // way to flip them on.
+        let cfg = ExperimentConfig::from_toml("[faults]\ndrift_band = 0.25\n").unwrap();
+        let spec = cfg.fault_spec(&cfg.env()).unwrap().expect("monitor on");
+        assert!(!spec.drift_low_side);
     }
 
     #[test]

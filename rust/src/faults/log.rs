@@ -49,6 +49,20 @@ pub enum FaultEvent {
         planned: Micros,
         excess_ppm: u64,
     },
+    /// Measured per-link busy of `iter` fell below the planned busy by
+    /// more than the configured drift band — the plan was
+    /// over-conservative on this link. Only raised when the spec opts
+    /// into low-side monitoring
+    /// ([`FaultSpec::drift_low_side`](crate::faults::FaultSpec)); it
+    /// feeds the re-planner's capacity tightening, never the
+    /// convergence gate.
+    DriftAlarmLow {
+        iter: usize,
+        link: LinkId,
+        measured: Micros,
+        planned: Micros,
+        deficit_ppm: u64,
+    },
     /// The lifecycle re-ran the Preserver gate against the drifted
     /// topology (error = codec error compounded with measured drift).
     GateDecision {
@@ -66,6 +80,7 @@ impl FaultEvent {
             FaultEvent::LinkFlap { .. } => "link_flap",
             FaultEvent::Membership { .. } => "membership",
             FaultEvent::DriftAlarm { .. } => "drift_alarm",
+            FaultEvent::DriftAlarmLow { .. } => "drift_alarm_low",
             FaultEvent::GateDecision { .. } => "gate_decision",
         }
     }
@@ -99,6 +114,19 @@ impl FaultEvent {
             } => format!(
                 "{{\"event\":\"drift_alarm\",\"iter\":{iter},\"link\":{},\"measured_us\":{},\
                  \"planned_us\":{},\"excess_ppm\":{excess_ppm}}}",
+                link.index(),
+                measured.as_us(),
+                planned.as_us()
+            ),
+            FaultEvent::DriftAlarmLow {
+                iter,
+                link,
+                measured,
+                planned,
+                deficit_ppm,
+            } => format!(
+                "{{\"event\":\"drift_alarm_low\",\"iter\":{iter},\"link\":{},\"measured_us\":{},\
+                 \"planned_us\":{},\"deficit_ppm\":{deficit_ppm}}}",
                 link.index(),
                 measured.as_us(),
                 planned.as_us()
@@ -137,6 +165,19 @@ mod tests {
             accepted: false,
         };
         assert!(g.to_json().contains("\"accepted\":false"));
+        let lo = FaultEvent::DriftAlarmLow {
+            iter: 6,
+            link: LinkId(0),
+            measured: Micros(500),
+            planned: Micros(1_000),
+            deficit_ppm: 500_000,
+        };
+        assert_eq!(
+            lo.to_json(),
+            "{\"event\":\"drift_alarm_low\",\"iter\":6,\"link\":0,\"measured_us\":500,\
+             \"planned_us\":1000,\"deficit_ppm\":500000}"
+        );
+        assert_eq!(lo.kind(), "drift_alarm_low");
     }
 
     #[test]

@@ -90,6 +90,13 @@ pub struct FaultSpec {
     /// per-link busy exceeds `planned × (1 + drift_band)` raises a
     /// [`FaultEvent::DriftAlarm`]. 0 disables monitoring.
     pub drift_band: f64,
+    /// Also raise band-symmetric low-side alarms
+    /// ([`FaultEvent::DriftAlarmLow`]) when measured busy falls under
+    /// `planned × (1 − drift_band)` — the re-planner's
+    /// over-conservative-plan signal. Off by default: the classic
+    /// monitor is strictly one-sided, and every existing pin stays
+    /// byte-identical.
+    pub drift_low_side: bool,
 }
 
 impl Default for FaultSpec {
@@ -101,6 +108,7 @@ impl Default for FaultSpec {
             flaps: Vec::new(),
             membership: Vec::new(),
             drift_band: 0.0,
+            drift_low_side: false,
         }
     }
 }

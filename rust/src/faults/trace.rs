@@ -51,6 +51,10 @@ pub struct FaultTrace {
     pub planned_cycle_busy: Vec<Micros>,
     /// Drift band in parts-per-million; 0 disables the monitor.
     pub drift_band_ppm: u64,
+    /// Raise band-symmetric low-side alarms too (measured busy under
+    /// `planned × (1 − band)`). Off by default for back-compat: the
+    /// classic monitor is strictly one-sided.
+    pub drift_low_side: bool,
     /// The scheduled fault events, pre-formatted for the fault log.
     pub scheduled: Vec<FaultEvent>,
 }
@@ -182,6 +186,7 @@ impl FaultTrace {
             wire_scale,
             planned_cycle_busy,
             drift_band_ppm: to_ppm(spec.drift_band),
+            drift_low_side: spec.drift_low_side,
             scheduled,
         }
     }
@@ -209,8 +214,12 @@ impl FaultTrace {
     /// Compare iteration `iter`'s measured per-link busy against the
     /// planned busy of its cycle slot (rescaled for declared
     /// membership), appending a [`FaultEvent::DriftAlarm`] per link
-    /// whose measured busy exceeds `planned × (1 + band)`. One-sided:
-    /// running *faster* than planned is never drift. Integer
+    /// whose measured busy exceeds `planned × (1 + band)`. One-sided by
+    /// default: running *faster* than planned is never drift — unless
+    /// [`FaultTrace::drift_low_side`] opts into the band-symmetric
+    /// check, which appends a [`FaultEvent::DriftAlarmLow`] per link
+    /// whose measured busy falls under `planned × (1 − band)` (the
+    /// re-planner's signal that the plan is over-conservative). Integer
     /// arithmetic throughout so both engines log identical alarms.
     pub fn drift_check(&self, iter: usize, measured: &[Micros], log: &mut Vec<FaultEvent>) {
         if self.drift_band_ppm == 0 {
@@ -242,6 +251,23 @@ impl FaultTrace {
                     planned,
                     excess_ppm,
                 });
+            } else if self.drift_low_side && !planned.is_zero() {
+                // Band-symmetric low side (strict, like the high side):
+                // measured × 1e6 < planned × (1e6 − band). A band ≥ 1
+                // makes the floor zero and the check vacuous.
+                let floor = planned.as_us() as u128
+                    * 1_000_000u128.saturating_sub(self.drift_band_ppm as u128);
+                if lhs < floor {
+                    let ratio_ppm = m.as_us() as u128 * 1_000_000 / planned.as_us() as u128;
+                    let deficit_ppm = (1_000_000u128 - ratio_ppm.min(1_000_000)) as u64;
+                    log.push(FaultEvent::DriftAlarmLow {
+                        iter,
+                        link: LinkId(k),
+                        measured: m,
+                        planned,
+                        deficit_ppm,
+                    });
+                }
             }
         }
     }
@@ -437,5 +463,58 @@ mod tests {
             }
             _ => panic!("expected a drift alarm"),
         }
+    }
+
+    #[test]
+    fn low_side_alarms_are_opt_in_and_band_symmetric() {
+        let env = ClusterEnv::paper_testbed();
+        let buckets = vec![bucket(0, 1_000, 2_000, 5_000)];
+        let schedule = tiny_schedule(1);
+        let spec = FaultSpec {
+            drift_band: 0.25,
+            drift_low_side: true,
+            ..FaultSpec::default()
+        };
+        let tr = FaultTrace::materialize(&spec, 4, &buckets, &schedule, &env);
+        let planned = tr.planned_cycle_busy[0];
+        assert!(!planned.is_zero());
+        let n = tr.n_links();
+        let mut log = Vec::new();
+        // Inside the band (just above the 0.75 floor): no alarm.
+        let mut measured = vec![Micros::ZERO; n];
+        measured[0] = planned.scale(0.75) + Micros(1);
+        tr.drift_check(0, &measured, &mut log);
+        // Faster than planned but within the band: still no alarm.
+        measured[0] = planned.scale(0.9);
+        tr.drift_check(1, &measured, &mut log);
+        assert!(log.is_empty());
+        // Under the floor: one low-side alarm with the right deficit.
+        measured[0] = planned.scale(0.5);
+        tr.drift_check(2, &measured, &mut log);
+        assert_eq!(log.len(), 1);
+        match log[0] {
+            FaultEvent::DriftAlarmLow {
+                iter,
+                link,
+                deficit_ppm,
+                ..
+            } => {
+                assert_eq!(iter, 2);
+                assert_eq!(link, LinkId::REFERENCE);
+                assert!(deficit_ppm >= 500_000 - 2_000 && deficit_ppm <= 500_000 + 2_000);
+            }
+            _ => panic!("expected a low-side drift alarm"),
+        }
+        // The same measurements under the default (one-sided) spec log
+        // nothing at all — back-compat is field-gated.
+        let one_sided = FaultSpec {
+            drift_band: 0.25,
+            ..FaultSpec::default()
+        };
+        let tr = FaultTrace::materialize(&one_sided, 4, &buckets, &schedule, &env);
+        let mut log = Vec::new();
+        measured[0] = planned.scale(0.5);
+        tr.drift_check(2, &measured, &mut log);
+        assert!(log.is_empty());
     }
 }

@@ -27,6 +27,7 @@ use crate::links::ClusterEnv;
 use crate::models::{BucketProfile, Workload};
 use crate::preserver::{self, WalkParams};
 use crate::profiler::{generate_trace, reconstruct, TraceOptions};
+use crate::sched::replan::{self, MeasuredEnv, ReplanOptions, ReplanRequest};
 use crate::sched::{Deft, DeftOptions, Schedule, Scheduler};
 use crate::sim::{simulate_faulted, SimOptions, SimResult};
 use crate::util::error::Result;
@@ -59,17 +60,34 @@ pub enum FallbackReason {
     /// and drift errors composed — rejected the schedule under the
     /// degraded topology. The raw/fallback plan replaces it.
     DriftGateRejected {
-        /// Iteration of the worst drift alarm that drove the re-gate.
+        /// Iteration of the worst compounded drift error that drove the
+        /// re-gate.
         alarm_iter: usize,
         /// Composed gradient error fed to the re-gate walk, in ppm.
         error_ppm: u64,
         /// The rejected re-gate walk's final-expectation ratio.
         ratio: f64,
     },
+    /// Like [`FallbackReason::DriftGateRejected`], but instead of the
+    /// raw replay the lifecycle re-solved the §III.D knapsacks against
+    /// the capacities the trial actually measured
+    /// ([`crate::sched::replan`]) and that re-plan passed both the
+    /// Preserver walk and the static verifier.
+    Replanned {
+        /// Iteration of the worst compounded drift error that drove the
+        /// re-gate.
+        alarm_iter: usize,
+        /// Composed gradient error of the *rejected* re-gate walk, ppm.
+        error_ppm: u64,
+        /// The accepting re-plan walk's final-expectation ratio.
+        ratio: f64,
+    },
 }
 
 impl FallbackReason {
-    /// True when the accepted schedule is the raw-registry replay.
+    /// True when the accepted schedule is not the first-choice plan —
+    /// the raw-registry replay, or (for
+    /// [`FallbackReason::Replanned`]) the measured-capacity re-solve.
     pub fn is_fallback(&self) -> bool {
         *self != FallbackReason::None
     }
@@ -137,6 +155,10 @@ pub struct LifecycleOptions {
     /// the drift error composed into the walk (see
     /// [`FallbackReason::DriftGateRejected`]). `None` = healthy trial.
     pub faults: Option<FaultSpec>,
+    /// Measured-drift re-planning knobs (the `[replan]` TOML table).
+    /// Disabled by default: a drift-gate rejection then degrades to the
+    /// raw replay exactly as before.
+    pub replan: ReplanOptions,
 }
 
 impl Default for LifecycleOptions {
@@ -153,6 +175,7 @@ impl Default for LifecycleOptions {
                 ..DeftOptions::default()
             },
             faults: None,
+            replan: ReplanOptions::default(),
         }
     }
 }
@@ -340,27 +363,22 @@ pub fn run_lifecycle(
     // If the trial's drift monitor tripped (measured per-link busy left
     // the declared band), the planned schedule's staleness/convergence
     // reasoning no longer holds as priced: re-run the Preserver walk
-    // with the drift excess composed into the gradient error. Rejection
-    // degrades to the raw replay — exactly like the codec gate — rather
-    // than silently executing a now-unsafe schedule. Every decision is
-    // recorded on the trial's `fault_log`.
-    let worst_alarm = trial
-        .fault_log
-        .iter()
-        .filter_map(|e| match e {
-            FaultEvent::DriftAlarm {
-                iter, excess_ppm, ..
-            } => Some((*excess_ppm, *iter)),
-            _ => None,
-        })
-        .max();
-    if let Some((excess_ppm, alarm_iter)) = worst_alarm {
+    // with the drift excess composed into the gradient error.
+    // Simultaneous drift on several links in one iteration compounds
+    // through `combined_error`, like independent codec errors — taking
+    // only the worst single alarm under-counts multi-link drift. On
+    // rejection the lifecycle first tries to *re-plan* against the
+    // measured capacities (when [`ReplanOptions::enabled`]); only when
+    // that is off or fails does it degrade to the raw replay — rather
+    // than silently executing a now-unsafe schedule. Exactly one
+    // [`FaultEvent::GateDecision`] is recorded on the returned trial's
+    // `fault_log` either way.
+    if let Some((alarm_iter, drift_err)) = replan::compounded_drift_error(&trial.fault_log) {
         let codec_err = if codec_fallback {
             0.0
         } else {
             schedule.worst_codec_error(&codec_errors)
         };
-        let drift_err = (excess_ppm as f64 / 1e6).min(0.95);
         let combined = preserver::combined_error(codec_err, drift_err);
         let regate = preserver::quantify_with_error(
             &opts.walk,
@@ -368,37 +386,88 @@ pub fn run_lifecycle(
             &schedule.batch_multipliers,
             combined,
         );
-        let accepted_by_gate = preserver::acceptable(&regate, opts.epsilon);
-        if !accepted_by_gate {
-            fallback = FallbackReason::DriftGateRejected {
-                alarm_iter,
+        if preserver::acceptable(&regate, opts.epsilon) {
+            trial.fault_log.push(FaultEvent::GateDecision {
+                iter: alarm_iter,
                 error_ppm: to_ppm(combined),
-                ratio: regate.ratio,
-            };
-            if !codec_fallback && env.has_lossy_codec() {
-                // Degrade to the raw replay and re-trial it under the
-                // same fault scenario (its own drift alarms, if any,
-                // land on the fresh fault log).
-                codec_fallback = true;
-                trial_env = &raw_env;
-                schedule = resolve_raw(scale);
-                lint = lint_gate(&schedule, &profile, trial_env, &precision_lint)?;
-                trial = simulate_faulted(
-                    &profile,
-                    &schedule,
-                    trial_env,
-                    &sim_opts(&schedule),
-                    opts.faults.as_ref(),
-                );
+                accepted: true,
+            });
+        } else {
+            let mut replanned = false;
+            if opts.replan.enabled && to_ppm(drift_err) >= opts.replan.min_excess_ppm {
+                if let Some(measured) = MeasuredEnv::from_trial(&trial) {
+                    let req = ReplanRequest {
+                        profile: &profile,
+                        env: trial_env,
+                        measured: &measured,
+                        scale,
+                        deft: &opts.deft,
+                        walk: &opts.walk,
+                        base_batch: opts.base_batch,
+                        epsilon: opts.epsilon,
+                        lint: &precision_lint,
+                        max_retries: opts.replan.max_retries,
+                    };
+                    if let Some(out) = replan::replan(&req) {
+                        fallback = FallbackReason::Replanned {
+                            alarm_iter,
+                            error_ppm: to_ppm(combined),
+                            ratio: out.ratio,
+                        };
+                        attempts.extend(out.attempts.iter().copied());
+                        schedule = out.schedule;
+                        lint = out.lint;
+                        // Re-trial the re-plan under the same seeded
+                        // scenario. Its residual alarms stay visible on
+                        // the fresh log; the gate decision records the
+                        // re-plan's accepting Preserver verdict.
+                        trial = simulate_faulted(
+                            &profile,
+                            &schedule,
+                            trial_env,
+                            &sim_opts(&schedule),
+                            opts.faults.as_ref(),
+                        );
+                        trial.fault_log.push(FaultEvent::GateDecision {
+                            iter: alarm_iter,
+                            error_ppm: to_ppm(out.error),
+                            accepted: true,
+                        });
+                        replanned = true;
+                    }
+                }
             }
-            // Else: already on the raw plan — nothing safer to degrade
-            // to; the recorded rejection flags the envelope breach.
+            if !replanned {
+                fallback = FallbackReason::DriftGateRejected {
+                    alarm_iter,
+                    error_ppm: to_ppm(combined),
+                    ratio: regate.ratio,
+                };
+                if !codec_fallback && env.has_lossy_codec() {
+                    // Degrade to the raw replay and re-trial it under
+                    // the same fault scenario (its own drift alarms, if
+                    // any, land on the fresh fault log).
+                    codec_fallback = true;
+                    trial_env = &raw_env;
+                    schedule = resolve_raw(scale);
+                    lint = lint_gate(&schedule, &profile, trial_env, &precision_lint)?;
+                    trial = simulate_faulted(
+                        &profile,
+                        &schedule,
+                        trial_env,
+                        &sim_opts(&schedule),
+                        opts.faults.as_ref(),
+                    );
+                }
+                // Else: already on the raw plan — nothing safer to
+                // degrade to; the recorded rejection flags the breach.
+                trial.fault_log.push(FaultEvent::GateDecision {
+                    iter: alarm_iter,
+                    error_ppm: to_ppm(combined),
+                    accepted: false,
+                });
+            }
         }
-        trial.fault_log.push(FaultEvent::GateDecision {
-            iter: alarm_iter,
-            error_ppm: to_ppm(combined),
-            accepted: accepted_by_gate,
-        });
     }
 
     Ok(LifecycleReport {

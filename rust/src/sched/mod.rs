@@ -18,6 +18,7 @@ mod bytescheduler;
 mod deft;
 pub mod lifecycle;
 mod plan;
+pub mod replan;
 mod usbyte;
 mod wfbp;
 
@@ -26,6 +27,7 @@ pub(crate) use deft::cap_loss;
 pub use deft::{Deft, DeftOptions};
 pub use lifecycle::{lint_gate, run_lifecycle, FallbackReason, LifecycleOptions, LifecycleReport};
 pub use plan::{CommOp, FwdDependency, IterPlan, Schedule, Stage};
+pub use replan::{MeasuredEnv, ReplanOptions};
 pub use usbyte::UsByte;
 pub use wfbp::Wfbp;
 

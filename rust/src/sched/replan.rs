@@ -1,0 +1,383 @@
+//! Measured-drift adaptive re-planning — the control loop that closes
+//! the drift monitor (paper §V: the scheduling strategy adjusts at
+//! runtime because convergence loss is quantified, not assumed).
+//!
+//! The trial simulation's drift monitor compares measured per-link busy
+//! against the plan's priced busy every iteration and raises
+//! [`FaultEvent::DriftAlarm`] (and, when low-side monitoring is on,
+//! [`FaultEvent::DriftAlarmLow`]) events carrying integer-µs
+//! measured/planned pairs. This module harvests those alarms into a
+//! [`MeasuredEnv`] — per-link measured/planned ratios in ppm — and
+//! re-solves the §III.D knapsacks against the *measured* capacities
+//! (`planning_mu × ratio`), instead of abandoning the adaptive plan for
+//! the raw replay. The re-planned schedule must pass the same Preserver
+//! walk and the same `DEFT-E…` static verifier as any first-choice plan
+//! before the lifecycle adopts it.
+//!
+//! Everything here is deterministic: the inputs are integer-µs alarm
+//! events from seeded fault traces, the solver is deterministic, and no
+//! wall clock is consulted — so the engine-equivalence and sweep
+//! serial-vs-parallel bit-for-bit suites extend to re-planned runs
+//! unchanged.
+
+use crate::analysis::{lint_plan, LintOptions, LintReport};
+use crate::faults::FaultEvent;
+use crate::links::ClusterEnv;
+use crate::models::BucketProfile;
+use crate::preserver::{self, WalkParams};
+use crate::sched::{Deft, DeftOptions, Schedule, Scheduler};
+use crate::sim::SimResult;
+
+/// Ratio cap (ppm) for a single measured link: a drift alarm against a
+/// zero-planned link saturates its excess, and an unbounded ratio would
+/// ask the knapsack for a capacity of effectively zero. 20× is already
+/// far beyond any modeled degradation (the worst preset flap is 4×).
+const MAX_RATIO_PPM: u64 = 20_000_000;
+
+/// ppm identity: measured == planned.
+const UNIT_PPM: u64 = 1_000_000;
+
+/// Knobs for the lifecycle's re-plan step (the `[replan]` TOML table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplanOptions {
+    /// Master switch. Off by default: the drift gate then behaves
+    /// exactly as before (reject ⇒ raw fallback), which keeps every
+    /// pre-existing pin byte-identical.
+    pub enabled: bool,
+    /// Minimum compounded drift error (ppm) before a re-plan is
+    /// attempted; smaller breaches keep the plain fallback path. 0 =
+    /// re-plan on any gate rejection with alarms.
+    pub min_excess_ppm: u64,
+    /// Capacity-feedback retries (×1.15 per retry) the re-plan solve
+    /// loop may take before giving up and falling back.
+    pub max_retries: usize,
+}
+
+impl Default for ReplanOptions {
+    fn default() -> Self {
+        ReplanOptions {
+            enabled: false,
+            min_excess_ppm: 0,
+            max_retries: preserver::MAX_RETRIES,
+        }
+    }
+}
+
+/// Per-link measured/planned busy ratios harvested from a trial's drift
+/// alarms, in ppm (`1_000_000` = exactly as planned). This is the
+/// integer-µs-derived "what execution actually saw" that overrides
+/// [`ClusterEnv::link_planning_mus`] for the re-solve.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MeasuredEnv {
+    /// One ratio per registered link, indexed by `LinkId`.
+    pub link_ratio_ppm: Vec<u64>,
+}
+
+impl MeasuredEnv {
+    /// Harvest from a trial's fault log. Per link the rule is:
+    /// - any high-side [`FaultEvent::DriftAlarm`]s ⇒ the *largest*
+    ///   implied ratio (`1e6 + excess_ppm`, capped) — plan for the worst
+    ///   degradation actually observed;
+    /// - else any low-side [`FaultEvent::DriftAlarmLow`]s ⇒ the largest
+    ///   implied ratio (`1e6 − deficit_ppm`), i.e. the *least*
+    ///   tightening — over-claiming reclaimed capacity is how a
+    ///   re-planner overshoots;
+    /// - no alarms ⇒ the link stays at its planned µ (`1e6`).
+    ///
+    /// Returns `None` when the log carries no drift alarms at all: with
+    /// nothing measured off-plan there is nothing to re-plan against.
+    pub fn from_alarms(fault_log: &[FaultEvent], n_links: usize) -> Option<MeasuredEnv> {
+        let mut hi = vec![0u64; n_links];
+        let mut lo = vec![0u64; n_links];
+        let mut saw = false;
+        for e in fault_log {
+            match e {
+                FaultEvent::DriftAlarm {
+                    link, excess_ppm, ..
+                } if link.index() < n_links => {
+                    saw = true;
+                    let ratio = UNIT_PPM.saturating_add(*excess_ppm).min(MAX_RATIO_PPM);
+                    hi[link.index()] = hi[link.index()].max(ratio);
+                }
+                FaultEvent::DriftAlarmLow {
+                    link, deficit_ppm, ..
+                } if link.index() < n_links => {
+                    saw = true;
+                    let ratio = UNIT_PPM.saturating_sub(*deficit_ppm);
+                    lo[link.index()] = lo[link.index()].max(ratio);
+                }
+                _ => {}
+            }
+        }
+        if !saw {
+            return None;
+        }
+        let link_ratio_ppm = (0..n_links)
+            .map(|k| {
+                if hi[k] > 0 {
+                    hi[k]
+                } else if lo[k] > 0 {
+                    lo[k]
+                } else {
+                    UNIT_PPM
+                }
+            })
+            .collect();
+        Some(MeasuredEnv { link_ratio_ppm })
+    }
+
+    /// Harvest from a finished trial.
+    pub fn from_trial(trial: &SimResult) -> Option<MeasuredEnv> {
+        MeasuredEnv::from_alarms(&trial.fault_log, trial.link_busy.len())
+    }
+
+    /// True when any link measured slower than planned.
+    pub fn is_degraded(&self) -> bool {
+        self.link_ratio_ppm.iter().any(|&r| r > UNIT_PPM)
+    }
+
+    /// Largest per-link over-plan excess (ppm); 0 when nothing measured
+    /// high. This is what [`ReplanOptions::min_excess_ppm`] gates on.
+    pub fn worst_excess_ppm(&self) -> u64 {
+        self.link_ratio_ppm
+            .iter()
+            .map(|&r| r.saturating_sub(UNIT_PPM))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The measured planning µs: `env`'s healthy per-link planning µ
+    /// scaled by the measured ratio. Links that drifted high get a
+    /// larger µ (smaller knapsack capacity — less merged per window);
+    /// links that drifted low (low-side monitoring) get a smaller one.
+    pub fn link_mus(&self, env: &ClusterEnv) -> Vec<f64> {
+        env.link_planning_mus()
+            .iter()
+            .zip(&self.link_ratio_ppm)
+            .map(|(mu, &ratio)| mu * (ratio as f64 / 1e6))
+            .collect()
+    }
+}
+
+/// Compound every same-iteration per-link drift excess into one gradient
+/// error via [`preserver::combined_error`], and return the worst
+/// iteration's `(iter, error)`.
+///
+/// This is the drift-gate error model: simultaneous drift on two links
+/// degrades the gradient stream on *both* routes in the same update, so
+/// the errors compose like independent codec errors rather than taking
+/// the single worst alarm (the old rule, which under-counted multi-link
+/// drift). Low-side alarms carry no convergence risk (the plan was
+/// merely over-conservative) and are excluded. Ties pick the earliest
+/// iteration; every input is integer ppm so the fold is deterministic.
+pub fn compounded_drift_error(fault_log: &[FaultEvent]) -> Option<(usize, f64)> {
+    use std::collections::BTreeMap;
+    let mut per_iter: BTreeMap<usize, f64> = BTreeMap::new();
+    for e in fault_log {
+        if let FaultEvent::DriftAlarm {
+            iter, excess_ppm, ..
+        } = e
+        {
+            let err = (*excess_ppm as f64 / 1e6).min(0.95);
+            let slot = per_iter.entry(*iter).or_insert(0.0);
+            *slot = preserver::combined_error(*slot, err);
+        }
+    }
+    // BTreeMap iterates in iteration order, and only a strictly larger
+    // error displaces the champion — ties keep the earliest iteration.
+    let mut best: Option<(usize, f64)> = None;
+    for (&iter, &err) in &per_iter {
+        let better = match best {
+            None => true,
+            Some((_, b)) => err > b,
+        };
+        if better {
+            best = Some((iter, err));
+        }
+    }
+    best
+}
+
+/// Everything the re-plan solve loop needs, borrowed from the lifecycle.
+pub struct ReplanRequest<'a> {
+    pub profile: &'a [BucketProfile],
+    /// The trial environment the re-planned schedule will run on (codecs
+    /// included when the lifecycle did not fall back to raw).
+    pub env: &'a ClusterEnv,
+    pub measured: &'a MeasuredEnv,
+    /// Capacity scale the rejected schedule was accepted at; the re-plan
+    /// starts here and grows ×1.15 per retry.
+    pub scale: f64,
+    pub deft: &'a DeftOptions,
+    pub walk: &'a WalkParams,
+    pub base_batch: f64,
+    pub epsilon: f64,
+    /// Full-precision lint options (the same gate the first-choice plan
+    /// passed); the re-planned schedule must come back clean.
+    pub lint: &'a LintOptions,
+    pub max_retries: usize,
+}
+
+/// An accepted re-plan.
+pub struct ReplanOutcome {
+    pub schedule: Schedule,
+    /// Clean static-verifier report against the trial environment.
+    pub lint: LintReport,
+    /// The accepting Preserver walk's final-expectation ratio…
+    pub ratio: f64,
+    /// …and the gradient error it ran with (codec error of the routes
+    /// the re-planned schedule uses; the drift excess is already priced
+    /// into the capacities, so it no longer perturbs the walk).
+    pub error: f64,
+    /// `(capacity scale, ratio)` per solve attempt, for
+    /// `LifecycleReport::attempts`.
+    pub attempts: Vec<(f64, f64)>,
+}
+
+/// Re-solve the §III.D knapsacks against the measured capacities, with
+/// the same capacity-feedback loop and the same acceptance bar as the
+/// first-choice solve: the Preserver walk must land within ε and the
+/// static verifier must come back clean. `None` when no candidate passes
+/// within `max_retries` — the caller then takes the plain fallback path.
+pub fn replan(req: &ReplanRequest) -> Option<ReplanOutcome> {
+    let link_mus = req.measured.link_mus(req.env);
+    let codec_errors = req.env.link_path_codec_errors();
+    let mut scale = req.scale;
+    let mut attempts = Vec::new();
+    for _ in 0..=req.max_retries {
+        let deft = Deft::new(DeftOptions {
+            capacity_scale: scale,
+            preserver: false,
+            link_mus: link_mus.clone(),
+            ..req.deft.clone()
+        });
+        let schedule = deft.schedule(req.profile);
+        let err = schedule.worst_codec_error(&codec_errors);
+        let report = preserver::quantify_with_error(
+            req.walk,
+            req.base_batch,
+            &schedule.batch_multipliers,
+            err,
+        );
+        attempts.push((scale, report.ratio));
+        if preserver::acceptable(&report, req.epsilon) {
+            let lint = lint_plan(&schedule, req.profile, req.env, req.lint);
+            if lint.is_clean() {
+                return Some(ReplanOutcome {
+                    schedule,
+                    lint,
+                    ratio: report.ratio,
+                    error: err,
+                    attempts,
+                });
+            }
+        }
+        scale *= 1.15;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::links::LinkId;
+    use crate::util::Micros;
+
+    fn high(iter: usize, link: usize, excess_ppm: u64) -> FaultEvent {
+        FaultEvent::DriftAlarm {
+            iter,
+            link: LinkId(link),
+            measured: Micros(0),
+            planned: Micros(0),
+            excess_ppm,
+        }
+    }
+
+    fn low(iter: usize, link: usize, deficit_ppm: u64) -> FaultEvent {
+        FaultEvent::DriftAlarmLow {
+            iter,
+            link: LinkId(link),
+            measured: Micros(0),
+            planned: Micros(0),
+            deficit_ppm,
+        }
+    }
+
+    #[test]
+    fn two_link_same_iteration_excesses_compound() {
+        // Hand-computed oracle: excesses of 20% and 30% in the same
+        // iteration compose like independent errors,
+        // 1 − (1 − 0.2)(1 − 0.3) = 0.44 — strictly more than either
+        // alone, which is exactly what the single-worst-alarm rule
+        // under-counted.
+        let log = vec![high(7, 0, 200_000), high(7, 1, 300_000)];
+        let (iter, err) = compounded_drift_error(&log).expect("alarms compound");
+        assert_eq!(iter, 7);
+        assert!((err - 0.44).abs() < 1e-9, "combined error {err}");
+
+        // A later single-link 45% excess beats the compounded 44%…
+        let mut log2 = log.clone();
+        log2.push(high(9, 0, 450_000));
+        let (iter, err) = compounded_drift_error(&log2).expect("alarms compound");
+        assert_eq!(iter, 9);
+        assert!((err - 0.45).abs() < 1e-9);
+
+        // …but a 43% excess does not, and the compounded iteration wins.
+        let mut log3 = log.clone();
+        log3.push(high(9, 0, 430_000));
+        let (iter, err) = compounded_drift_error(&log3).expect("alarms compound");
+        assert_eq!(iter, 7);
+        assert!((err - 0.44).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_error_caps_per_link_and_ignores_low_alarms() {
+        // A saturated excess (zero-planned link) caps at 0.95 instead of
+        // blowing past the combined_error domain…
+        let log = vec![high(3, 0, 5_000_000)];
+        let (_, err) = compounded_drift_error(&log).expect("alarm");
+        assert!((err - 0.95).abs() < 1e-9);
+        // …and low-side alarms carry no convergence risk.
+        assert_eq!(compounded_drift_error(&[low(3, 0, 400_000)]), None);
+    }
+
+    #[test]
+    fn measured_env_harvests_worst_high_and_gentlest_low() {
+        let log = vec![
+            high(2, 0, 300_000),
+            high(5, 0, 1_500_000), // worst high on link 0 wins
+            low(4, 1, 400_000),
+            low(6, 1, 100_000), // least tightening on link 1 wins
+        ];
+        let m = MeasuredEnv::from_alarms(&log, 3).expect("alarms harvest");
+        assert_eq!(m.link_ratio_ppm, vec![2_500_000, 900_000, 1_000_000]);
+        assert!(m.is_degraded());
+        assert_eq!(m.worst_excess_ppm(), 1_500_000);
+
+        // A high alarm outranks any low alarm on the same link.
+        let log = vec![low(1, 0, 300_000), high(2, 0, 100_000)];
+        let m = MeasuredEnv::from_alarms(&log, 1).expect("alarms harvest");
+        assert_eq!(m.link_ratio_ppm, vec![1_100_000]);
+
+        // No alarms ⇒ nothing to re-plan against.
+        assert_eq!(MeasuredEnv::from_alarms(&[], 2), None);
+    }
+
+    #[test]
+    fn measured_mus_scale_the_healthy_planning_mus() {
+        let env = ClusterEnv::paper_testbed();
+        let healthy = env.link_planning_mus();
+        let m = MeasuredEnv {
+            link_ratio_ppm: vec![2_500_000, 1_000_000],
+        };
+        let mus = m.link_mus(&env);
+        assert_eq!(mus.len(), healthy.len());
+        assert!((mus[0] - healthy[0] * 2.5).abs() < 1e-12);
+        assert!((mus[1] - healthy[1]).abs() < 1e-12);
+
+        // The saturated-excess cap holds the ratio at 20×.
+        let log = vec![high(0, 0, u64::MAX)];
+        let m = MeasuredEnv::from_alarms(&log, 1).expect("alarm");
+        assert_eq!(m.link_ratio_ppm, vec![20_000_000]);
+    }
+}

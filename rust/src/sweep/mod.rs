@@ -31,7 +31,10 @@ pub mod runner;
 pub mod server;
 
 pub use jsonl::{parse_jsonl, summary_csv, to_jsonl};
-pub use runner::{run_cell, run_cells, run_grid, CellOutcome, CellResult, SchemeResult};
+pub use runner::{
+    run_cell, run_cell_with, run_cells, run_cells_with, run_grid, CellOutcome, CellResult,
+    SchemeResult,
+};
 pub use server::Planner;
 
 use crate::config::ExperimentConfig;
@@ -149,6 +152,11 @@ pub struct SweepGrid {
     /// Fault presets; `None` entries sweep the healthy cluster.
     pub faults: Vec<Option<String>>,
     pub workers: usize,
+    /// Run every DeFT leg with measured-drift re-planning enabled
+    /// (`schedule_explorer --replan` / `[replan] enabled`). Not a cell
+    /// axis: it changes how cells run, not which cells exist, so keys
+    /// and JSONL schema stay unchanged.
+    pub replan: bool,
 }
 
 /// Split a comma-separated axis string into trimmed, non-empty items.
@@ -177,6 +185,7 @@ impl SweepGrid {
             contention: ["pairwise", "kway"].map(String::from).to_vec(),
             faults: vec![None],
             workers: 16,
+            replan: false,
         }
     }
 
@@ -191,6 +200,7 @@ impl SweepGrid {
             contention: vec!["kway".to_string()],
             faults: vec![None],
             workers: 16,
+            replan: false,
         }
     }
 
@@ -218,6 +228,7 @@ impl SweepGrid {
             contention: split_csv(&cfg.sweep_contention),
             faults,
             workers: cfg.workers,
+            replan: cfg.replan_enabled,
         };
         for axis in [
             grid.workloads.len(),

@@ -22,7 +22,7 @@ use std::sync::Mutex;
 use super::{SweepCell, SweepGrid};
 use crate::bench::{partition_for, scheduler_for, workload_by_name, PAPER_DDP_MB, PAPER_PARTITION};
 use crate::config::Scheme;
-use crate::sched::{run_lifecycle, FallbackReason, LifecycleOptions, Schedule};
+use crate::sched::{run_lifecycle, FallbackReason, LifecycleOptions, ReplanOptions, Schedule};
 use crate::sim::{simulate_faulted, SimOptions, SimResult};
 
 /// One scheme's outcome inside a cell. Integer/string fields only so
@@ -44,7 +44,8 @@ pub struct SchemeResult {
     /// iteration updates.
     pub coverage_ppm: u64,
     /// Lifecycle fallback label: `none` | `codec-gate` | `lint` |
-    /// `drift-gate` (always `none` for the baseline schemes).
+    /// `drift-gate` | `replanned` (always `none` for the baseline
+    /// schemes).
     pub fallback: String,
 }
 
@@ -79,6 +80,7 @@ fn fallback_label(reason: &FallbackReason) -> &'static str {
         FallbackReason::CodecGateRejected { .. } => "codec-gate",
         FallbackReason::LintRejected { .. } => "lint",
         FallbackReason::DriftGateRejected { .. } => "drift-gate",
+        FallbackReason::Replanned { .. } => "replanned",
     }
 }
 
@@ -119,6 +121,14 @@ fn skipped(scheme: Scheme, reason: String) -> SchemeResult {
 /// Run one cell: every scheme in [`Scheme::ALL`] order, then pick the
 /// winner. Pure — same cell in, same bits out, on any thread.
 pub fn run_cell(cell: &SweepCell) -> CellOutcome {
+    run_cell_with(cell, false)
+}
+
+/// [`run_cell`] with the DeFT leg's measured-drift re-planning switched
+/// on or off ([`ReplanOptions::enabled`]). Still pure: the re-plan loop
+/// consumes only integer-µs alarms from the cell's seeded fault trace,
+/// so serial and parallel sweeps stay bit-for-bit identical either way.
+pub fn run_cell_with(cell: &SweepCell, replan: bool) -> CellOutcome {
     let outcome = |result| CellOutcome {
         cell: cell.clone(),
         result,
@@ -144,6 +154,10 @@ pub fn run_cell(cell: &SweepCell) -> CellOutcome {
             // is exactly what `run_lifecycle` would report standalone.
             let opts = LifecycleOptions {
                 faults: spec.clone(),
+                replan: ReplanOptions {
+                    enabled: replan,
+                    ..ReplanOptions::default()
+                },
                 ..LifecycleOptions::default()
             };
             match run_lifecycle(&workload, &env, &opts) {
@@ -203,8 +217,13 @@ pub fn run_cell(cell: &SweepCell) -> CellOutcome {
 /// index from an atomic counter; results are collected in index order,
 /// so output is bit-for-bit identical to `threads = 1`.
 pub fn run_cells(cells: &[SweepCell], threads: usize) -> Vec<CellOutcome> {
+    run_cells_with(cells, threads, false)
+}
+
+/// [`run_cells`] with re-planning on or off (see [`run_cell_with`]).
+pub fn run_cells_with(cells: &[SweepCell], threads: usize, replan: bool) -> Vec<CellOutcome> {
     if threads <= 1 || cells.len() <= 1 {
-        return cells.iter().map(run_cell).collect();
+        return cells.iter().map(|c| run_cell_with(c, replan)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<CellOutcome>>> =
@@ -216,7 +235,7 @@ pub fn run_cells(cells: &[SweepCell], threads: usize) -> Vec<CellOutcome> {
                 if i >= cells.len() {
                     break;
                 }
-                let out = run_cell(&cells[i]);
+                let out = run_cell_with(&cells[i], replan);
                 *slots[i].lock().expect("sweep slot lock poisoned") = Some(out);
             });
         }
@@ -231,9 +250,10 @@ pub fn run_cells(cells: &[SweepCell], threads: usize) -> Vec<CellOutcome> {
         .collect()
 }
 
-/// Run a whole grid (see [`run_cells`]).
+/// Run a whole grid (see [`run_cells`]); [`SweepGrid::replan`] decides
+/// whether the DeFT legs re-plan on drift.
 pub fn run_grid(grid: &SweepGrid, threads: usize) -> Vec<CellOutcome> {
-    run_cells(&grid.cells(), threads)
+    run_cells_with(&grid.cells(), threads, grid.replan)
 }
 
 #[cfg(test)]

@@ -141,26 +141,47 @@ impl Planner {
         let cell = parse_json(line).and_then(|doc| query_cell(&doc));
         Some(match cell {
             Ok(cell) => self.answer(&cell),
-            Err(e) => format!("{{\"status\": \"error\", \"error\": \"{}\"}}", esc(&e.to_string())),
+            Err(e) => format!(
+                "{{\"status\": \"error\", \"code\": \"bad-query\", \"error\": \"{}\"}}",
+                esc(&e.to_string())
+            ),
         })
     }
 
     /// The blocking serve loop: one response line per request line,
     /// flushed immediately; ends on `quit`/`exit` or EOF. Blank lines
-    /// are ignored.
-    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> std::io::Result<()> {
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
+    /// are ignored. A malformed request line — including one that is not
+    /// valid UTF-8, which `BufRead::lines` would surface as a fatal
+    /// `io::Error` — answers with a typed JSON error line and the loop
+    /// keeps serving: only EOF, `quit`/`exit`, or a real transport error
+    /// ends it.
+    pub fn serve<R: BufRead, W: Write>(
+        &mut self,
+        mut reader: R,
+        mut writer: W,
+    ) -> std::io::Result<()> {
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            if reader.read_until(b'\n', &mut buf)? == 0 {
+                break; // EOF
             }
-            match self.handle(&line) {
-                None => break,
-                Some(resp) => {
-                    writeln!(writer, "{resp}")?;
-                    writer.flush()?;
+            let resp = match std::str::from_utf8(&buf) {
+                Ok(line) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match self.handle(line) {
+                        None => break,
+                        Some(resp) => resp,
+                    }
                 }
-            }
+                Err(_) => "{\"status\": \"error\", \"code\": \"bad-line\", \
+                           \"error\": \"request line is not valid UTF-8\"}"
+                    .to_string(),
+            };
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
         }
         Ok(())
     }
@@ -215,6 +236,26 @@ mod tests {
         assert_eq!(lines.len(), 2, "quit stops the loop; blank lines skipped");
         assert!(lines[0].contains("\"cache\": \"miss\""));
         assert!(lines[1].contains("\"cache\": \"hit\""));
+    }
+
+    #[test]
+    fn serve_loop_survives_malformed_lines() {
+        let mut p = Planner::new();
+        let mut input: Vec<u8> = Vec::new();
+        input.extend_from_slice(b"\xff\xfe not utf-8\n"); // invalid UTF-8
+        input.extend_from_slice(b"not json\n");
+        input.extend_from_slice(QUERY.as_bytes());
+        input.push(b'\n');
+        input.extend_from_slice(b"quit\n");
+        let mut out = Vec::new();
+        p.serve(&input[..], &mut out).expect("io");
+        let text = String::from_utf8(out).expect("responses stay utf8");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "both bad lines answer, then the good one");
+        assert!(lines[0].contains("\"code\": \"bad-line\""));
+        assert!(lines[1].contains("\"code\": \"bad-query\""));
+        assert!(lines[2].contains("\"cache\": \"miss\""));
+        assert_eq!((p.hits(), p.misses()), (0, 1));
     }
 
     #[test]

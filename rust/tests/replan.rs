@@ -1,0 +1,127 @@
+//! Integration pins for measured-drift adaptive re-planning
+//! (`deft::sched::replan` threaded through the lifecycle).
+//!
+//! The contract under test: on the seeded `mixed` fault preset over the
+//! paper 2-link testbed with a hier8 topology and an fp16 fabric codec,
+//! (a) the classic drift gate rejects the plan and degrades to the raw
+//! replay, (b) switching re-planning on instead re-solves against the
+//! measured capacities, keeps the codec, lints clean, and reports a
+//! strictly better time-to-solution than the raw fallback, and (c) the
+//! whole closed loop is deterministic — same seed, byte-identical
+//! report.
+
+use deft::faults::{FaultEvent, FaultSpec};
+use deft::links::{ClusterEnv, Codec, LinkId, Topology};
+use deft::models::{gpt2, vgg19};
+use deft::sched::{run_lifecycle, FallbackReason, LifecycleOptions, ReplanOptions};
+
+/// The scenario every pin below runs: paper 2-link testbed, hier8
+/// topology (link 0 intra, link 1 fabric), fp16 on the non-reference
+/// fabric link, and the seeded `mixed` preset — whose 2.5× flap on the
+/// reference link trips the 25% drift band during the trial.
+fn drifting_env() -> ClusterEnv {
+    ClusterEnv::paper_testbed()
+        .with_topology(Topology::hierarchical(8, LinkId(0), LinkId(1)))
+        .with_codec(LinkId(1), Codec::Fp16)
+}
+
+fn opts(replan: bool) -> LifecycleOptions {
+    let env = drifting_env();
+    LifecycleOptions {
+        faults: Some(FaultSpec::preset("mixed", env.workers).expect("mixed preset")),
+        replan: ReplanOptions {
+            enabled: replan,
+            ..ReplanOptions::default()
+        },
+        ..LifecycleOptions::default()
+    }
+}
+
+fn gate_decisions(log: &[FaultEvent]) -> Vec<bool> {
+    log.iter()
+        .filter_map(|e| match e {
+            FaultEvent::GateDecision { accepted, .. } => Some(*accepted),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn replanning_beats_the_raw_fallback_on_the_mixed_preset() {
+    let env = drifting_env();
+    let w = vgg19();
+
+    // Baseline: re-planning off. The mixed preset's flap drives the
+    // compounded drift error far past ε, the re-gate rejects, and the
+    // lifecycle degrades to the raw (codec-stripped) replay.
+    let base = run_lifecycle(&w, &env, &opts(false)).expect("baseline lifecycle");
+    assert!(
+        matches!(base.fallback, FallbackReason::DriftGateRejected { .. }),
+        "mixed preset must trip the drift gate: {:?}",
+        base.fallback
+    );
+    assert!(base.codec_fallback, "rejection must strip the fp16 codec");
+    assert_eq!(gate_decisions(&base.trial.fault_log), vec![false]);
+
+    // Closed loop: same seed, same scenario, re-planning on. The
+    // lifecycle re-solves against the measured capacities, keeps fp16,
+    // and the re-plan passes both gates.
+    let rep = run_lifecycle(&w, &env, &opts(true)).expect("replan lifecycle");
+    assert!(
+        matches!(rep.fallback, FallbackReason::Replanned { .. }),
+        "re-planning must adopt the measured-capacity solve: {:?}",
+        rep.fallback
+    );
+    assert!(!rep.codec_fallback, "the re-plan keeps the fp16 fabric");
+    assert_eq!(
+        gate_decisions(&rep.trial.fault_log),
+        vec![true],
+        "exactly one accepting gate decision on the re-planned trial"
+    );
+    assert!(
+        rep.lint.is_clean(),
+        "re-planned schedule must lint clean:\n{}",
+        rep.lint.render_text()
+    );
+    // The re-plan's accepting walk ratio rides in the fallback reason
+    // and must sit inside ε (the rejected combined error does not).
+    if let FallbackReason::Replanned {
+        ratio, error_ppm, ..
+    } = rep.fallback
+    {
+        assert!((ratio - 1.0).abs() <= deft::preserver::EPSILON);
+        assert!(error_ppm > deft::faults::to_ppm(deft::preserver::EPSILON));
+    }
+
+    // The point of the whole loop: adapting to the measured topology
+    // beats abandoning the codec. Same trial length, strictly less
+    // time-to-solution.
+    assert_eq!(
+        rep.trial.iter_ends.len(),
+        base.trial.iter_ends.len(),
+        "both trials run the same iteration count"
+    );
+    assert!(
+        rep.trial.total < base.trial.total,
+        "re-planned TTS {} must beat the raw fallback's {}",
+        rep.trial.total,
+        base.trial.total
+    );
+}
+
+#[test]
+fn replanned_lifecycle_is_deterministic() {
+    let env = drifting_env();
+    let w = gpt2();
+    let a = run_lifecycle(&w, &env, &opts(true)).expect("first run");
+    let b = run_lifecycle(&w, &env, &opts(true)).expect("second run");
+    // Byte-identical reports, field by field: seeded faults in, integer
+    // µs through the solver and both gates, no wall clock anywhere.
+    assert_eq!(a.profile, b.profile);
+    assert_eq!(a.schedule, b.schedule);
+    assert_eq!(a.attempts, b.attempts);
+    assert_eq!(a.trial, b.trial, "trial SimResults must replay bit-for-bit");
+    assert_eq!(a.codec_fallback, b.codec_fallback);
+    assert_eq!(a.fallback, b.fallback);
+    assert_eq!(a.lint.render_text(), b.lint.render_text());
+}

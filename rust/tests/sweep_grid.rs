@@ -58,6 +58,7 @@ fn sweep_answers_equal_standalone_runs_exactly() {
         FallbackReason::CodecGateRejected { .. } => "codec-gate",
         FallbackReason::LintRejected { .. } => "lint",
         FallbackReason::DriftGateRejected { .. } => "drift-gate",
+        FallbackReason::Replanned { .. } => "replanned",
     };
     assert_eq!(deft.fallback, label);
 
@@ -115,6 +116,19 @@ fn parallel_sweep_is_bit_for_bit_serial_including_faults() {
 }
 
 #[test]
+fn parallel_sweep_with_replan_is_bit_for_bit_serial() {
+    // The closed loop must not cost determinism: with re-planning on,
+    // the mixed-fault grid still answers byte-identically on any
+    // thread count (acceptance criterion of docs/replan.md).
+    let mut grid = tiny_grid(vec![Some("mixed".to_string())]);
+    grid.replan = true;
+    let serial = run_grid(&grid, 1);
+    assert!(serial.iter().all(|o| o.result.is_ok()));
+    let parallel = run_grid(&grid, 4);
+    assert_eq!(parallel, serial, "4-thread replan sweep must equal serial");
+}
+
+#[test]
 fn jsonl_and_csv_round_trip_real_results() {
     let mut grid = tiny_grid(vec![None, Some("straggler".to_string())]);
     grid.ranks_per_node = vec![1];
@@ -160,6 +174,31 @@ fn planner_answers_a_scripted_sequence_deterministically() {
     assert_eq!(strip(&a[0]), strip(&a[2]), "hit repeats the miss's answer");
     assert_eq!(strip(&a[1]), strip(&a[4]));
     assert!(strip(&a[3]).contains("\"status\": \"error\""));
+}
+
+#[test]
+fn planner_serve_loop_survives_bad_lines_and_keeps_answering() {
+    // A malformed request line — JSON garbage or raw bytes that are not
+    // even UTF-8 — must answer with a typed JSON error and leave the
+    // loop serving: the query that follows still gets its real answer.
+    let mut input: Vec<u8> = Vec::new();
+    input.extend_from_slice(b"\xc3\x28 broken utf-8\n");
+    input.extend_from_slice(b"{\"preset\": 7}\n");
+    input.extend_from_slice(b"{\"workload\": \"small\"}\n");
+    input.extend_from_slice(b"quit\n");
+    let mut p = Planner::new();
+    let mut out = Vec::new();
+    p.serve(&input[..], &mut out).expect("serve survives bad lines");
+    let text = String::from_utf8(out).expect("responses are utf8");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "two error replies, then the good answer");
+    assert!(lines[0].contains("\"status\": \"error\""));
+    assert!(lines[0].contains("\"code\": \"bad-line\""));
+    assert!(lines[1].contains("\"status\": \"error\""));
+    assert!(lines[1].contains("\"code\": \"bad-query\""));
+    assert!(lines[2].contains("\"cache\": \"miss\""));
+    assert!(lines[2].contains("\"answer\": "));
+    assert_eq!((p.hits(), p.misses()), (0, 1), "bad lines never touch the cache");
 }
 
 #[test]
